@@ -1,0 +1,27 @@
+use hbmflow::dsl;
+use hbmflow::ir::{lower, rewrite, teil};
+use hbmflow::olympus::{generate, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::hls::estimate;
+
+fn main() {
+    let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
+    let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+    let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+    let platform = Platform::alveo_u280();
+    for (name, opts) in [
+        ("baseline", OlympusOpts::baseline()),
+        ("df1", OlympusOpts::dataflow(1)),
+        ("df7", OlympusOpts::dataflow(7)),
+        ("df7x2", OlympusOpts::dataflow(7).with_cus(2)),
+        ("fx64", OlympusOpts::fixed_point(hbmflow::datatype::DataType::Fx64)),
+        ("fx32", OlympusOpts::fixed_point(hbmflow::datatype::DataType::Fx32)),
+    ] {
+        let s = generate(&k, &opts, &platform).unwrap();
+        let e = estimate(&s, &platform);
+        let u = e.utilization(&platform);
+        println!("{name:9} lut {:7} ({:4.1}%)  ff {:7} ({:4.1}%)  bram {:5} ({:4.1}%)  uram {:4} ({:5.1}%)  dsp {:5} ({:4.1}%)  f={:.1} span={}",
+            e.total.lut, u[0]*100.0, e.total.ff, u[1]*100.0, e.total.bram, u[2]*100.0,
+            e.total.uram, u[3]*100.0, e.total.dsp, u[4]*100.0, e.fmax_mhz, e.slr_span);
+    }
+}

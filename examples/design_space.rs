@@ -1,0 +1,102 @@
+//! Design-space exploration: dtype x polynomial degree x CU count
+//! (the exploration the paper leaves "up to the designer", §3.6.4),
+//! with feasibility from the HLS estimator and objectives from the
+//! simulator.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use hbmflow::cli::build_kernel;
+use hbmflow::datatype::DataType;
+use hbmflow::hls;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::report::{self, paper};
+use hbmflow::sim::{self, SimResult};
+
+struct Candidate {
+    name: String,
+    r: SimResult,
+    feasible: bool,
+}
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::alveo_u280();
+    let n = paper::N_ELEMENTS;
+    let mut candidates: Vec<Candidate> = Vec::new();
+
+    for p in [7usize, 11] {
+        let kernel = build_kernel("helmholtz", p)?;
+        for dtype in [DataType::F64, DataType::F32, DataType::Fx64, DataType::Fx32] {
+            for cus in 1..=4usize {
+                let mut opts = if dtype.is_fixed() {
+                    OlympusOpts::fixed_point(dtype)
+                } else {
+                    let mut o = OlympusOpts::dataflow(7);
+                    o.dtype = dtype;
+                    o
+                };
+                opts = opts.with_cus(cus);
+                let Ok(spec) = olympus::generate(&kernel, &opts, &platform) else {
+                    continue;
+                };
+                let est = hls::estimate(&spec, &platform);
+                let feasible = est.total.fits_in(&platform.total_resources());
+                let r = sim::simulate(&spec, &est, &platform, n);
+                candidates.push(Candidate {
+                    name: format!("{} p={p} x{cus}CU", dtype.display()),
+                    r,
+                    feasible,
+                });
+            }
+        }
+    }
+
+    let rows: Vec<Vec<String>> = candidates
+        .iter()
+        .map(|c| {
+            vec![
+                c.name.clone(),
+                if c.feasible { "yes" } else { "NO" }.into(),
+                report::f(c.r.freq_mhz),
+                report::f(c.r.gflops_cu),
+                report::f(c.r.gflops_system),
+                format!("{:.2}", c.r.efficiency_gflops_w),
+                c.r.bottleneck.clone(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &["configuration", "fits", "f(MHz)", "CU", "System", "GF/W", "bound"],
+            &rows
+        )
+    );
+
+    let feasible: Vec<&Candidate> = candidates.iter().filter(|c| c.feasible).collect();
+    let best_perf = feasible
+        .iter()
+        .max_by(|a, b| a.r.gflops_system.total_cmp(&b.r.gflops_system))
+        .unwrap();
+    let best_eff = feasible
+        .iter()
+        .max_by(|a, b| a.r.efficiency_gflops_w.total_cmp(&b.r.efficiency_gflops_w))
+        .unwrap();
+    println!(
+        "best throughput : {} ({:.1} GFLOPS system)",
+        best_perf.name, best_perf.r.gflops_system
+    );
+    println!(
+        "best efficiency : {} ({:.2} GFLOPS/W)",
+        best_eff.name, best_eff.r.efficiency_gflops_w
+    );
+    println!(
+        "\npaper's conclusion holds when replication is PCIe-bound: \
+         \"the design can be optimized for power efficiency by only \
+         instantiating one compute unit\" — best-efficiency CU count = {}",
+        best_eff.name.chars().rev().nth(2).unwrap_or('1')
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! END-TO-END driver: the full three-layer system on a real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_cfd
+//! ```
+//!
+//! Proves all layers compose:
+//!   L3 (this binary): CFDlang -> teil -> affine -> Olympus system;
+//!       batch plan, ping/pong coordination, lane interleaving;
+//!   L2/L1 (AOT): the batched Pallas Inverse Helmholtz, lowered to HLO
+//!       text at build time, loaded and executed here via PJRT — Python
+//!       never runs on this path;
+//!   platform model: the same system simulated on the Alveo U280 for the
+//!       paper's 2,000,000-element workload.
+//!
+//! Reports (recorded in EXPERIMENTS.md):
+//!   * real numerics: MSE vs f64 oracle for double / fx64 / fx32
+//!     (paper §4.2: 9.39e-22 and 3.58e-12);
+//!   * measured XLA-CPU datapath throughput;
+//!   * simulated FPGA GFLOPS / power / GFLOPS/W for the same system.
+
+use hbmflow::cli::build_kernel;
+use hbmflow::coordinator::{Driver, HelmholtzWorkload};
+use hbmflow::datatype::DataType;
+use hbmflow::hls;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::report::{self, paper};
+use hbmflow::runtime::Runtime;
+use hbmflow::sim;
+
+fn main() -> anyhow::Result<()> {
+    let p = 11usize;
+    let n_real = 2048usize; // elements executed with real numerics
+    let platform = Platform::alveo_u280();
+    let kernel = build_kernel("helmholtz", p)?;
+    let mut rt = Runtime::from_default_dir()?;
+    println!(
+        "PJRT platform: {}  |  artifacts: {}",
+        rt.platform(),
+        rt.manifest.artifacts.len()
+    );
+
+    let workload = HelmholtzWorkload::generate(p, n_real, 7_777);
+    let mut rows = Vec::new();
+
+    for dtype in [DataType::F64, DataType::Fx64, DataType::Fx32] {
+        // --- generate the system for this data format ---
+        let opts = if dtype.is_fixed() {
+            OlympusOpts::fixed_point(dtype)
+        } else {
+            OlympusOpts::dataflow(7)
+        };
+        let spec = olympus::generate(&kernel, &opts, &platform).map_err(anyhow::Error::msg)?;
+        let est = hls::estimate(&spec, &platform);
+
+        // --- real numerics through the AOT artifact ---
+        let artifact = Driver::artifact_for(&rt, &spec, p)?;
+        let mut driver = Driver::new(&mut rt, spec.clone(), artifact.clone());
+        let run = driver.run(&workload, 64)?;
+
+        // --- simulated FPGA execution of the same system, N_eq = 2M ---
+        let simr = sim::simulate(&spec, &est, &platform, paper::N_ELEMENTS);
+
+        println!("\n=== {} ===", dtype.display());
+        println!(
+            "  real numerics : {} elements via {}  ({} invocations, {:.2}s wall, {:.2} GFLOPS XLA-CPU)",
+            run.elements, artifact, run.invocations, run.wall_s, run.measured_gflops
+        );
+        println!(
+            "  MSE vs oracle : {:.3e}   max|err| {:.3e}",
+            run.mse_vs_oracle, run.max_abs_err
+        );
+        println!(
+            "  simulated FPGA: CU {:.1} / system {:.1} GFLOPS @ {:.0} MHz, {:.1} W, {:.2} GFLOPS/W",
+            simr.gflops_cu,
+            simr.gflops_system,
+            simr.freq_mhz,
+            simr.avg_power_w,
+            simr.efficiency_gflops_w
+        );
+        rows.push(vec![
+            dtype.display().to_string(),
+            format!("{:.2e}", run.mse_vs_oracle),
+            report::f(run.measured_gflops),
+            report::f(simr.gflops_system),
+            format!("{:.2}", simr.efficiency_gflops_w),
+        ]);
+    }
+
+    println!(
+        "\n--- end-to-end summary (p = {p}, real n = {n_real}, simulated N_eq = {}) ---",
+        paper::N_ELEMENTS
+    );
+    println!(
+        "{}",
+        report::table(
+            &["dtype", "MSE vs f64", "XLA GFLOPS", "sim FPGA", "GF/W"],
+            &rows
+        )
+    );
+    println!(
+        "paper anchors: MSE fx64 {:.2e}, fx32 {:.2e}; FPGA fx32 ~103 GOPS, ~4 GOPS/W",
+        paper::MSE_FX64,
+        paper::MSE_FX32
+    );
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT: lower the L2 models to HLO *text* artifacts + a JSON manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids, so text
+round-trips cleanly. Lowering uses return_tuple=True; the Rust side
+unwraps with `to_tuple1()` / `to_tuple()`.
+
+Run via `make artifacts` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Python runs ONCE here and never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import ref  # noqa: E402
+
+GRADIENT_DIMS = (8, 7, 6)  # the paper's anisotropic gradient element
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def _entries(quick: bool):
+    """Yield (name, fn, arg_specs, meta) for every artifact to build."""
+    helmholtz = []
+    if quick:
+        helmholtz = [
+            (7, "f64", 8, "pallas"),
+            (7, "f64", 8, "ref"),
+            (7, "fx32", 8, "pallas"),
+        ]
+    else:
+        for p in (7, 11):
+            for dtype in ("f64", "f32", "fx64", "fx32"):
+                helmholtz.append((p, dtype, 32, "pallas"))
+        # small-batch variants for tests / quick runs
+        helmholtz += [
+            (11, "f64", 8, "pallas"),
+            (11, "fx32", 8, "pallas"),
+            (7, "f64", 8, "pallas"),
+        ]
+        # pure-jnp "optimized CPU" analogs (paper Fig. 19 Intel bars)
+        helmholtz += [
+            (11, "f64", 32, "ref"),
+            (7, "f64", 32, "ref"),
+        ]
+        # §Perf batch-blocked L1 variants (see EXPERIMENTS.md §Perf)
+        helmholtz += [
+            (11, "f64", 32, "pallas_blocked"),
+            (11, "fx32", 32, "pallas_blocked"),
+            (7, "f64", 32, "pallas_blocked"),
+        ]
+
+    for p, dtype, batch, variant in helmholtz:
+        suffix = "" if variant == "pallas" else f"_{variant}"
+        name = f"helmholtz_p{p}_{dtype}_b{batch}{suffix}"
+        fn = model.helmholtz_model(dtype, variant)
+        specs = model.helmholtz_arg_specs(p, batch, dtype)
+        meta = {
+            "kernel": "helmholtz",
+            "p": p,
+            "dtype": dtype,
+            "batch": batch,
+            "variant": variant,
+            "flops_per_element": ref.helmholtz_flops_per_element(p),
+            "num_outputs": 1,
+        }
+        yield name, fn, specs, meta
+
+    interp = [(11, 11, 32, "f64", "pallas")]
+    if not quick:
+        interp += [(11, 11, 32, "f64", "ref"), (11, 11, 8, "f64", "pallas")]
+    for m, n, batch, dtype, variant in interp:
+        suffix = "" if variant == "pallas" else f"_{variant}"
+        name = f"interp_m{m}n{n}_{dtype}_b{batch}{suffix}"
+        fn = model.interpolation_model(dtype, variant)
+        specs = model.interpolation_arg_specs(m, n, batch, dtype)
+        meta = {
+            "kernel": "interpolation",
+            "m": m,
+            "n": n,
+            "p": n,
+            "dtype": dtype,
+            "batch": batch,
+            "variant": variant,
+            "flops_per_element": ref.interpolation_flops_per_element(m, n),
+            "num_outputs": 1,
+        }
+        yield name, fn, specs, meta
+
+    grads = [(GRADIENT_DIMS, 32, "f64", "pallas")]
+    if not quick:
+        grads += [(GRADIENT_DIMS, 32, "f64", "ref")]
+    for dims, batch, dtype, variant in grads:
+        suffix = "" if variant == "pallas" else f"_{variant}"
+        nx, ny, nz = dims
+        name = f"gradient_{nx}x{ny}x{nz}_{dtype}_b{batch}{suffix}"
+        fn = model.gradient_model(dtype, variant)
+        specs = model.gradient_arg_specs(dims, batch, dtype)
+        meta = {
+            "kernel": "gradient",
+            "dims": list(dims),
+            "p": nx,
+            "dtype": dtype,
+            "batch": batch,
+            "variant": variant,
+            "flops_per_element": ref.gradient_flops_per_element(*dims),
+            "num_outputs": 3,
+        }
+        yield name, fn, specs, meta
+
+
+def build(out_dir: str, quick: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, specs, meta in _entries(quick):
+        path = f"{name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry["name"] = name
+        entry["path"] = path
+        entry["inputs"] = [_spec_json(s) for s in specs]
+        manifest["artifacts"].append(entry)
+        print(f"  wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="small subset for smoke tests"
+    )
+    args = ap.parse_args()
+    build(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the CFD tensor operators (paper §2.1, §4.3).
+
+All kernels are lowered with interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is checked against `ref` by pytest.
+"""
+
+from . import gradient, helmholtz, interpolation, quant, ref  # noqa: F401
+from .gradient import gradient_pallas  # noqa: F401
+from .helmholtz import inverse_helmholtz_pallas  # noqa: F401
+from .interpolation import interpolation_pallas  # noqa: F401
+from .quant import FORMATS, FX32, FX64, FixedFormat, quantize  # noqa: F401

@@ -1,0 +1,178 @@
+"""L1 Pallas kernel: Inverse Helmholtz operator (paper Eq. 1a-1c).
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+FPGA compute unit packs four 64-bit "lanes" onto a 256-bit AXI port and
+pipelines seven loop nests through BRAM-buffered dataflow stages. On TPU
+the same insight — stream one element's working set into fast memory,
+run the contractions at full multiplier utilization, stream the result
+out — maps to:
+
+  * grid over elements (one element per grid step; Pallas double-buffers
+    the HBM<->VMEM transfers across steps, which is exactly the paper's
+    Read/Write dataflow overlap);
+  * BlockSpec-selected (p, p, p) blocks of D/u/v in VMEM (~10.4 KiB per
+    f64 tensor at p=11 — far below the ~16 MiB VMEM budget, so the
+    shared S matrix is simply replicated into every step);
+  * each mode product reshaped to a (p, p) x (p, p^2) GEMM so the MXU
+    systolic array implements the paper's 11-multiplier MAC chains.
+
+The kernel MUST be lowered with interpret=True: real TPU lowering emits
+a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import FixedFormat, quantize
+
+
+def _mode_products(a, x, fmt: FixedFormat | None):
+    """Apply `a` along all three modes of the (p, p, p) tensor `x`.
+
+    Written with explicit reshape/dot (not einsum) so each mode is a
+    single MXU-shaped GEMM. Optionally fake-quantizes after each mode
+    product — the point where the FPGA datapath stores to BRAM.
+    """
+    p = a.shape[0]
+    q = a.shape[1]
+
+    def maybe_quant(v):
+        return quantize(v, fmt) if fmt is not None else v
+
+    # mode 0: (p, q) @ (q, q*q) -> (p, q, q)
+    x = jnp.dot(a, x.reshape(q, q * q), precision="highest").reshape(p, q, q)
+    x = maybe_quant(x)
+    # mode 1: move axis 1 first, (p, q) @ (q, p*q) -> (p, p, q)
+    x = jnp.swapaxes(x, 0, 1)
+    x = jnp.dot(a, x.reshape(q, p * q), precision="highest").reshape(p, p, q)
+    x = jnp.swapaxes(x, 0, 1)
+    x = maybe_quant(x)
+    # mode 2: move axis 2 first, (p, q) @ (q, p*p) -> (p, p, p)
+    x = jnp.moveaxis(x, 2, 0)
+    x = jnp.dot(a, x.reshape(q, p * p), precision="highest").reshape(p, p, p)
+    x = jnp.moveaxis(x, 0, 2)
+    return maybe_quant(x)
+
+
+def _helmholtz_kernel(s_ref, d_ref, u_ref, v_ref, *, fmt: FixedFormat | None):
+    """Pallas kernel body: one element per grid step."""
+    s = s_ref[...]
+    d = d_ref[0]  # (1, p, p, p) block -> (p, p, p)
+    u = u_ref[0]
+    if fmt is not None:
+        s = quantize(s, fmt)
+        d = quantize(d, fmt)
+        u = quantize(u, fmt)
+    t = _mode_products(s, u, fmt)
+    r = d * t
+    if fmt is not None:
+        r = quantize(r, fmt)
+    v = _mode_products(s.T, r, fmt)
+    v_ref[0] = v
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def inverse_helmholtz_pallas(s, d, u, fmt: FixedFormat | None = None):
+    """Batched Inverse Helmholtz via pallas_call.
+
+    Args:
+      s: (p, p) operator matrix (shared across the batch).
+      d: (B, p, p, p) Hadamard factors.
+      u: (B, p, p, p) inputs.
+      fmt: optional fixed-point format for fake-quantized arithmetic.
+    Returns:
+      v: (B, p, p, p).
+    """
+    b, p = u.shape[0], u.shape[1]
+    kernel = functools.partial(_helmholtz_kernel, fmt=fmt)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, p, p, p), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, p, p, p), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p, p, p), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(s, d, u)
+
+
+def _mode_products_batched(a, x, fmt: FixedFormat | None):
+    """Apply `a` along axes 1..3 of a (blk, p, p, p) batch.
+
+    Each mode is one (blk*p*p, p) x (p, p) GEMM — a tall MXU matmul that
+    amortizes the systolic-array fill across the whole block. This is the
+    §Perf L1 optimization: the one-element-per-grid-step kernel lowers
+    (under interpret=True) to a serial while-loop of tiny GEMMs; blocking
+    the batch turns it into three large GEMMs per pass.
+    """
+    rows = a.shape[0]
+
+    def maybe_quant(v):
+        return quantize(v, fmt) if fmt is not None else v
+
+    for ax in (1, 2, 3):
+        z = jnp.moveaxis(x, ax, 3)
+        lead = z.shape[:-1]
+        cols = z.shape[-1]
+        y = jnp.dot(
+            z.reshape(-1, cols), a.T, precision="highest"
+        ).reshape(lead + (rows,))
+        x = maybe_quant(jnp.moveaxis(y, 3, ax))
+    return x
+
+
+def _helmholtz_kernel_blocked(s_ref, d_ref, u_ref, v_ref, *, fmt):
+    """Pallas kernel body: a whole block of elements per grid step."""
+    s = s_ref[...]
+    d = d_ref[...]
+    u = u_ref[...]
+    if fmt is not None:
+        s = quantize(s, fmt)
+        d = quantize(d, fmt)
+        u = quantize(u, fmt)
+    t = _mode_products_batched(s, u, fmt)
+    r = d * t
+    if fmt is not None:
+        r = quantize(r, fmt)
+    v_ref[...] = _mode_products_batched(s.T, r, fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def inverse_helmholtz_pallas_blocked(s, d, u, fmt: FixedFormat | None = None):
+    """Batch-blocked Inverse Helmholtz: one grid step, batched GEMMs.
+
+    Numerically identical to `inverse_helmholtz_pallas` (same contraction
+    order and quantization points); only the iteration space changes.
+    """
+    b, p = u.shape[0], u.shape[1]
+    kernel = functools.partial(_helmholtz_kernel_blocked, fmt=fmt)
+    full = pl.BlockSpec((b, p, p, p), lambda: (0, 0, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec((p, p), lambda: (0, 0)), full, full],
+        out_specs=full,
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=True,
+    )(s, d, u)
+
+
+def vmem_bytes_per_step(p: int, dtype_bytes: int) -> int:
+    """VMEM working set of one grid step (S + D + u + v + t/r temps).
+
+    Used by the DESIGN.md roofline estimate: the Pallas pipeline holds
+    two grid steps in flight (double buffering), so the footprint must
+    stay below VMEM/2.
+    """
+    s = p * p
+    per_elem = 3 * p**3  # d, u, v blocks
+    temps = 2 * p**3  # t and r live simultaneously at the Hadamard
+    return (s + per_elem + temps) * dtype_bytes

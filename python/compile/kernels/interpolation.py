@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: isotropic Interpolation operator (paper §4.3).
+
+Maps u in R^{NxNxN} to u' in R^{MxMxM} through A in R^{MxN} applied along
+every mode. The paper evaluates M = N = 11; the kernel supports M != N
+(prolongation/restriction between polynomial degrees).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import FixedFormat, quantize
+
+
+def _interp_kernel(a_ref, u_ref, o_ref, *, fmt: FixedFormat | None):
+    a = a_ref[...]
+    u = u_ref[0]
+    if fmt is not None:
+        a = quantize(a, fmt)
+        u = quantize(u, fmt)
+    m, n = a.shape
+
+    def maybe_quant(v):
+        return quantize(v, fmt) if fmt is not None else v
+
+    # mode 0: (m, n) @ (n, n*n)
+    x = jnp.dot(a, u.reshape(n, n * n), precision="highest").reshape(m, n, n)
+    x = maybe_quant(x)
+    # mode 1
+    x = jnp.swapaxes(x, 0, 1)  # (n, m, n)
+    x = jnp.dot(a, x.reshape(n, m * n), precision="highest").reshape(m, m, n)
+    x = jnp.swapaxes(x, 0, 1)  # (m, m, n)
+    x = maybe_quant(x)
+    # mode 2
+    x = jnp.moveaxis(x, 2, 0)  # (n, m, m)
+    x = jnp.dot(a, x.reshape(n, m * m), precision="highest").reshape(m, m, m)
+    x = jnp.moveaxis(x, 0, 2)
+    o_ref[0] = maybe_quant(x)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def interpolation_pallas(a, u, fmt: FixedFormat | None = None):
+    """Batched interpolation via pallas_call.
+
+    Args:
+      a: (M, N) operator. u: (B, N, N, N). Returns (B, M, M, M).
+    """
+    b, n = u.shape[0], u.shape[1]
+    m = a.shape[0]
+    kernel = functools.partial(_interp_kernel, fmt=fmt)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n, n, n), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, m, m), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m, m, m), u.dtype),
+        interpret=True,
+    )(a, u)

@@ -1,0 +1,81 @@
+"""Fixed-point emulation via fake quantization (paper §3.6.4).
+
+The paper converts the datapath from IEEE double to `ap_fixed` formats:
+
+  * Fixed Point 64 = Q24.40 (24 integer bits incl. sign, 40 fractional)
+  * Fixed Point 32 = Q8.24  (8 integer bits incl. sign, 24 fractional)
+
+On TPU/XLA we cannot synthesize ap_fixed datapaths, so we emulate the
+numerics with *fake quantization*: every operator result is rounded to
+the fixed-point grid (step 2^-frac_bits) and saturated to the format's
+dynamic range. The carrier type is f64 for both formats: Q24.40 and
+Q8.24 grid points with |x| < 2^23 are exactly representable in an f64
+mantissa (52 bits >= int_bits-1 + frac_bits for Q8.24; for Q24.40 the
+inputs are scaled to [-1, 1] per the paper, so magnitudes stay far below
+the 2^12 exactness bound).
+
+Quantization is applied at *operator* granularity (after each mode
+product / Hadamard), mirroring where the HLS datapath truncates stored
+intermediates. Intra-accumulation rounding (per-MAC) is not modeled; the
+measured MSE therefore bounds the paper's from below while preserving the
+headline ratio MSE(fx32)/MSE(fx64) ~ 2^32 (paper: 3.58e-12 / 9.39e-22).
+See DESIGN.md "Hardware substitutions".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FixedFormat:
+    """A signed fixed-point format with int_bits + frac_bits total bits."""
+
+    int_bits: int  # integer bits, including the sign bit
+    frac_bits: int
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2**self.frac_bits)
+
+    @property
+    def max_value(self) -> float:
+        """Largest representable value: 2^(int_bits-1) - 2^-frac_bits."""
+        return float(2 ** (self.int_bits - 1)) - 1.0 / self.scale
+
+    @property
+    def min_value(self) -> float:
+        return -float(2 ** (self.int_bits - 1))
+
+    @property
+    def name(self) -> str:
+        return f"q{self.int_bits}_{self.frac_bits}"
+
+
+# The two formats evaluated in the paper (§3.6.4).
+FX64 = FixedFormat(int_bits=24, frac_bits=40)
+FX32 = FixedFormat(int_bits=8, frac_bits=24)
+
+FORMATS = {"fx64": FX64, "fx32": FX32}
+
+
+def quantize(x, fmt: FixedFormat):
+    """Round `x` to the fixed-point grid and saturate to the range.
+
+    Round-half-to-even matches the default `ap_fixed` quantization mode
+    used by Vitis HLS arithmetic results stored back to registers.
+    """
+    y = jnp.round(x * fmt.scale) / fmt.scale
+    return jnp.clip(y, fmt.min_value, fmt.max_value)
+
+
+def quantization_noise_power(fmt: FixedFormat) -> float:
+    """Expected MSE contribution of one rounding: step^2 / 12."""
+    step = 1.0 / fmt.scale
+    return step * step / 12.0

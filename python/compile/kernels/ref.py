@@ -1,0 +1,118 @@
+"""Pure-jnp correctness oracles for the CFD tensor kernels.
+
+These are the ground truth for the Pallas kernels (L1) and for the Rust
+native baseline (cross-checked through the PJRT runtime). They implement
+the three operators evaluated in the paper:
+
+  * Inverse Helmholtz (Eq. 1a-1c):
+        t = S x0 S x1 S x2 u        (three mode products, Eq. 1a)
+        r = D * t                    (Hadamard, Eq. 1b)
+        v = S^T x0 S^T x1 S^T x2 r   (three mode products, Eq. 1c)
+  * Interpolation: u' = A x0 A x1 A x2 u   (isotropic operator A in R^{MxN})
+  * Gradient: (Dx x0 u, Dy x1 u, Dz x2 u) on an (nx, ny, nz) element
+
+`mode_apply(A, x, mode)` is the n-mode tensor-matrix product
+(A x_n u)_{..i..} = sum_l A[i, l] * u[..l..].
+
+The FLOP model matches the paper's Eq. 2: each mode product on a p^3
+element costs 2*p^4 flops, the Hadamard costs p^3, so Inverse Helmholtz
+costs (12p + 1) * p^3 per element.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mode_apply(a, x, mode: int):
+    """n-mode product: contract `a`'s second index with `x`'s `mode` index.
+
+    result[.., i, ..] = sum_l a[i, l] * x[.., l, ..]
+    """
+    x = jnp.moveaxis(x, mode, 0)
+    shp = x.shape
+    y = jnp.dot(a, x.reshape(shp[0], -1), precision="highest")
+    y = y.reshape((a.shape[0],) + shp[1:])
+    return jnp.moveaxis(y, 0, mode)
+
+
+def inverse_helmholtz(s, d, u):
+    """Inverse Helmholtz operator on a single (p, p, p) element.
+
+    Args:
+      s: (p, p) spectral operator matrix.
+      d: (p, p, p) diagonal (Hadamard) factor.
+      u: (p, p, p) input element.
+    Returns:
+      v: (p, p, p) output element.
+    """
+    t = mode_apply(s, mode_apply(s, mode_apply(s, u, 0), 1), 2)
+    r = d * t
+    st = s.T
+    v = mode_apply(st, mode_apply(st, mode_apply(st, r, 0), 1), 2)
+    return v
+
+
+def interpolation(a, u):
+    """Isotropic interpolation u' = A (x) A (x) A (x) u, A in R^{MxN}."""
+    return mode_apply(a, mode_apply(a, mode_apply(a, u, 0), 1), 2)
+
+
+def gradient(dx, dy, dz, u):
+    """Spectral gradient of u along all three dimensions.
+
+    Args:
+      dx: (nx, nx) derivative matrix, dy: (ny, ny), dz: (nz, nz).
+      u: (nx, ny, nz) element.
+    Returns:
+      (gx, gy, gz) each of shape (nx, ny, nz).
+    """
+    return (
+        mode_apply(dx, u, 0),
+        mode_apply(dy, u, 1),
+        mode_apply(dz, u, 2),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched references (the implicit CFDlang "element loop").
+# ---------------------------------------------------------------------------
+
+
+def inverse_helmholtz_batch(s, d, u):
+    """Batched Inverse Helmholtz: d, u are (B, p, p, p); s is shared."""
+    import jax
+
+    return jax.vmap(lambda de, ue: inverse_helmholtz(s, de, ue))(d, u)
+
+
+def interpolation_batch(a, u):
+    import jax
+
+    return jax.vmap(lambda ue: interpolation(a, ue))(u)
+
+
+def gradient_batch(dx, dy, dz, u):
+    import jax
+
+    return jax.vmap(lambda ue: gradient(dx, dy, dz, ue))(u)
+
+
+# ---------------------------------------------------------------------------
+# FLOP model (paper Eq. 2 / Eq. 3).
+# ---------------------------------------------------------------------------
+
+
+def helmholtz_flops_per_element(p: int) -> int:
+    """(12p + 1) * p^3 — 177,023 for p=11; 29,155 for p=7 (paper Eq. 2)."""
+    return (12 * p + 1) * p**3
+
+
+def interpolation_flops_per_element(m: int, n: int) -> int:
+    """Three mode products mapping n^3 -> m^3 through A in R^{mxn}."""
+    # mode 0: m*n^2 outputs, 2n flops each; mode 1: m^2*n, 2n; mode 2: m^3, 2n
+    return 2 * n * (m * n * n + m * m * n + m * m * m)
+
+
+def gradient_flops_per_element(nx: int, ny: int, nz: int) -> int:
+    return 2 * (nx * nx * ny * nz + nx * ny * ny * nz + nx * ny * nz * nz)

@@ -1,0 +1,163 @@
+"""L2: batched JAX compute graphs calling the L1 Pallas kernels.
+
+Each model is the body of one FPGA compute-unit invocation in the paper's
+target architecture (Fig. 4): a batch of B independent elements streamed
+through the operator. The Rust coordinator (L3) executes the lowered HLO
+for every CU dispatch; Python never runs on the request path.
+
+Two variants exist per operator:
+
+  * ``pallas`` — the L1 kernel (the "accelerator datapath" analog);
+  * ``ref``    — the pure-jnp graph (lowered separately; XLA-CPU fuses it
+    aggressively, and the Rust baselines use it as the "highly-optimized
+    Intel implementation" analog of paper §4.3).
+
+Fixed-point variants (fx64 = Q24.40, fx32 = Q8.24) use fake quantization
+on an f64 carrier (see kernels.quant).
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import gradient as gradient_k  # noqa: E402
+from .kernels import helmholtz as helmholtz_k  # noqa: E402
+from .kernels import interpolation as interpolation_k  # noqa: E402
+from .kernels import quant, ref  # noqa: E402
+
+#: dtype name -> (carrier jnp dtype, fixed-point format or None)
+DTYPES = {
+    "f64": (jnp.float64, None),
+    "f32": (jnp.float32, None),
+    "fx64": (jnp.float64, quant.FX64),
+    "fx32": (jnp.float64, quant.FX32),
+}
+
+
+def _quantized_ref_helmholtz(s, d, u, fmt):
+    """Reference helmholtz with operator-granularity fake quantization."""
+    s, d, u = (quant.quantize(x, fmt) for x in (s, d, u))
+    qq = lambda x: quant.quantize(x, fmt)
+    t = qq(ref.mode_apply(s, u, 0))
+    t = qq(ref.mode_apply(s, t, 1))
+    t = qq(ref.mode_apply(s, t, 2))
+    r = qq(d * t)
+    v = qq(ref.mode_apply(s.T, r, 0))
+    v = qq(ref.mode_apply(s.T, v, 1))
+    v = qq(ref.mode_apply(s.T, v, 2))
+    return v
+
+
+def helmholtz_model(dtype: str, variant: str = "pallas"):
+    """Returns fn(s, d, u) -> v for a batch of elements.
+
+    s: (p, p); d, u: (B, p, p, p). Output is a 1-tuple (AOT lowers with
+    return_tuple=True; the Rust side unwraps with to_tuple1).
+    """
+    _, fmt = DTYPES[dtype]
+
+    if variant == "pallas":
+
+        def fn(s, d, u):
+            return (helmholtz_k.inverse_helmholtz_pallas(s, d, u, fmt=fmt),)
+
+    elif variant == "pallas_blocked":
+        # §Perf L1 variant: whole batch per grid step (batched GEMMs)
+
+        def fn(s, d, u):
+            return (
+                helmholtz_k.inverse_helmholtz_pallas_blocked(s, d, u, fmt=fmt),
+            )
+
+    elif variant == "ref":
+
+        def fn(s, d, u):
+            if fmt is None:
+                return (ref.inverse_helmholtz_batch(s, d, u),)
+            return (
+                jax.vmap(
+                    lambda de, ue: _quantized_ref_helmholtz(s, de, ue, fmt)
+                )(d, u),
+            )
+
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return fn
+
+
+def interpolation_model(dtype: str, variant: str = "pallas"):
+    """Returns fn(a, u) -> u' for a batch; a: (M, N), u: (B, N, N, N)."""
+    _, fmt = DTYPES[dtype]
+
+    if variant == "pallas":
+
+        def fn(a, u):
+            return (interpolation_k.interpolation_pallas(a, u, fmt=fmt),)
+
+    elif variant == "ref":
+
+        def fn(a, u):
+            if fmt is not None:
+                a = quant.quantize(a, fmt)
+                u = quant.quantize(u, fmt)
+            return (ref.interpolation_batch(a, u),)
+
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return fn
+
+
+def gradient_model(dtype: str, variant: str = "pallas"):
+    """Returns fn(dx, dy, dz, u) -> (gx, gy, gz) for a batch."""
+    _, fmt = DTYPES[dtype]
+
+    if variant == "pallas":
+
+        def fn(dx, dy, dz, u):
+            return gradient_k.gradient_pallas(dx, dy, dz, u, fmt=fmt)
+
+    elif variant == "ref":
+
+        def fn(dx, dy, dz, u):
+            if fmt is not None:
+                dx, dy, dz, u = (
+                    quant.quantize(x, fmt) for x in (dx, dy, dz, u)
+                )
+            return ref.gradient_batch(dx, dy, dz, u)
+
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return fn
+
+
+def helmholtz_arg_specs(p: int, batch: int, dtype: str):
+    """ShapeDtypeStructs for lowering a helmholtz model."""
+    carrier, _ = DTYPES[dtype]
+    return (
+        jax.ShapeDtypeStruct((p, p), carrier),
+        jax.ShapeDtypeStruct((batch, p, p, p), carrier),
+        jax.ShapeDtypeStruct((batch, p, p, p), carrier),
+    )
+
+
+def interpolation_arg_specs(m: int, n: int, batch: int, dtype: str):
+    carrier, _ = DTYPES[dtype]
+    return (
+        jax.ShapeDtypeStruct((m, n), carrier),
+        jax.ShapeDtypeStruct((batch, n, n, n), carrier),
+    )
+
+
+def gradient_arg_specs(dims, batch: int, dtype: str):
+    carrier, _ = DTYPES[dtype]
+    nx, ny, nz = dims
+    return (
+        jax.ShapeDtypeStruct((nx, nx), carrier),
+        jax.ShapeDtypeStruct((ny, ny), carrier),
+        jax.ShapeDtypeStruct((nz, nz), carrier),
+        jax.ShapeDtypeStruct((batch, nx, ny, nz), carrier),
+    )

@@ -1,0 +1,121 @@
+"""Fixed-point (fake-quantized) numerics: paper §3.6.4 / §4.2 MSE claims.
+
+Paper: Fixed Point 64 (Q24.40) MSE = 9.39e-22; Fixed Point 32 (Q8.24)
+MSE = 3.58e-12 vs double, for inputs rescaled to [-1, 1]. Our fake
+quantization rounds at operator granularity (not per-MAC) so measured
+MSE bounds the paper's from below; the headline *ratio*
+MSE(fx32)/MSE(fx64) ~ 2^32 must hold.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import FX32, FX64, inverse_helmholtz_pallas, quantize, ref
+from compile.kernels.quant import FORMATS, FixedFormat
+
+RNG = np.random.default_rng(7)
+
+
+def _unit(shape):
+    return RNG.uniform(-1.0, 1.0, size=shape)
+
+
+# ---------------------------------------------------------------------------
+# quantize()
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_grid_exactness_fx32():
+    # Q8.24 grid points must round-trip exactly through the f64 carrier.
+    k = np.array([-(2**31), -1, 0, 1, 2**31 - 1], dtype=np.float64)
+    x = k / FX32.scale
+    np.testing.assert_array_equal(np.asarray(quantize(x, FX32)), x)
+
+
+def test_quantize_rounds_to_nearest():
+    step = 1.0 / FX32.scale
+    x = np.array([0.26 * step, 0.74 * step])
+    got = np.asarray(quantize(x, FX32))
+    np.testing.assert_allclose(got, [0.0, step], atol=0)
+
+
+def test_quantize_saturates():
+    big = np.array([1e9, -1e9])
+    got = np.asarray(quantize(big, FX32))
+    assert got[0] == pytest.approx(FX32.max_value)
+    assert got[1] == pytest.approx(FX32.min_value)
+
+
+def test_format_properties():
+    assert FX64.total_bits == 64 and FX32.total_bits == 32
+    assert FX64.name == "q24_40" and FX32.name == "q8_24"
+    assert FX32.max_value < 128.0 and FX32.min_value == -128.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    fmt_name=st.sampled_from(["fx64", "fx32"]),
+)
+def test_quantize_error_bounded_by_half_step(seed, fmt_name):
+    fmt: FixedFormat = FORMATS[fmt_name]
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, 64)
+    err = np.abs(np.asarray(quantize(x, fmt)) - x)
+    assert np.all(err <= 0.5 / fmt.scale + 1e-18)
+
+
+def test_quantize_idempotent():
+    x = _unit(100)
+    q1 = np.asarray(quantize(x, FX32))
+    q2 = np.asarray(quantize(q1, FX32))
+    np.testing.assert_array_equal(q1, q2)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end MSE through the Helmholtz kernel (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+def _mse(p, fmt, batch=8):
+    s = _unit((p, p))
+    d = _unit((batch, p, p, p))
+    u = _unit((batch, p, p, p))
+    exact = np.asarray(ref.inverse_helmholtz_batch(s, d, u))
+    fx = np.asarray(inverse_helmholtz_pallas(s, d, u, fmt=fmt))
+    return float(np.mean((exact - fx) ** 2))
+
+
+def test_fx64_mse_tiny():
+    mse = _mse(11, FX64)
+    # Paper: 9.39e-22 (per-MAC rounding). Operator-granularity rounding
+    # bounds it from below; anything <= 1e-20 preserves the claim.
+    assert 0.0 < mse < 1e-20
+
+
+def test_fx32_mse_small():
+    mse = _mse(11, FX32)
+    # Paper: 3.58e-12.
+    assert 1e-18 < mse < 1e-10
+
+
+def test_fx_ratio_is_about_2_to_32():
+    """MSE scales with step^2; step ratio is 2^16 so MSE ratio ~ 2^32."""
+    m64 = _mse(7, FX64)
+    m32 = _mse(7, FX32)
+    ratio = m32 / m64
+    assert 2**26 < ratio < 2**38
+
+
+def test_fx32_preserves_shape_of_solution():
+    """Quantized output stays within float tolerance of the exact op."""
+    p, batch = 7, 4
+    s, d, u = _unit((p, p)), _unit((batch, p, p, p)), _unit((batch, p, p, p))
+    exact = np.asarray(ref.inverse_helmholtz_batch(s, d, u))
+    fx = np.asarray(inverse_helmholtz_pallas(s, d, u, fmt=FX32))
+    np.testing.assert_allclose(fx, exact, atol=1e-4)

@@ -1,0 +1,231 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes/dtypes; every Pallas kernel must match the
+pure-jnp oracle to float tolerance.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    gradient_pallas,
+    inverse_helmholtz_pallas,
+    interpolation_pallas,
+    ref,
+)
+from compile.kernels.helmholtz import inverse_helmholtz_pallas_blocked
+from compile.kernels.quant import FX32, FX64
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=np.float64, scale=1.0):
+    # Paper §3.6.4: physical data is rescaled into [-1, 1].
+    return (RNG.uniform(-scale, scale, size=shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Inverse Helmholtz
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [3, 7, 11])
+@pytest.mark.parametrize("batch", [1, 5])
+def test_helmholtz_matches_ref_f64(p, batch):
+    s = _rand((p, p))
+    d = _rand((batch, p, p, p))
+    u = _rand((batch, p, p, p))
+    got = inverse_helmholtz_pallas(s, d, u)
+    want = ref.inverse_helmholtz_batch(s, d, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+def test_helmholtz_matches_ref_f32():
+    p, batch = 7, 3
+    s = _rand((p, p), np.float32)
+    d = _rand((batch, p, p, p), np.float32)
+    u = _rand((batch, p, p, p), np.float32)
+    got = inverse_helmholtz_pallas(s, d, u)
+    want = ref.inverse_helmholtz_batch(s, d, u)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_helmholtz_identity_s_is_hadamard():
+    """With S = I the operator reduces to v = d * u."""
+    p, batch = 5, 2
+    s = np.eye(p)
+    d = _rand((batch, p, p, p))
+    u = _rand((batch, p, p, p))
+    got = inverse_helmholtz_pallas(s, d, u)
+    np.testing.assert_allclose(np.asarray(got), d * u, rtol=1e-13)
+
+
+def test_helmholtz_linearity_in_u():
+    p, batch = 4, 2
+    s = _rand((p, p))
+    d = _rand((batch, p, p, p))
+    u1 = _rand((batch, p, p, p))
+    u2 = _rand((batch, p, p, p))
+    lhs = inverse_helmholtz_pallas(s, d, u1 + 2.0 * u2)
+    rhs = inverse_helmholtz_pallas(s, d, u1) + 2.0 * inverse_helmholtz_pallas(
+        s, d, u2
+    )
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-11)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.integers(min_value=2, max_value=9),
+    batch=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_helmholtz_hypothesis_sweep(p, batch, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.uniform(-1, 1, (p, p))
+    d = rng.uniform(-1, 1, (batch, p, p, p))
+    u = rng.uniform(-1, 1, (batch, p, p, p))
+    got = inverse_helmholtz_pallas(s, d, u)
+    want = ref.inverse_helmholtz_batch(s, d, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11)
+
+
+@pytest.mark.parametrize("p,batch", [(5, 4), (11, 8)])
+def test_blocked_kernel_matches_per_element_kernel(p, batch):
+    """The §Perf batch-blocked variant is numerically equivalent."""
+    s = _rand((p, p)) / p
+    d = _rand((batch, p, p, p))
+    u = _rand((batch, p, p, p))
+    a = inverse_helmholtz_pallas(s, d, u)
+    b = inverse_helmholtz_pallas_blocked(s, d, u)
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-9, atol=1e-14
+    )
+
+
+@pytest.mark.parametrize("fmt", [FX64, FX32])
+def test_blocked_kernel_matches_quantized(fmt):
+    p, batch = 7, 4
+    s = _rand((p, p)) / p
+    d = _rand((batch, p, p, p))
+    u = _rand((batch, p, p, p))
+    a = inverse_helmholtz_pallas(s, d, u, fmt=fmt)
+    b = inverse_helmholtz_pallas_blocked(s, d, u, fmt=fmt)
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-9, atol=1e-12
+    )
+
+
+def test_blocked_kernel_matches_ref():
+    p, batch = 7, 6
+    s = _rand((p, p))
+    d = _rand((batch, p, p, p))
+    u = _rand((batch, p, p, p))
+    got = inverse_helmholtz_pallas_blocked(s, d, u)
+    want = ref.inverse_helmholtz_batch(s, d, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# Interpolation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n", [(11, 11), (7, 11), (11, 7), (3, 5)])
+def test_interpolation_matches_ref(m, n):
+    batch = 3
+    a = _rand((m, n))
+    u = _rand((batch, n, n, n))
+    got = interpolation_pallas(a, u)
+    want = ref.interpolation_batch(a, u)
+    assert got.shape == (batch, m, m, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+def test_interpolation_identity():
+    n, batch = 6, 2
+    u = _rand((batch, n, n, n))
+    got = interpolation_pallas(np.eye(n), u)
+    np.testing.assert_allclose(np.asarray(got), u, rtol=1e-14)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=8),
+    n=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_interpolation_hypothesis_sweep(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-1, 1, (m, n))
+    u = rng.uniform(-1, 1, (2, n, n, n))
+    got = interpolation_pallas(a, u)
+    want = ref.interpolation_batch(a, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# Gradient
+# ---------------------------------------------------------------------------
+
+
+def test_gradient_matches_ref_paper_dims():
+    nx, ny, nz, batch = 8, 7, 6, 4
+    dx, dy, dz = _rand((nx, nx)), _rand((ny, ny)), _rand((nz, nz))
+    u = _rand((batch, nx, ny, nz))
+    gx, gy, gz = gradient_pallas(dx, dy, dz, u)
+    wx, wy, wz = ref.gradient_batch(dx, dy, dz, u)
+    for got, want in ((gx, wx), (gy, wy), (gz, wz)):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-12
+        )
+
+
+def test_gradient_of_constant_is_zero():
+    """Derivative matrices annihilate constants: rows sum to 0."""
+    nx, ny, nz = 5, 4, 3
+    # build matrices with zero row sums
+    def zrows(n):
+        m = _rand((n, n))
+        return m - m.mean(axis=1, keepdims=True)
+
+    dx, dy, dz = zrows(nx), zrows(ny), zrows(nz)
+    u = np.ones((2, nx, ny, nz))
+    gx, gy, gz = gradient_pallas(dx, dy, dz, u)
+    for g in (gx, gy, gz):
+        np.testing.assert_allclose(np.asarray(g), 0.0, atol=1e-13)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nx=st.integers(min_value=2, max_value=8),
+    ny=st.integers(min_value=2, max_value=8),
+    nz=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gradient_hypothesis_sweep(nx, ny, nz, seed):
+    rng = np.random.default_rng(seed)
+    dx = rng.uniform(-1, 1, (nx, nx))
+    dy = rng.uniform(-1, 1, (ny, ny))
+    dz = rng.uniform(-1, 1, (nz, nz))
+    u = rng.uniform(-1, 1, (2, nx, ny, nz))
+    got = gradient_pallas(dx, dy, dz, u)
+    want = ref.gradient_batch(dx, dy, dz, u)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# FLOP model (paper Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+def test_flops_per_element_paper_values():
+    assert ref.helmholtz_flops_per_element(11) == 177_023
+    assert ref.helmholtz_flops_per_element(7) == 29_155

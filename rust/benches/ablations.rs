@@ -1,0 +1,210 @@
+//! Ablations for the design choices DESIGN.md calls out (not a paper
+//! table; referenced in the paper's discussion sections):
+//!
+//!  1. HBM vs DDR4 global memory            (§2.3 Challenge discussion)
+//!  2. FIFO sizing: naive full-size vs reduced      (§4.2 multi-CU prep)
+//!  3. Mnemosyne memory sharing on/off               (§3.6.4, Table 3)
+//!  4. PCIe effective-bandwidth sensitivity          (§4.2 Fig. 17 root cause)
+//!  5. Multi-FPGA scaling what-if                    (§5 conclusion)
+//!  6. Fixed-point format exploration (base2 DSE)    (§3.4.5 future work)
+
+use hbmflow::cli::build_kernel;
+use hbmflow::datatype::DataType;
+use hbmflow::hls;
+use hbmflow::ir::{rewrite, teil};
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::precision::{self, Interval};
+use hbmflow::report::{self, paper};
+use hbmflow::sim;
+use hbmflow::util::bench::section;
+
+fn main() {
+    let n = paper::N_ELEMENTS;
+    let platform = Platform::alveo_u280();
+    let kernel = build_kernel("helmholtz", 11).unwrap();
+
+    // ---- 1. HBM vs DDR4 ----
+    section("Ablation 1 — HBM vs DDR4 global memory");
+    {
+        let mut rows = Vec::new();
+        let mut best = std::collections::HashMap::new();
+        for (label, opts) in [
+            ("HBM, dataflow-7, 1 CU", OlympusOpts::dataflow(7)),
+            ("HBM, fx32, 1 CU", OlympusOpts::fixed_point(DataType::Fx32)),
+            ("DDR4, dataflow-7, 1 CU", OlympusOpts::dataflow(7).on_ddr4()),
+            (
+                "DDR4, baseline x2 (bank limit)",
+                OlympusOpts::baseline().on_ddr4().with_cus(2),
+            ),
+        ] {
+            let spec = olympus::generate(&kernel, &opts, &platform).unwrap();
+            let est = hls::estimate(&spec, &platform);
+            let r = sim::simulate(&spec, &est, &platform, n);
+            best.insert(label, r.gflops_system);
+            rows.push(vec![
+                label.to_string(),
+                format!("{}", spec.total_pcs()),
+                report::f(r.gflops_system),
+                r.bottleneck.clone(),
+            ]);
+        }
+        println!(
+            "{}",
+            report::table(&["configuration", "channels", "System", "bound"], &rows)
+        );
+        assert!(
+            best["HBM, dataflow-7, 1 CU"] > best["DDR4, baseline x2 (bank limit)"],
+            "HBM's channel parallelism must beat the two DDR banks"
+        );
+        println!("check passed: HBM channel parallelism > DDR4's two banks\n");
+    }
+
+    // ---- 2. FIFO sizing ----
+    section("Ablation 2 — stream FIFO sizing (BRAM vs throughput)");
+    {
+        let mut rows = Vec::new();
+        let mut brams = Vec::new();
+        for (label, depth) in [("full (naive)", None), ("256 words", Some(256)), ("64 words", Some(64))] {
+            let mut opts = OlympusOpts::dataflow(7);
+            opts.fifo_depth = depth;
+            let spec = olympus::generate(&kernel, &opts, &platform).unwrap();
+            let est = hls::estimate(&spec, &platform);
+            let r = sim::simulate(&spec, &est, &platform, n);
+            brams.push(est.total.bram);
+            rows.push(vec![
+                label.to_string(),
+                format!("{}", est.total.bram),
+                report::f(r.gflops_system),
+            ]);
+        }
+        println!("{}", report::table(&["FIFO depth", "BRAM", "System"], &rows));
+        assert!(brams[2] < brams[0], "smaller FIFOs must save BRAM");
+        println!("check passed: reduced FIFOs save BRAM (paper's multi-CU prep)\n");
+    }
+
+    // ---- 3. Memory sharing ----
+    section("Ablation 3 — Mnemosyne sharing on the 1-compute dataflow");
+    {
+        let no = {
+            let spec =
+                olympus::generate(&kernel, &OlympusOpts::dataflow(1), &platform).unwrap();
+            hls::estimate(&spec, &platform)
+        };
+        let yes = {
+            let spec =
+                olympus::generate(&kernel, &OlympusOpts::mem_sharing(), &platform).unwrap();
+            hls::estimate(&spec, &platform)
+        };
+        println!(
+            "URAM {} -> {} ({:+.1}%)   BRAM {} -> {}   DSP {} -> {} (unchanged)",
+            no.total.uram,
+            yes.total.uram,
+            (yes.total.uram as f64 / no.total.uram as f64 - 1.0) * 100.0,
+            no.total.bram,
+            yes.total.bram,
+            no.total.dsp,
+            yes.total.dsp,
+        );
+        assert!(yes.total.uram < no.total.uram);
+        assert_eq!(yes.total.dsp, no.total.dsp);
+        println!("check passed: sharing trades nothing on the datapath (paper -48% URAM)\n");
+    }
+
+    // ---- 4. PCIe bandwidth sensitivity ----
+    section("Ablation 4 — PCIe effective bandwidth vs multi-CU payoff");
+    {
+        let opts = OlympusOpts::fixed_point(DataType::Fx32).with_cus(3);
+        let spec = olympus::generate(&kernel, &opts, &platform).unwrap();
+        let est = hls::estimate(&spec, &platform);
+        let mut rows = Vec::new();
+        let mut sys = Vec::new();
+        for bw in [4.0e9, 7.0e9, 12.0e9, 16.0e9, 32.0e9] {
+            let mut pf = platform.clone();
+            pf.pcie_eff_bytes_per_sec = bw;
+            let r = sim::simulate(&spec, &est, &pf, n);
+            sys.push(r.gflops_system);
+            rows.push(vec![
+                format!("{:.0} GB/s", bw / 1e9),
+                report::f(r.gflops_system),
+                report::f(r.gflops_cu),
+                r.bottleneck.clone(),
+            ]);
+        }
+        println!(
+            "{}",
+            report::table(&["PCIe eff.", "System", "CU", "bound"], &rows)
+        );
+        assert!(sys.windows(2).all(|w| w[1] >= w[0] * 0.999));
+        assert!(
+            sys[4] > 1.3 * sys[1],
+            "faster host link must unlock the replicated CUs"
+        );
+        println!(
+            "check passed: replication pays only once the host link scales — \
+             the paper's Fig. 17 conclusion\n"
+        );
+    }
+
+    // ---- 5. Multi-FPGA what-if ----
+    section("Ablation 5 — multi-FPGA scaling (paper §5 what-if)");
+    {
+        let opts = OlympusOpts::fixed_point(DataType::Fx32);
+        let spec = olympus::generate(&kernel, &opts, &platform).unwrap();
+        let est = hls::estimate(&spec, &platform);
+        let mut rows = Vec::new();
+        let mut sys = Vec::new();
+        for cards in [1u64, 2, 4, 8] {
+            let r = sim::simulate_multi_fpga(&spec, &est, &platform, n, cards);
+            sys.push(r.gflops_system);
+            rows.push(vec![
+                format!("{cards} card(s)"),
+                report::f(r.gflops_system),
+                format!("{:.2}x", r.gflops_system / sys[0]),
+            ]);
+        }
+        println!("{}", report::table(&["FPGAs", "System", "scaling"], &rows));
+        assert!(sys[2] / sys[0] > 3.0, "4 cards ~4x");
+        println!("check passed: per-card PCIe links restore replication scaling\n");
+    }
+
+    // ---- 6. Precision exploration ----
+    section("Ablation 6 — fixed-point format exploration (base2 DSE)");
+    {
+        let prog = hbmflow::dsl::parse(&hbmflow::dsl::inverse_helmholtz_source(11)).unwrap();
+        let module = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let mut rows = Vec::new();
+        for (label, budget) in [
+            ("paper fx32 budget (3.6e-12)", 3.6e-12),
+            ("tight (1e-18)", 1e-18),
+            ("paper fx64 budget (9.4e-22)", 9.4e-22),
+        ] {
+            let cands =
+                precision::explore(&module, Interval::symmetric(1.0 / 11.0), budget, 64);
+            let best = cands.first();
+            rows.push(vec![
+                label.to_string(),
+                best.map(|c| c.name()).unwrap_or_else(|| "-".into()),
+                best.map(|c| format!("{:.1e}", c.predicted_mse)).unwrap_or_default(),
+                best.map(|c| format!("{}", c.dsp_per_mult)).unwrap_or_default(),
+                format!("{}", cands.len()),
+            ]);
+        }
+        println!(
+            "{}",
+            report::table(
+                &["error budget", "cheapest format", "pred. MSE", "DSP/mult", "#feasible"],
+                &rows
+            )
+        );
+        let loose =
+            precision::explore(&module, Interval::symmetric(1.0 / 11.0), 3.6e-12, 64);
+        let tight =
+            precision::explore(&module, Interval::symmetric(1.0 / 11.0), 9.4e-22, 64);
+        assert!(loose[0].total_bits() < tight[0].total_bits());
+        println!(
+            "check passed: looser error budgets admit narrower (cheaper) formats — \
+             the DSE the paper defers to the designer\n"
+        );
+    }
+}

@@ -1,0 +1,81 @@
+//! Fig. 15: performance of each optimization, 1 CU, p = 11, N_eq = 2M.
+//!
+//! Regenerates the CU-vs-System GFLOPS bars for the full optimization
+//! ladder, printing measured vs paper. Also times the simulator itself
+//! (the L3 hot path of this repo).
+
+use hbmflow::cli::build_kernel;
+use hbmflow::hls;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::report::{self, paper};
+use hbmflow::sim;
+use hbmflow::util::bench::{section, Bench};
+
+fn main() {
+    section("Fig. 15 — performance per optimization (1 CU, p=11, N_eq=2M)");
+    let kernel = build_kernel("helmholtz", 11).unwrap();
+    let platform = Platform::alveo_u280();
+    let n = paper::N_ELEMENTS;
+
+    let ladder: Vec<OlympusOpts> = vec![
+        OlympusOpts::baseline(),
+        OlympusOpts::double_buffering(),
+        OlympusOpts::bus_serial(),
+        OlympusOpts::bus_parallel(),
+        OlympusOpts::dataflow(1),
+        OlympusOpts::dataflow(2),
+        OlympusOpts::dataflow(3),
+        OlympusOpts::dataflow(7),
+    ];
+
+    let mut rows = Vec::new();
+    for (i, opts) in ladder.iter().enumerate() {
+        let spec = olympus::generate(&kernel, opts, &platform).unwrap();
+        let est = hls::estimate(&spec, &platform);
+        let r = sim::simulate(&spec, &est, &platform, n);
+        let p = paper::TABLE2[i];
+        rows.push(vec![
+            opts.label(),
+            report::f(r.gflops_cu),
+            report::f(r.gflops_system),
+            report::f(p.gflops),
+            format!("{:.2}", r.gflops_system / p.gflops),
+            report::f(r.freq_mhz),
+            report::f(p.f_mhz),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["implementation", "CU", "System", "paper", "ratio", "f", "f(paper)"],
+            &rows
+        )
+    );
+
+    // shape assertions (who wins, by what factor)
+    let g = |i: usize| -> f64 {
+        let spec = olympus::generate(&kernel, &ladder[i], &platform).unwrap();
+        let est = hls::estimate(&spec, &platform);
+        sim::simulate(&spec, &est, &platform, n).gflops_system
+    };
+    assert!(g(2) < g(1) / 2.0, "bus serial must degrade >=2x");
+    assert!(g(3) / g(2) > 3.0, "parallel recovers ~3.9x over serial");
+    assert!(g(4) > 2.5 * g(3), "dataflow-1 ~3.7x over parallel");
+    assert!(g(6) <= 1.05 * g(5), "dataflow-3 no better than dataflow-2");
+    assert!(g(7) > g(5), "dataflow-7 is the best double variant");
+    println!("shape checks passed: serial degrades, parallel recovers, DF3<=DF2, DF7 best\n");
+
+    // L3 hot-path timing: one full ladder simulation
+    let spec = olympus::generate(&kernel, &ladder[7], &platform).unwrap();
+    let est = hls::estimate(&spec, &platform);
+    let b = Bench::new("simulate 2M elements (dataflow-7)")
+        .run(|| sim::simulate(&spec, &est, &platform, n));
+    println!("{}", b.report());
+    let b2 = Bench::new("olympus generate + hls estimate")
+        .run(|| {
+            let s = olympus::generate(&kernel, &ladder[7], &platform).unwrap();
+            hls::estimate(&s, &platform)
+        });
+    println!("{}", b2.report());
+}

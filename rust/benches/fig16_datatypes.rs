@@ -1,0 +1,114 @@
+//! Fig. 16 + Table 4: data representation x polynomial degree
+//! (Dataflow-7, 1 CU) — performance, resources, and the §4.2 fixed-point
+//! MSE measured through the real PJRT artifacts (E9 in DESIGN.md).
+
+use hbmflow::cli::build_kernel;
+use hbmflow::coordinator::{Driver, HelmholtzWorkload};
+use hbmflow::datatype::DataType;
+use hbmflow::hls;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::report::{self, paper};
+use hbmflow::runtime::Runtime;
+use hbmflow::sim;
+use hbmflow::util::bench::section;
+
+fn main() {
+    section("Fig. 16 / Table 4 — data representation x p (Dataflow-7, 1 CU)");
+    let platform = Platform::alveo_u280();
+    let n = paper::N_ELEMENTS;
+
+    let mut rows = Vec::new();
+    let mut sys = std::collections::HashMap::new();
+    for p in [11usize, 7] {
+        let kernel = build_kernel("helmholtz", p).unwrap();
+        for dtype in [DataType::F64, DataType::Fx64, DataType::Fx32] {
+            let opts = if dtype.is_fixed() {
+                OlympusOpts::fixed_point(dtype)
+            } else {
+                OlympusOpts::dataflow(7)
+            };
+            let spec = olympus::generate(&kernel, &opts, &platform).unwrap();
+            let est = hls::estimate(&spec, &platform);
+            let r = sim::simulate(&spec, &est, &platform, n);
+            let pg = paper::fig16_gflops(dtype.name(), p);
+            sys.insert((dtype.name(), p), r.gflops_system);
+            rows.push(vec![
+                format!("{} p={p}", dtype.display()),
+                report::f(r.gflops_cu),
+                report::f(r.gflops_system),
+                report::f(pg),
+                report::f(r.freq_mhz),
+                format!("{}", est.total.dsp),
+                format!("{}", est.total.uram),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        report::table(
+            &["configuration", "CU", "System", "paper", "f(MHz)", "DSP", "URAM"],
+            &rows
+        )
+    );
+
+    // Fig. 16 shape: fx64 ~1.19x, fx32 ~2.37x over double at p=11;
+    // p=7 slightly slower than its p=11 counterpart.
+    let g = |d: &str, p: usize| sys[&(d, p)];
+    let r64 = g("fx64", 11) / g("f64", 11);
+    let r32 = g("fx32", 11) / g("f64", 11);
+    assert!((1.0..1.6).contains(&r64), "fx64/double {r64} (paper 1.19)");
+    assert!((1.7..3.2).contains(&r32), "fx32/double {r32} (paper 2.37)");
+    for d in ["f64", "fx64", "fx32"] {
+        assert!(g(d, 7) < g(d, 11), "{d}: p=7 slightly slower (paper Fig. 16)");
+    }
+    println!(
+        "shape checks passed: fx64 x{r64:.2}, fx32 x{r32:.2} over double (paper 1.19 / 2.37)\n"
+    );
+
+    // E9: measured fixed-point MSE through the real artifacts.
+    section("§4.2 fixed-point MSE (measured through PJRT artifacts)");
+    match Runtime::from_default_dir() {
+        Ok(mut rt) => {
+            let w = HelmholtzWorkload::generate(11, 64, 99);
+            let mut mse_rows = Vec::new();
+            let mut measured = std::collections::HashMap::new();
+            for (dtype, paper_mse) in [
+                (DataType::Fx64, paper::MSE_FX64),
+                (DataType::Fx32, paper::MSE_FX32),
+            ] {
+                let kernel = build_kernel("helmholtz", 11).unwrap();
+                let spec = olympus::generate(
+                    &kernel,
+                    &OlympusOpts::fixed_point(dtype),
+                    &platform,
+                )
+                .unwrap();
+                let artifact = Driver::artifact_for(&rt, &spec, 11).unwrap();
+                let mut d = Driver::new(&mut rt, spec, artifact);
+                let r = d.run(&w, 32).unwrap();
+                measured.insert(dtype.name(), r.mse_vs_oracle);
+                mse_rows.push(vec![
+                    dtype.display().to_string(),
+                    format!("{:.3e}", r.mse_vs_oracle),
+                    format!("{paper_mse:.3e}"),
+                ]);
+            }
+            println!(
+                "{}",
+                report::table(&["format", "measured MSE", "paper MSE"], &mse_rows)
+            );
+            let ratio = measured["fx32"] / measured["fx64"];
+            assert!(
+                ratio > 1e6,
+                "MSE(fx32)/MSE(fx64) must be ~2^32-ish, got {ratio}"
+            );
+            println!(
+                "shape check passed: MSE ratio fx32/fx64 = {ratio:.2e} (paper 3.8e9). \
+                 Absolute MSEs are below the paper's because fake quantization \
+                 rounds at operator granularity (see DESIGN.md).\n"
+            );
+        }
+        Err(e) => println!("skipping MSE measurement (artifacts missing: {e})\n"),
+    }
+}

@@ -1,0 +1,106 @@
+//! Fig. 17 + Table 5: multi-CU replication (225 MHz target builds).
+//!
+//! The paper's key negative result: CU-only throughput scales with
+//! replication but the *system* slows down because host transfers
+//! serialize — "it is not recommended to replicate CUs until the host
+//! data transfer time can be reduced."
+
+use hbmflow::cli::build_kernel;
+use hbmflow::datatype::DataType;
+use hbmflow::hls;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::report::{self, paper};
+use hbmflow::sim;
+use hbmflow::util::bench::section;
+
+fn main() {
+    section("Fig. 17 / Table 5 — multi-CU replication");
+    let platform = Platform::alveo_u280();
+    let n = paper::N_ELEMENTS;
+
+    // (dtype, p, CUs) per Table 5
+    let cases: Vec<(DataType, usize, usize)> = vec![
+        (DataType::F64, 11, 2),
+        (DataType::F64, 7, 3),
+        (DataType::Fx64, 11, 2),
+        (DataType::Fx64, 7, 2),
+        (DataType::Fx32, 11, 3),
+        (DataType::Fx32, 7, 4),
+    ];
+
+    let mut rows = Vec::new();
+    for (i, &(dtype, p, cus)) in cases.iter().enumerate() {
+        let kernel = build_kernel("helmholtz", p).unwrap();
+        let mk = |ncu: usize| {
+            let mut o = if dtype.is_fixed() {
+                OlympusOpts::fixed_point(dtype)
+            } else {
+                OlympusOpts::dataflow(7)
+            };
+            o = o.with_cus(ncu);
+            let spec = olympus::generate(&kernel, &o, &platform).unwrap();
+            let est = hls::estimate(&spec, &platform);
+            let r = sim::simulate(&spec, &est, &platform, n);
+            (est, r)
+        };
+        let (est1, one) = mk(1);
+        let (est, multi) = mk(cus);
+        let _ = est1;
+        let pp = paper::TABLE5[i];
+        rows.push(vec![
+            format!("{} p={p} x{cus}", dtype.display()),
+            report::f(multi.freq_mhz),
+            report::f(pp.f_mhz),
+            report::f(one.gflops_cu),
+            report::f(multi.gflops_cu),
+            report::f(multi.gflops_system),
+            format!("{}", est.total.dsp),
+            format!("{}", pp.dsp),
+            multi.bottleneck.clone(),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["configuration", "f", "f(paper)", "CU(1)", "CU(n)", "System", "DSP", "DSP(paper)", "bound"],
+            &rows
+        )
+    );
+
+    // Headline shape: fx32 p=11 3 CUs — kernel scales, system collapses.
+    let kernel = build_kernel("helmholtz", 11).unwrap();
+    let run = |cus: usize| {
+        let o = OlympusOpts::fixed_point(DataType::Fx32).with_cus(cus);
+        let spec = olympus::generate(&kernel, &o, &platform).unwrap();
+        let est = hls::estimate(&spec, &platform);
+        sim::simulate(&spec, &est, &platform, n)
+    };
+    let one = run(1);
+    let three = run(3);
+    println!(
+        "fx32 p=11: 1 CU kernel {:.1} -> 3 CU kernel {:.1} GOPS (paper {:.0});\n\
+         3 CU system {:.1} GOPS (paper {:.0}) — bound by {}",
+        one.gflops_cu,
+        three.gflops_cu,
+        paper::FIG17_FX32_P11_CU,
+        three.gflops_system,
+        paper::FIG17_FX32_P11_SYSTEM,
+        three.bottleneck
+    );
+    assert!(three.gflops_cu > 1.3 * one.gflops_cu, "kernel must scale");
+    assert!(
+        three.gflops_system < three.gflops_cu / 1.3,
+        "system must collapse (transfers serialize)"
+    );
+    assert_eq!(three.bottleneck, "pcie");
+    // Frequency collapse for the double 2-CU build (Table 5: 199->146)
+    let kernel_d = build_kernel("helmholtz", 11).unwrap();
+    let f = |cus: usize| {
+        let o = OlympusOpts::dataflow(7).with_cus(cus);
+        let spec = olympus::generate(&kernel_d, &o, &platform).unwrap();
+        hls::estimate(&spec, &platform).fmax_mhz
+    };
+    assert!(f(2) < f(1), "replication lowers frequency");
+    println!("shape checks passed: kernel scales, system PCIe-bound, frequency collapses\n");
+}

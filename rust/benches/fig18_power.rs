@@ -1,0 +1,73 @@
+//! Fig. 18: power and energy efficiency of the Dataflow-7 variants
+//! (dtype x p x CU count).
+
+use hbmflow::cli::build_kernel;
+use hbmflow::datatype::DataType;
+use hbmflow::hls;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::power::INTEL_XEON_AVG_W;
+use hbmflow::platform::Platform;
+use hbmflow::report::{self, paper};
+use hbmflow::sim;
+use hbmflow::util::bench::section;
+
+fn main() {
+    section("Fig. 18 — power and efficiency (Dataflow-7)");
+    let platform = Platform::alveo_u280();
+    let n = paper::N_ELEMENTS;
+
+    let mut rows = Vec::new();
+    let mut eff = std::collections::HashMap::new();
+    for p in [11usize, 7] {
+        let kernel = build_kernel("helmholtz", p).unwrap();
+        for dtype in [DataType::F64, DataType::Fx64, DataType::Fx32] {
+            for cus in [1usize, 2] {
+                let mut opts = if dtype.is_fixed() {
+                    OlympusOpts::fixed_point(dtype)
+                } else {
+                    OlympusOpts::dataflow(7)
+                };
+                opts = opts.with_cus(cus);
+                let Ok(spec) = olympus::generate(&kernel, &opts, &platform) else {
+                    continue;
+                };
+                let est = hls::estimate(&spec, &platform);
+                if !est.total.fits_in(&platform.total_resources()) {
+                    continue;
+                }
+                let r = sim::simulate(&spec, &est, &platform, n);
+                eff.insert((dtype.name(), p, cus), r.efficiency_gflops_w);
+                rows.push(vec![
+                    format!("{} p={p} x{cus}", dtype.display()),
+                    report::f(r.avg_power_w),
+                    format!("{:.2}", r.efficiency_gflops_w),
+                    report::f(r.gflops_system),
+                ]);
+            }
+        }
+    }
+    println!(
+        "{}",
+        report::table(&["configuration", "avg W", "GFLOPS/W", "System"], &rows)
+    );
+
+    // Fig. 18 shape: fixed > float; 32 > 64 bit; multi-CU less efficient;
+    // fx32 p=11 1 CU is the headline (~4 GOPS/W, ~24.5x Intel).
+    let e = |d: &str, p: usize, c: usize| eff[&(d, p, c)];
+    assert!(e("fx64", 11, 1) > e("f64", 11, 1), "fixed beats float");
+    assert!(e("fx32", 11, 1) > e("fx64", 11, 1), "32 beats 64 bit");
+    assert!(e("fx32", 11, 2) < e("fx32", 11, 1), "replication hurts efficiency");
+    let best = e("fx32", 11, 1);
+    assert!((2.0..7.0).contains(&best), "headline ~4 GOPS/W, got {best}");
+
+    let intel_eff = paper::intel_optimized_gflops("helmholtz") / INTEL_XEON_AVG_W;
+    let ratio = best / intel_eff;
+    println!(
+        "headline: fx32 p=11 1 CU = {best:.2} GOPS/W (paper ~{}), {ratio:.1}x the \
+         Intel-optimized estimate (paper {}x)\n",
+        paper::FIG18_BEST_GOPS_PER_W,
+        paper::FIG18_INTEL_RATIO
+    );
+    assert!((10.0..45.0).contains(&ratio), "Intel ratio {ratio}");
+    println!("shape checks passed: fixed>float, 32>64, 1CU>2CU, ~24x Intel\n");
+}

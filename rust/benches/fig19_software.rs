@@ -1,0 +1,142 @@
+//! Fig. 19: comparison with software implementations across the three
+//! kernels (Inverse Helmholtz, Interpolation, Gradient).
+//!
+//! Measured bars:
+//!   * naive CPU     — hand-written single-thread loops (AMD EPYC analog),
+//!     measured wall-clock on this machine;
+//!   * XLA-CPU       — the `_ref` artifact through PJRT (Intel-MKL analog),
+//!     measured wall-clock;
+//!   * FPGA baseline / FPGA optimized — simulated on the U280 model.
+//!
+//! Absolute CPU numbers depend on this host; the *shape* (FPGA-opt >>
+//! naive, FPGA-opt vs optimized-CPU, efficiency gap) is asserted.
+
+use hbmflow::baselines::{measure_naive, measure_xla_ref};
+use hbmflow::cli::build_kernel;
+use hbmflow::coordinator::HelmholtzWorkload;
+use hbmflow::hls;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::power::INTEL_XEON_AVG_W;
+use hbmflow::platform::Platform;
+use hbmflow::report::{self, paper};
+use hbmflow::runtime::Runtime;
+use hbmflow::sim;
+use hbmflow::util::bench::section;
+
+fn fpga(kernel_name: &str, opts: OlympusOpts, n: u64) -> sim::SimResult {
+    let platform = Platform::alveo_u280();
+    let p = if kernel_name == "gradient" { 8 } else { 11 };
+    let kernel = build_kernel(kernel_name, p).unwrap();
+    let spec = olympus::generate(&kernel, &opts, &platform).unwrap();
+    let est = hls::estimate(&spec, &platform);
+    sim::simulate(&spec, &est, &platform, n)
+}
+
+fn main() {
+    section("Fig. 19a — kernels vs software implementations (double precision)");
+    let n = paper::N_ELEMENTS;
+
+    // --- measured CPU baselines (helmholtz) ---
+    let w = HelmholtzWorkload::generate(11, 4096, 2024);
+    let naive = measure_naive(&w, 1024);
+    let xla = Runtime::from_default_dir()
+        .ok()
+        .and_then(|mut rt| measure_xla_ref(&mut rt, &w, 4096).ok());
+
+    let mut rows = Vec::new();
+    let mut opt_sys = std::collections::HashMap::new();
+    for kname in ["helmholtz", "interpolation", "gradient"] {
+        let base = fpga(kname, OlympusOpts::baseline(), n);
+        // fully-optimized double config (paper: double buffering + bus
+        // parallel + dataflow per loop nest)
+        let groups = if kname == "helmholtz" { 7 } else { 3 };
+        let opt = fpga(kname, OlympusOpts::dataflow(groups), n);
+        opt_sys.insert(kname, opt.gflops_system);
+        rows.push(vec![
+            kname.to_string(),
+            report::f(base.gflops_system),
+            report::f(opt.gflops_system),
+            if kname == "helmholtz" {
+                report::f(naive.gflops)
+            } else {
+                "-".into()
+            },
+            if kname == "helmholtz" {
+                xla.as_ref().map(|m| report::f(m.gflops)).unwrap_or("-".into())
+            } else {
+                "-".into()
+            },
+            report::f(paper::intel_optimized_gflops(kname)),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["kernel", "FPGA base", "FPGA opt", "naive CPU*", "XLA-CPU*", "Intel(paper)"],
+            &rows
+        )
+    );
+    println!("* measured on this machine, single PJRT CPU device\n");
+
+    // --- shape checks ---
+    let h_opt = opt_sys["helmholtz"];
+    let speedup_naive = h_opt / naive.gflops;
+    println!(
+        "FPGA-opt / naive-CPU = {speedup_naive:.1}x (paper range {:.1}-{:.1}x \
+         across kernels vs its EPYC host)",
+        paper::FIG19.fpga_opt_over_naive.0, paper::FIG19.fpga_opt_over_naive.1
+    );
+    assert!(
+        speedup_naive > 5.0,
+        "optimized FPGA must dominate naive CPU"
+    );
+    let intel = paper::intel_optimized_gflops("helmholtz");
+    let vs_intel = h_opt / intel;
+    println!(
+        "FPGA-opt / Intel-optimized(paper) = {vs_intel:.2}x (paper {:.1}x)",
+        paper::FIG19.helmholtz_vs_intel
+    );
+    assert!((1.2..6.0).contains(&vs_intel));
+
+    section("Fig. 19b — power and energy efficiency");
+    let helm = fpga("helmholtz", OlympusOpts::dataflow(7), n);
+    let fpga_eff = helm.efficiency_gflops_w;
+    let intel_eff = intel / INTEL_XEON_AVG_W;
+    let naive_eff = naive.gflops / naive.power_w;
+    let mut prows = vec![
+        vec![
+            "FPGA optimized (double)".to_string(),
+            report::f(helm.avg_power_w),
+            format!("{:.3}", fpga_eff),
+        ],
+        vec![
+            "Intel optimized (paper est.)".to_string(),
+            report::f(INTEL_XEON_AVG_W),
+            format!("{:.3}", intel_eff),
+        ],
+        vec![
+            "naive CPU (measured)".to_string(),
+            report::f(naive.power_w),
+            format!("{:.3}", naive_eff),
+        ],
+    ];
+    if let Some(x) = &xla {
+        prows.push(vec![
+            x.label.clone(),
+            report::f(x.power_w),
+            format!("{:.3}", x.gflops_per_w),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(&["execution", "avg W", "GFLOPS/W"], &prows)
+    );
+    let eff_ratio = fpga_eff / intel_eff;
+    println!(
+        "efficiency: FPGA/Intel = {eff_ratio:.1}x (paper {:.1}x for double \
+         Helmholtz; 24.5x for the fx32 build — see fig18_power)",
+        paper::FIG19.efficiency_helmholtz
+    );
+    assert!(eff_ratio > 2.0, "FPGA must be multiples more efficient");
+    println!("shape checks passed\n");
+}

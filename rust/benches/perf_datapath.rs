@@ -1,0 +1,143 @@
+//! §Perf harness: measured throughput of the three layers' hot paths.
+//!
+//! L1/L2 — XLA-CPU execution of the AOT artifacts:
+//!     pallas (per-element grid)  vs  pallas_blocked (batched GEMMs)
+//!     vs  ref (pure-jnp fused oracle). Target: blocked >= 0.5x ref.
+//! L3 — the coordinator driver (interleave + dispatch) and the system
+//!     simulator + generator.
+//!
+//! Results are recorded in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use hbmflow::cli::build_kernel;
+use hbmflow::coordinator::{Driver, HelmholtzWorkload};
+use hbmflow::hls;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::report;
+use hbmflow::runtime::Runtime;
+use hbmflow::sim;
+use hbmflow::util::bench::{section, Bench};
+use hbmflow::util::prng::Prng;
+
+fn measure_artifact(rt: &mut Runtime, name: &str, n_elements: usize) -> Option<f64> {
+    let meta = rt.meta(name)?.clone();
+    let (p, b) = (meta.p, meta.batch);
+    let block = p * p * p;
+    let mut rng = Prng::new(1);
+    let mut s = rng.unit_vec(p * p);
+    for x in &mut s {
+        *x /= p as f64;
+    }
+    let d = rng.unit_vec(b * block);
+    let u = rng.unit_vec(b * block);
+    // warmup: compile + one run
+    rt.run_f64(name, &[s.clone(), d.clone(), u.clone()]).ok()?;
+    let iters = n_elements.div_ceil(b);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let out = rt
+            .run_f64(name, &[s.clone(), d.clone(), u.clone()])
+            .ok()?;
+        std::hint::black_box(&out);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let flops = (iters * b) as u64 * meta.flops_per_element;
+    Some(flops as f64 / wall / 1e9)
+}
+
+fn main() {
+    section("§Perf L1/L2 — datapath variants through PJRT (p=11, f64)");
+    let mut rt = match Runtime::from_default_dir() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("artifacts missing: {e}");
+            return;
+        }
+    };
+    let n = 2048;
+    let mut rows = Vec::new();
+    let mut meas = std::collections::HashMap::new();
+    for (label, artifact) in [
+        ("pallas per-element grid", "helmholtz_p11_f64_b32"),
+        ("pallas batch-blocked", "helmholtz_p11_f64_b32_pallas_blocked"),
+        ("pure-jnp ref (oracle)", "helmholtz_p11_f64_b32_ref"),
+    ] {
+        if let Some(g) = measure_artifact(&mut rt, artifact, n) {
+            meas.insert(label, g);
+            rows.push(vec![label.to_string(), report::f(g)]);
+        }
+    }
+    println!("{}", report::table(&["datapath", "GFLOPS"], &rows));
+    if let (Some(&grid), Some(&blocked), Some(&refv)) = (
+        meas.get("pallas per-element grid"),
+        meas.get("pallas batch-blocked"),
+        meas.get("pure-jnp ref (oracle)"),
+    ) {
+        println!(
+            "blocked / grid = {:.2}x   blocked / ref = {:.2}x (target >= 0.5x)\n",
+            blocked / grid,
+            blocked / refv
+        );
+        assert!(blocked > grid, "blocking must help");
+        assert!(blocked / refv >= 0.5, "blocked must reach half of ref");
+    }
+
+    section("§Perf L1/L2 — fx32 blocked variant");
+    let mut rows = Vec::new();
+    for (label, artifact) in [
+        ("fx32 per-element grid", "helmholtz_p11_fx32_b32"),
+        ("fx32 batch-blocked", "helmholtz_p11_fx32_b32_pallas_blocked"),
+    ] {
+        if let Some(g) = measure_artifact(&mut rt, artifact, n) {
+            rows.push(vec![label.to_string(), report::f(g)]);
+        }
+    }
+    println!("{}", report::table(&["datapath", "GOPS (emulated)"], &rows));
+
+    section("§Perf L3 — coordinator driver wall time (1024 elements, p=11)");
+    {
+        let kernel = build_kernel("helmholtz", 11).unwrap();
+        let platform = Platform::alveo_u280();
+        let spec =
+            olympus::generate(&kernel, &OlympusOpts::dataflow(7), &platform).unwrap();
+        let w = HelmholtzWorkload::generate(11, 1024, 3);
+        for artifact in [
+            "helmholtz_p11_f64_b32",
+            "helmholtz_p11_f64_b32_pallas_blocked",
+        ] {
+            if rt.meta(artifact).is_none() {
+                continue;
+            }
+            rt.load(artifact).unwrap(); // exclude XLA compile time
+            let mut driver = Driver::new(&mut rt, spec.clone(), artifact);
+            driver.run(&w, 0).unwrap(); // warm run
+            let r1 = driver.run(&w, 0).unwrap();
+            let r2 = driver.run(&w, 0).unwrap();
+            let best = if r1.wall_s < r2.wall_s { &r1 } else { &r2 };
+            println!(
+                "driver[{artifact}]: {:.3} s wall, {:.2} GFLOPS end-to-end",
+                best.wall_s, best.measured_gflops
+            );
+        }
+    }
+
+    section("§Perf L3 — simulator and generator");
+    {
+        let kernel = build_kernel("helmholtz", 11).unwrap();
+        let platform = Platform::alveo_u280();
+        let spec =
+            olympus::generate(&kernel, &OlympusOpts::dataflow(7), &platform).unwrap();
+        let est = hls::estimate(&spec, &platform);
+        let b = Bench::new("sim::simulate (N_eq = 2M)")
+            .run(|| sim::simulate(&spec, &est, &platform, 2_000_000));
+        println!("{}", b.report());
+        let b = Bench::new("full pipeline: parse -> ... -> estimate").run(|| {
+            let k = build_kernel("helmholtz", 11).unwrap();
+            let s = olympus::generate(&k, &OlympusOpts::dataflow(7), &platform).unwrap();
+            hls::estimate(&s, &platform)
+        });
+        println!("{}", b.report());
+    }
+}

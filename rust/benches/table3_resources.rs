@@ -1,0 +1,80 @@
+//! Table 3: resource utilization per optimization (p = 11, 1 CU),
+//! including the Mem Sharing and fixed-point rows.
+
+use hbmflow::cli::build_kernel;
+use hbmflow::datatype::DataType;
+use hbmflow::hls;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::{Platform, Resources};
+use hbmflow::report::{self, paper};
+use hbmflow::util::bench::section;
+
+fn row(
+    kernel: &hbmflow::ir::affine::Kernel,
+    platform: &Platform,
+    opts: &OlympusOpts,
+    p: &paper::ResourceRow,
+) -> (Vec<String>, Resources) {
+    let spec = olympus::generate(kernel, opts, platform).unwrap();
+    let est = hls::estimate(&spec, platform);
+    let budget = platform.total_resources();
+    let u = est.total.utilization(&budget);
+    let cells = vec![
+        opts.label(),
+        format!("{} ({:.1}%)", est.total.lut, u[0] * 100.0),
+        format!("{}", p.lut),
+        format!("{} ({:.1}%)", est.total.bram, u[2] * 100.0),
+        format!("{}", p.bram),
+        format!("{} ({:.1}%)", est.total.uram, u[3] * 100.0),
+        format!("{}", p.uram),
+        format!("{} ({:.1}%)", est.total.dsp, u[4] * 100.0),
+        format!("{}", p.dsp),
+    ];
+    (cells, est.total)
+}
+
+fn main() {
+    section("Table 3 — resource utilization (p=11, 1 CU); paper columns inline");
+    let kernel = build_kernel("helmholtz", 11).unwrap();
+    let platform = Platform::alveo_u280();
+
+    let cases: Vec<(OlympusOpts, usize)> = vec![
+        (OlympusOpts::baseline(), 0),
+        (OlympusOpts::double_buffering(), 1),
+        (OlympusOpts::bus_serial(), 2),
+        (OlympusOpts::bus_parallel(), 3),
+        (OlympusOpts::dataflow(1), 4),
+        (OlympusOpts::dataflow(2), 5),
+        (OlympusOpts::dataflow(3), 6),
+        (OlympusOpts::dataflow(7), 7),
+        (OlympusOpts::mem_sharing(), 8),
+        (OlympusOpts::fixed_point(DataType::Fx64), 9),
+        (OlympusOpts::fixed_point(DataType::Fx32), 10),
+    ];
+
+    let mut rows = Vec::new();
+    let mut totals = Vec::new();
+    for (opts, pi) in &cases {
+        let (cells, total) = row(&kernel, &platform, opts, &paper::TABLE3[*pi]);
+        rows.push(cells);
+        totals.push(total);
+    }
+    println!(
+        "{}",
+        report::table(
+            &["implementation", "LUT", "(paper)", "BRAM", "(paper)", "URAM", "(paper)", "DSP", "(paper)"],
+            &rows
+        )
+    );
+
+    // Shape checks the paper calls out.
+    let dsp = |i: usize| totals[i].dsp as f64;
+    assert!((dsp(9) - 4368.0).abs() / 4368.0 < 0.10, "fx64 DSP near paper");
+    assert!(dsp(10) < dsp(9) * 0.6, "fx32 DSP ~half of fx64");
+    assert!(totals[10].uram == 0, "fx32 URAM -> 0");
+    assert!(totals[8].uram < totals[4].uram, "mem sharing cuts URAM");
+    assert!(totals[8].dsp == totals[4].dsp, "sharing leaves datapath alone");
+    let luts: Vec<u64> = [0usize, 4, 5, 7].iter().map(|&i| totals[i].lut).collect();
+    assert!(luts.windows(2).all(|w| w[0] < w[1]), "LUT monotone up the ladder");
+    println!("shape checks passed: fx DSP ratios, URAM->0, sharing saves URAM, LUT monotone\n");
+}

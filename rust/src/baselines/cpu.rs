@@ -1,0 +1,259 @@
+//! Measured CPU baselines (paper §4.3, Fig. 19).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::workload::HelmholtzWorkload;
+use crate::platform::power::{AMD_EPYC_AVG_W, INTEL_XEON_AVG_W};
+use crate::runtime::Runtime;
+
+/// One measured software execution.
+#[derive(Debug, Clone)]
+pub struct CpuMeasurement {
+    pub label: String,
+    pub elements: u64,
+    pub wall_s: f64,
+    pub gflops: f64,
+    /// Assumed average power (paper convention).
+    pub power_w: f64,
+    pub gflops_per_w: f64,
+}
+
+impl CpuMeasurement {
+    fn new(label: &str, elements: u64, flops: u64, wall_s: f64, power_w: f64) -> Self {
+        let gflops = flops as f64 / wall_s.max(1e-12) / 1e9;
+        CpuMeasurement {
+            label: label.to_string(),
+            elements,
+            wall_s,
+            gflops,
+            power_w,
+            gflops_per_w: gflops / power_w,
+        }
+    }
+}
+
+/// Naive single-thread Inverse Helmholtz over `n` elements: the paper's
+/// plain software execution analog. Straight loops over Eq. 1a-1c with
+/// no blocking or vectorization hints.
+pub fn measure_naive(w: &HelmholtzWorkload, n: usize) -> CpuMeasurement {
+    let p = w.p;
+    let n = n.min(w.n_elements);
+    let block = w.block();
+    let s = w.s.data();
+    let mut v_out = vec![0.0f64; block];
+    let mut t = vec![0.0f64; block];
+    let mut t2 = vec![0.0f64; block];
+
+    let t0 = Instant::now();
+    for e in 0..n {
+        let d = w.d_element(e);
+        let u = w.u_element(e);
+        // t = S x0 S x1 S x2 u, one mode at a time (factorized — even the
+        // "naive" code uses the O(p^4) algorithm, like the paper's
+        // software reference; the difference is scalar loops vs MKL).
+        mode0(s, u, &mut t, p);
+        mode1(s, &t, &mut t2, p);
+        mode2(s, &t2, &mut t, p);
+        // r = D * t (reuse t in place)
+        for i in 0..block {
+            t[i] *= d[i];
+        }
+        // v = S^T x0 S^T x1 S^T x2 r
+        mode0_t(s, &t, &mut t2, p);
+        mode1_t(s, &t2, &mut v_out, p);
+        mode2_t(s, &v_out, &mut t2, p);
+        std::hint::black_box(&t2);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let flops = n as u64 * (12 * p as u64 + 1) * (p as u64).pow(3);
+    CpuMeasurement::new("naive CPU (1 thread)", n as u64, flops, wall, AMD_EPYC_AVG_W)
+}
+
+fn mode0(s: &[f64], x: &[f64], out: &mut [f64], p: usize) {
+    let pp = p * p;
+    for i in 0..p {
+        for jk in 0..pp {
+            let mut acc = 0.0;
+            for l in 0..p {
+                acc += s[i * p + l] * x[l * pp + jk];
+            }
+            out[i * pp + jk] = acc;
+        }
+    }
+}
+
+fn mode0_t(s: &[f64], x: &[f64], out: &mut [f64], p: usize) {
+    let pp = p * p;
+    for i in 0..p {
+        for jk in 0..pp {
+            let mut acc = 0.0;
+            for l in 0..p {
+                acc += s[l * p + i] * x[l * pp + jk];
+            }
+            out[i * pp + jk] = acc;
+        }
+    }
+}
+
+fn mode1(s: &[f64], x: &[f64], out: &mut [f64], p: usize) {
+    let pp = p * p;
+    for i in 0..p {
+        for j in 0..p {
+            for k in 0..p {
+                let mut acc = 0.0;
+                for l in 0..p {
+                    acc += s[j * p + l] * x[i * pp + l * p + k];
+                }
+                out[i * pp + j * p + k] = acc;
+            }
+        }
+    }
+}
+
+fn mode1_t(s: &[f64], x: &[f64], out: &mut [f64], p: usize) {
+    let pp = p * p;
+    for i in 0..p {
+        for j in 0..p {
+            for k in 0..p {
+                let mut acc = 0.0;
+                for l in 0..p {
+                    acc += s[l * p + j] * x[i * pp + l * p + k];
+                }
+                out[i * pp + j * p + k] = acc;
+            }
+        }
+    }
+}
+
+fn mode2(s: &[f64], x: &[f64], out: &mut [f64], p: usize) {
+    let pp = p * p;
+    for i in 0..p {
+        for j in 0..p {
+            for k in 0..p {
+                let mut acc = 0.0;
+                for l in 0..p {
+                    acc += s[k * p + l] * x[i * pp + j * p + l];
+                }
+                out[i * pp + j * p + k] = acc;
+            }
+        }
+    }
+}
+
+fn mode2_t(s: &[f64], x: &[f64], out: &mut [f64], p: usize) {
+    let pp = p * p;
+    for i in 0..p {
+        for j in 0..p {
+            for k in 0..p {
+                let mut acc = 0.0;
+                for l in 0..p {
+                    acc += s[l * p + k] * x[i * pp + j * p + l];
+                }
+                out[i * pp + j * p + k] = acc;
+            }
+        }
+    }
+}
+
+/// XLA-CPU execution of the pure-jnp `_ref` artifact — the optimized-CPU
+/// analog. Measures steady-state throughput over `n` elements.
+pub fn measure_xla_ref(
+    rt: &mut Runtime,
+    w: &HelmholtzWorkload,
+    n: usize,
+) -> Result<CpuMeasurement> {
+    let meta = rt
+        .manifest
+        .find("helmholtz", w.p, "f64", "ref")
+        .ok_or_else(|| anyhow::anyhow!("no ref artifact for p={}", w.p))?
+        .clone();
+    let b = meta.batch;
+    let block = w.block();
+    let n = n.min(w.n_elements) / b * b;
+    let s = w.s.data().to_vec();
+    // warm up (compile + first run)
+    let d0 = w.d[..b * block].to_vec();
+    let u0 = w.u[..b * block].to_vec();
+    rt.run_f64(&meta.name, &[s.clone(), d0, u0])?;
+
+    let t0 = Instant::now();
+    let mut e = 0usize;
+    while e < n {
+        let d = w.d[e * block..(e + b) * block].to_vec();
+        let u = w.u[e * block..(e + b) * block].to_vec();
+        let out = rt.run_f64(&meta.name, &[s.clone(), d, u])?;
+        std::hint::black_box(&out);
+        e += b;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let flops = n as u64 * meta.flops_per_element;
+    Ok(CpuMeasurement::new(
+        "XLA-CPU (optimized ref)",
+        n as u64,
+        flops,
+        wall,
+        INTEL_XEON_AVG_W,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_matches_oracle() {
+        // verify the hand-written loops against the tensor oracle
+        let w = HelmholtzWorkload::generate(5, 3, 11);
+        let p = 5;
+        let block = w.block();
+        let s = w.s.data();
+        let mut t = vec![0.0; block];
+        let mut t2 = vec![0.0; block];
+        let mut t3 = vec![0.0; block];
+        let u = w.u_element(1);
+        let d = w.d_element(1);
+        mode0(s, u, &mut t, p);
+        mode1(s, &t, &mut t2, p);
+        mode2(s, &t2, &mut t, p);
+        for i in 0..block {
+            t[i] *= d[i];
+        }
+        mode0_t(s, &t, &mut t2, p);
+        mode1_t(s, &t2, &mut t3, p);
+        mode2_t(s, &t3, &mut t2, p);
+        let want = w.expected_element(1);
+        for (i, &x) in want.data().iter().enumerate() {
+            assert!((t2[i] - x).abs() < 1e-12, "idx {i}: {} vs {x}", t2[i]);
+        }
+    }
+
+    #[test]
+    fn naive_measurement_reports_throughput() {
+        let w = HelmholtzWorkload::generate(7, 200, 3);
+        let m = measure_naive(&w, 200);
+        assert_eq!(m.elements, 200);
+        assert!(m.gflops > 0.05, "{}", m.gflops);
+        assert!(m.gflops < 100.0);
+        assert!((m.gflops_per_w - m.gflops / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xla_ref_beats_naive() {
+        // the Fig. 19 premise: optimized CPU >> naive CPU per element
+        let Ok(mut rt) = Runtime::from_default_dir() else {
+            eprintln!("artifacts missing; skipping");
+            return;
+        };
+        let w = HelmholtzWorkload::generate(11, 512, 4);
+        let naive = measure_naive(&w, 256);
+        let xla = measure_xla_ref(&mut rt, &w, 512).unwrap();
+        assert!(
+            xla.gflops > naive.gflops,
+            "xla {} !> naive {}",
+            xla.gflops,
+            naive.gflops
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Software baselines for the Fig. 19 comparison.
+//!
+//! Two measured CPU datapaths stand in for the paper's testbeds:
+//!
+//!  * `naive` — straight nested loops, single thread: the analog of the
+//!    plain software execution on the AMD EPYC 7282 host (black bars).
+//!  * the XLA-CPU execution of the `_ref` artifacts through the PJRT
+//!    runtime: the analog of the MKL-based "highly-optimized Intel
+//!    implementations" [44] (red bars) — an aggressively fused,
+//!    vectorized compile of the same math.
+//!
+//! Energy for CPUs uses the paper's own convention: a conservative
+//! 100 W average under kernel load (§4.3).
+
+pub mod cpu;
+
+pub use cpu::{measure_naive, measure_xla_ref, CpuMeasurement};

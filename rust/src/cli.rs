@@ -1,0 +1,499 @@
+//! Command-line interface (hand-rolled; the offline registry has no clap).
+//!
+//! ```text
+//! hbmflow compile  [--kernel helmholtz|interpolation|gradient] [--p 11]
+//!                  [--dataflow N] [--dtype f64|f32|fx64|fx32] [--emit c|cfg|wrapper|host|teil]
+//! hbmflow estimate [--kernel ..] [--p ..] [--preset ..] [--cus N]
+//! hbmflow simulate [--kernel ..] [--p ..] [--preset ..] [--cus N] [--elements N]
+//! hbmflow run      [--p 7|11] [--dtype ..] [--elements N] [--artifacts DIR]
+//! hbmflow sweep    [--elements N]
+//! hbmflow ladder   [--elements N]       # the Fig. 15 ladder
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{Driver, HelmholtzWorkload};
+use crate::datatype::DataType;
+use crate::dsl;
+use crate::hls;
+use crate::ir::{lower, rewrite, schedule, teil};
+use crate::olympus::{self, OlympusOpts};
+use crate::platform::Platform;
+use crate::report;
+use crate::runtime::Runtime;
+use crate::sim;
+
+/// Parsed `--key value` flags.
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {}", argv[i]))?;
+            let v = argv
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("--{k} needs a value"))?;
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn dtype_or(&self, default: DataType) -> Result<DataType> {
+        match self.get("dtype") {
+            Some(v) => DataType::parse(v).ok_or_else(|| anyhow!("unknown dtype {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+/// Build the kernel for a named operator.
+pub fn build_kernel(kernel: &str, p: usize) -> Result<crate::ir::affine::Kernel> {
+    let src = match kernel {
+        "helmholtz" => dsl::inverse_helmholtz_source(p),
+        "interpolation" => dsl::interpolation_source(p, p),
+        "gradient" => dsl::gradient_source(8, 7, 6),
+        other => bail!("unknown kernel {other} (helmholtz|interpolation|gradient)"),
+    };
+    let prog = dsl::parse(&src).map_err(|e| anyhow!(e))?;
+    let m = rewrite::optimize(teil::from_ast(&prog).map_err(|e| anyhow!(e))?);
+    lower::lower_kernel(&m, kernel).map_err(|e| anyhow!(e))
+}
+
+/// Resolve a preset name to Olympus options.
+pub fn preset(name: &str, dtype: DataType, cus: usize) -> Result<OlympusOpts> {
+    let opts = match name {
+        "baseline" => OlympusOpts::baseline(),
+        "double-buffering" | "db" => OlympusOpts::double_buffering(),
+        "bus-serial" => OlympusOpts::bus_serial(),
+        "bus-parallel" => OlympusOpts::bus_parallel(),
+        "dataflow1" => OlympusOpts::dataflow(1),
+        "dataflow2" => OlympusOpts::dataflow(2),
+        "dataflow3" => OlympusOpts::dataflow(3),
+        "dataflow7" => OlympusOpts::dataflow(7),
+        "mem-sharing" => OlympusOpts::mem_sharing(),
+        "best" => {
+            if dtype.is_fixed() {
+                OlympusOpts::fixed_point(dtype)
+            } else {
+                let mut o = OlympusOpts::dataflow(7);
+                o.dtype = dtype;
+                o
+            }
+        }
+        other => bail!("unknown preset {other}"),
+    };
+    let mut opts = opts;
+    if name != "best" {
+        opts.dtype = dtype;
+    }
+    Ok(opts.with_cus(cus.max(1)))
+}
+
+/// Entry point for the binary.
+pub fn main_with_args(argv: &[String]) -> Result<String> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "compile" => cmd_compile(&args),
+        "estimate" => cmd_estimate(&args),
+        "simulate" => cmd_simulate(&args),
+        "run" => cmd_run(&args),
+        "ladder" => cmd_ladder(&args),
+        "sweep" => cmd_sweep(&args),
+        "explore" => cmd_explore(&args),
+        "help" | "-h" | "--help" => Ok(HELP.to_string()),
+        other => bail!("unknown command {other}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+hbmflow — DSL-to-HBM-architecture flow (Soldavini et al. 2022 repro)
+
+commands:
+  compile   emit C99 / system.cfg / CU wrapper / host steps / teil IR
+  estimate  HLS resource + frequency estimate for a configuration
+  simulate  cycle-approximate system simulation (GFLOPS, power)
+  run       real numerics through the PJRT artifacts
+  ladder    the full Fig. 15 optimization ladder
+  sweep     dtype x p x CUs design-space sweep
+  explore   fixed-point format exploration under an error budget
+flags: --kernel --p --dtype --preset --cus --elements --emit --artifacts
+       --mse-budget --max-bits
+";
+
+fn cmd_compile(args: &Args) -> Result<String> {
+    let kernel_name = args.get("kernel").unwrap_or("helmholtz");
+    let p = args.usize_or("p", 11)?;
+    let dtype = args.dtype_or(DataType::F64)?;
+    let groups = args.usize_or("dataflow", 7)?;
+    let k = build_kernel(kernel_name, p)?;
+    let opts = {
+        let mut o = OlympusOpts::dataflow(groups.min(k.nests.len()));
+        o.dtype = dtype;
+        o
+    };
+    let platform = Platform::alveo_u280();
+    let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
+    let emit = args.get("emit").unwrap_or("c");
+    let out = match emit {
+        "c" => {
+            let s = schedule::fixed(&k, groups.min(k.nests.len())).map_err(|e| anyhow!(e))?;
+            crate::codegen::c_emit::emit(&k, &s, dtype.name())
+        }
+        "cfg" => olympus::config::system_cfg(&spec),
+        "wrapper" => olympus::config::cu_wrapper(&spec),
+        "host" => olympus::config::host_program(&spec),
+        "teil" => {
+            let src = match kernel_name {
+                "helmholtz" => dsl::inverse_helmholtz_source(p),
+                "interpolation" => dsl::interpolation_source(p, p),
+                _ => dsl::gradient_source(8, 7, 6),
+            };
+            let prog = dsl::parse(&src).map_err(|e| anyhow!(e))?;
+            let m = rewrite::optimize(teil::from_ast(&prog).map_err(|e| anyhow!(e))?);
+            m.to_string()
+        }
+        other => bail!("unknown --emit {other} (c|cfg|wrapper|host|teil)"),
+    };
+    Ok(out)
+}
+
+fn cmd_estimate(args: &Args) -> Result<String> {
+    let kernel_name = args.get("kernel").unwrap_or("helmholtz");
+    let p = args.usize_or("p", 11)?;
+    let dtype = args.dtype_or(DataType::F64)?;
+    let cus = args.usize_or("cus", 1)?;
+    let opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?;
+    let k = build_kernel(kernel_name, p)?;
+    let platform = Platform::alveo_u280();
+    let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
+    let e = hls::estimate(&spec, &platform);
+    let u = e.utilization(&platform);
+    Ok(format!(
+        "{} p={p} dtype={} cus={cus}\n\
+         ops: {} ({} mult + {} add), II={}\n\
+         fmax: {:.1} MHz (target {}), SLR span {}\n\
+         LUT  {:>9} ({:.1}%)\nFF   {:>9} ({:.1}%)\nBRAM {:>9} ({:.1}%)\n\
+         URAM {:>9} ({:.1}%)\nDSP  {:>9} ({:.1}%)\n\
+         batch: {} elements/channel, lanes {}",
+        opts.label(),
+        dtype,
+        e.ops(),
+        e.mults,
+        e.adds,
+        e.ii,
+        e.fmax_mhz,
+        opts.target_freq_mhz,
+        e.slr_span,
+        e.total.lut,
+        u[0] * 100.0,
+        e.total.ff,
+        u[1] * 100.0,
+        e.total.bram,
+        u[2] * 100.0,
+        e.total.uram,
+        u[3] * 100.0,
+        e.total.dsp,
+        u[4] * 100.0,
+        spec.batch_elements,
+        spec.lanes,
+    ))
+}
+
+fn cmd_simulate(args: &Args) -> Result<String> {
+    let kernel_name = args.get("kernel").unwrap_or("helmholtz");
+    let p = args.usize_or("p", 11)?;
+    let dtype = args.dtype_or(DataType::F64)?;
+    let cus = args.usize_or("cus", 1)?;
+    let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
+    let opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?;
+    let k = build_kernel(kernel_name, p)?;
+    let platform = Platform::alveo_u280();
+    let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
+    let e = hls::estimate(&spec, &platform);
+    let r = sim::simulate(&spec, &e, &platform, n);
+    let stages: Vec<String> = r
+        .stage_intervals
+        .iter()
+        .map(|(n, c)| format!("{n}={c}"))
+        .collect();
+    Ok(format!(
+        "{} p={p} dtype={} cus={cus} elements={n}\n\
+         CU     : {:.3} GFLOPS ({:.3} s busy)\n\
+         System : {:.3} GFLOPS ({:.3} s wall)\n\
+         f={:.1} MHz  ideal={:.2} GFLOPS  efficiency={:.3}\n\
+         power {:.1} W  ->  {:.2} GFLOPS/W  ({:.0} J)\n\
+         bottleneck: {}  stages/element: {}",
+        r.label,
+        dtype,
+        r.gflops_cu,
+        r.cu_time_s,
+        r.gflops_system,
+        r.total_time_s,
+        r.freq_mhz,
+        r.ideal_gflops,
+        r.efficiency_vs_ideal,
+        r.avg_power_w,
+        r.efficiency_gflops_w,
+        r.energy_j,
+        r.bottleneck,
+        stages.join(" "),
+    ))
+}
+
+fn cmd_run(args: &Args) -> Result<String> {
+    let p = args.usize_or("p", 7)?;
+    let dtype = args.dtype_or(DataType::F64)?;
+    let n = args.u64_or("elements", 256)? as usize;
+    let cus = args.usize_or("cus", 1)?;
+    let mut rt = match args.get("artifacts") {
+        Some(dir) => Runtime::new(dir)?,
+        None => Runtime::from_default_dir()?,
+    };
+    let k = build_kernel("helmholtz", p)?;
+    let opts = preset("best", dtype, cus)?;
+    let platform = Platform::alveo_u280();
+    let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
+    let artifact = Driver::artifact_for(&rt, &spec, p)?;
+    let w = HelmholtzWorkload::generate(p, n, 2024);
+    let mut driver = Driver::new(&mut rt, spec, artifact);
+    let r = driver.run(&w, 16.min(n))?;
+    Ok(format!(
+        "artifact {}  elements {}  invocations {}\n\
+         wall {:.3} s  ->  measured {:.3} GFLOPS (XLA-CPU datapath)\n\
+         numerics vs f64 oracle: MSE {:.3e}  max |err| {:.3e}\n\
+         per-CU elements: {:?}",
+        r.artifact,
+        r.elements,
+        r.invocations,
+        r.wall_s,
+        r.measured_gflops,
+        r.mse_vs_oracle,
+        r.max_abs_err,
+        r.per_cu_elements,
+    ))
+}
+
+fn cmd_ladder(args: &Args) -> Result<String> {
+    let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
+    let k = build_kernel("helmholtz", 11)?;
+    let platform = Platform::alveo_u280();
+    let ladder: Vec<(usize, OlympusOpts)> = vec![
+        (0, OlympusOpts::baseline()),
+        (1, OlympusOpts::double_buffering()),
+        (2, OlympusOpts::bus_serial()),
+        (3, OlympusOpts::bus_parallel()),
+        (4, OlympusOpts::dataflow(1)),
+        (5, OlympusOpts::dataflow(2)),
+        (6, OlympusOpts::dataflow(3)),
+        (7, OlympusOpts::dataflow(7)),
+    ];
+    let mut rows = Vec::new();
+    for (i, opts) in ladder {
+        let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
+        let e = hls::estimate(&spec, &platform);
+        let r = sim::simulate(&spec, &e, &platform, n);
+        let paper = report::paper::TABLE2[i];
+        rows.push(vec![
+            opts.label(),
+            format!("{}", e.ops()),
+            report::f(r.freq_mhz),
+            report::f(r.gflops_cu),
+            report::f(r.gflops_system),
+            report::f(paper.gflops),
+            format!("{:.2}", r.gflops_system / paper.gflops),
+            format!("{:.3}", r.efficiency_vs_ideal),
+            format!("{:.3}", paper.efficiency),
+        ]);
+    }
+    Ok(report::table(
+        &[
+            "implementation",
+            "#Ops",
+            "f(MHz)",
+            "CU",
+            "System",
+            "paper",
+            "ratio",
+            "eff",
+            "eff(paper)",
+        ],
+        &rows,
+    ))
+}
+
+fn cmd_sweep(args: &Args) -> Result<String> {
+    let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
+    let k7 = build_kernel("helmholtz", 7)?;
+    let k11 = build_kernel("helmholtz", 11)?;
+    let platform = Platform::alveo_u280();
+    let mut rows = Vec::new();
+    for (p, k) in [(11usize, &k11), (7, &k7)] {
+        for dtype in [DataType::F64, DataType::Fx64, DataType::Fx32] {
+            for cus in [1usize, 2, 3, 4] {
+                let mut opts = if dtype.is_fixed() {
+                    OlympusOpts::fixed_point(dtype)
+                } else {
+                    OlympusOpts::dataflow(7)
+                };
+                opts = opts.with_cus(cus);
+                let Ok(spec) = olympus::generate(k, &opts, &platform) else {
+                    continue;
+                };
+                let e = hls::estimate(&spec, &platform);
+                if !e.total.fits_in(&platform.total_resources()) {
+                    continue; // infeasible replication
+                }
+                let r = sim::simulate(&spec, &e, &platform, n);
+                rows.push(vec![
+                    format!("{} p={p} x{cus}", dtype.display()),
+                    report::f(r.freq_mhz),
+                    report::f(r.gflops_cu),
+                    report::f(r.gflops_system),
+                    report::f(r.avg_power_w),
+                    format!("{:.2}", r.efficiency_gflops_w),
+                    r.bottleneck.clone(),
+                ]);
+            }
+        }
+    }
+    Ok(report::table(
+        &["configuration", "f(MHz)", "CU", "System", "W", "GF/W", "bound"],
+        &rows,
+    ))
+}
+
+fn cmd_explore(args: &Args) -> Result<String> {
+    use crate::precision::{self, Interval};
+    let kernel_name = args.get("kernel").unwrap_or("helmholtz");
+    let p = args.usize_or("p", 11)?;
+    let budget: f64 = match args.get("mse-budget") {
+        Some(v) => v.parse().with_context(|| format!("--mse-budget {v}"))?,
+        None => 3.6e-12, // the paper's fx32 error
+    };
+    let max_bits = args.usize_or("max-bits", 64)? as u32;
+    let src = match kernel_name {
+        "helmholtz" => dsl::inverse_helmholtz_source(p),
+        "interpolation" => dsl::interpolation_source(p, p),
+        "gradient" => dsl::gradient_source(8, 7, 6),
+        other => bail!("unknown kernel {other}"),
+    };
+    let prog = dsl::parse(&src).map_err(|e| anyhow!(e))?;
+    let module = rewrite::optimize(teil::from_ast(&prog).map_err(|e| anyhow!(e))?);
+    // the workload rescales operators to near-orthonormal rows (~1/p)
+    let range = Interval::symmetric(1.0 / p as f64);
+    let analysis = precision::analyze_ranges(&module, range);
+    let cands = precision::explore(&module, range, budget, max_bits);
+    let mut rows = Vec::new();
+    for c in cands.iter().take(10) {
+        rows.push(vec![
+            c.name(),
+            format!("{}", c.total_bits()),
+            format!("{:.2e}", c.predicted_mse),
+            format!("{}", c.dsp_per_mult),
+        ]);
+    }
+    Ok(format!(
+        "range analysis: max |value| = {:.3} -> {} integer bits\n\
+         {} feasible formats under MSE budget {budget:.1e} (showing cheapest 10):\n{}",
+        analysis.max_abs,
+        cands.first().map(|c| c.int_bits).unwrap_or(0),
+        cands.len(),
+        report::table(&["format", "bits", "pred. MSE", "DSP/mult"], &rows)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(args: &[&str]) -> Result<String> {
+        let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        main_with_args(&v)
+    }
+
+    #[test]
+    fn help_prints() {
+        assert!(run(&["help"]).unwrap().contains("hbmflow"));
+        assert!(run(&["bogus"]).is_err());
+    }
+
+    #[test]
+    fn compile_emits_c() {
+        let c = run(&["compile", "--p", "7", "--emit", "c"]).unwrap();
+        assert!(c.contains("#pragma HLS pipeline"));
+    }
+
+    #[test]
+    fn compile_emits_cfg_and_wrapper_and_teil() {
+        assert!(run(&["compile", "--emit", "cfg"]).unwrap().contains("[connectivity]"));
+        assert!(run(&["compile", "--emit", "wrapper"]).unwrap().contains("dataflow"));
+        assert!(run(&["compile", "--emit", "host"]).unwrap().contains("TransferIn"));
+        assert!(run(&["compile", "--emit", "teil"]).unwrap().contains("mode_apply"));
+    }
+
+    #[test]
+    fn estimate_reports_resources() {
+        let s = run(&["estimate", "--preset", "dataflow7"]).unwrap();
+        assert!(s.contains("ops: 532"), "{s}");
+        assert!(s.contains("fmax"));
+    }
+
+    #[test]
+    fn simulate_reports_gflops() {
+        let s = run(&["simulate", "--preset", "baseline", "--elements", "100000"]).unwrap();
+        assert!(s.contains("System"), "{s}");
+        assert!(s.contains("bottleneck"));
+    }
+
+    #[test]
+    fn ladder_has_eight_rows() {
+        let s = run(&["ladder", "--elements", "200000"]).unwrap();
+        assert_eq!(s.lines().count(), 2 + 8, "{s}");
+        assert!(s.contains("Dataflow (7 compute)"));
+    }
+
+    #[test]
+    fn explore_lists_formats() {
+        let s = run(&["explore", "--mse-budget", "1e-12"]).unwrap();
+        assert!(s.contains("ap_fixed<"), "{s}");
+        assert!(s.contains("feasible formats"));
+        let tight = run(&["explore", "--mse-budget", "1e-22"]).unwrap();
+        assert!(tight.contains("ap_fixed<"));
+    }
+
+    #[test]
+    fn bad_flags_are_rejected() {
+        assert!(run(&["simulate", "oops"]).is_err());
+        assert!(run(&["simulate", "--p"]).is_err());
+        assert!(run(&["simulate", "--dtype", "q4"]).is_err());
+    }
+}

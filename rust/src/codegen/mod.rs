@@ -1,0 +1,9 @@
+//! Code generation back-ends.
+//!
+//! `c_emit` produces the HLS-ready C99 the paper's flow hands to Vitis
+//! (Fig. 12b): one function per dataflow group, `#pragma HLS pipeline`
+//! on the innermost pipelined loop, the reduction unrolled. In this
+//! reproduction the C output is an auditable artifact (and golden-tested)
+//! — the executable datapath is the AOT-compiled HLO (see DESIGN.md).
+
+pub mod c_emit;

@@ -1,0 +1,282 @@
+//! Batch planning, lane interleaving, and the ping/pong state machine.
+
+use crate::olympus::SystemSpec;
+use crate::util::ceil_div;
+
+/// How a workload of N_eq elements maps onto batches, CUs, and
+/// executable invocations (paper §3.1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub n_elements: u64,
+    /// E — elements per HBM batch per CU.
+    pub batch_elements: u64,
+    /// N_b = ceil(N_eq / E).
+    pub n_batches: u64,
+    pub n_cus: usize,
+    /// I = ceil(N_b / N_cu) — iterations per CU.
+    pub iterations_per_cu: u64,
+    /// Elements per executable invocation (the AOT artifact's batch dim).
+    pub exec_batch: usize,
+}
+
+impl BatchPlan {
+    pub fn new(spec: &SystemSpec, n_elements: u64, exec_batch: usize) -> BatchPlan {
+        let e = spec.batch_elements as u64;
+        let n_batches = ceil_div(n_elements, e);
+        BatchPlan {
+            n_elements,
+            batch_elements: e,
+            n_batches,
+            n_cus: spec.num_cus,
+            iterations_per_cu: ceil_div(n_batches, spec.num_cus as u64),
+            exec_batch,
+        }
+    }
+
+    /// Elements in batch `b` (the last batch may be short).
+    pub fn elements_in_batch(&self, b: u64) -> u64 {
+        debug_assert!(b < self.n_batches);
+        if b + 1 == self.n_batches {
+            self.n_elements - b * self.batch_elements
+        } else {
+            self.batch_elements
+        }
+    }
+
+    /// CU that executes batch `b` (round-robin, like the Olympus host).
+    pub fn cu_of(&self, b: u64) -> usize {
+        (b % self.n_cus as u64) as usize
+    }
+
+    /// Executable invocations needed for batch `b`.
+    pub fn invocations_in_batch(&self, b: u64) -> u64 {
+        ceil_div(self.elements_in_batch(b), self.exec_batch as u64)
+    }
+
+    /// Global element range [start, end) of batch `b`.
+    pub fn element_range(&self, b: u64) -> (u64, u64) {
+        let start = b * self.batch_elements;
+        (start, start + self.elements_in_batch(b))
+    }
+
+    /// Invariants (property-tested): batches tile the workload exactly.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut covered = 0u64;
+        for b in 0..self.n_batches {
+            let (s, e) = self.element_range(b);
+            if s != covered {
+                return Err(format!("batch {b} starts at {s}, expected {covered}"));
+            }
+            if e <= s {
+                return Err(format!("batch {b} is empty"));
+            }
+            covered = e;
+        }
+        if covered != self.n_elements {
+            return Err(format!(
+                "batches cover {covered} of {} elements",
+                self.n_elements
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Ping/pong double-buffer state per CU (paper §3.6.1: "the host reads
+/// the output from the last iteration and writes new input into the
+/// 'even' channels while the PCs operate on the data in the 'odd'
+/// channels, and vice versa").
+#[derive(Debug, Clone)]
+pub struct PingPong {
+    phase: Vec<u8>,
+}
+
+impl PingPong {
+    pub fn new(n_cus: usize) -> PingPong {
+        PingPong {
+            phase: vec![0; n_cus],
+        }
+    }
+
+    /// Phase the next batch on `cu` must use; flips on advance.
+    pub fn phase(&self, cu: usize) -> usize {
+        self.phase[cu] as usize
+    }
+
+    pub fn advance(&mut self, cu: usize) -> usize {
+        let p = self.phase[cu];
+        self.phase[cu] ^= 1;
+        p as usize
+    }
+
+    /// Channel the CU reads from in its current phase.
+    pub fn read_channel(&self, spec: &SystemSpec, cu: usize) -> u32 {
+        let ch = &spec.channels[cu];
+        ch.read[self.phase(cu) % ch.read.len()]
+    }
+
+    pub fn write_channel(&self, spec: &SystemSpec, cu: usize) -> u32 {
+        let ch = &spec.channels[cu];
+        ch.write[self.phase(cu) % ch.write.len()]
+    }
+}
+
+/// Interleave per-element blocks across `lanes` (paper §3.6.2: "Olympus
+/// modifies the host code to interleave the input for the multiple
+/// elements before sending it to HBM"). Element e's block goes to lane
+/// e % lanes; the HBM image is lane-major.
+pub fn interleave(data: &[f64], block: usize, lanes: usize) -> Vec<f64> {
+    assert!(block > 0 && lanes > 0);
+    assert_eq!(data.len() % block, 0, "data must be whole elements");
+    let n = data.len() / block;
+    assert_eq!(n % lanes, 0, "element count must be lane-aligned");
+    let per_lane = n / lanes;
+    let mut out = vec![0.0; data.len()];
+    for e in 0..n {
+        let lane = e % lanes;
+        let slot = e / lanes;
+        let dst = (lane * per_lane + slot) * block;
+        out[dst..dst + block].copy_from_slice(&data[e * block..(e + 1) * block]);
+    }
+    out
+}
+
+/// Inverse of `interleave`.
+pub fn deinterleave(data: &[f64], block: usize, lanes: usize) -> Vec<f64> {
+    assert!(block > 0 && lanes > 0);
+    assert_eq!(data.len() % block, 0);
+    let n = data.len() / block;
+    assert_eq!(n % lanes, 0);
+    let per_lane = n / lanes;
+    let mut out = vec![0.0; data.len()];
+    for e in 0..n {
+        let lane = e % lanes;
+        let slot = e / lanes;
+        let src = (lane * per_lane + slot) * block;
+        out[e * block..(e + 1) * block].copy_from_slice(&data[src..src + block]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::olympus::{generate, OlympusOpts};
+    use crate::platform::Platform;
+    use crate::util::prng::Prng;
+    use crate::util::prop;
+
+    fn spec(opts: OlympusOpts) -> SystemSpec {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        generate(&k, &opts, &Platform::alveo_u280()).unwrap()
+    }
+
+    #[test]
+    fn plan_covers_workload_exactly() {
+        let s = spec(OlympusOpts::dataflow(7).with_cus(2));
+        let plan = BatchPlan::new(&s, 2_000_000, 32);
+        plan.validate().unwrap();
+        let total: u64 = (0..plan.n_batches).map(|b| plan.elements_in_batch(b)).sum();
+        assert_eq!(total, 2_000_000);
+        assert_eq!(
+            plan.iterations_per_cu,
+            plan.n_batches.div_ceil(2)
+        );
+    }
+
+    #[test]
+    fn property_batching_loses_no_elements() {
+        prop::check("batch plan conservation", 48, |rng| {
+            let cus = rng.range_usize(1, 4);
+            let n = rng.range_u64(1, 5_000_000);
+            let s = spec(OlympusOpts::dataflow(7).with_cus(cus));
+            let plan = BatchPlan::new(&s, n, 32);
+            plan.validate()?;
+            // round-robin covers every CU index
+            for b in 0..plan.n_batches.min(16) {
+                prop::assert_prop(plan.cu_of(b) < cus, "cu in range".to_string())?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pingpong_alternates_and_maps_channels() {
+        let s = spec(OlympusOpts::dataflow(7));
+        let mut pp = PingPong::new(s.num_cus);
+        let c0 = pp.read_channel(&s, 0);
+        assert_eq!(pp.advance(0), 0);
+        let c1 = pp.read_channel(&s, 0);
+        assert_eq!(pp.advance(0), 1);
+        let c2 = pp.read_channel(&s, 0);
+        assert_ne!(c0, c1, "ping and pong differ");
+        assert_eq!(c0, c2, "phase wraps");
+        // read/write channels are disjoint for a single double-buffered CU
+        assert_ne!(pp.read_channel(&s, 0), pp.write_channel(&s, 0));
+    }
+
+    #[test]
+    fn property_pingpong_strict_alternation() {
+        prop::check("pingpong alternation", 32, |rng| {
+            let cus = rng.range_usize(1, 4);
+            let s = spec(OlympusOpts::dataflow(7).with_cus(cus));
+            let mut pp = PingPong::new(cus);
+            for step in 0..50 {
+                let cu = rng.range_usize(0, cus - 1);
+                let before = pp.phase(cu);
+                let used = pp.advance(cu);
+                prop::assert_prop(used == before, format!("step {step}"))?;
+                prop::assert_prop(
+                    pp.phase(cu) == 1 - before,
+                    format!("flip at {step}"),
+                )?;
+                let _ = pp.read_channel(&s, cu);
+                let _ = pp.write_channel(&s, cu);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn interleave_roundtrip() {
+        let mut rng = Prng::new(1);
+        let block = 5;
+        let n = 12;
+        let data = rng.unit_vec(block * n);
+        for lanes in [1, 2, 3, 4, 6] {
+            let inter = interleave(&data, block, lanes);
+            let back = deinterleave(&inter, block, lanes);
+            assert_eq!(back, data, "lanes {lanes}");
+        }
+    }
+
+    #[test]
+    fn interleave_lane_major_layout() {
+        // elements 0..4, block 1, 2 lanes -> lane0: [0, 2], lane1: [1, 3]
+        let data = vec![0.0, 1.0, 2.0, 3.0];
+        let inter = interleave(&data, 1, 2);
+        assert_eq!(inter, vec![0.0, 2.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn property_interleave_is_permutation() {
+        prop::check("interleave permutation", 32, |rng| {
+            let lanes = rng.range_usize(1, 8);
+            let per = rng.range_usize(1, 6);
+            let block = rng.range_usize(1, 7);
+            let n = lanes * per;
+            let data: Vec<f64> = (0..n * block).map(|i| i as f64).collect();
+            let inter = interleave(&data, block, lanes);
+            let mut sorted = inter.clone();
+            sorted.sort_by(f64::total_cmp);
+            prop::assert_prop(
+                sorted == data && deinterleave(&inter, block, lanes) == data,
+                format!("lanes {lanes} per {per} block {block}"),
+            )
+        });
+    }
+}

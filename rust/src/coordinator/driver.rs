@@ -1,0 +1,412 @@
+//! The runtime driver: execute a workload's real numerics through the
+//! PJRT artifacts, following the Olympus host program (interleave →
+//! transfer → invoke per CU with ping/pong bookkeeping → de-interleave).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batch::{deinterleave, interleave, BatchPlan, PingPong};
+use super::workload::HelmholtzWorkload;
+use crate::olympus::SystemSpec;
+use crate::runtime::Runtime;
+
+/// Outcome of a real-numerics run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub artifact: String,
+    pub elements: u64,
+    pub invocations: u64,
+    pub wall_s: f64,
+    /// Measured XLA-CPU throughput of the datapath.
+    pub measured_gflops: f64,
+    /// Mean squared error vs the f64 native oracle (sampled elements).
+    pub mse_vs_oracle: f64,
+    pub max_abs_err: f64,
+    /// Per-CU element counts (round-robin bookkeeping).
+    pub per_cu_elements: Vec<u64>,
+    /// Ping/pong phases used per CU (for state-machine validation).
+    pub phases_used: Vec<Vec<usize>>,
+    /// The flattened outputs (v tensors, element-major).
+    pub outputs: Vec<f64>,
+}
+
+/// Drives a `SystemSpec` with real numerics.
+pub struct Driver<'rt> {
+    pub runtime: &'rt mut Runtime,
+    pub spec: SystemSpec,
+    pub artifact: String,
+}
+
+impl<'rt> Driver<'rt> {
+    pub fn new(
+        runtime: &'rt mut Runtime,
+        spec: SystemSpec,
+        artifact: impl Into<String>,
+    ) -> Driver<'rt> {
+        Driver {
+            runtime,
+            spec,
+            artifact: artifact.into(),
+        }
+    }
+
+    /// Pick the matching artifact for a spec, preferring the §Perf
+    /// batch-blocked variant when it exists.
+    pub fn artifact_for(runtime: &Runtime, spec: &SystemSpec, p: usize) -> Result<String> {
+        let m = &runtime.manifest;
+        m.find(&spec.kernel.name, p, spec.dtype.name(), "pallas_blocked")
+            .or_else(|| m.find(&spec.kernel.name, p, spec.dtype.name(), "pallas"))
+            .map(|a| a.name.clone())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for kernel={} p={p} dtype={}; run `make artifacts`",
+                    spec.kernel.name,
+                    spec.dtype.name()
+                )
+            })
+    }
+
+    /// Execute the workload. `oracle_sample` bounds how many elements are
+    /// cross-checked against the native oracle (it is O(p^4) per element).
+    pub fn run(
+        &mut self,
+        w: &HelmholtzWorkload,
+        oracle_sample: usize,
+    ) -> Result<RunReport> {
+        let meta = self
+            .runtime
+            .meta(&self.artifact)
+            .ok_or_else(|| anyhow!("unknown artifact {}", self.artifact))?
+            .clone();
+        if meta.p != w.p {
+            return Err(anyhow!(
+                "artifact p={} but workload p={}",
+                meta.p,
+                w.p
+            ));
+        }
+        let exec_batch = meta.batch;
+        let block = w.block();
+        let plan = BatchPlan::new(&self.spec, w.n_elements as u64, exec_batch);
+        plan.validate().map_err(|e| anyhow!(e))?;
+        let mut pp = PingPong::new(self.spec.num_cus);
+        let mut per_cu_elements = vec![0u64; self.spec.num_cus];
+        let mut phases_used = vec![Vec::new(); self.spec.num_cus];
+        let mut outputs = vec![0.0f64; w.n_elements * block];
+        let lanes = self.spec.lanes;
+        let s_flat = w.s.data().to_vec();
+
+        let mut invocations = 0u64;
+        let t0 = Instant::now();
+        for b in 0..plan.n_batches {
+            let cu = plan.cu_of(b);
+            let phase = pp.advance(cu);
+            phases_used[cu].push(phase);
+            let (start, end) = plan.element_range(b);
+            per_cu_elements[cu] += end - start;
+
+            // Olympus host step: interleave the batch across lanes.
+            // (The executable computes per-element results independent of
+            // order; interleave/deinterleave mirror the generated host
+            // code and are validated by the round-trip.)
+            let n_batch = (end - start) as usize;
+            let aligned = n_batch.next_multiple_of(lanes.max(1));
+            let mut d_b = vec![0.0; aligned * block];
+            let mut u_b = vec![0.0; aligned * block];
+            d_b[..n_batch * block]
+                .copy_from_slice(&w.d[start as usize * block..end as usize * block]);
+            u_b[..n_batch * block]
+                .copy_from_slice(&w.u[start as usize * block..end as usize * block]);
+            let d_il = interleave(&d_b, block, lanes);
+            let u_il = interleave(&u_b, block, lanes);
+
+            // invoke the CU in executable-batch chunks. Full chunks pass
+            // slices straight out of the interleaved image (§Perf: no
+            // per-invocation scratch copy); only a short tail pads.
+            let mut out_il = vec![0.0; aligned * block];
+            let mut e0 = 0usize;
+            let mut d_pad: Vec<f64> = Vec::new();
+            let mut u_pad: Vec<f64> = Vec::new();
+            while e0 < aligned {
+                let chunk = exec_batch.min(aligned - e0);
+                let range = e0 * block..(e0 + chunk) * block;
+                let outs = if chunk == exec_batch {
+                    self.runtime.run_f64_slices(
+                        &self.artifact,
+                        &[&s_flat, &d_il[range.clone()], &u_il[range.clone()]],
+                    )?
+                } else {
+                    d_pad.clear();
+                    d_pad.resize(exec_batch * block, 0.0);
+                    u_pad.clear();
+                    u_pad.resize(exec_batch * block, 0.0);
+                    d_pad[..chunk * block].copy_from_slice(&d_il[range.clone()]);
+                    u_pad[..chunk * block].copy_from_slice(&u_il[range.clone()]);
+                    self.runtime
+                        .run_f64_slices(&self.artifact, &[&s_flat, &d_pad, &u_pad])?
+                };
+                invocations += 1;
+                out_il[range].copy_from_slice(&outs[0][..chunk * block]);
+                e0 += chunk;
+            }
+            let out_b = deinterleave(&out_il, block, lanes);
+            outputs[start as usize * block..end as usize * block]
+                .copy_from_slice(&out_b[..n_batch * block]);
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        // sampled oracle cross-check
+        let sample = oracle_sample.min(w.n_elements);
+        let mut se = 0.0f64;
+        let mut max_err = 0.0f64;
+        let mut count = 0u64;
+        for e in 0..sample {
+            let want = self.spec_expected(w, e);
+            for (i, &x) in want.iter().enumerate() {
+                let got = outputs[e * block + i];
+                let err = got - x;
+                se += err * err;
+                max_err = max_err.max(err.abs());
+                count += 1;
+            }
+        }
+        let mse = if count > 0 { se / count as f64 } else { 0.0 };
+
+        let flops = w.n_elements as u64 * meta.flops_per_element;
+        Ok(RunReport {
+            artifact: self.artifact.clone(),
+            elements: w.n_elements as u64,
+            invocations,
+            wall_s,
+            measured_gflops: flops as f64 / wall_s / 1e9,
+            mse_vs_oracle: mse,
+            max_abs_err: max_err,
+            per_cu_elements,
+            phases_used,
+            outputs,
+        })
+    }
+
+    /// Oracle value of element `e` in f64 (the fixed-point MSE baseline).
+    fn spec_expected(&self, w: &HelmholtzWorkload, e: usize) -> Vec<f64> {
+        w.expected_element(e).into_data()
+    }
+}
+
+/// Execute an Interpolation workload through its artifact. Returns
+/// (flattened outputs, MSE vs oracle over `oracle_sample` elements).
+pub fn run_interpolation(
+    rt: &mut Runtime,
+    w: &super::workload::InterpolationWorkload,
+    oracle_sample: usize,
+) -> Result<(Vec<f64>, f64)> {
+    let meta = rt
+        .manifest
+        .find("interpolation", w.n, "f64", "pallas")
+        .ok_or_else(|| anyhow!("no interpolation artifact"))?
+        .clone();
+    let b = meta.batch;
+    let (ib, ob) = (w.in_block(), w.out_block());
+    let a_flat = w.a.data().to_vec();
+    let mut out = vec![0.0; w.n_elements * ob];
+    let mut e0 = 0usize;
+    while e0 < w.n_elements {
+        let chunk = b.min(w.n_elements - e0);
+        let mut u_c = vec![0.0; b * ib];
+        u_c[..chunk * ib].copy_from_slice(&w.u[e0 * ib..(e0 + chunk) * ib]);
+        let outs = rt.run_f64(&meta.name, &[a_flat.clone(), u_c])?;
+        out[e0 * ob..(e0 + chunk) * ob].copy_from_slice(&outs[0][..chunk * ob]);
+        e0 += chunk;
+    }
+    let mut se = 0.0;
+    let mut count = 0u64;
+    for e in 0..oracle_sample.min(w.n_elements) {
+        let want = w.expected_element(e);
+        for (i, &x) in want.data().iter().enumerate() {
+            let d = out[e * ob + i] - x;
+            se += d * d;
+            count += 1;
+        }
+    }
+    Ok((out, if count > 0 { se / count as f64 } else { 0.0 }))
+}
+
+/// Execute a Gradient workload through its artifact. Returns the three
+/// flattened gradients and the MSE vs oracle.
+pub fn run_gradient(
+    rt: &mut Runtime,
+    w: &super::workload::GradientWorkload,
+    oracle_sample: usize,
+) -> Result<([Vec<f64>; 3], f64)> {
+    let (nx, _, _) = w.dims;
+    let meta = rt
+        .manifest
+        .find("gradient", nx, "f64", "pallas")
+        .ok_or_else(|| anyhow!("no gradient artifact"))?
+        .clone();
+    let b = meta.batch;
+    let blk = w.block();
+    let mats: Vec<Vec<f64>> = vec![
+        w.dx.data().to_vec(),
+        w.dy.data().to_vec(),
+        w.dz.data().to_vec(),
+    ];
+    let mut out = [
+        vec![0.0; w.n_elements * blk],
+        vec![0.0; w.n_elements * blk],
+        vec![0.0; w.n_elements * blk],
+    ];
+    let mut e0 = 0usize;
+    while e0 < w.n_elements {
+        let chunk = b.min(w.n_elements - e0);
+        let mut u_c = vec![0.0; b * blk];
+        u_c[..chunk * blk].copy_from_slice(&w.u[e0 * blk..(e0 + chunk) * blk]);
+        let outs = rt.run_f64(
+            &meta.name,
+            &[mats[0].clone(), mats[1].clone(), mats[2].clone(), u_c],
+        )?;
+        for (g, o) in out.iter_mut().zip(&outs) {
+            g[e0 * blk..(e0 + chunk) * blk].copy_from_slice(&o[..chunk * blk]);
+        }
+        e0 += chunk;
+    }
+    let mut se = 0.0;
+    let mut count = 0u64;
+    for e in 0..oracle_sample.min(w.n_elements) {
+        let wants = w.expected_element(e);
+        for (g, want) in out.iter().zip(&wants) {
+            for (i, &x) in want.data().iter().enumerate() {
+                let d = g[e * blk + i] - x;
+                se += d * d;
+                count += 1;
+            }
+        }
+    }
+    Ok((out, if count > 0 { se / count as f64 } else { 0.0 }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatype::DataType;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::olympus::{generate, OlympusOpts};
+    use crate::platform::Platform;
+
+    fn spec(opts: OlympusOpts, p: usize) -> SystemSpec {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        generate(&k, &opts, &Platform::alveo_u280()).unwrap()
+    }
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::from_default_dir().ok()
+    }
+
+    #[test]
+    fn f64_run_matches_oracle_to_float_precision() {
+        let Some(mut rt) = runtime() else {
+            eprintln!("artifacts missing; skipping");
+            return;
+        };
+        let s = spec(OlympusOpts::dataflow(7), 7);
+        let name = Driver::artifact_for(&rt, &s, 7).unwrap();
+        let w = HelmholtzWorkload::generate(7, 100, 5);
+        let mut d = Driver::new(&mut rt, s, name);
+        let r = d.run(&w, 20).unwrap();
+        assert!(r.mse_vs_oracle < 1e-24, "mse {}", r.mse_vs_oracle);
+        assert!(r.max_abs_err < 1e-10);
+        assert_eq!(r.elements, 100);
+        assert!(r.measured_gflops > 0.0);
+    }
+
+    #[test]
+    fn fx32_run_reproduces_paper_mse_scale() {
+        // Paper §4.2: Fixed Point 32 MSE = 3.58e-12 (vs double).
+        let Some(mut rt) = runtime() else { return };
+        let s = spec(OlympusOpts::fixed_point(DataType::Fx32), 11);
+        let name = Driver::artifact_for(&rt, &s, 11).unwrap();
+        let w = HelmholtzWorkload::generate(11, 32, 6);
+        let mut d = Driver::new(&mut rt, s, name);
+        let r = d.run(&w, 16).unwrap();
+        assert!(
+            (1e-16..1e-9).contains(&r.mse_vs_oracle),
+            "fx32 mse {}",
+            r.mse_vs_oracle
+        );
+    }
+
+    #[test]
+    fn fx64_mse_is_far_smaller_than_fx32() {
+        let Some(mut rt) = runtime() else { return };
+        let w = HelmholtzWorkload::generate(11, 32, 7);
+        let s64 = spec(OlympusOpts::fixed_point(DataType::Fx64), 11);
+        let n64 = Driver::artifact_for(&rt, &s64, 11).unwrap();
+        let m64 = Driver::new(&mut rt, s64, n64).run(&w, 8).unwrap().mse_vs_oracle;
+        let s32 = spec(OlympusOpts::fixed_point(DataType::Fx32), 11);
+        let n32 = Driver::artifact_for(&rt, &s32, 11).unwrap();
+        let m32 = Driver::new(&mut rt, s32, n32).run(&w, 8).unwrap().mse_vs_oracle;
+        assert!(m64 > 0.0 && m32 > 0.0);
+        let ratio = m32 / m64;
+        assert!(
+            ratio > 1e6,
+            "paper ratio ~2^32; got fx32 {m32} / fx64 {m64} = {ratio}"
+        );
+    }
+
+    #[test]
+    fn multi_cu_round_robin_and_pingpong() {
+        let Some(mut rt) = runtime() else { return };
+        let s = spec(OlympusOpts::dataflow(7).with_cus(2), 7);
+        let name = Driver::artifact_for(&rt, &s, 7).unwrap();
+        // force several batches: shrink batch size via a small workload
+        // relative to E is impractical (E is ~14k), so run one batch per
+        // CU instead and validate bookkeeping.
+        let w = HelmholtzWorkload::generate(7, 64, 8);
+        let mut d = Driver::new(&mut rt, s, name);
+        let r = d.run(&w, 4).unwrap();
+        assert_eq!(r.per_cu_elements.iter().sum::<u64>(), 64);
+        // every used phase strictly alternates per CU
+        for phases in &r.phases_used {
+            for (i, &ph) in phases.iter().enumerate() {
+                assert_eq!(ph, i % 2);
+            }
+        }
+    }
+
+    #[test]
+    fn interpolation_workload_runs_and_matches_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let w = crate::coordinator::workload::InterpolationWorkload::generate(
+            11, 11, 70, 12,
+        );
+        let (out, mse) = run_interpolation(&mut rt, &w, 16).unwrap();
+        assert_eq!(out.len(), 70 * 11 * 11 * 11);
+        assert!(mse < 1e-24, "mse {mse}");
+    }
+
+    #[test]
+    fn gradient_workload_runs_and_matches_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let w = crate::coordinator::workload::GradientWorkload::generate(
+            (8, 7, 6),
+            50,
+            13,
+        );
+        let (out, mse) = run_gradient(&mut rt, &w, 16).unwrap();
+        assert_eq!(out[0].len(), 50 * 336);
+        assert!(mse < 1e-24, "mse {mse}");
+    }
+
+    #[test]
+    fn artifact_p_mismatch_is_rejected() {
+        let Some(mut rt) = runtime() else { return };
+        let s = spec(OlympusOpts::dataflow(7), 7);
+        let w = HelmholtzWorkload::generate(11, 8, 9);
+        let mut d = Driver::new(&mut rt, s, "helmholtz_p7_f64_b8");
+        assert!(d.run(&w, 1).is_err());
+    }
+}

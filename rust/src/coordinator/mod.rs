@@ -1,0 +1,17 @@
+//! L3 coordinator: the runtime counterpart of the Olympus-generated host
+//! program (paper §3.1, §3.5).
+//!
+//! The coordinator owns batching (N_b = N_eq / E, I = N_b / N_cu),
+//! the ping/pong double-buffer state machine, lane interleaving, and
+//! dispatch of real numerics through the PJRT runtime. Performance
+//! numbers for the FPGA come from `sim`; the coordinator produces the
+//! *numerical* results (and the measured XLA-CPU throughput used by the
+//! Fig. 19 software baselines).
+
+pub mod batch;
+pub mod driver;
+pub mod workload;
+
+pub use batch::{BatchPlan, PingPong};
+pub use driver::{run_gradient, run_interpolation, Driver, RunReport};
+pub use workload::{GradientWorkload, HelmholtzWorkload, InterpolationWorkload};

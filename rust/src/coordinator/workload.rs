@@ -1,0 +1,227 @@
+//! Workload generation: CFD-like element data.
+//!
+//! The paper simulates N_eq = 2,000,000 independent spectral elements
+//! with physical quantities rescaled into [-1, 1] (§3.6.4). We generate
+//! synthetic elements in that domain with a seeded PRNG; the S matrix is
+//! a dense spectral operator shared by all elements.
+
+use crate::util::prng::Prng;
+use crate::util::tensor::Tensor;
+
+/// A Helmholtz workload: shared S plus per-element D, u.
+#[derive(Debug, Clone)]
+pub struct HelmholtzWorkload {
+    pub p: usize,
+    pub n_elements: usize,
+    /// (p, p) operator matrix.
+    pub s: Tensor,
+    /// (n, p^3) flattened Hadamard factors.
+    pub d: Vec<f64>,
+    /// (n, p^3) flattened inputs.
+    pub u: Vec<f64>,
+}
+
+impl HelmholtzWorkload {
+    pub fn generate(p: usize, n_elements: usize, seed: u64) -> HelmholtzWorkload {
+        let mut rng = Prng::new(seed);
+        // SEM spectral operators are near-orthonormal: row sums are O(1).
+        // Scaling entries by 1/p keeps every intermediate (t, r, v) inside
+        // [-1, 1] — the rescaled domain the paper's fixed-point formats
+        // assume (§3.6.4). Unscaled random S would saturate Q8.24.
+        let mut s = Tensor::random(&[p, p], &mut rng);
+        for x in s.data_mut() {
+            *x /= p as f64;
+        }
+        let block = p * p * p;
+        HelmholtzWorkload {
+            p,
+            n_elements,
+            s,
+            d: rng.unit_vec(n_elements * block),
+            u: rng.unit_vec(n_elements * block),
+        }
+    }
+
+    pub fn block(&self) -> usize {
+        self.p * self.p * self.p
+    }
+
+    /// Per-element view of D.
+    pub fn d_element(&self, e: usize) -> &[f64] {
+        let b = self.block();
+        &self.d[e * b..(e + 1) * b]
+    }
+
+    pub fn u_element(&self, e: usize) -> &[f64] {
+        let b = self.block();
+        &self.u[e * b..(e + 1) * b]
+    }
+
+    /// Exact result for element `e` via the native oracle (Eq. 1a-1c).
+    pub fn expected_element(&self, e: usize) -> Tensor {
+        let p = self.p;
+        let d = Tensor::from_vec(&[p, p, p], self.d_element(e).to_vec());
+        let u = Tensor::from_vec(&[p, p, p], self.u_element(e).to_vec());
+        let t = u
+            .mode_apply(&self.s, 0)
+            .mode_apply(&self.s, 1)
+            .mode_apply(&self.s, 2);
+        let r = d.zip(&t, |a, b| a * b);
+        let st = transpose(&self.s);
+        r.mode_apply(&st, 0).mode_apply(&st, 1).mode_apply(&st, 2)
+    }
+}
+
+/// An Interpolation workload: shared A plus per-element u (paper §4.3).
+#[derive(Debug, Clone)]
+pub struct InterpolationWorkload {
+    pub m: usize,
+    pub n: usize,
+    pub n_elements: usize,
+    pub a: Tensor,
+    /// (n_elements, n^3) flattened inputs.
+    pub u: Vec<f64>,
+}
+
+impl InterpolationWorkload {
+    pub fn generate(m: usize, n: usize, n_elements: usize, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let mut a = Tensor::random(&[m, n], &mut rng);
+        for x in a.data_mut() {
+            *x /= n as f64; // near-orthonormal interpolation operator
+        }
+        InterpolationWorkload {
+            m,
+            n,
+            n_elements,
+            a,
+            u: rng.unit_vec(n_elements * n * n * n),
+        }
+    }
+
+    pub fn in_block(&self) -> usize {
+        self.n * self.n * self.n
+    }
+
+    pub fn out_block(&self) -> usize {
+        self.m * self.m * self.m
+    }
+
+    pub fn u_element(&self, e: usize) -> &[f64] {
+        let b = self.in_block();
+        &self.u[e * b..(e + 1) * b]
+    }
+
+    pub fn expected_element(&self, e: usize) -> Tensor {
+        let n = self.n;
+        let u = Tensor::from_vec(&[n, n, n], self.u_element(e).to_vec());
+        u.mode_apply(&self.a, 0)
+            .mode_apply(&self.a, 1)
+            .mode_apply(&self.a, 2)
+    }
+}
+
+/// A Gradient workload on the paper's (8, 7, 6) element.
+#[derive(Debug, Clone)]
+pub struct GradientWorkload {
+    pub dims: (usize, usize, usize),
+    pub n_elements: usize,
+    pub dx: Tensor,
+    pub dy: Tensor,
+    pub dz: Tensor,
+    pub u: Vec<f64>,
+}
+
+impl GradientWorkload {
+    pub fn generate(dims: (usize, usize, usize), n_elements: usize, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let (nx, ny, nz) = dims;
+        let scale = |mut t: Tensor, n: usize| {
+            for x in t.data_mut() {
+                *x /= n as f64;
+            }
+            t
+        };
+        GradientWorkload {
+            dims,
+            n_elements,
+            dx: scale(Tensor::random(&[nx, nx], &mut rng), nx),
+            dy: scale(Tensor::random(&[ny, ny], &mut rng), ny),
+            dz: scale(Tensor::random(&[nz, nz], &mut rng), nz),
+            u: rng.unit_vec(n_elements * nx * ny * nz),
+        }
+    }
+
+    pub fn block(&self) -> usize {
+        self.dims.0 * self.dims.1 * self.dims.2
+    }
+
+    pub fn u_element(&self, e: usize) -> &[f64] {
+        let b = self.block();
+        &self.u[e * b..(e + 1) * b]
+    }
+
+    /// (gx, gy, gz) oracle for element `e`, each in (nx, ny, nz) order
+    /// (the artifact layout; the DSL's move-axis form differs — see
+    /// dsl::gradient_source docs).
+    pub fn expected_element(&self, e: usize) -> [Tensor; 3] {
+        let (nx, ny, nz) = self.dims;
+        let u = Tensor::from_vec(&[nx, ny, nz], self.u_element(e).to_vec());
+        [
+            u.mode_apply(&self.dx, 0),
+            u.mode_apply(&self.dy, 1),
+            u.mode_apply(&self.dz, 2),
+        ]
+    }
+}
+
+fn transpose(t: &Tensor) -> Tensor {
+    let (r, c) = (t.shape()[0], t.shape()[1]);
+    let mut out = Tensor::zeros(&[c, r]);
+    for i in 0..r {
+        for j in 0..c {
+            out.set(&[j, i], t.get(&[i, j]));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = HelmholtzWorkload::generate(7, 10, 99);
+        let b = HelmholtzWorkload::generate(7, 10, 99);
+        assert_eq!(a.s, b.s);
+        assert_eq!(a.d, b.d);
+        let c = HelmholtzWorkload::generate(7, 10, 100);
+        assert_ne!(a.u, c.u);
+    }
+
+    #[test]
+    fn values_in_unit_domain() {
+        let w = HelmholtzWorkload::generate(5, 20, 1);
+        assert!(w.d.iter().chain(&w.u).all(|x| (-1.0..1.0).contains(x)));
+        assert_eq!(w.d.len(), 20 * 125);
+    }
+
+    #[test]
+    fn element_views_are_disjoint() {
+        let w = HelmholtzWorkload::generate(3, 4, 2);
+        assert_eq!(w.d_element(0).len(), 27);
+        assert_ne!(w.d_element(0), w.d_element(1));
+    }
+
+    #[test]
+    fn expected_element_matches_identity_case() {
+        let mut w = HelmholtzWorkload::generate(4, 2, 3);
+        w.s = Tensor::identity(4);
+        let v = w.expected_element(1);
+        for (i, &x) in v.data().iter().enumerate() {
+            let want = w.d_element(1)[i] * w.u_element(1)[i];
+            assert!((x - want).abs() < 1e-14);
+        }
+    }
+}

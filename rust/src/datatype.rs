@@ -1,0 +1,120 @@
+//! Scalar data formats (paper §3.4.2, §3.6.4).
+//!
+//! The flow supports IEEE double/float and the two `ap_fixed` formats the
+//! paper evaluates. Fixed-point values are *carried* as f64 on the XLA
+//! side (fake quantization; see python/compile/kernels/quant.py) but keep
+//! their true bit width for all bandwidth/resource accounting here.
+
+use std::fmt;
+
+/// A scalar format usable by the datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataType {
+    /// IEEE 754 binary64 — the paper's default CPU type.
+    F64,
+    /// IEEE 754 binary32.
+    F32,
+    /// ap_fixed<64, 24>: Q24.40 (paper "Fixed Point 64").
+    Fx64,
+    /// ap_fixed<32, 8>: Q8.24 (paper "Fixed Point 32").
+    Fx32,
+}
+
+impl DataType {
+    pub const ALL: [DataType; 4] = [
+        DataType::F64,
+        DataType::F32,
+        DataType::Fx64,
+        DataType::Fx32,
+    ];
+
+    /// Bit width on the AXI bus and in on-chip storage.
+    pub fn bits(self) -> u32 {
+        match self {
+            DataType::F64 | DataType::Fx64 => 64,
+            DataType::F32 | DataType::Fx32 => 32,
+        }
+    }
+
+    pub fn bytes(self) -> u32 {
+        self.bits() / 8
+    }
+
+    pub fn is_fixed(self) -> bool {
+        matches!(self, DataType::Fx64 | DataType::Fx32)
+    }
+
+    /// Artifact-manifest dtype string (matches python/compile/model.py).
+    pub fn name(self) -> &'static str {
+        match self {
+            DataType::F64 => "f64",
+            DataType::F32 => "f32",
+            DataType::Fx64 => "fx64",
+            DataType::Fx32 => "fx32",
+        }
+    }
+
+    /// Paper display name.
+    pub fn display(self) -> &'static str {
+        match self {
+            DataType::F64 => "Double",
+            DataType::F32 => "Float",
+            DataType::Fx64 => "Fixed Point 64",
+            DataType::Fx32 => "Fixed Point 32",
+        }
+    }
+
+    /// Fractional bits of the fixed-point grid (None for floats).
+    pub fn frac_bits(self) -> Option<u32> {
+        match self {
+            DataType::Fx64 => Some(40),
+            DataType::Fx32 => Some(24),
+            _ => None,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DataType> {
+        match s {
+            "f64" | "double" => Some(DataType::F64),
+            "f32" | "float" => Some(DataType::F32),
+            "fx64" => Some(DataType::Fx64),
+            "fx32" => Some(DataType::Fx32),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DataType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths() {
+        assert_eq!(DataType::F64.bits(), 64);
+        assert_eq!(DataType::Fx64.bits(), 64);
+        assert_eq!(DataType::F32.bytes(), 4);
+        assert_eq!(DataType::Fx32.bytes(), 4);
+    }
+
+    #[test]
+    fn fixed_point_grids_match_paper() {
+        assert_eq!(DataType::Fx64.frac_bits(), Some(40)); // Q24.40
+        assert_eq!(DataType::Fx32.frac_bits(), Some(24)); // Q8.24
+        assert_eq!(DataType::F64.frac_bits(), None);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in DataType::ALL {
+            assert_eq!(DataType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DataType::parse("double"), Some(DataType::F64));
+        assert_eq!(DataType::parse("q8"), None);
+    }
+}

@@ -1,0 +1,194 @@
+//! CFDlang abstract syntax tree.
+//!
+//! Mirrors the paper's `cfdlang` MLIR dialect (§3.3.1): the AST stays as
+//! close to the source as possible; canonicalization happens in the teil
+//! middle-end, not here.
+
+use std::fmt;
+
+/// Variable role in the kernel interface (paper Fig. 13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarKind {
+    /// `var input` — streamed from HBM into the CU.
+    Input,
+    /// `var output` — streamed from the CU back to HBM.
+    Output,
+    /// plain `var` — an internal buffer, candidate for Mnemosyne sharing.
+    Temp,
+}
+
+/// `var input S : [11 11]`
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Decl {
+    pub name: String,
+    pub kind: VarKind,
+    pub shape: Vec<usize>,
+}
+
+/// One index pair of a contraction spec: positions into the flattened
+/// index space of the contracted expression (paper Fig. 2 line 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexPair {
+    pub a: usize,
+    pub b: usize,
+}
+
+/// Expression tree. `Prod` is the tensor (outer) product `#`;
+/// `Contract` applies index-pair contraction `.[[a b]..]`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Var(String),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Mul(Box<Expr>, Box<Expr>),
+    Div(Box<Expr>, Box<Expr>),
+    Prod(Box<Expr>, Box<Expr>),
+    Contract(Box<Expr>, Vec<IndexPair>),
+}
+
+impl Expr {
+    pub fn var(name: &str) -> Expr {
+        Expr::Var(name.to_string())
+    }
+
+    /// All variable names referenced by this expression, in order of
+    /// first appearance.
+    pub fn vars(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        self.visit(&mut |e| {
+            if let Expr::Var(n) = e {
+                if !out.contains(&n.as_str()) {
+                    out.push(n.as_str());
+                }
+            }
+        });
+        out
+    }
+
+    pub fn visit<'a>(&'a self, f: &mut impl FnMut(&'a Expr)) {
+        f(self);
+        match self {
+            Expr::Var(_) => {}
+            Expr::Add(a, b)
+            | Expr::Sub(a, b)
+            | Expr::Mul(a, b)
+            | Expr::Div(a, b)
+            | Expr::Prod(a, b) => {
+                a.visit(f);
+                b.visit(f);
+            }
+            Expr::Contract(a, _) => a.visit(f),
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Var(n) => write!(f, "{n}"),
+            Expr::Add(a, b) => write!(f, "({a} + {b})"),
+            Expr::Sub(a, b) => write!(f, "({a} - {b})"),
+            Expr::Mul(a, b) => write!(f, "({a} * {b})"),
+            Expr::Div(a, b) => write!(f, "({a} / {b})"),
+            Expr::Prod(a, b) => write!(f, "{a} # {b}"),
+            Expr::Contract(a, pairs) => {
+                write!(f, "{a} . [")?;
+                for p in pairs {
+                    write!(f, "[{} {}]", p.a, p.b)?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// `t = <expr>`
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stmt {
+    pub target: String,
+    pub expr: Expr,
+}
+
+/// A full CFDlang program: declarations then assignments.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    pub decls: Vec<Decl>,
+    pub stmts: Vec<Stmt>,
+}
+
+impl Program {
+    pub fn decl(&self, name: &str) -> Option<&Decl> {
+        self.decls.iter().find(|d| d.name == name)
+    }
+
+    pub fn inputs(&self) -> impl Iterator<Item = &Decl> {
+        self.decls.iter().filter(|d| d.kind == VarKind::Input)
+    }
+
+    pub fn outputs(&self) -> impl Iterator<Item = &Decl> {
+        self.decls.iter().filter(|d| d.kind == VarKind::Output)
+    }
+
+    pub fn temps(&self) -> impl Iterator<Item = &Decl> {
+        self.decls.iter().filter(|d| d.kind == VarKind::Temp)
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for d in &self.decls {
+            let kind = match d.kind {
+                VarKind::Input => "input ",
+                VarKind::Output => "output ",
+                VarKind::Temp => "",
+            };
+            write!(f, "var {kind}{} : [", d.name)?;
+            for (i, s) in d.shape.iter().enumerate() {
+                if i > 0 {
+                    write!(f, " ")?;
+                }
+                write!(f, "{s}")?;
+            }
+            writeln!(f, "]")?;
+        }
+        for s in &self.stmts {
+            writeln!(f, "{} = {}", s.target, s.expr)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_vars_dedup_in_order() {
+        let e = Expr::Prod(
+            Box::new(Expr::var("S")),
+            Box::new(Expr::Prod(
+                Box::new(Expr::var("S")),
+                Box::new(Expr::var("u")),
+            )),
+        );
+        assert_eq!(e.vars(), vec!["S", "u"]);
+    }
+
+    #[test]
+    fn display_roundtrips_through_parser() {
+        let src = crate::dsl::inverse_helmholtz_source(7);
+        let p1 = crate::dsl::parse(&src).unwrap();
+        let p2 = crate::dsl::parse(&p1.to_string()).unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn program_role_filters() {
+        let p = crate::dsl::parse(&crate::dsl::inverse_helmholtz_source(5)).unwrap();
+        assert_eq!(p.inputs().count(), 3);
+        assert_eq!(p.outputs().count(), 1);
+        assert_eq!(p.temps().count(), 2);
+        assert!(p.decl("S").is_some());
+        assert!(p.decl("nope").is_none());
+    }
+}

@@ -1,0 +1,229 @@
+//! CFDlang lexer.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Var,
+    Input,
+    Output,
+    Ident(String),
+    Int(usize),
+    Colon,
+    Equals,
+    LBracket,
+    RBracket,
+    LParen,
+    RParen,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Hash,
+    Dot,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Var => write!(f, "var"),
+            Tok::Input => write!(f, "input"),
+            Tok::Output => write!(f, "output"),
+            Tok::Ident(s) => write!(f, "{s}"),
+            Tok::Int(n) => write!(f, "{n}"),
+            Tok::Colon => write!(f, ":"),
+            Tok::Equals => write!(f, "="),
+            Tok::LBracket => write!(f, "["),
+            Tok::RBracket => write!(f, "]"),
+            Tok::LParen => write!(f, "("),
+            Tok::RParen => write!(f, ")"),
+            Tok::Plus => write!(f, "+"),
+            Tok::Minus => write!(f, "-"),
+            Tok::Star => write!(f, "*"),
+            Tok::Slash => write!(f, "/"),
+            Tok::Hash => write!(f, "#"),
+            Tok::Dot => write!(f, "."),
+        }
+    }
+}
+
+/// A token with its source line (1-based) for diagnostics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// Tokenize CFDlang source. `//` starts a line comment.
+pub fn lex(src: &str) -> Result<Vec<Spanned>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in src.lines().enumerate() {
+        let line_num = lineno + 1;
+        let code = match line.find("//") {
+            Some(i) => &line[..i],
+            None => line,
+        };
+        let mut chars = code.char_indices().peekable();
+        while let Some(&(i, c)) = chars.peek() {
+            let tok = match c {
+                c if c.is_whitespace() => {
+                    chars.next();
+                    continue;
+                }
+                ':' => {
+                    chars.next();
+                    Tok::Colon
+                }
+                '=' => {
+                    chars.next();
+                    Tok::Equals
+                }
+                '[' => {
+                    chars.next();
+                    Tok::LBracket
+                }
+                ']' => {
+                    chars.next();
+                    Tok::RBracket
+                }
+                '(' => {
+                    chars.next();
+                    Tok::LParen
+                }
+                ')' => {
+                    chars.next();
+                    Tok::RParen
+                }
+                '+' => {
+                    chars.next();
+                    Tok::Plus
+                }
+                '-' => {
+                    chars.next();
+                    Tok::Minus
+                }
+                '*' => {
+                    chars.next();
+                    Tok::Star
+                }
+                '/' => {
+                    chars.next();
+                    Tok::Slash
+                }
+                '#' => {
+                    chars.next();
+                    Tok::Hash
+                }
+                '.' => {
+                    chars.next();
+                    Tok::Dot
+                }
+                c if c.is_ascii_digit() => {
+                    let mut end = i;
+                    while let Some(&(j, d)) = chars.peek() {
+                        if d.is_ascii_digit() {
+                            end = j;
+                            chars.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    let text = &code[i..=end];
+                    Tok::Int(
+                        text.parse()
+                            .map_err(|e| format!("line {line_num}: bad integer {text:?}: {e}"))?,
+                    )
+                }
+                c if c.is_alphabetic() || c == '_' => {
+                    let mut end = i;
+                    while let Some(&(j, d)) = chars.peek() {
+                        if d.is_alphanumeric() || d == '_' {
+                            end = j;
+                            chars.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    match &code[i..=end] {
+                        "var" => Tok::Var,
+                        "input" => Tok::Input,
+                        "output" => Tok::Output,
+                        ident => Tok::Ident(ident.to_string()),
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "line {line_num}: unexpected character {other:?}"
+                    ))
+                }
+            };
+            out.push(Spanned {
+                tok,
+                line: line_num,
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn lexes_decl() {
+        assert_eq!(
+            toks("var input S : [11 11]"),
+            vec![
+                Tok::Var,
+                Tok::Input,
+                Tok::Ident("S".into()),
+                Tok::Colon,
+                Tok::LBracket,
+                Tok::Int(11),
+                Tok::Int(11),
+                Tok::RBracket
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_contraction_stmt() {
+        let t = toks("t = S#S#u . [[1 6]]");
+        assert!(t.contains(&Tok::Hash));
+        assert!(t.contains(&Tok::Dot));
+        assert_eq!(t.iter().filter(|x| **x == Tok::Hash).count(), 2);
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        assert_eq!(toks("// hello\nx = y // trailing"), toks("x = y"));
+    }
+
+    #[test]
+    fn keywords_vs_idents() {
+        assert_eq!(
+            toks("variable inputs"),
+            vec![
+                Tok::Ident("variable".into()),
+                Tok::Ident("inputs".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_chars() {
+        assert!(lex("x = $").is_err());
+    }
+
+    #[test]
+    fn tracks_line_numbers() {
+        let spanned = lex("var x : [1]\nx = y").unwrap();
+        assert_eq!(spanned.first().unwrap().line, 1);
+        assert_eq!(spanned.last().unwrap().line, 2);
+    }
+}

@@ -1,0 +1,404 @@
+//! CFDlang recursive-descent parser with semantic checks.
+//!
+//! Precedence (loosest to tightest): contraction `.` < `+`/`-` < `*`/`/`
+//! < `#`. This matches the paper's listing where
+//! `t = S#S#S#u . [[1 6][3 7][5 8]]` contracts the *whole* product.
+
+use super::ast::{Decl, Expr, IndexPair, Program, Stmt, VarKind};
+use super::lexer::{lex, Spanned, Tok};
+
+/// Parse and semantically validate a CFDlang program.
+pub fn parse(src: &str) -> Result<Program, String> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let prog = p.program()?;
+    validate(&prog)?;
+    Ok(prog)
+}
+
+struct Parser {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|s| &s.tok)
+    }
+
+    fn line(&self) -> usize {
+        self.toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|s| s.line)
+            .unwrap_or(0)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|s| s.tok.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok) -> Result<(), String> {
+        let line = self.line();
+        match self.bump() {
+            Some(ref t) if t == want => Ok(()),
+            got => Err(format!(
+                "line {line}: expected '{want}', got {}",
+                got.map(|t| t.to_string()).unwrap_or_else(|| "EOF".into())
+            )),
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, String> {
+        let line = self.line();
+        match self.bump() {
+            Some(Tok::Ident(s)) => Ok(s),
+            got => Err(format!(
+                "line {line}: expected identifier, got {}",
+                got.map(|t| t.to_string()).unwrap_or_else(|| "EOF".into())
+            )),
+        }
+    }
+
+    fn int(&mut self) -> Result<usize, String> {
+        let line = self.line();
+        match self.bump() {
+            Some(Tok::Int(n)) => Ok(n),
+            got => Err(format!(
+                "line {line}: expected integer, got {}",
+                got.map(|t| t.to_string()).unwrap_or_else(|| "EOF".into())
+            )),
+        }
+    }
+
+    fn program(&mut self) -> Result<Program, String> {
+        let mut prog = Program::default();
+        while self.peek() == Some(&Tok::Var) {
+            prog.decls.push(self.decl()?);
+        }
+        while self.peek().is_some() {
+            prog.stmts.push(self.stmt()?);
+        }
+        Ok(prog)
+    }
+
+    fn decl(&mut self) -> Result<Decl, String> {
+        self.expect(&Tok::Var)?;
+        let kind = match self.peek() {
+            Some(Tok::Input) => {
+                self.bump();
+                VarKind::Input
+            }
+            Some(Tok::Output) => {
+                self.bump();
+                VarKind::Output
+            }
+            _ => VarKind::Temp,
+        };
+        let name = self.ident()?;
+        self.expect(&Tok::Colon)?;
+        self.expect(&Tok::LBracket)?;
+        let mut shape = Vec::new();
+        while let Some(Tok::Int(_)) = self.peek() {
+            shape.push(self.int()?);
+        }
+        self.expect(&Tok::RBracket)?;
+        if shape.is_empty() {
+            return Err(format!("variable {name} has empty shape"));
+        }
+        Ok(Decl { name, kind, shape })
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, String> {
+        let target = self.ident()?;
+        self.expect(&Tok::Equals)?;
+        let expr = self.expr()?;
+        Ok(Stmt { target, expr })
+    }
+
+    /// expr := add ( '.' contraction )?
+    fn expr(&mut self) -> Result<Expr, String> {
+        let e = self.add()?;
+        if self.peek() == Some(&Tok::Dot) {
+            self.bump();
+            let pairs = self.contraction()?;
+            return Ok(Expr::Contract(Box::new(e), pairs));
+        }
+        Ok(e)
+    }
+
+    fn add(&mut self) -> Result<Expr, String> {
+        let mut e = self.mul()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Plus) => {
+                    self.bump();
+                    e = Expr::Add(Box::new(e), Box::new(self.mul()?));
+                }
+                Some(Tok::Minus) => {
+                    self.bump();
+                    e = Expr::Sub(Box::new(e), Box::new(self.mul()?));
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn mul(&mut self) -> Result<Expr, String> {
+        let mut e = self.prod()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Star) => {
+                    self.bump();
+                    e = Expr::Mul(Box::new(e), Box::new(self.prod()?));
+                }
+                Some(Tok::Slash) => {
+                    self.bump();
+                    e = Expr::Div(Box::new(e), Box::new(self.prod()?));
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn prod(&mut self) -> Result<Expr, String> {
+        let mut e = self.primary()?;
+        while self.peek() == Some(&Tok::Hash) {
+            self.bump();
+            e = Expr::Prod(Box::new(e), Box::new(self.primary()?));
+        }
+        Ok(e)
+    }
+
+    fn primary(&mut self) -> Result<Expr, String> {
+        match self.peek() {
+            Some(Tok::LParen) => {
+                self.bump();
+                let e = self.expr()?;
+                self.expect(&Tok::RParen)?;
+                Ok(e)
+            }
+            Some(Tok::Ident(_)) => Ok(Expr::Var(self.ident()?)),
+            other => Err(format!(
+                "line {}: expected expression, got {}",
+                self.line(),
+                other
+                    .map(|t| t.to_string())
+                    .unwrap_or_else(|| "EOF".into())
+            )),
+        }
+    }
+
+    /// contraction := '[' ('[' int int ']')+ ']'
+    fn contraction(&mut self) -> Result<Vec<IndexPair>, String> {
+        self.expect(&Tok::LBracket)?;
+        let mut pairs = Vec::new();
+        while self.peek() == Some(&Tok::LBracket) {
+            self.bump();
+            let a = self.int()?;
+            let b = self.int()?;
+            self.expect(&Tok::RBracket)?;
+            pairs.push(IndexPair { a, b });
+        }
+        self.expect(&Tok::RBracket)?;
+        if pairs.is_empty() {
+            return Err("empty contraction spec".into());
+        }
+        Ok(pairs)
+    }
+}
+
+/// Semantic checks: declared-before-use, single assignment, every output
+/// assigned, no input assigned, contraction pairs in range and disjoint.
+fn validate(prog: &Program) -> Result<(), String> {
+    use std::collections::HashSet;
+    let mut assigned = HashSet::new();
+    for stmt in &prog.stmts {
+        let decl = prog
+            .decl(&stmt.target)
+            .ok_or_else(|| format!("assignment to undeclared variable {}", stmt.target))?;
+        if decl.kind == VarKind::Input {
+            return Err(format!("cannot assign to input variable {}", stmt.target));
+        }
+        if !assigned.insert(stmt.target.clone()) {
+            return Err(format!("variable {} assigned twice", stmt.target));
+        }
+        for v in stmt.expr.vars() {
+            let vd = prog
+                .decl(v)
+                .ok_or_else(|| format!("use of undeclared variable {v}"))?;
+            if vd.kind != VarKind::Input && !assigned.contains(v) {
+                return Err(format!(
+                    "variable {v} used before assignment in '{} = ...'",
+                    stmt.target
+                ));
+            }
+        }
+        validate_contractions(&stmt.expr, prog)?;
+    }
+    for out in prog.outputs() {
+        if !assigned.contains(&out.name) {
+            return Err(format!("output variable {} never assigned", out.name));
+        }
+    }
+    Ok(())
+}
+
+fn expr_rank(e: &Expr, prog: &Program) -> Result<usize, String> {
+    match e {
+        Expr::Var(n) => Ok(prog
+            .decl(n)
+            .ok_or_else(|| format!("undeclared {n}"))?
+            .shape
+            .len()),
+        Expr::Add(a, _) | Expr::Sub(a, _) | Expr::Mul(a, _) | Expr::Div(a, _) => {
+            expr_rank(a, prog)
+        }
+        Expr::Prod(a, b) => Ok(expr_rank(a, prog)? + expr_rank(b, prog)?),
+        Expr::Contract(a, pairs) => {
+            let r = expr_rank(a, prog)?;
+            Ok(r - 2 * pairs.len())
+        }
+    }
+}
+
+fn validate_contractions(e: &Expr, prog: &Program) -> Result<(), String> {
+    let mut result = Ok(());
+    e.visit(&mut |node| {
+        if result.is_err() {
+            return;
+        }
+        if let Expr::Contract(inner, pairs) = node {
+            let rank = match expr_rank(inner, prog) {
+                Ok(r) => r,
+                Err(e) => {
+                    result = Err(e);
+                    return;
+                }
+            };
+            let mut seen = std::collections::HashSet::new();
+            for p in pairs {
+                if p.a >= rank || p.b >= rank {
+                    result = Err(format!(
+                        "contraction pair [{} {}] out of range for rank {rank}",
+                        p.a, p.b
+                    ));
+                    return;
+                }
+                if p.a == p.b || !seen.insert(p.a) || !seen.insert(p.b) {
+                    result = Err(format!(
+                        "contraction indices must be distinct: [{} {}]",
+                        p.a, p.b
+                    ));
+                    return;
+                }
+            }
+        }
+    });
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_helmholtz() {
+        let prog = parse(&crate::dsl::inverse_helmholtz_source(11)).unwrap();
+        assert_eq!(prog.stmts.len(), 3);
+        let t = &prog.stmts[0];
+        assert_eq!(t.target, "t");
+        match &t.expr {
+            Expr::Contract(inner, pairs) => {
+                assert_eq!(pairs.len(), 3);
+                assert_eq!(pairs[0], IndexPair { a: 1, b: 6 });
+                assert_eq!(inner.vars(), vec!["S", "u"]);
+            }
+            other => panic!("expected contraction, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hash_binds_tighter_than_star() {
+        let src = "var input a : [2]\nvar input b : [2]\nvar output c : [2 2]\nc = a # b * a # b";
+        // a # (b * a)? no: '*' loosest of the two -> (a#b) * (a#b)
+        let prog = parse(src).unwrap();
+        match &prog.stmts[0].expr {
+            Expr::Mul(l, r) => {
+                assert!(matches!(**l, Expr::Prod(_, _)));
+                assert!(matches!(**r, Expr::Prod(_, _)));
+            }
+            other => panic!("expected Mul, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn contraction_applies_to_whole_sum() {
+        let src = "var input a : [2 2]\nvar output c : [2]\nc = (a + a) . [[0 1]]";
+        let prog = parse(src).unwrap();
+        assert!(matches!(prog.stmts[0].expr, Expr::Contract(_, _)));
+    }
+
+    #[test]
+    fn rejects_undeclared_use() {
+        let err = parse("var output x : [2]\nx = y").unwrap_err();
+        assert!(err.contains("undeclared"), "{err}");
+    }
+
+    #[test]
+    fn rejects_use_before_assignment() {
+        let src = "var t : [2]\nvar output x : [2]\nx = t\nt = x";
+        let err = parse(src).unwrap_err();
+        assert!(err.contains("before assignment"), "{err}");
+    }
+
+    #[test]
+    fn rejects_assign_to_input() {
+        let err = parse("var input x : [2]\nx = x").unwrap_err();
+        assert!(err.contains("input"), "{err}");
+    }
+
+    #[test]
+    fn rejects_double_assignment() {
+        let src = "var input a : [2]\nvar output x : [2]\nx = a\nx = a";
+        let err = parse(src).unwrap_err();
+        assert!(err.contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unassigned_output() {
+        let err = parse("var output x : [2]").unwrap_err();
+        assert!(err.contains("never assigned"), "{err}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_contraction() {
+        let src = "var input a : [2 2]\nvar output x : [2 2]\nx = a . [[0 5]]";
+        let err = parse(src).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn rejects_overlapping_contraction_pairs() {
+        let src =
+            "var input a : [2 2 2 2]\nvar output x : [2 2]\nx = a . [[0 1][1 2]]";
+        let err = parse(src).unwrap_err();
+        assert!(err.contains("distinct"), "{err}");
+    }
+
+    #[test]
+    fn parse_error_reports_line() {
+        let err = parse("var input a : [2]\nvar output x : [2]\nx = = a").unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn parenthesized_expression() {
+        let src = "var input a : [2]\nvar input b : [2]\nvar output x : [2]\nx = (a + b) * a";
+        let prog = parse(src).unwrap();
+        assert!(matches!(prog.stmts[0].expr, Expr::Mul(_, _)));
+    }
+}

@@ -1,0 +1,199 @@
+//! HLS resource/timing estimation (substitutes Vitis HLS + P&R; see
+//! DESIGN.md "Hardware substitutions").
+//!
+//! Three layers, each mechanistic with documented calibration constants:
+//!
+//!  * `ops`       — operator allocation (multipliers/adders per CU) using
+//!                  the sharing rules Vitis exhibited in the paper's
+//!                  Table 2 (one operator set per dataflow module; wide
+//!                  flat buses are memory-port limited to 2+2).
+//!  * `resources` — LUT/FF/DSP from per-operator costs, BRAM/URAM from
+//!                  buffer mapping (unroll partitioning, 8 KiB URAM
+//!                  eligibility, FIFO sizing).
+//!  * `timing`    — achieved frequency from a congestion model over
+//!                  utilization (calibrated against the paper's own
+//!                  fmax reports, Tables 3–5).
+
+pub mod resources;
+pub mod timing;
+
+use crate::ir::affine::NestKind;
+use crate::olympus::SystemSpec;
+use crate::platform::{Platform, Resources};
+
+/// Full estimate for a generated system.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    /// Per-CU operator allocation (Table 2 "# Ops" = mults + adds).
+    pub mults: u32,
+    pub adds: u32,
+    /// Initiation interval of the contraction nests (1 unless the flat
+    /// wide-bus port limitation bites; paper §4.2 "II violation").
+    pub ii: u32,
+    /// Resources of one CU.
+    pub per_cu: Resources,
+    /// Whole-design resources (CUs + shell).
+    pub total: Resources,
+    /// Achieved frequency after the routing model (MHz).
+    pub fmax_mhz: f64,
+    /// SLRs the design spans (paper Challenge 5).
+    pub slr_span: usize,
+}
+
+impl Estimate {
+    pub fn ops(&self) -> u32 {
+        self.mults + self.adds
+    }
+
+    /// Table 2 "Ideal GFLOPS" = #Ops x f.
+    pub fn ideal_gflops(&self) -> f64 {
+        self.ops() as f64 * self.fmax_mhz * 1e6 / 1e9
+    }
+
+    pub fn utilization(&self, platform: &Platform) -> [f64; 5] {
+        self.total.utilization(&platform.total_resources())
+    }
+}
+
+/// Whether the flat wide-bus configuration limits operator allocation
+/// (paper: "the HLS tool used a different local memory type with fewer
+/// read ports … only used two adders and two multipliers per kernel").
+pub fn port_limited(spec: &SystemSpec) -> bool {
+    spec.bus_bits > 64 && !spec.dataflow
+}
+
+/// Operator allocation per CU (reproduces Table 2 "# Ops" exactly).
+pub fn count_ops(spec: &SystemSpec) -> (u32, u32) {
+    if port_limited(spec) {
+        // 2 multipliers + 2 adders per kernel, pipelined
+        return (2 * spec.lanes as u32, 2 * spec.lanes as u32);
+    }
+    let k = &spec.kernel;
+    let mut mults = 0u32;
+    let mut adds = 0u32;
+    for g in &spec.schedule.groups {
+        // one operator set per dataflow module, shared across its nests
+        let mut gm = 0u32;
+        let mut ga = 0u32;
+        for ni in g.nests() {
+            let n = &k.nests[ni];
+            match n.kind {
+                NestKind::Contraction { .. } => {
+                    gm = gm.max(n.multipliers());
+                    ga = ga.max(n.adders());
+                }
+                NestKind::Elementwise(_) => {
+                    gm = gm.max(n.multipliers());
+                    ga = ga.max(n.adders());
+                }
+                NestKind::Permute { .. } => {}
+            }
+        }
+        mults += gm;
+        adds += ga;
+    }
+    (mults * spec.lanes as u32, adds * spec.lanes as u32)
+}
+
+/// Contraction-nest initiation interval.
+pub fn initiation_interval(spec: &SystemSpec) -> u32 {
+    if !port_limited(spec) {
+        return 1;
+    }
+    // unroll the reduction over the 2 available multipliers
+    let red = spec
+        .kernel
+        .nests
+        .iter()
+        .filter(|n| matches!(n.kind, NestKind::Contraction { .. }))
+        .map(|n| n.red_trip)
+        .max()
+        .unwrap_or(1) as u32;
+    red.div_ceil(2)
+}
+
+/// Produce the full estimate for a system on a platform.
+pub fn estimate(spec: &SystemSpec, platform: &Platform) -> Estimate {
+    let (mults, adds) = count_ops(spec);
+    let ii = initiation_interval(spec);
+    let per_cu = resources::per_cu(spec);
+    let shell = resources::shell();
+    let total = shell.add(&per_cu.scale(spec.num_cus as u64));
+    let slr_span = platform.slr_span(&total);
+    let fmax_mhz = timing::fmax(&total, platform, spec, slr_span);
+    Estimate {
+        mults,
+        adds,
+        ii,
+        per_cu,
+        total,
+        fmax_mhz,
+        slr_span,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatype::DataType;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::olympus::{generate, OlympusOpts};
+
+    fn spec(opts: OlympusOpts) -> SystemSpec {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        generate(&k, &opts, &Platform::alveo_u280()).unwrap()
+    }
+
+    fn ops_of(opts: OlympusOpts) -> u32 {
+        let s = spec(opts);
+        let (m, a) = count_ops(&s);
+        m + a
+    }
+
+    #[test]
+    fn table2_op_counts_reproduce_exactly() {
+        // Paper Table 2, "# Ops" column.
+        assert_eq!(ops_of(OlympusOpts::baseline()), 22);
+        assert_eq!(ops_of(OlympusOpts::double_buffering()), 22);
+        assert_eq!(ops_of(OlympusOpts::bus_serial()), 4);
+        assert_eq!(ops_of(OlympusOpts::bus_parallel()), 16);
+        assert_eq!(ops_of(OlympusOpts::dataflow(1)), 88);
+        assert_eq!(ops_of(OlympusOpts::dataflow(2)), 176);
+        assert_eq!(ops_of(OlympusOpts::dataflow(3)), 180);
+        assert_eq!(ops_of(OlympusOpts::dataflow(7)), 532);
+    }
+
+    #[test]
+    fn ii_violation_only_on_flat_wide_bus() {
+        assert_eq!(initiation_interval(&spec(OlympusOpts::baseline())), 1);
+        assert_eq!(initiation_interval(&spec(OlympusOpts::dataflow(7))), 1);
+        let s = spec(OlympusOpts::bus_serial());
+        assert!(initiation_interval(&s) > 1, "paper: II raised to ~4-6");
+        assert_eq!(initiation_interval(&s), 6); // ceil(11 / 2)
+        assert!(port_limited(&s));
+        assert!(port_limited(&spec(OlympusOpts::bus_parallel())));
+    }
+
+    #[test]
+    fn estimate_is_consistent() {
+        let platform = Platform::alveo_u280();
+        let s = spec(OlympusOpts::dataflow(7));
+        let e = estimate(&s, &platform);
+        assert_eq!(e.ops(), 532);
+        assert!(e.fmax_mhz > 100.0 && e.fmax_mhz <= 450.0);
+        assert!(e.total.lut > e.per_cu.lut);
+        assert!(e.ideal_gflops() > 0.0);
+        assert!(e.slr_span >= 1);
+    }
+
+    #[test]
+    fn fx32_ops_double_via_eight_lanes() {
+        let d = ops_of(OlympusOpts::fixed_point(DataType::Fx64));
+        let f = ops_of(OlympusOpts::fixed_point(DataType::Fx32));
+        assert_eq!(d, 532);
+        assert_eq!(f, 1064, "8 lanes instead of 4");
+    }
+}

@@ -1,0 +1,120 @@
+//! Achieved-frequency model (substitutes Vivado place-and-route).
+//!
+//! Paper §3.5: "When timing is not met, Vitis automatically downscales
+//! the execution frequency." We model the achieved fmax as a congestion
+//! function of device utilization and SLR spanning, calibrated against
+//! the paper's own reports:
+//!
+//!   | design                  | LUT%  | DSP%  | span | paper fmax |
+//!   |-------------------------|-------|-------|------|------------|
+//!   | Baseline                | 10.8  |  1.7  | 1    | 274.6      |
+//!   | Dataflow (7), double    | 36.4  | 33.4  | 1    | 199.5      |
+//!   | Fixed 64                | 19.5  | 48.4  | 1    | 233.8      |
+//!   | Double, p=11, 2 CUs     | 58.4  | 66.7  | 2    | 146.0      |
+//!
+//! A linear congestion model `f = 305 − 2.45·LUT% − 0.5·max(0,DSP%−30)
+//! − 0.3·max(0,BRAM%−40) − 9·(span−1)` lands within ~10% of every row
+//! while preserving the orderings the evaluation depends on (more
+//! resources → lower f; multi-CU collapse; fixed-point frequency gain).
+
+use crate::olympus::SystemSpec;
+use crate::platform::{Platform, Resources};
+
+/// Routing ceiling for tiny designs on the HBM-enabled die.
+const F_CEILING_MHZ: f64 = 305.0;
+const LUT_SLOPE: f64 = 1.42;
+const DSP_SLOPE: f64 = 0.50;
+const DSP_KNEE: f64 = 30.0;
+const BRAM_SLOPE: f64 = 0.30;
+const BRAM_KNEE: f64 = 40.0;
+const SLR_PENALTY_MHZ: f64 = 9.0;
+/// Nothing routes below this on a driven design.
+const F_FLOOR_MHZ: f64 = 60.0;
+
+/// Achieved frequency in MHz for a design with `total` resources.
+pub fn fmax(
+    total: &Resources,
+    platform: &Platform,
+    spec: &SystemSpec,
+    slr_span: usize,
+) -> f64 {
+    let budget = platform.total_resources();
+    let u = total.utilization(&budget);
+    let lut_pct = u[0] * 100.0;
+    let dsp_pct = u[4] * 100.0;
+    let bram_pct = u[2] * 100.0;
+    let f_route = F_CEILING_MHZ
+        - LUT_SLOPE * lut_pct
+        - DSP_SLOPE * (dsp_pct - DSP_KNEE).max(0.0)
+        - BRAM_SLOPE * (bram_pct - BRAM_KNEE).max(0.0)
+        - SLR_PENALTY_MHZ * (slr_span.saturating_sub(1)) as f64;
+    f_route.clamp(F_FLOOR_MHZ, spec.opts.target_freq_mhz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatype::DataType;
+    use crate::dsl;
+    use crate::hls::estimate;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::olympus::{generate, OlympusOpts};
+
+    fn fmax_of(p: usize, opts: OlympusOpts) -> f64 {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        let platform = Platform::alveo_u280();
+        let s = generate(&k, &opts, &platform).unwrap();
+        estimate(&s, &platform).fmax_mhz
+    }
+
+    #[test]
+    fn baseline_lands_near_paper() {
+        let f = fmax_of(11, OlympusOpts::baseline());
+        // paper: 274.6 MHz
+        assert!((240.0..310.0).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn dataflow7_drops_frequency() {
+        let f1 = fmax_of(11, OlympusOpts::dataflow(1));
+        let f7 = fmax_of(11, OlympusOpts::dataflow(7));
+        assert!(f7 < f1, "more modules route worse: {f7} vs {f1}");
+        // paper: 199.5 MHz
+        assert!((160.0..260.0).contains(&f7), "{f7}");
+    }
+
+    #[test]
+    fn fixed64_beats_double_dataflow7() {
+        // Paper §4.2: "the simplification of the logic allowing the
+        // frequency to be higher" (199.5 -> 233.8 MHz).
+        let fd = fmax_of(11, OlympusOpts::dataflow(7));
+        let f64_ = fmax_of(11, OlympusOpts::fixed_point(DataType::Fx64));
+        assert!(f64_ > fd, "{f64_} vs {fd}");
+    }
+
+    #[test]
+    fn multi_cu_frequency_collapses() {
+        // Paper Table 5: Double p=11 2 CUs -> 146 MHz.
+        let f1 = fmax_of(11, OlympusOpts::dataflow(7));
+        let f2 = fmax_of(11, OlympusOpts::dataflow(7).with_cus(2));
+        assert!(f2 < f1);
+        assert!((110.0..200.0).contains(&f2), "{f2}");
+    }
+
+    #[test]
+    fn never_exceeds_target() {
+        let f = fmax_of(7, OlympusOpts::dataflow(7).with_cus(2));
+        assert!(f <= 225.0);
+        let fb = fmax_of(3, OlympusOpts::baseline());
+        assert!(fb <= 450.0);
+    }
+
+    #[test]
+    fn floor_is_respected() {
+        // pathological giant design still returns a usable frequency
+        let f = fmax_of(11, OlympusOpts::fixed_point(DataType::Fx32).with_cus(3));
+        assert!(f >= F_FLOOR_MHZ);
+    }
+}

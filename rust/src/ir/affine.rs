@@ -1,0 +1,335 @@
+//! Affine loop-nest IR (paper §3.4.4, Fig. 12a).
+//!
+//! A `Kernel` is the hardware-facing form of one DSL program applied to
+//! one element: a list of `Buffer`s (BRAM/URAM candidates) and a sequence
+//! of `LoopNest`s. Each contraction nest has its innermost reduction loop
+//! fully unrolled (the paper's 11-parallel-multiplier MAC) and the
+//! remaining loops pipelined.
+
+use std::fmt;
+
+pub type BufId = usize;
+
+/// Buffer role in the kernel interface (paper Fig. 13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufKind {
+    /// Streamed in from HBM; buffered on-chip for random access.
+    Input,
+    /// Streamed out to HBM.
+    Output,
+    /// Internal; candidate for Mnemosyne bank sharing.
+    Temp,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buffer {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: BufKind,
+}
+
+impl Buffer {
+    pub fn words(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Elementwise operation of an `Elementwise` nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EwOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// What a nest computes; drives operator counting in the HLS estimator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NestKind {
+    /// GEMM-shaped n-mode product: the paper's `gemm` / `gemm_inv` nests.
+    Contraction {
+        matrix: BufId,
+        transpose: bool,
+        mode: usize,
+    },
+    /// Hadamard-style elementwise nest: the paper's `mmult`.
+    Elementwise(EwOp),
+    /// Pure data movement with axis permutation (zero flops).
+    Permute { from: usize, to: usize },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopNest {
+    pub name: String,
+    /// Trip counts of the pipelined output loops.
+    pub out_trips: Vec<usize>,
+    /// Trip count of the fully-unrolled innermost reduction (1 if none).
+    pub red_trip: usize,
+    /// Buffers read (includes the contraction matrix).
+    pub reads: Vec<BufId>,
+    pub write: BufId,
+    pub kind: NestKind,
+    /// Which program statement this nest implements (0-based).
+    pub stmt: usize,
+}
+
+impl LoopNest {
+    /// Pipelined iterations = product of output trip counts. With II=1
+    /// this is the nest's cycle interval — the paper estimates group
+    /// intervals "by the sum of trip counts of their child loops".
+    pub fn iterations(&self) -> u64 {
+        self.out_trips.iter().product::<usize>() as u64
+    }
+
+    /// Floating-point operations executed per element.
+    pub fn flops(&self) -> u64 {
+        match self.kind {
+            // mul + add per reduction step per output element
+            NestKind::Contraction { .. } => 2 * self.iterations() * self.red_trip as u64,
+            NestKind::Elementwise(_) => self.iterations(),
+            NestKind::Permute { .. } => 0,
+        }
+    }
+
+    /// Multipliers required to sustain II=1 with the reduction unrolled.
+    pub fn multipliers(&self) -> u32 {
+        match self.kind {
+            NestKind::Contraction { .. } => self.red_trip as u32,
+            NestKind::Elementwise(EwOp::Mul) | NestKind::Elementwise(EwOp::Div) => 1,
+            _ => 0,
+        }
+    }
+
+    /// Adders required (the paper's sequential adder chain).
+    pub fn adders(&self) -> u32 {
+        match self.kind {
+            NestKind::Contraction { .. } => self.red_trip as u32,
+            NestKind::Elementwise(EwOp::Add) | NestKind::Elementwise(EwOp::Sub) => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// A lowered kernel: one element's computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub buffers: Vec<Buffer>,
+    pub nests: Vec<LoopNest>,
+}
+
+impl Kernel {
+    pub fn inputs(&self) -> impl Iterator<Item = (BufId, &Buffer)> {
+        self.buffers
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.kind == BufKind::Input)
+    }
+
+    pub fn outputs(&self) -> impl Iterator<Item = (BufId, &Buffer)> {
+        self.buffers
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.kind == BufKind::Output)
+    }
+
+    pub fn temps(&self) -> impl Iterator<Item = (BufId, &Buffer)> {
+        self.buffers
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.kind == BufKind::Temp)
+    }
+
+    /// Words streamed in from HBM per element.
+    pub fn input_words(&self) -> usize {
+        self.inputs().map(|(_, b)| b.words()).sum()
+    }
+
+    /// Words streamed out to HBM per element.
+    pub fn output_words(&self) -> usize {
+        self.outputs().map(|(_, b)| b.words()).sum()
+    }
+
+    /// Total flops per element (paper Eq. 2 for the Helmholtz kernel).
+    pub fn flops_per_element(&self) -> u64 {
+        self.nests.iter().map(|n| n.flops()).sum()
+    }
+
+    /// Structural invariants; lowering and all transforms must preserve.
+    pub fn validate(&self) -> Result<(), String> {
+        use std::collections::HashSet;
+        let nb = self.buffers.len();
+        let mut written = HashSet::new();
+        for (i, n) in self.nests.iter().enumerate() {
+            if n.write >= nb {
+                return Err(format!("nest {i} writes out-of-range buffer"));
+            }
+            if self.buffers[n.write].kind == BufKind::Input {
+                return Err(format!("nest {i} writes input buffer"));
+            }
+            if !written.insert(n.write) {
+                return Err(format!(
+                    "buffer {} written by multiple nests",
+                    self.buffers[n.write].name
+                ));
+            }
+            for &r in &n.reads {
+                if r >= nb {
+                    return Err(format!("nest {i} reads out-of-range buffer"));
+                }
+                if self.buffers[r].kind != BufKind::Input && !written.contains(&r) {
+                    return Err(format!(
+                        "nest {i} reads {} before it is written",
+                        self.buffers[r].name
+                    ));
+                }
+            }
+            if n.out_trips.is_empty() || n.red_trip == 0 {
+                return Err(format!("nest {i} has degenerate trip counts"));
+            }
+            let expect = self.buffers[n.write].words() as u64;
+            if n.iterations() != expect {
+                return Err(format!(
+                    "nest {i} iterations {} != output words {expect}",
+                    n.iterations()
+                ));
+            }
+        }
+        for (id, b) in self.outputs() {
+            if !written.contains(&id) {
+                return Err(format!("output {} never written", b.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "kernel @{} {{", self.name)?;
+        for (i, b) in self.buffers.iter().enumerate() {
+            writeln!(
+                f,
+                "  buf %{i} {:?} {:9} {:?} ({} words)",
+                b.kind,
+                b.name,
+                b.shape,
+                b.words()
+            )?;
+        }
+        for (i, n) in self.nests.iter().enumerate() {
+            writeln!(
+                f,
+                "  nest {i} {:20} trips {:?} x{} -> %{} [{} flops]",
+                n.name,
+                n.out_trips,
+                n.red_trip,
+                n.write,
+                n.flops()
+            )?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_kernel() -> Kernel {
+        Kernel {
+            name: "k".into(),
+            buffers: vec![
+                Buffer {
+                    name: "a".into(),
+                    shape: vec![4, 4],
+                    kind: BufKind::Input,
+                },
+                Buffer {
+                    name: "x".into(),
+                    shape: vec![4, 4, 4],
+                    kind: BufKind::Input,
+                },
+                Buffer {
+                    name: "y".into(),
+                    shape: vec![4, 4, 4],
+                    kind: BufKind::Output,
+                },
+            ],
+            nests: vec![LoopNest {
+                name: "mode0".into(),
+                out_trips: vec![4, 4, 4],
+                red_trip: 4,
+                reads: vec![0, 1],
+                write: 2,
+                kind: NestKind::Contraction {
+                    matrix: 0,
+                    transpose: false,
+                    mode: 0,
+                },
+                stmt: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn valid_kernel_passes() {
+        tiny_kernel().validate().unwrap();
+    }
+
+    #[test]
+    fn nest_flops_counts_two_per_mac() {
+        let k = tiny_kernel();
+        assert_eq!(k.nests[0].flops(), 2 * 64 * 4);
+        assert_eq!(k.flops_per_element(), 512);
+    }
+
+    #[test]
+    fn multipliers_match_unroll() {
+        let k = tiny_kernel();
+        assert_eq!(k.nests[0].multipliers(), 4);
+        assert_eq!(k.nests[0].adders(), 4);
+    }
+
+    #[test]
+    fn io_word_counts() {
+        let k = tiny_kernel();
+        assert_eq!(k.input_words(), 16 + 64);
+        assert_eq!(k.output_words(), 64);
+    }
+
+    #[test]
+    fn validate_rejects_write_to_input() {
+        let mut k = tiny_kernel();
+        k.nests[0].write = 0;
+        assert!(k.validate().unwrap_err().contains("input"));
+    }
+
+    #[test]
+    fn validate_rejects_double_write() {
+        let mut k = tiny_kernel();
+        let mut n = k.nests[0].clone();
+        n.name = "again".into();
+        k.nests.push(n);
+        assert!(k.validate().unwrap_err().contains("multiple"));
+    }
+
+    #[test]
+    fn validate_rejects_read_before_write() {
+        let mut k = tiny_kernel();
+        k.buffers.push(Buffer {
+            name: "t".into(),
+            shape: vec![4, 4, 4],
+            kind: BufKind::Temp,
+        });
+        k.nests[0].reads.push(3);
+        assert!(k.validate().unwrap_err().contains("before it is written"));
+    }
+
+    #[test]
+    fn validate_rejects_iteration_mismatch() {
+        let mut k = tiny_kernel();
+        k.nests[0].out_trips = vec![4, 4];
+        assert!(k.validate().unwrap_err().contains("iterations"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Buffer liveness analysis and compatibility graph (paper §3.4.4, §3.5).
+//!
+//! The CFDlang compiler computes buffer lifetimes over the (sequential)
+//! nest schedule and exports the *compatibility graph* — pairs of
+//! internal buffers whose lifetimes do not overlap — as metadata for
+//! Mnemosyne's bank-sharing optimization (paper Fig. 13/14d).
+
+use super::affine::{BufKind, Kernel};
+
+/// Lifetime of a buffer in nest indices: written at `def`, last read at
+/// `last_use` (def == last_use means produced and never read — dead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub def: usize,
+    pub last_use: usize,
+}
+
+impl Interval {
+    /// Two lifetimes are compatible (can share storage) iff disjoint.
+    /// A buffer is live from the start of its defining nest through the
+    /// end of its last reading nest, so sharing requires strict
+    /// separation: one's last_use precedes the other's def.
+    pub fn disjoint(&self, other: &Interval) -> bool {
+        self.last_use < other.def || other.last_use < self.def
+    }
+}
+
+/// Result of liveness analysis over one kernel.
+#[derive(Debug, Clone)]
+pub struct Liveness {
+    /// Per-buffer lifetime; `None` for inputs/outputs (live throughout —
+    /// they interface with the Read/Write dataflow modules).
+    pub intervals: Vec<Option<Interval>>,
+    /// Compatibility edges between temp buffers (i < j).
+    pub compat: Vec<(usize, usize)>,
+}
+
+/// Compute temp-buffer lifetimes over the sequential nest order.
+pub fn analyze(k: &Kernel) -> Liveness {
+    let mut intervals: Vec<Option<Interval>> = vec![None; k.buffers.len()];
+    for (ni, nest) in k.nests.iter().enumerate() {
+        if k.buffers[nest.write].kind == BufKind::Temp {
+            let e = intervals[nest.write].get_or_insert(Interval {
+                def: ni,
+                last_use: ni,
+            });
+            e.def = e.def.min(ni);
+        }
+        for &r in &nest.reads {
+            if k.buffers[r].kind == BufKind::Temp {
+                if let Some(e) = intervals[r].as_mut() {
+                    e.last_use = e.last_use.max(ni);
+                }
+            }
+        }
+    }
+    let mut compat = Vec::new();
+    for i in 0..k.buffers.len() {
+        for j in (i + 1)..k.buffers.len() {
+            if let (Some(a), Some(b)) = (&intervals[i], &intervals[j]) {
+                if a.disjoint(b) {
+                    compat.push((i, j));
+                }
+            }
+        }
+    }
+    Liveness { intervals, compat }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::util::prop;
+
+    fn helmholtz_kernel(p: usize) -> Kernel {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        lower::lower_kernel(&m, "helmholtz").unwrap()
+    }
+
+    #[test]
+    fn inputs_and_outputs_have_no_interval() {
+        let k = helmholtz_kernel(7);
+        let lv = analyze(&k);
+        for (i, b) in k.buffers.iter().enumerate() {
+            match b.kind {
+                BufKind::Temp => assert!(lv.intervals[i].is_some(), "{}", b.name),
+                _ => assert!(lv.intervals[i].is_none(), "{}", b.name),
+            }
+        }
+    }
+
+    #[test]
+    fn helmholtz_has_sharing_opportunities() {
+        // Early mode-product intermediates die before the late ones are
+        // born — the sharing Mnemosyne exploits in the paper (Fig. 14d).
+        let k = helmholtz_kernel(11);
+        let lv = analyze(&k);
+        assert!(
+            !lv.compat.is_empty(),
+            "expected at least one compatible temp pair"
+        );
+    }
+
+    #[test]
+    fn compat_edges_really_are_disjoint() {
+        let k = helmholtz_kernel(11);
+        let lv = analyze(&k);
+        for &(i, j) in &lv.compat {
+            let (a, b) = (lv.intervals[i].unwrap(), lv.intervals[j].unwrap());
+            assert!(a.disjoint(&b));
+            assert!(i < j);
+        }
+    }
+
+    #[test]
+    fn t_is_live_until_hadamard() {
+        let k = helmholtz_kernel(11);
+        let lv = analyze(&k);
+        let (tid, _) = k
+            .buffers
+            .iter()
+            .enumerate()
+            .find(|(_, b)| b.name == "t")
+            .unwrap();
+        let iv = lv.intervals[tid].unwrap();
+        assert_eq!(iv.def, 2, "t written by third mode product");
+        assert_eq!(iv.last_use, 3, "t read by the hadamard nest");
+    }
+
+    #[test]
+    fn interval_disjointness_is_symmetric_and_irreflexive() {
+        prop::check("interval disjointness", 64, |rng| {
+            let a = Interval {
+                def: rng.range_usize(0, 10),
+                last_use: rng.range_usize(0, 10),
+            };
+            let a = Interval {
+                def: a.def.min(a.last_use),
+                last_use: a.def.max(a.last_use),
+            };
+            let b = Interval {
+                def: rng.range_usize(0, 10),
+                last_use: rng.range_usize(0, 10),
+            };
+            let b = Interval {
+                def: b.def.min(b.last_use),
+                last_use: b.def.max(b.last_use),
+            };
+            prop::assert_prop(
+                a.disjoint(&b) == b.disjoint(&a) && !a.disjoint(&a),
+                format!("{a:?} {b:?}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,281 @@
+//! Lowering teil → affine (paper §3.4.4).
+//!
+//! Requires a *rewritten* module: every contraction must already be
+//! GEMM-shaped (`ModeApply`). Naive `prod`/`diag`/`red` remnants are a
+//! compiler limitation surfaced as an error (paper §3.3.4 discusses the
+//! analogous TeIL-mappability boundary) — materializing an outer product
+//! on-chip is never a sensible hardware implementation.
+
+use std::collections::HashMap;
+
+use super::affine::{BufId, BufKind, Buffer, EwOp, Kernel, LoopNest, NestKind};
+use super::teil::{Module, Op, ValId};
+
+/// Lower a rewritten teil module to an affine kernel.
+pub fn lower_kernel(m: &Module, name: &str) -> Result<Kernel, String> {
+    let mut k = Kernel {
+        name: name.to_string(),
+        buffers: Vec::new(),
+        nests: Vec::new(),
+    };
+    // value -> buffer holding it
+    let mut buf_of: HashMap<ValId, BufId> = HashMap::new();
+
+    // name lookup for defs (a def may alias an earlier value)
+    let def_of: HashMap<ValId, (&str, bool)> = m
+        .defs
+        .iter()
+        .map(|d| (d.value, (d.name.as_str(), d.is_output)))
+        .collect();
+
+    // statement index of each def value (for schedule boundaries)
+    let stmt_of_def: HashMap<ValId, usize> =
+        m.defs.iter().enumerate().map(|(i, d)| (d.value, i)).collect();
+
+    let mut tmp_count = 0usize;
+    for (v, val) in m.values.iter().enumerate() {
+        match &val.op {
+            Op::Arg { name } => {
+                let id = push_buf(&mut k, name, &val.shape, BufKind::Input);
+                buf_of.insert(v, id);
+            }
+            Op::Prod { .. } | Op::Diag { .. } | Op::Red { .. } => {
+                return Err(format!(
+                    "value %{v} is an unfactorized contraction op ({:?}); \
+                     run rewrite::optimize before lowering",
+                    val.op
+                ));
+            }
+            _ => {
+                // destination buffer: program name if this value is a def,
+                // else a fresh temp.
+                let (bname, kind) = match def_of.get(&v) {
+                    Some((n, true)) => (n.to_string(), BufKind::Output),
+                    Some((n, false)) => (n.to_string(), BufKind::Temp),
+                    None => {
+                        tmp_count += 1;
+                        (format!("tmp{tmp_count}"), BufKind::Temp)
+                    }
+                };
+                let out = push_buf(&mut k, &bname, &val.shape, kind);
+                buf_of.insert(v, out);
+                let stmt = stmt_for(m, v, &stmt_of_def);
+                let nest = build_nest(m, v, val, &buf_of, out, stmt)?;
+                k.nests.push(nest);
+            }
+        }
+    }
+    k.validate()?;
+    Ok(k)
+}
+
+fn push_buf(k: &mut Kernel, name: &str, shape: &[usize], kind: BufKind) -> BufId {
+    k.buffers.push(Buffer {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        kind,
+    });
+    k.buffers.len() - 1
+}
+
+/// Find the statement that (transitively) consumes value v: the first def
+/// whose value is reachable from v's users. Conservatively: the def with
+/// the smallest index >= any def containing v in its subtree.
+fn stmt_for(m: &Module, v: ValId, stmt_of_def: &HashMap<ValId, usize>) -> usize {
+    if let Some(&s) = stmt_of_def.get(&v) {
+        return s;
+    }
+    // walk defs in order; the first def whose subtree contains v owns it
+    for (i, d) in m.defs.iter().enumerate() {
+        if subtree_contains(m, d.value, v) {
+            return i;
+        }
+    }
+    m.defs.len().saturating_sub(1)
+}
+
+fn subtree_contains(m: &Module, root: ValId, needle: ValId) -> bool {
+    if root == needle {
+        return true;
+    }
+    match &m.values[root].op {
+        Op::Arg { .. } => false,
+        Op::Prod { a, b }
+        | Op::Add { a, b }
+        | Op::Sub { a, b }
+        | Op::Mul { a, b }
+        | Op::Div { a, b } => {
+            subtree_contains(m, *a, needle) || subtree_contains(m, *b, needle)
+        }
+        Op::Diag { x, .. } | Op::Red { x, .. } | Op::MoveAxis { x, .. } => {
+            subtree_contains(m, *x, needle)
+        }
+        Op::ModeApply { m: mm, x, .. } => {
+            subtree_contains(m, *mm, needle) || subtree_contains(m, *x, needle)
+        }
+    }
+}
+
+fn build_nest(
+    m: &Module,
+    v: ValId,
+    val: &super::teil::Value,
+    buf_of: &HashMap<ValId, BufId>,
+    out: BufId,
+    stmt: usize,
+) -> Result<LoopNest, String> {
+    let get = |x: &ValId| -> Result<BufId, String> {
+        buf_of
+            .get(x)
+            .copied()
+            .ok_or_else(|| format!("value %{x} has no buffer (topological order violated)"))
+    };
+    match &val.op {
+        Op::ModeApply {
+            m: mat,
+            x,
+            mode,
+            transpose,
+        } => {
+            let mb = get(mat)?;
+            let xb = get(x)?;
+            let red = m.shape(*x)[*mode];
+            Ok(LoopNest {
+                name: format!(
+                    "mode{}{}_{}",
+                    mode,
+                    if *transpose { "t" } else { "" },
+                    v
+                ),
+                out_trips: val.shape.clone(),
+                red_trip: red,
+                reads: vec![mb, xb],
+                write: out,
+                kind: NestKind::Contraction {
+                    matrix: mb,
+                    transpose: *transpose,
+                    mode: *mode,
+                },
+                stmt,
+            })
+        }
+        Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b } | Op::Div { a, b } => {
+            let ew = match &val.op {
+                Op::Add { .. } => EwOp::Add,
+                Op::Sub { .. } => EwOp::Sub,
+                Op::Mul { .. } => EwOp::Mul,
+                _ => EwOp::Div,
+            };
+            Ok(LoopNest {
+                name: format!("ew{ew:?}_{v}").to_lowercase(),
+                out_trips: val.shape.clone(),
+                red_trip: 1,
+                reads: vec![get(a)?, get(b)?],
+                write: out,
+                kind: NestKind::Elementwise(ew),
+                stmt,
+            })
+        }
+        Op::MoveAxis { x, from, to } => Ok(LoopNest {
+            name: format!("permute_{v}"),
+            out_trips: val.shape.clone(),
+            red_trip: 1,
+            reads: vec![get(x)?],
+            write: out,
+            kind: NestKind::Permute {
+                from: *from,
+                to: *to,
+            },
+            stmt,
+        }),
+        other => Err(format!("cannot lower {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{rewrite, teil};
+
+    fn helmholtz_kernel(p: usize) -> Kernel {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        lower_kernel(&m, "helmholtz").unwrap()
+    }
+
+    #[test]
+    fn helmholtz_lowered_has_seven_nests() {
+        // Paper §3.6.4: "composed of seven loops executed in sequence".
+        let k = helmholtz_kernel(11);
+        assert_eq!(k.nests.len(), 7);
+        let contractions = k
+            .nests
+            .iter()
+            .filter(|n| matches!(n.kind, NestKind::Contraction { .. }))
+            .count();
+        assert_eq!(contractions, 6);
+    }
+
+    #[test]
+    fn helmholtz_flops_match_paper_eq2() {
+        assert_eq!(helmholtz_kernel(11).flops_per_element(), 177_023);
+        assert_eq!(helmholtz_kernel(7).flops_per_element(), 29_155);
+    }
+
+    #[test]
+    fn helmholtz_io_words() {
+        // inputs: S (p^2) + D (p^3) + u (p^3); output: v (p^3)
+        let k = helmholtz_kernel(11);
+        assert_eq!(k.input_words(), 121 + 1331 + 1331);
+        assert_eq!(k.output_words(), 1331);
+    }
+
+    #[test]
+    fn helmholtz_nests_follow_statements() {
+        let k = helmholtz_kernel(11);
+        let stmts: Vec<usize> = k.nests.iter().map(|n| n.stmt).collect();
+        assert_eq!(stmts, vec![0, 0, 0, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn gradient_lowers_with_permutes() {
+        let prog = dsl::parse(&dsl::gradient_source(8, 7, 6)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower_kernel(&m, "gradient").unwrap();
+        let permutes = k
+            .nests
+            .iter()
+            .filter(|n| matches!(n.kind, NestKind::Permute { .. }))
+            .count();
+        assert_eq!(permutes, 2);
+        assert_eq!(k.outputs().count(), 3);
+        k.validate().unwrap();
+    }
+
+    #[test]
+    fn interpolation_lowers() {
+        let prog = dsl::parse(&dsl::interpolation_source(11, 11)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower_kernel(&m, "interp").unwrap();
+        assert_eq!(k.nests.len(), 3);
+        assert_eq!(k.flops_per_element(), 2 * 11 * (3 * 11u64.pow(3)));
+    }
+
+    #[test]
+    fn unfactorized_module_is_rejected() {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(3)).unwrap();
+        let naive = teil::from_ast(&prog).unwrap();
+        let err = lower_kernel(&naive, "x").unwrap_err();
+        assert!(err.contains("unfactorized"), "{err}");
+    }
+
+    #[test]
+    fn temp_buffers_are_shared_candidates() {
+        let k = helmholtz_kernel(7);
+        // t and r are program temps; mode-product intermediates add more
+        assert!(k.temps().count() >= 2);
+        assert!(k.temps().any(|(_, b)| b.name == "t"));
+        assert!(k.temps().any(|(_, b)| b.name == "r"));
+    }
+}

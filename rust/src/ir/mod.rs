@@ -1,0 +1,24 @@
+//! Compiler intermediate representations (paper §3.3–§3.4).
+//!
+//! The pipeline mirrors the paper's MLIR dialect stack:
+//!
+//! ```text
+//! dsl::Program  ── teil::from_ast ──►  teil::Module   (value-based tensor IR)
+//!                                        │ rewrite::optimize   (§3.4.1)
+//!                                        ▼
+//!                                     teil::Module   (factorized, GEMM-shaped)
+//!                                        │ lower::lower_kernel (§3.4.4)
+//!                                        ▼
+//!                                     affine::Kernel (loop nests + buffers)
+//!                                        │ liveness / schedule (§3.4.3)
+//!                                        ▼
+//!                  codegen::c_emit / olympus::generate
+//! ```
+
+pub mod affine;
+pub mod liveness;
+pub mod lower;
+pub mod rewrite;
+pub mod schedule;
+pub mod shape;
+pub mod teil;

@@ -1,0 +1,343 @@
+//! Operator scheduling: partitioning nests into dataflow groups
+//! (paper §3.4.3, Fig. 11).
+//!
+//! Groups become dataflow stages connected by streams. The group with the
+//! longest interval bounds the pipeline throughput, so `fixed(n)` picks
+//! the contiguous n-way partition minimizing the maximum group interval,
+//! preferring cuts at statement boundaries (the paper's 2-compute split
+//! is "the first three loop nests … and the last four" — a statement
+//! boundary cut) and then earlier cuts.
+//!
+//! `auto(budget)` implements the paper's collapse heuristic: start from
+//! singleton groups ("aggressively partitions the graph into the smallest
+//! possible operators") and merge adjacent groups while the merged
+//! interval stays within the budget, preferring chain collapses that
+//! remove FIFOs.
+
+use super::affine::Kernel;
+
+/// One dataflow stage: a contiguous run of nest indices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Group {
+    pub name: String,
+    /// Contiguous nest indices [start, end).
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Group {
+    pub fn nests(&self) -> std::ops::Range<usize> {
+        self.start..self.end
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// A dataflow schedule over a kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    pub groups: Vec<Group>,
+}
+
+impl Schedule {
+    /// Interval (pipelined iterations) of group `g` — the paper's
+    /// "sum of trip counts of child loops" estimate.
+    pub fn interval(&self, k: &Kernel, g: usize) -> u64 {
+        self.groups[g]
+            .nests()
+            .map(|ni| k.nests[ni].iterations())
+            .sum()
+    }
+
+    /// The bottleneck interval (max over groups).
+    pub fn max_interval(&self, k: &Kernel) -> u64 {
+        (0..self.groups.len())
+            .map(|g| self.interval(k, g))
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Invariants: groups contiguous, ordered, covering all nests.
+    pub fn validate(&self, k: &Kernel) -> Result<(), String> {
+        let mut pos = 0;
+        for g in &self.groups {
+            if g.start != pos {
+                return Err(format!(
+                    "group {} starts at {} expected {pos}",
+                    g.name, g.start
+                ));
+            }
+            if g.is_empty() {
+                return Err(format!("group {} is empty", g.name));
+            }
+            pos = g.end;
+        }
+        if pos != k.nests.len() {
+            return Err(format!(
+                "schedule covers {pos} of {} nests",
+                k.nests.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Statement-boundary cut positions (cut before nest i is a boundary
+/// when nests i-1 and i implement different statements).
+fn stmt_boundaries(k: &Kernel) -> Vec<usize> {
+    (1..k.nests.len())
+        .filter(|&i| k.nests[i - 1].stmt != k.nests[i].stmt)
+        .collect()
+}
+
+/// Partition into exactly `n` contiguous groups minimizing
+/// (max interval, non-statement-boundary cuts, earliest cuts).
+pub fn fixed(k: &Kernel, n: usize) -> Result<Schedule, String> {
+    let nn = k.nests.len();
+    if n == 0 || n > nn {
+        return Err(format!("cannot split {nn} nests into {n} groups"));
+    }
+    let bounds = stmt_boundaries(k);
+    let lat: Vec<u64> = k.nests.iter().map(|x| x.iterations()).collect();
+
+    // enumerate cut sets: choose n-1 cut positions from 1..nn
+    let mut best: Option<(u64, usize, Vec<usize>)> = None;
+    let mut cuts = vec![0usize; n - 1];
+    enumerate_cuts(1, nn, &mut cuts, 0, &mut |cs: &[usize]| {
+        let mut maxi = 0u64;
+        let mut prev = 0usize;
+        for &c in cs.iter().chain(std::iter::once(&nn)) {
+            let s: u64 = lat[prev..c].iter().sum();
+            maxi = maxi.max(s);
+            prev = c;
+        }
+        let off_boundary = cs.iter().filter(|c| !bounds.contains(c)).count();
+        let cand = (maxi, off_boundary, cs.to_vec());
+        let better = match &best {
+            None => true,
+            Some((bm, bo, bc)) => {
+                (cand.0, cand.1, &cand.2) < (*bm, *bo, bc)
+            }
+        };
+        if better {
+            best = Some(cand);
+        }
+    });
+    let (_, _, cuts) = best.expect("at least one partition exists");
+    Ok(build_schedule(k, &cuts))
+}
+
+fn enumerate_cuts(
+    lo: usize,
+    nn: usize,
+    cuts: &mut [usize],
+    depth: usize,
+    f: &mut impl FnMut(&[usize]),
+) {
+    if depth == cuts.len() {
+        f(cuts);
+        return;
+    }
+    let remaining = cuts.len() - depth - 1;
+    for c in lo..(nn - remaining) {
+        cuts[depth] = c;
+        enumerate_cuts(c + 1, nn, cuts, depth + 1, f);
+    }
+}
+
+/// The paper's collapse heuristic: singleton groups merged under an
+/// interval budget. Default budget = the longest single-nest interval
+/// ("the group with the longest interval determines the lower bound …
+/// our heuristic uses that interval as a budget").
+pub fn auto(k: &Kernel, budget: Option<u64>) -> Schedule {
+    let lat: Vec<u64> = k.nests.iter().map(|x| x.iterations()).collect();
+    let budget = budget.unwrap_or_else(|| lat.iter().copied().max().unwrap_or(0));
+    let mut groups: Vec<(usize, usize, u64)> = lat
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (i, i + 1, l))
+        .collect();
+    loop {
+        // find the adjacent pair with the smallest merged interval
+        let mut pick: Option<(usize, u64)> = None;
+        for i in 0..groups.len().saturating_sub(1) {
+            let merged = groups[i].2 + groups[i + 1].2;
+            if merged <= budget && pick.map(|(_, m)| merged < m).unwrap_or(true) {
+                pick = Some((i, merged));
+            }
+        }
+        match pick {
+            Some((i, merged)) => {
+                groups[i] = (groups[i].0, groups[i + 1].1, merged);
+                groups.remove(i + 1);
+            }
+            None => break,
+        }
+    }
+    let cuts: Vec<usize> = groups.iter().skip(1).map(|g| g.0).collect();
+    build_schedule(k, &cuts)
+}
+
+fn build_schedule(k: &Kernel, cuts: &[usize]) -> Schedule {
+    let nn = k.nests.len();
+    let mut groups = Vec::new();
+    let mut prev = 0usize;
+    for (gi, &c) in cuts.iter().chain(std::iter::once(&nn)).enumerate() {
+        groups.push(Group {
+            name: group_name(k, prev, c, gi),
+            start: prev,
+            end: c,
+        });
+        prev = c;
+    }
+    Schedule { groups }
+}
+
+/// Name groups after the paper's Fig. 11 vocabulary where recognizable.
+fn group_name(k: &Kernel, start: usize, end: usize, gi: usize) -> String {
+    use super::affine::NestKind;
+    let kinds: Vec<&NestKind> = k.nests[start..end].iter().map(|n| &n.kind).collect();
+    let all_contraction = kinds
+        .iter()
+        .all(|x| matches!(x, NestKind::Contraction { .. }));
+    let all_elementwise = kinds
+        .iter()
+        .all(|x| matches!(x, NestKind::Elementwise(_)));
+    if all_contraction {
+        let transposed = k.nests[start..end].iter().all(|n| {
+            matches!(n.kind, NestKind::Contraction { transpose: true, .. })
+        });
+        if transposed {
+            format!("gemm_inv_{gi}")
+        } else {
+            format!("gemm_{gi}")
+        }
+    } else if all_elementwise {
+        format!("mmult_{gi}")
+    } else {
+        format!("stage_{gi}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+
+    fn helmholtz_kernel(p: usize) -> Kernel {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        lower::lower_kernel(&m, "helmholtz").unwrap()
+    }
+
+    #[test]
+    fn fixed_1_is_whole_kernel() {
+        let k = helmholtz_kernel(11);
+        let s = fixed(&k, 1).unwrap();
+        s.validate(&k).unwrap();
+        assert_eq!(s.num_groups(), 1);
+        assert_eq!(s.groups[0].len(), 7);
+    }
+
+    #[test]
+    fn fixed_2_matches_paper_three_four_split() {
+        // Paper §4.2: "first module with the first three loop nests …
+        // second module with the last four".
+        let k = helmholtz_kernel(11);
+        let s = fixed(&k, 2).unwrap();
+        s.validate(&k).unwrap();
+        assert_eq!(s.groups[0].len(), 3);
+        assert_eq!(s.groups[1].len(), 4);
+    }
+
+    #[test]
+    fn fixed_3_matches_paper_gemm_mmult_gemminv() {
+        // Paper: "the most natural division … first three loop nests
+        // implement gemm, the fourth mmult, the last three gemm_inv".
+        let k = helmholtz_kernel(11);
+        let s = fixed(&k, 3).unwrap();
+        s.validate(&k).unwrap();
+        let lens: Vec<usize> = s.groups.iter().map(|g| g.len()).collect();
+        assert_eq!(lens, vec![3, 1, 3]);
+        assert!(s.groups[0].name.starts_with("gemm"));
+        assert!(s.groups[1].name.starts_with("mmult"));
+        assert!(s.groups[2].name.starts_with("gemm_inv"));
+    }
+
+    #[test]
+    fn fixed_7_is_one_nest_per_group() {
+        let k = helmholtz_kernel(11);
+        let s = fixed(&k, 7).unwrap();
+        s.validate(&k).unwrap();
+        assert!(s.groups.iter().all(|g| g.len() == 1));
+        // every group interval is p^3 (paper: compute stages just below
+        // the read module's interval)
+        for g in 0..7 {
+            assert_eq!(s.interval(&k, g), 1331);
+        }
+    }
+
+    #[test]
+    fn fixed_rejects_bad_counts() {
+        let k = helmholtz_kernel(7);
+        assert!(fixed(&k, 0).is_err());
+        assert!(fixed(&k, 8).is_err());
+    }
+
+    #[test]
+    fn max_interval_decreases_with_more_groups() {
+        let k = helmholtz_kernel(11);
+        let m1 = fixed(&k, 1).unwrap().max_interval(&k);
+        let m2 = fixed(&k, 2).unwrap().max_interval(&k);
+        let m7 = fixed(&k, 7).unwrap().max_interval(&k);
+        assert!(m1 > m2);
+        assert!(m2 > m7);
+        assert_eq!(m1, 7 * 1331);
+        assert_eq!(m7, 1331);
+    }
+
+    #[test]
+    fn auto_with_default_budget_keeps_singletons() {
+        // budget = max nest interval = p^3; no merge fits within it
+        let k = helmholtz_kernel(11);
+        let s = auto(&k, None);
+        s.validate(&k).unwrap();
+        assert_eq!(s.num_groups(), 7);
+    }
+
+    #[test]
+    fn auto_with_generous_budget_collapses_all() {
+        let k = helmholtz_kernel(11);
+        let s = auto(&k, Some(u64::MAX));
+        s.validate(&k).unwrap();
+        assert_eq!(s.num_groups(), 1);
+    }
+
+    #[test]
+    fn auto_with_mid_budget_is_between() {
+        let k = helmholtz_kernel(11);
+        let s = auto(&k, Some(3 * 1331));
+        s.validate(&k).unwrap();
+        assert!(s.num_groups() > 1 && s.num_groups() < 7);
+        assert!(s.max_interval(&k) <= 3 * 1331);
+    }
+
+    #[test]
+    fn validate_catches_gaps() {
+        let k = helmholtz_kernel(7);
+        let mut s = fixed(&k, 2).unwrap();
+        s.groups[1].start += 1;
+        assert!(s.validate(&k).is_err());
+    }
+}

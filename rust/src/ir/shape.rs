@@ -1,0 +1,185 @@
+//! Shape inference and verification for teil ops.
+
+use super::teil::{Module, Op};
+
+/// Infer the result shape of `op` given the module's existing values.
+pub fn infer(m: &Module, op: &Op) -> Result<Vec<usize>, String> {
+    match op {
+        // Arg shapes are patched in by the builder right after push.
+        Op::Arg { .. } => Ok(vec![]),
+        Op::Prod { a, b } => {
+            let mut s = m.shape(*a).to_vec();
+            s.extend_from_slice(m.shape(*b));
+            Ok(s)
+        }
+        Op::Diag { x, i, j } => {
+            let s = m.shape(*x);
+            if *i >= *j {
+                return Err(format!("diag expects i < j, got ({i}, {j})"));
+            }
+            if *j >= s.len() {
+                return Err(format!("diag axis {j} out of range for {s:?}"));
+            }
+            if s[*i] != s[*j] {
+                return Err(format!(
+                    "diag axes must have equal extent: {} vs {}",
+                    s[*i], s[*j]
+                ));
+            }
+            let mut out = s.to_vec();
+            out.remove(*j);
+            Ok(out)
+        }
+        Op::Red { x, axis } => {
+            let s = m.shape(*x);
+            if *axis >= s.len() {
+                return Err(format!("red axis {axis} out of range for {s:?}"));
+            }
+            let mut out = s.to_vec();
+            out.remove(*axis);
+            Ok(out)
+        }
+        Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b } | Op::Div { a, b } => {
+            if m.shape(*a) != m.shape(*b) {
+                return Err(format!(
+                    "elementwise shape mismatch: {:?} vs {:?}",
+                    m.shape(*a),
+                    m.shape(*b)
+                ));
+            }
+            Ok(m.shape(*a).to_vec())
+        }
+        Op::ModeApply {
+            m: mat,
+            x,
+            mode,
+            transpose,
+        } => {
+            let ms = m.shape(*mat);
+            if ms.len() != 2 {
+                return Err(format!("mode_apply matrix must be rank 2, got {ms:?}"));
+            }
+            let (rows, cols) = if *transpose {
+                (ms[1], ms[0])
+            } else {
+                (ms[0], ms[1])
+            };
+            let xs = m.shape(*x);
+            if *mode >= xs.len() {
+                return Err(format!("mode {mode} out of range for {xs:?}"));
+            }
+            if xs[*mode] != cols {
+                return Err(format!(
+                    "mode_apply contract dim mismatch: matrix cols {cols} vs tensor axis {}",
+                    xs[*mode]
+                ));
+            }
+            let mut out = xs.to_vec();
+            out[*mode] = rows;
+            Ok(out)
+        }
+        Op::MoveAxis { x, from, to } => {
+            let s = m.shape(*x);
+            if *from >= s.len() || *to >= s.len() {
+                return Err(format!(
+                    "move_axis ({from} -> {to}) out of range for {s:?}"
+                ));
+            }
+            let mut out = s.to_vec();
+            let ax = out.remove(*from);
+            out.insert(*to, ax);
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::teil::{Module, Op};
+
+    fn module_with_args() -> (Module, usize, usize) {
+        let mut m = Module::default();
+        let s = m.push(Op::Arg { name: "S".into() }).unwrap();
+        m.values[s].shape = vec![4, 4];
+        let u = m.push(Op::Arg { name: "u".into() }).unwrap();
+        m.values[u].shape = vec![4, 4, 4];
+        (m, s, u)
+    }
+
+    #[test]
+    fn prod_concats_shapes() {
+        let (mut m, s, u) = module_with_args();
+        let p = m.push(Op::Prod { a: s, b: u }).unwrap();
+        assert_eq!(m.shape(p), &[4, 4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn diag_drops_second_axis() {
+        let (mut m, s, u) = module_with_args();
+        let p = m.push(Op::Prod { a: s, b: u }).unwrap();
+        let d = m.push(Op::Diag { x: p, i: 1, j: 2 }).unwrap();
+        assert_eq!(m.shape(d), &[4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn diag_requires_i_lt_j_and_equal_extents() {
+        let (mut m, s, _) = module_with_args();
+        assert!(m.push(Op::Diag { x: s, i: 1, j: 1 }).is_err());
+        assert!(m.push(Op::Diag { x: s, i: 0, j: 5 }).is_err());
+        let a = m.push(Op::Arg { name: "A".into() }).unwrap();
+        m.values[a].shape = vec![2, 3];
+        assert!(m.push(Op::Diag { x: a, i: 0, j: 1 }).is_err());
+    }
+
+    #[test]
+    fn red_removes_axis() {
+        let (mut m, _, u) = module_with_args();
+        let r = m.push(Op::Red { x: u, axis: 1 }).unwrap();
+        assert_eq!(m.shape(r), &[4, 4]);
+        assert!(m.push(Op::Red { x: u, axis: 9 }).is_err());
+    }
+
+    #[test]
+    fn elementwise_requires_matching_shapes() {
+        let (mut m, s, u) = module_with_args();
+        assert!(m.push(Op::Mul { a: s, b: u }).is_err());
+        let ok = m.push(Op::Mul { a: u, b: u }).unwrap();
+        assert_eq!(m.shape(ok), &[4, 4, 4]);
+    }
+
+    #[test]
+    fn mode_apply_shapes() {
+        let (mut m, s, u) = module_with_args();
+        let a = m
+            .push(Op::ModeApply {
+                m: s,
+                x: u,
+                mode: 2,
+                transpose: false,
+            })
+            .unwrap();
+        assert_eq!(m.shape(a), &[4, 4, 4]);
+        // non-square matrix changes the mode extent
+        let w = m.push(Op::Arg { name: "W".into() }).unwrap();
+        m.values[w].shape = vec![6, 4];
+        let b = m
+            .push(Op::ModeApply {
+                m: w,
+                x: u,
+                mode: 0,
+                transpose: false,
+            })
+            .unwrap();
+        assert_eq!(m.shape(b), &[6, 4, 4]);
+        // transposed: contracts rows instead
+        assert!(m
+            .push(Op::ModeApply {
+                m: w,
+                x: u,
+                mode: 0,
+                transpose: true,
+            })
+            .is_err()); // W^T has cols 6 != 4
+    }
+}

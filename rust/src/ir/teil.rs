@@ -1,0 +1,476 @@
+//! The `teil` tensor IR: immutable tensor values, no array semantics
+//! (paper §3.3.2, Fig. 7b).
+//!
+//! Operations follow TeIL's primitives: `prod` (outer product), `diag`
+//! (axis pairing), `red` (add-reduction), plus elementwise arithmetic.
+//! After rewriting (§3.4.1), factorized contractions appear as
+//! `ModeApply` values — the GEMM-shaped n-mode products the hardware
+//! flow schedules onto dataflow stages.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::dsl::{Expr, Program, VarKind};
+use crate::util::tensor::Tensor;
+
+/// Index of a value in the module's value list.
+pub type ValId = usize;
+
+/// A teil operation producing one tensor value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Kernel argument (program input variable).
+    Arg { name: String },
+    /// Outer (tensor) product.
+    Prod { a: ValId, b: ValId },
+    /// Diagonal of axes (i, j), i < j: result drops axis j.
+    Diag { x: ValId, i: usize, j: usize },
+    /// Add-reduction over `axis`.
+    Red { x: ValId, axis: usize },
+    /// Elementwise ops.
+    Add { a: ValId, b: ValId },
+    Sub { a: ValId, b: ValId },
+    Mul { a: ValId, b: ValId },
+    Div { a: ValId, b: ValId },
+    /// n-mode product: contract matrix `m`'s 2nd index (or 1st when
+    /// `transpose`) against axis `mode` of `x`. Introduced by rewriting.
+    ModeApply {
+        m: ValId,
+        x: ValId,
+        mode: usize,
+        transpose: bool,
+    },
+    /// Move axis `from` to position `to` (introduced by rewriting to
+    /// restore contraction axis order; zero flops — address remapping).
+    MoveAxis { x: ValId, from: usize, to: usize },
+}
+
+/// A value: its defining op and inferred shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Value {
+    pub op: Op,
+    pub shape: Vec<usize>,
+}
+
+/// A named result the program assigns (program temp or output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Def {
+    pub name: String,
+    pub value: ValId,
+    pub is_output: bool,
+}
+
+/// A teil module: SSA-style value list plus named defs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Module {
+    pub values: Vec<Value>,
+    pub defs: Vec<Def>,
+    /// Input declarations (name, shape) in program order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+}
+
+impl Module {
+    pub fn shape(&self, v: ValId) -> &[usize] {
+        &self.values[v].shape
+    }
+
+    pub fn push(&mut self, op: Op) -> Result<ValId, String> {
+        let shape = super::shape::infer(self, &op)?;
+        self.values.push(Value { op, shape });
+        Ok(self.values.len() - 1)
+    }
+
+    pub fn outputs(&self) -> impl Iterator<Item = &Def> {
+        self.defs.iter().filter(|d| d.is_output)
+    }
+
+    pub fn def(&self, name: &str) -> Option<&Def> {
+        self.defs.iter().find(|d| d.name == name)
+    }
+
+    /// Total scalar multiply+add count to evaluate the module as written
+    /// (the naive cost the rewriter must beat; see `rewrite::optimize`).
+    pub fn flops(&self) -> u64 {
+        let mut used = vec![false; self.values.len()];
+        for d in &self.defs {
+            mark_used(self, d.value, &mut used);
+        }
+        self.values
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| used[*i])
+            .map(|(_, v)| op_flops(self, v))
+            .sum()
+    }
+}
+
+fn mark_used(m: &Module, v: ValId, used: &mut [bool]) {
+    if used[v] {
+        return;
+    }
+    used[v] = true;
+    match &m.values[v].op {
+        Op::Arg { .. } => {}
+        Op::Prod { a, b }
+        | Op::Add { a, b }
+        | Op::Sub { a, b }
+        | Op::Mul { a, b }
+        | Op::Div { a, b } => {
+            mark_used(m, *a, used);
+            mark_used(m, *b, used);
+        }
+        Op::Diag { x, .. } | Op::Red { x, .. } | Op::MoveAxis { x, .. } => {
+            mark_used(m, *x, used)
+        }
+        Op::ModeApply { m: mm, x, .. } => {
+            mark_used(m, *mm, used);
+            mark_used(m, *x, used);
+        }
+    }
+}
+
+fn op_flops(m: &Module, v: &Value) -> u64 {
+    let n: u64 = v.shape.iter().product::<usize>() as u64;
+    match &v.op {
+        Op::Arg { .. } | Op::Diag { .. } | Op::MoveAxis { .. } => 0,
+        Op::Prod { .. } | Op::Mul { .. } | Op::Add { .. } | Op::Sub { .. } | Op::Div { .. } => n,
+        // reduction: (extent-1) adds per output — count as extent for the
+        // paper's 2-flops-per-MAC convention handled by ModeApply below.
+        Op::Red { x, axis } => {
+            let extent = m.shape(*x)[*axis] as u64;
+            n * extent.saturating_sub(1)
+        }
+        // 2 flops (mul + add) per contraction step per output element.
+        Op::ModeApply { m: mat, .. } => {
+            let k = m.shape(*mat)[1] as u64;
+            2 * n * k
+        }
+    }
+}
+
+impl fmt::Display for Module {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, v) in self.values.iter().enumerate() {
+            write!(f, "%{i} = ")?;
+            match &v.op {
+                Op::Arg { name } => write!(f, "teil.arg @{name}")?,
+                Op::Prod { a, b } => write!(f, "teil.prod %{a}, %{b}")?,
+                Op::Diag { x, i: a, j: b } => write!(f, "teil.diag {a} {b} %{x}")?,
+                Op::Red { x, axis } => write!(f, "teil.red add {axis} %{x}")?,
+                Op::Add { a, b } => write!(f, "teil.add %{a}, %{b}")?,
+                Op::Sub { a, b } => write!(f, "teil.sub %{a}, %{b}")?,
+                Op::Mul { a, b } => write!(f, "teil.mul %{a}, %{b}")?,
+                Op::Div { a, b } => write!(f, "teil.div %{a}, %{b}")?,
+                Op::ModeApply {
+                    m,
+                    x,
+                    mode,
+                    transpose,
+                } => write!(
+                    f,
+                    "teil.mode_apply{} {mode} %{m}, %{x}",
+                    if *transpose { "_t" } else { "" }
+                )?,
+                Op::MoveAxis { x, from, to } => {
+                    write!(f, "teil.move_axis {from}->{to} %{x}")?
+                }
+            }
+            writeln!(f, " : tensor<{:?}>", v.shape)?;
+        }
+        for d in &self.defs {
+            writeln!(
+                f,
+                "teil.define @{} = %{}{}",
+                d.name,
+                d.value,
+                if d.is_output { " (output)" } else { "" }
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Translate a validated CFDlang program into teil (paper Fig. 7a→7b's
+/// first step: `cfdlang` ops become `prod`/`diag`/`red` chains).
+pub fn from_ast(prog: &Program) -> Result<Module, String> {
+    let mut m = Module::default();
+    let mut env: HashMap<String, ValId> = HashMap::new();
+
+    for d in &prog.decls {
+        if d.kind == VarKind::Input {
+            let id = m.push(Op::Arg {
+                name: d.name.clone(),
+            })?;
+            m.values[id].shape = d.shape.clone();
+            m.inputs.push((d.name.clone(), d.shape.clone()));
+            env.insert(d.name.clone(), id);
+        }
+    }
+
+    for stmt in &prog.stmts {
+        let v = build_expr(&mut m, &stmt.expr, &env)?;
+        let decl = prog.decl(&stmt.target).expect("validated");
+        if m.shape(v) != decl.shape.as_slice() {
+            return Err(format!(
+                "shape mismatch assigning {}: declared {:?}, inferred {:?}",
+                stmt.target,
+                decl.shape,
+                m.shape(v)
+            ));
+        }
+        env.insert(stmt.target.clone(), v);
+        m.defs.push(Def {
+            name: stmt.target.clone(),
+            value: v,
+            is_output: decl.kind == VarKind::Output,
+        });
+    }
+    Ok(m)
+}
+
+fn build_expr(
+    m: &mut Module,
+    e: &Expr,
+    env: &HashMap<String, ValId>,
+) -> Result<ValId, String> {
+    match e {
+        Expr::Var(n) => env
+            .get(n)
+            .copied()
+            .ok_or_else(|| format!("unbound variable {n}")),
+        Expr::Add(a, b) => {
+            let (a, b) = (build_expr(m, a, env)?, build_expr(m, b, env)?);
+            m.push(Op::Add { a, b })
+        }
+        Expr::Sub(a, b) => {
+            let (a, b) = (build_expr(m, a, env)?, build_expr(m, b, env)?);
+            m.push(Op::Sub { a, b })
+        }
+        Expr::Mul(a, b) => {
+            let (a, b) = (build_expr(m, a, env)?, build_expr(m, b, env)?);
+            m.push(Op::Mul { a, b })
+        }
+        Expr::Div(a, b) => {
+            let (a, b) = (build_expr(m, a, env)?, build_expr(m, b, env)?);
+            m.push(Op::Div { a, b })
+        }
+        Expr::Prod(a, b) => {
+            let (a, b) = (build_expr(m, a, env)?, build_expr(m, b, env)?);
+            m.push(Op::Prod { a, b })
+        }
+        Expr::Contract(inner, pairs) => {
+            let x = build_expr(m, inner, env)?;
+            // Lower each pair to diag + red. Axis numbers shift as axes
+            // disappear: process pairs sorted by first index, adjusting
+            // later pairs for the two axes each diag+red removes.
+            let mut remaining: Vec<(usize, usize)> = pairs
+                .iter()
+                .map(|p| (p.a.min(p.b), p.a.max(p.b)))
+                .collect();
+            remaining.sort();
+            let mut cur = x;
+            for k in 0..remaining.len() {
+                let (i, j) = remaining[k];
+                let d = m.push(Op::Diag { x: cur, i, j })?;
+                let r = m.push(Op::Red { x: d, axis: i })?;
+                cur = r;
+                // diag removed axis j; red removed axis i (i < j).
+                for (a, b) in remaining.iter_mut().skip(k + 1) {
+                    for ax in [a, b] {
+                        debug_assert!(*ax != i && *ax != j);
+                        if *ax > j {
+                            *ax -= 2;
+                        } else if *ax > i {
+                            *ax -= 1;
+                        }
+                    }
+                }
+            }
+            Ok(cur)
+        }
+    }
+}
+
+/// Evaluate a module on concrete inputs — the semantic oracle for
+/// rewriting and the naive-CPU baseline datapath.
+pub fn eval(
+    m: &Module,
+    inputs: &HashMap<String, Tensor>,
+) -> Result<HashMap<String, Tensor>, String> {
+    let mut vals: Vec<Option<Tensor>> = vec![None; m.values.len()];
+    for (i, v) in m.values.iter().enumerate() {
+        let t = match &v.op {
+            Op::Arg { name } => inputs
+                .get(name)
+                .ok_or_else(|| format!("missing input {name}"))?
+                .clone(),
+            Op::Prod { a, b } => vals[*a].as_ref().unwrap().outer(vals[*b].as_ref().unwrap()),
+            Op::Diag { x, i, j } => vals[*x].as_ref().unwrap().diag(*i, *j),
+            Op::Red { x, axis } => vals[*x].as_ref().unwrap().reduce_add(*axis),
+            Op::Add { a, b } => vals[*a]
+                .as_ref()
+                .unwrap()
+                .zip(vals[*b].as_ref().unwrap(), |x, y| x + y),
+            Op::Sub { a, b } => vals[*a]
+                .as_ref()
+                .unwrap()
+                .zip(vals[*b].as_ref().unwrap(), |x, y| x - y),
+            Op::Mul { a, b } => vals[*a]
+                .as_ref()
+                .unwrap()
+                .zip(vals[*b].as_ref().unwrap(), |x, y| x * y),
+            Op::Div { a, b } => vals[*a]
+                .as_ref()
+                .unwrap()
+                .zip(vals[*b].as_ref().unwrap(), |x, y| x / y),
+            Op::ModeApply {
+                m: mat,
+                x,
+                mode,
+                transpose,
+            } => {
+                let matt = vals[*mat].as_ref().unwrap();
+                let matt = if *transpose {
+                    transpose2(matt)
+                } else {
+                    matt.clone()
+                };
+                vals[*x].as_ref().unwrap().mode_apply(&matt, *mode)
+            }
+            Op::MoveAxis { x, from, to } => {
+                vals[*x].as_ref().unwrap().move_axis(*from, *to)
+            }
+        };
+        if t.shape() != v.shape.as_slice() {
+            return Err(format!(
+                "eval shape mismatch at %{i}: expected {:?}, got {:?}",
+                v.shape,
+                t.shape()
+            ));
+        }
+        vals[i] = Some(t);
+    }
+    let mut out = HashMap::new();
+    for d in &m.defs {
+        out.insert(d.name.clone(), vals[d.value].clone().unwrap());
+    }
+    Ok(out)
+}
+
+fn transpose2(t: &Tensor) -> Tensor {
+    assert_eq!(t.rank(), 2);
+    let (r, c) = (t.shape()[0], t.shape()[1]);
+    let mut out = Tensor::zeros(&[c, r]);
+    for i in 0..r {
+        for j in 0..c {
+            out.set(&[j, i], t.get(&[i, j]));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::util::prng::Prng;
+
+    fn helmholtz_inputs(p: usize, seed: u64) -> HashMap<String, Tensor> {
+        let mut rng = Prng::new(seed);
+        let mut m = HashMap::new();
+        m.insert("S".into(), Tensor::random(&[p, p], &mut rng));
+        m.insert("D".into(), Tensor::random(&[p, p, p], &mut rng));
+        m.insert("u".into(), Tensor::random(&[p, p, p], &mut rng));
+        m
+    }
+
+    /// Direct dense evaluation of Eq. 1a-1c, independent of the IR.
+    fn helmholtz_direct(inp: &HashMap<String, Tensor>) -> Tensor {
+        let s = &inp["S"];
+        let d = &inp["D"];
+        let u = &inp["u"];
+        let t = u.mode_apply(s, 0).mode_apply(s, 1).mode_apply(s, 2);
+        let r = d.zip(&t, |a, b| a * b);
+        let st = transpose2(s);
+        r.mode_apply(&st, 0).mode_apply(&st, 1).mode_apply(&st, 2)
+    }
+
+    #[test]
+    fn from_ast_builds_helmholtz() {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(5)).unwrap();
+        let m = from_ast(&prog).unwrap();
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.defs.len(), 3);
+        assert_eq!(m.outputs().count(), 1);
+        assert_eq!(m.def("v").unwrap().is_output, true);
+        assert_eq!(m.shape(m.def("t").unwrap().value), &[5, 5, 5]);
+    }
+
+    #[test]
+    fn naive_eval_matches_direct_helmholtz() {
+        // The unrewritten teil program (outer products + diag + red) must
+        // compute exactly Eq. 1a-1c. p kept small: naive is O(p^9).
+        let p = 3;
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = from_ast(&prog).unwrap();
+        let inputs = helmholtz_inputs(p, 11);
+        let out = eval(&m, &inputs).unwrap();
+        let want = helmholtz_direct(&inputs);
+        assert!(out["v"].max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn gradient_eval_matches_mode_products() {
+        let prog = dsl::parse(&dsl::gradient_source(4, 3, 2)).unwrap();
+        let m = from_ast(&prog).unwrap();
+        let mut rng = Prng::new(3);
+        let mut inp = HashMap::new();
+        inp.insert("Dx".into(), Tensor::random(&[4, 4], &mut rng));
+        inp.insert("Dy".into(), Tensor::random(&[3, 3], &mut rng));
+        inp.insert("Dz".into(), Tensor::random(&[2, 2], &mut rng));
+        inp.insert("u".into(), Tensor::random(&[4, 3, 2], &mut rng));
+        let out = eval(&m, &inp).unwrap();
+        // contraction axis order: derivative axis first for gy/gz
+        assert!(
+            out["gx"].max_abs_diff(&inp["u"].mode_apply(&inp["Dx"], 0)) < 1e-12
+        );
+        assert!(
+            out["gy"].max_abs_diff(
+                &inp["u"].mode_apply(&inp["Dy"], 1).move_axis(1, 0)
+            ) < 1e-12
+        );
+        assert!(
+            out["gz"].max_abs_diff(
+                &inp["u"].mode_apply(&inp["Dz"], 2).move_axis(2, 0)
+            ) < 1e-12
+        );
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let src = "var input a : [2 2]\nvar output x : [3]\nx = a . [[0 1]]";
+        let prog = dsl::parse(src).unwrap();
+        let err = from_ast(&prog).unwrap_err();
+        assert!(err.contains("shape mismatch"), "{err}");
+    }
+
+    #[test]
+    fn flops_counts_naive_cost() {
+        let p = 3;
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = from_ast(&prog).unwrap();
+        // naive cost must dominate the outer-product materialization
+        // p^2 * p^2 * p^2 * p^3 = p^9 per contraction
+        assert!(m.flops() > (p as u64).pow(9));
+    }
+
+    #[test]
+    fn mode_apply_flops_matches_paper_eq2() {
+        // Build a module of 6 mode products + 1 hadamard by rewriting.
+        let p = 11;
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = crate::ir::rewrite::optimize(from_ast(&prog).unwrap());
+        // (12p + 1) p^3 = 177,023 (paper Eq. 2)
+        assert_eq!(m.flops(), 177_023);
+    }
+}

@@ -1,0 +1,42 @@
+//! hbmflow: automatic creation of high-bandwidth memory architectures
+//! from a tensor DSL — reproduction of Soldavini et al., ACM TRETS 2022
+//! (DOI 10.1145/3563553) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! See DESIGN.md for the system inventory and experiment index; see the
+//! module docs for per-subsystem detail. The top-level pipeline:
+//!
+//! ```no_run
+//! use hbmflow::prelude::*;
+//!
+//! let src = hbmflow::dsl::inverse_helmholtz_source(11);
+//! let program = hbmflow::dsl::parse(&src).unwrap();
+//! let module = hbmflow::ir::teil::from_ast(&program).unwrap();
+//! let module = hbmflow::ir::rewrite::optimize(module);
+//! let kernel = hbmflow::ir::lower::lower_kernel(&module, "helmholtz").unwrap();
+//! let schedule = hbmflow::ir::schedule::fixed(&kernel, 7).unwrap();
+//! ```
+
+pub mod baselines;
+pub mod cli;
+pub mod codegen;
+pub mod coordinator;
+pub mod datatype;
+pub mod dsl;
+pub mod hls;
+pub mod ir;
+pub mod mnemosyne;
+pub mod olympus;
+pub mod platform;
+pub mod precision;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Convenience re-exports for examples and tests.
+pub mod prelude {
+    pub use crate::dsl::{parse, Program};
+    pub use crate::ir::affine::Kernel;
+    pub use crate::ir::schedule::Schedule;
+    pub use crate::util::tensor::Tensor;
+}

@@ -1,0 +1,13 @@
+//! hbmflow binary: the L3 coordinator CLI. All logic lives in the
+//! library (`hbmflow::cli`) so it is unit-testable.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match hbmflow::cli::main_with_args(&argv) {
+        Ok(out) => println!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,592 @@
+//! Olympus: system-level hardware generation (paper §3.5–§3.6).
+//!
+//! Olympus wraps the compiler-produced kernel into compute units (CUs),
+//! decides lane parallelism from the bus width, applies the HBM
+//! optimizations (double buffering, bus widening, dataflow decomposition,
+//! memory sharing, fixed-point conversion), allocates HBM pseudo-channels,
+//! sizes batches, and emits the system configuration + host steps
+//! (see `config`). The result — a `SystemSpec` — is consumed by the HLS
+//! estimator, the platform simulator, and the runtime coordinator.
+
+pub mod config;
+
+use crate::datatype::DataType;
+use crate::ir::affine::Kernel;
+use crate::ir::liveness;
+use crate::ir::schedule::{self, Schedule};
+use crate::mnemosyne::{self, SharingPlan};
+use crate::platform::Platform;
+
+/// AXI bus configuration of a CU's data ports (paper §4.2 "Bus Opt").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BusMode {
+    /// 64-bit AXI: one word per cycle, one kernel per CU (Baseline).
+    Narrow64,
+    /// 256-bit AXI, one kernel: packed words serialized into the local
+    /// buffers (the paper's *degrading* variant).
+    Wide256Serial,
+    /// 256-bit AXI split into `256/bits(dtype)` lanes, one kernel each.
+    Wide256Parallel,
+}
+
+/// Global-memory technology backing the CU channels (paper §2.3:
+/// "DDR4 memory is excellent for accessing large data sets with modest
+/// latency, but the transfer bandwidth is limited to 36 GB/s and no
+/// more than two parallel accesses").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryKind {
+    Hbm,
+    Ddr4,
+}
+
+/// Designer-selected optimizations (paper Fig. 5 "Optimize" step).
+#[derive(Debug, Clone)]
+pub struct OlympusOpts {
+    pub double_buffering: bool,
+    pub bus: BusMode,
+    /// Global memory the CUs attach to (HBM pseudo-channels vs the two
+    /// DDR4 banks; the DDR path exists for the paper's §2.3 comparison).
+    pub memory: MemoryKind,
+    /// Number of compute dataflow groups (None = flat kernel, no
+    /// read/compute/write overlap).
+    pub dataflow: Option<usize>,
+    /// Mnemosyne bank sharing (effective for 1-compute dataflow).
+    pub mem_sharing: bool,
+    pub dtype: DataType,
+    pub num_cus: usize,
+    /// Stream FIFO depth in words (None = full array size, the paper's
+    /// naive sizing; Some(d) = reduced depth, saves BRAM, may stall).
+    pub fifo_depth: Option<usize>,
+    /// Route some fixed-point multipliers to LUTs (paper §4.2 pragma).
+    pub lut_mult_shift: bool,
+    /// Synthesis frequency target in MHz.
+    pub target_freq_mhz: f64,
+}
+
+impl OlympusOpts {
+    /// The paper's Fig. 15 optimization ladder, cumulative presets.
+    pub fn baseline() -> Self {
+        OlympusOpts {
+            double_buffering: false,
+            bus: BusMode::Narrow64,
+            memory: MemoryKind::Hbm,
+            dataflow: None,
+            mem_sharing: false,
+            dtype: DataType::F64,
+            num_cus: 1,
+            fifo_depth: None,
+            lut_mult_shift: false,
+            target_freq_mhz: 450.0,
+        }
+    }
+
+    pub fn double_buffering() -> Self {
+        OlympusOpts {
+            double_buffering: true,
+            ..Self::baseline()
+        }
+    }
+
+    pub fn bus_serial() -> Self {
+        OlympusOpts {
+            bus: BusMode::Wide256Serial,
+            ..Self::double_buffering()
+        }
+    }
+
+    pub fn bus_parallel() -> Self {
+        OlympusOpts {
+            bus: BusMode::Wide256Parallel,
+            ..Self::double_buffering()
+        }
+    }
+
+    pub fn dataflow(compute_groups: usize) -> Self {
+        OlympusOpts {
+            dataflow: Some(compute_groups),
+            ..Self::bus_parallel()
+        }
+    }
+
+    pub fn mem_sharing() -> Self {
+        OlympusOpts {
+            mem_sharing: true,
+            ..Self::dataflow(1)
+        }
+    }
+
+    pub fn fixed_point(dtype: DataType) -> Self {
+        OlympusOpts {
+            dtype,
+            ..Self::dataflow(7)
+        }
+    }
+
+    pub fn with_cus(mut self, n: usize) -> Self {
+        self.num_cus = n;
+        // Paper §4.2 multi-CU methodology: target 225 MHz, shrink the
+        // stream FIFOs from naive full-size, and shift some fixed-point
+        // multipliers onto LUTs to relieve DSP pressure.
+        if n > 1 {
+            self.target_freq_mhz = 225.0;
+            self.fifo_depth = Some(64);
+            self.lut_mult_shift = true;
+        }
+        self
+    }
+
+    pub fn with_fifo_depth(mut self, d: usize) -> Self {
+        self.fifo_depth = Some(d);
+        self
+    }
+
+    pub fn on_ddr4(mut self) -> Self {
+        self.memory = MemoryKind::Ddr4;
+        self
+    }
+
+    /// Short label used in reports (matches paper row names).
+    pub fn label(&self) -> String {
+        if self.dtype.is_fixed() {
+            return format!(
+                "{} (p-dataflow {})",
+                self.dtype.display(),
+                self.dataflow.unwrap_or(0)
+            );
+        }
+        match (self.double_buffering, self.bus, self.dataflow, self.mem_sharing) {
+            (false, BusMode::Narrow64, None, _) => "Baseline".into(),
+            (true, BusMode::Narrow64, None, _) => "Double Buffering".into(),
+            (true, BusMode::Wide256Serial, None, _) => "Bus Opt (Serial)".into(),
+            (true, BusMode::Wide256Parallel, None, _) => "Bus Opt (Parallel)".into(),
+            (true, BusMode::Wide256Parallel, Some(n), false) => {
+                format!("Dataflow ({n} compute)")
+            }
+            (true, BusMode::Wide256Parallel, Some(n), true) => {
+                format!("Mem Sharing ({n} compute)")
+            }
+            _ => "Custom".into(),
+        }
+    }
+}
+
+/// HBM pseudo-channel assignment for one CU (paper §3.6.1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CuChannels {
+    /// Channels the CU reads inputs from (ping, then pong when double
+    /// buffering).
+    pub read: Vec<u32>,
+    /// Channels the CU writes outputs to (may alias `read` when the CU
+    /// shares one channel for both directions).
+    pub write: Vec<u32>,
+}
+
+impl CuChannels {
+    pub fn all(&self) -> Vec<u32> {
+        let mut v = self.read.clone();
+        for &c in &self.write {
+            if !v.contains(&c) {
+                v.push(c);
+            }
+        }
+        v
+    }
+}
+
+/// The generated system: everything downstream consumers need.
+#[derive(Debug, Clone)]
+pub struct SystemSpec {
+    pub name: String,
+    pub kernel: Kernel,
+    /// Compute-group schedule (single group when flat).
+    pub schedule: Schedule,
+    /// Whether groups execute as an overlapped dataflow pipeline.
+    pub dataflow: bool,
+    pub sharing: Option<SharingPlan>,
+    pub dtype: DataType,
+    /// Kernel lanes per CU.
+    pub lanes: usize,
+    /// AXI data bus width in bits.
+    pub bus_bits: u32,
+    /// Wide bus feeding a single kernel through serialization.
+    pub serial_packing: bool,
+    pub num_cus: usize,
+    pub channels: Vec<CuChannels>,
+    /// Elements per batch per CU (paper's E).
+    pub batch_elements: usize,
+    pub double_buffering: bool,
+    pub opts: OlympusOpts,
+}
+
+impl SystemSpec {
+    /// Bytes streamed from HBM per element (inputs).
+    pub fn input_bytes_per_element(&self) -> u64 {
+        self.kernel.input_words() as u64 * self.dtype.bytes() as u64
+    }
+
+    /// Bytes streamed to HBM per element (outputs).
+    pub fn output_bytes_per_element(&self) -> u64 {
+        self.kernel.output_words() as u64 * self.dtype.bytes() as u64
+    }
+
+    pub fn flops_per_element(&self) -> u64 {
+        self.kernel.flops_per_element()
+    }
+
+    /// Total pseudo-channels in use.
+    pub fn total_pcs(&self) -> usize {
+        self.channels.iter().map(|c| c.all().len()).sum()
+    }
+
+    /// Structural invariants (property-tested).
+    pub fn validate(&self, platform: &Platform) -> Result<(), String> {
+        self.schedule.validate(&self.kernel)?;
+        if self.channels.len() != self.num_cus {
+            return Err("one channel map per CU required".into());
+        }
+        let mut seen = std::collections::HashSet::new();
+        for (i, c) in self.channels.iter().enumerate() {
+            if c.read.is_empty() || c.write.is_empty() {
+                return Err(format!("CU {i} lacks channels"));
+            }
+            for pc in c.all() {
+                if pc >= platform.hbm.pseudo_channels {
+                    return Err(format!("CU {i} uses nonexistent PC {pc}"));
+                }
+                if !seen.insert(pc) {
+                    return Err(format!("PC {pc} assigned to multiple CUs"));
+                }
+            }
+        }
+        if self.batch_elements == 0 {
+            return Err("batch must hold at least one element".into());
+        }
+        // batch data must fit the per-channel capacity
+        let cap = platform.hbm.pc_capacity_bytes;
+        let in_b = self.input_bytes_per_element() * self.batch_elements as u64;
+        let out_b = self.output_bytes_per_element() * self.batch_elements as u64;
+        let shares_channel = self.channels[0].read == self.channels[0].write;
+        if shares_channel {
+            if in_b + out_b > cap {
+                return Err("batch exceeds PC capacity (shared channel)".into());
+            }
+        } else if in_b > cap || out_b > cap {
+            return Err("batch exceeds PC capacity".into());
+        }
+        Ok(())
+    }
+}
+
+/// Generate the system architecture for a kernel + options on a platform.
+pub fn generate(
+    kernel: &Kernel,
+    opts: &OlympusOpts,
+    platform: &Platform,
+) -> Result<SystemSpec, String> {
+    // ---- lanes and bus ----
+    let (bus_bits, lanes, serial_packing) = match opts.bus {
+        BusMode::Narrow64 => (64u32, 1usize, false),
+        BusMode::Wide256Serial => (platform.hbm.pc_bus_bits, 1, true),
+        BusMode::Wide256Parallel => {
+            let l = (platform.hbm.pc_bus_bits / opts.dtype.bits()) as usize;
+            (platform.hbm.pc_bus_bits, l, false)
+        }
+    };
+
+    // ---- schedule ----
+    let (schedule, dataflow) = match opts.dataflow {
+        Some(n) => (schedule::fixed(kernel, n)?, true),
+        None => (schedule::fixed(kernel, 1)?, false),
+    };
+
+    // ---- memory sharing ----
+    // Sharing operates only inside each subkernel (paper §3.6.4): with
+    // more than one compute group the lifetimes are scoped per group.
+    let sharing = if opts.mem_sharing {
+        let lv = liveness::analyze(kernel);
+        let ranges: Vec<(usize, usize)> = schedule
+            .groups
+            .iter()
+            .map(|g| (g.start, g.end))
+            .collect();
+        let scope = if dataflow && schedule.num_groups() > 1 {
+            Some(ranges.as_slice())
+        } else {
+            None
+        };
+        Some(mnemosyne::share(kernel, &lv, scope))
+    } else {
+        None
+    };
+
+    // ---- channel allocation (paper §3.6.1) ----
+    // DDR4 offers only two banks ("no more than two parallel accesses",
+    // §2.3): at most two CUs without double buffering, one with.
+    let max_cus = match (opts.memory, opts.double_buffering) {
+        (MemoryKind::Ddr4, false) => 2,
+        (MemoryKind::Ddr4, true) => 1,
+        (MemoryKind::Hbm, false) => 32,
+        (MemoryKind::Hbm, true) => 16,
+    };
+    if opts.num_cus == 0 || opts.num_cus > max_cus {
+        return Err(format!(
+            "num_cus {} out of range (max {max_cus} with{} double buffering)",
+            opts.num_cus,
+            if opts.double_buffering { "" } else { "out" }
+        ));
+    }
+    let separate_io =
+        opts.double_buffering && opts.num_cus < 8 && opts.memory == MemoryKind::Hbm;
+    let pcs_per_cu: u32 = match (opts.double_buffering, separate_io) {
+        (false, _) => 1,
+        (true, false) => 2,
+        (true, true) => 4,
+    };
+    let need = pcs_per_cu as usize * opts.num_cus;
+    let avail = match opts.memory {
+        MemoryKind::Hbm => platform.hbm.pseudo_channels as usize,
+        MemoryKind::Ddr4 => 2,
+    };
+    if need > avail {
+        return Err(format!(
+            "{need} channels required, {avail} available on {:?}",
+            opts.memory
+        ));
+    }
+    let mut next_pc = 0u32;
+    let mut alloc = || {
+        let pc = next_pc;
+        next_pc += 1;
+        pc
+    };
+    let channels: Vec<CuChannels> = (0..opts.num_cus)
+        .map(|_| match (opts.double_buffering, separate_io) {
+            (false, _) => {
+                let pc = alloc();
+                CuChannels {
+                    read: vec![pc],
+                    write: vec![pc],
+                }
+            }
+            (true, false) => {
+                // ping/pong channels carry both directions
+                let a = alloc();
+                let b = alloc();
+                CuChannels {
+                    read: vec![a, b],
+                    write: vec![a, b],
+                }
+            }
+            (true, true) => {
+                let r = vec![alloc(), alloc()];
+                let w = vec![alloc(), alloc()];
+                CuChannels { read: r, write: w }
+            }
+        })
+        .collect();
+
+    // ---- batch sizing (paper §3.6: elements per HBM channel) ----
+    let in_bytes = kernel.input_words() as u64 * opts.dtype.bytes() as u64;
+    let out_bytes = kernel.output_words() as u64 * opts.dtype.bytes() as u64;
+    let cap = match opts.memory {
+        MemoryKind::Hbm => platform.hbm.pc_capacity_bytes,
+        // a DDR4 bank is 16 GB, but keep batches HBM-sized so host
+        // transfer chunks stay comparable across the ablation
+        MemoryKind::Ddr4 => platform.hbm.pc_capacity_bytes,
+    };
+    let batch_elements = if separate_io || opts.double_buffering && !separate_io {
+        // inputs and outputs in (possibly shared ping/pong) channels:
+        // when sharing a channel both directions split the capacity
+        if separate_io {
+            ((cap / in_bytes).min(cap / out_bytes)) as usize
+        } else {
+            (cap / (in_bytes + out_bytes)) as usize
+        }
+    } else {
+        (cap / (in_bytes + out_bytes)) as usize
+    };
+    // keep batches lane-aligned so every lane gets the same element count
+    let batch_elements = (batch_elements / lanes.max(1)) * lanes.max(1);
+    if batch_elements == 0 {
+        return Err("element too large for one HBM pseudo-channel".into());
+    }
+
+    let spec = SystemSpec {
+        name: format!("{}_{}", kernel.name, opts.label().replace(' ', "_")),
+        kernel: kernel.clone(),
+        schedule,
+        dataflow,
+        sharing,
+        dtype: opts.dtype,
+        lanes,
+        bus_bits,
+        serial_packing,
+        num_cus: opts.num_cus,
+        channels,
+        batch_elements,
+        double_buffering: opts.double_buffering,
+        opts: opts.clone(),
+    };
+    spec.validate(platform)?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::util::prop;
+
+    fn helmholtz(p: usize) -> Kernel {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        lower::lower_kernel(&m, "helmholtz").unwrap()
+    }
+
+    fn u280() -> Platform {
+        Platform::alveo_u280()
+    }
+
+    #[test]
+    fn baseline_is_one_pc_one_lane() {
+        let s = generate(&helmholtz(11), &OlympusOpts::baseline(), &u280()).unwrap();
+        assert_eq!(s.lanes, 1);
+        assert_eq!(s.bus_bits, 64);
+        assert_eq!(s.total_pcs(), 1);
+        assert!(!s.dataflow);
+        assert_eq!(s.channels[0].read, s.channels[0].write);
+    }
+
+    #[test]
+    fn double_buffering_uses_four_pcs_for_single_cu() {
+        // num_cus < 8 -> separate input and output channels (paper §3.6.1)
+        let s = generate(
+            &helmholtz(11),
+            &OlympusOpts::double_buffering(),
+            &u280(),
+        )
+        .unwrap();
+        assert_eq!(s.total_pcs(), 4);
+        assert_ne!(s.channels[0].read, s.channels[0].write);
+    }
+
+    #[test]
+    fn eight_cus_share_io_on_pingpong_channels() {
+        let s = generate(
+            &helmholtz(11),
+            &OlympusOpts::double_buffering().with_cus(8),
+            &u280(),
+        )
+        .unwrap();
+        assert_eq!(s.total_pcs(), 16);
+        assert_eq!(s.channels[0].read.len(), 2);
+        assert_eq!(s.channels[0].read, s.channels[0].write);
+    }
+
+    #[test]
+    fn lane_counts_follow_dtype_width() {
+        let p64 = generate(&helmholtz(11), &OlympusOpts::bus_parallel(), &u280()).unwrap();
+        assert_eq!(p64.lanes, 4, "256/64");
+        let fx32 = generate(
+            &helmholtz(11),
+            &OlympusOpts::fixed_point(crate::datatype::DataType::Fx32),
+            &u280(),
+        )
+        .unwrap();
+        assert_eq!(fx32.lanes, 8, "256/32 (paper: eight kernels per CU)");
+    }
+
+    #[test]
+    fn serial_mode_is_one_kernel_wide_bus() {
+        let s = generate(&helmholtz(11), &OlympusOpts::bus_serial(), &u280()).unwrap();
+        assert_eq!(s.lanes, 1);
+        assert_eq!(s.bus_bits, 256);
+        assert!(s.serial_packing);
+    }
+
+    #[test]
+    fn dataflow_7_has_seven_compute_groups() {
+        let s = generate(&helmholtz(11), &OlympusOpts::dataflow(7), &u280()).unwrap();
+        assert!(s.dataflow);
+        assert_eq!(s.schedule.num_groups(), 7);
+    }
+
+    #[test]
+    fn mem_sharing_populates_plan() {
+        let s = generate(&helmholtz(11), &OlympusOpts::mem_sharing(), &u280()).unwrap();
+        let plan = s.sharing.as_ref().unwrap();
+        assert!(plan.shared_words() < plan.unshared_words(&s.kernel));
+    }
+
+    #[test]
+    fn max_cus_enforced() {
+        assert!(generate(
+            &helmholtz(11),
+            &OlympusOpts::double_buffering().with_cus(17),
+            &u280()
+        )
+        .is_err());
+        assert!(generate(&helmholtz(11), &OlympusOpts::baseline().with_cus(32), &u280()).is_ok());
+    }
+
+    #[test]
+    fn batch_fills_channel_capacity() {
+        let s = generate(&helmholtz(11), &OlympusOpts::baseline(), &u280()).unwrap();
+        // per element: in (121 + 2*1331)*8 B, out 1331*8 B, shared channel
+        let per = (121 + 2 * 1331 + 1331) * 8u64;
+        let expect = (256u64 * 1024 * 1024) / per;
+        assert!((s.batch_elements as u64) <= expect);
+        assert!((s.batch_elements as u64) >= expect - 1);
+    }
+
+    #[test]
+    fn batch_is_lane_aligned() {
+        let s = generate(
+            &helmholtz(11),
+            &OlympusOpts::fixed_point(crate::datatype::DataType::Fx32),
+            &u280(),
+        )
+        .unwrap();
+        assert_eq!(s.batch_elements % 8, 0);
+    }
+
+    #[test]
+    fn multi_cu_targets_225mhz() {
+        let o = OlympusOpts::dataflow(7).with_cus(2);
+        assert_eq!(o.target_freq_mhz, 225.0);
+        let s = generate(&helmholtz(11), &o, &u280()).unwrap();
+        assert_eq!(s.num_cus, 2);
+        assert_eq!(s.total_pcs(), 8);
+    }
+
+    #[test]
+    fn labels_match_paper_rows() {
+        assert_eq!(OlympusOpts::baseline().label(), "Baseline");
+        assert_eq!(OlympusOpts::bus_serial().label(), "Bus Opt (Serial)");
+        assert_eq!(OlympusOpts::dataflow(3).label(), "Dataflow (3 compute)");
+        assert!(OlympusOpts::fixed_point(crate::datatype::DataType::Fx32)
+            .label()
+            .contains("Fixed Point 32"));
+    }
+
+    #[test]
+    fn property_channel_maps_never_overlap() {
+        prop::check("olympus channel allocation", 32, |rng| {
+            let db = rng.bool();
+            let max = if db { 16 } else { 32 };
+            let n = rng.range_usize(1, max);
+            let mut o = if db {
+                OlympusOpts::double_buffering()
+            } else {
+                OlympusOpts::baseline()
+            };
+            o = o.with_cus(n);
+            let s = generate(&helmholtz(7), &o, &u280()).map_err(|e| e)?;
+            s.validate(&u280()).map_err(|e| e)?;
+            // every batch is nonzero and every PC < 32, checked by
+            // validate; also: total PCs <= 32
+            prop::assert_prop(s.total_pcs() <= 32, format!("{}", s.total_pcs()))
+        });
+    }
+}

@@ -1,0 +1,267 @@
+//! Target-platform model: Xilinx Alveo U280 (paper §2.2, Fig. 3, Table 1).
+//!
+//! Everything the evaluation depends on is modeled architecturally: the
+//! three SLRs with their resource pools, the 32 HBM pseudo-channels, the
+//! DDR4 banks, PLRAM, and the PCIe host link. This is the substitution
+//! for the physical card (see DESIGN.md "Hardware substitutions"): all
+//! §4 effects are functions of these parameters, not of silicon.
+
+pub mod power;
+
+/// FPGA resource vector (LUT, FF, BRAM tiles, URAM, DSP).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram: u64,
+    pub uram: u64,
+    pub dsp: u64,
+}
+
+impl Resources {
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram: self.bram + o.bram,
+            uram: self.uram + o.uram,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+
+    pub fn scale(&self, k: u64) -> Resources {
+        Resources {
+            lut: self.lut * k,
+            ff: self.ff * k,
+            bram: self.bram * k,
+            uram: self.uram * k,
+            dsp: self.dsp * k,
+        }
+    }
+
+    pub fn fits_in(&self, budget: &Resources) -> bool {
+        self.lut <= budget.lut
+            && self.ff <= budget.ff
+            && self.bram <= budget.bram
+            && self.uram <= budget.uram
+            && self.dsp <= budget.dsp
+    }
+
+    /// Utilization fractions against a budget (lut, ff, bram, uram, dsp).
+    pub fn utilization(&self, budget: &Resources) -> [f64; 5] {
+        [
+            self.lut as f64 / budget.lut as f64,
+            self.ff as f64 / budget.ff as f64,
+            self.bram as f64 / budget.bram as f64,
+            self.uram as f64 / budget.uram as f64,
+            self.dsp as f64 / budget.dsp as f64,
+        ]
+    }
+
+    pub fn max_utilization(&self, budget: &Resources) -> f64 {
+        self.utilization(budget)
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+}
+
+/// One super logic region (paper Table 1).
+#[derive(Debug, Clone, Copy)]
+pub struct Slr {
+    pub resources: Resources,
+    pub has_hbm: bool,
+    pub ddr4_gb: u64,
+    pub plram_mb: u64,
+}
+
+/// HBM subsystem parameters (paper §2.2).
+#[derive(Debug, Clone, Copy)]
+pub struct HbmConfig {
+    pub pseudo_channels: u32,
+    pub pc_capacity_bytes: u64,
+    pub pc_bus_bits: u32,
+    pub pc_clock_mhz: f64,
+}
+
+impl HbmConfig {
+    /// Per-PC bandwidth: 256 bit * 450 MHz = 14.4 GB/s.
+    pub fn pc_bandwidth_bytes_per_sec(&self) -> f64 {
+        (self.pc_bus_bits as f64 / 8.0) * self.pc_clock_mhz * 1e6
+    }
+
+    /// Aggregate theoretical bandwidth: 460.8 GB/s on the U280.
+    pub fn total_bandwidth_bytes_per_sec(&self) -> f64 {
+        self.pc_bandwidth_bytes_per_sec() * self.pseudo_channels as f64
+    }
+}
+
+/// The whole card.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub slrs: Vec<Slr>,
+    pub hbm: HbmConfig,
+    /// Effective host<->HBM bandwidth over PCIe with XRT overheads.
+    /// Theoretical Gen3 x16 is ~15.8 GB/s; measured effective transfer
+    /// rates for XRT buffer migration land far lower. Calibrated so the
+    /// paper's Baseline CU-vs-System gap (9.2%, §4.2) is reproduced.
+    pub pcie_eff_bytes_per_sec: f64,
+    /// Default platform clock target (Vitis `--kernel_frequency`).
+    pub target_freq_mhz: f64,
+}
+
+impl Platform {
+    /// The Xilinx Alveo U280 (paper Table 1).
+    pub fn alveo_u280() -> Platform {
+        Platform {
+            name: "xilinx_u280".into(),
+            slrs: vec![
+                Slr {
+                    resources: Resources {
+                        lut: 369_000,
+                        ff: 746_000,
+                        bram: 507,
+                        uram: 320,
+                        dsp: 2_733,
+                    },
+                    has_hbm: true,
+                    ddr4_gb: 16,
+                    plram_mb: 8,
+                },
+                Slr {
+                    resources: Resources {
+                        lut: 333_000,
+                        ff: 675_000,
+                        bram: 468,
+                        uram: 320,
+                        dsp: 2_877,
+                    },
+                    has_hbm: false,
+                    ddr4_gb: 16,
+                    plram_mb: 8,
+                },
+                Slr {
+                    resources: Resources {
+                        lut: 367_000,
+                        ff: 729_000,
+                        bram: 512,
+                        uram: 320,
+                        dsp: 2_880,
+                    },
+                    has_hbm: false,
+                    ddr4_gb: 0,
+                    plram_mb: 8,
+                },
+            ],
+            hbm: HbmConfig {
+                pseudo_channels: 32,
+                pc_capacity_bytes: 256 * 1024 * 1024,
+                pc_bus_bits: 256,
+                pc_clock_mhz: 450.0,
+            },
+            pcie_eff_bytes_per_sec: 7.0e9,
+            target_freq_mhz: 450.0,
+        }
+    }
+
+    /// Device-total resources (sum over SLRs) — the denominators of the
+    /// utilization percentages in paper Tables 3–5.
+    pub fn total_resources(&self) -> Resources {
+        self.slrs
+            .iter()
+            .fold(Resources::default(), |acc, s| acc.add(&s.resources))
+    }
+
+    /// How many SLRs a design of `r` resources must span (paper
+    /// Challenge 5: CUs that do not fit in one SLR pay SLL crossings).
+    pub fn slr_span(&self, r: &Resources) -> usize {
+        let mut need = 1usize;
+        for take in 1..=self.slrs.len() {
+            let budget = self
+                .slrs
+                .iter()
+                .take(take)
+                .fold(Resources::default(), |acc, s| acc.add(&s.resources));
+            need = take;
+            if r.fits_in(&budget) {
+                break;
+            }
+        }
+        need
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_matches_table1_totals() {
+        let p = Platform::alveo_u280();
+        let t = p.total_resources();
+        assert_eq!(t.lut, 1_069_000);
+        assert_eq!(t.ff, 2_150_000);
+        assert_eq!(t.bram, 1_487);
+        assert_eq!(t.uram, 960);
+        assert_eq!(t.dsp, 8_490);
+    }
+
+    #[test]
+    fn hbm_bandwidth_matches_paper() {
+        let p = Platform::alveo_u280();
+        let per_pc = p.hbm.pc_bandwidth_bytes_per_sec();
+        assert!((per_pc - 14.4e9).abs() < 1e6, "{per_pc}");
+        let total = p.hbm.total_bandwidth_bytes_per_sec();
+        assert!((total - 460.8e9).abs() < 1e7, "{total}");
+    }
+
+    #[test]
+    fn hbm_capacity_is_8_gb() {
+        let p = Platform::alveo_u280();
+        let total = p.hbm.pc_capacity_bytes * p.hbm.pseudo_channels as u64;
+        assert_eq!(total, 8 * 1024 * 1024 * 1024);
+    }
+
+    #[test]
+    fn only_slr0_has_hbm() {
+        let p = Platform::alveo_u280();
+        assert!(p.slrs[0].has_hbm);
+        assert!(!p.slrs[1].has_hbm);
+        assert!(!p.slrs[2].has_hbm);
+    }
+
+    #[test]
+    fn slr_span_grows_with_demand() {
+        let p = Platform::alveo_u280();
+        let small = Resources {
+            lut: 100_000,
+            ff: 100_000,
+            bram: 100,
+            uram: 50,
+            dsp: 500,
+        };
+        assert_eq!(p.slr_span(&small), 1);
+        let big = small.scale(6);
+        assert!(p.slr_span(&big) >= 2);
+    }
+
+    #[test]
+    fn resource_arithmetic() {
+        let a = Resources {
+            lut: 1,
+            ff: 2,
+            bram: 3,
+            uram: 4,
+            dsp: 5,
+        };
+        let b = a.scale(2);
+        assert_eq!(b.dsp, 10);
+        let c = a.add(&b);
+        assert_eq!(c.lut, 3);
+        assert!(a.fits_in(&c));
+        assert!(!c.fits_in(&a));
+        let u = a.utilization(&b);
+        assert!((u[0] - 0.5).abs() < 1e-12);
+        assert!((a.max_utilization(&b) - 0.5).abs() < 1e-12);
+    }
+}

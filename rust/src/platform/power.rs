@@ -1,0 +1,125 @@
+//! Power model (paper §4.1: XRT-profiled average power; Fig. 18).
+//!
+//! Substitutes XRT telemetry with a standard static + dynamic CMOS model:
+//!
+//!   P = P_static + f/f_nom * Σ_r c_r · used_r + P_io(channels)
+//!
+//! The per-resource activity coefficients are calibrated against public
+//! Alveo U280 power characterizations (Xilinx XPE-class estimates) such
+//! that the Fig. 18 *ratios* — fixed > float efficiency, 32 > 64 bit,
+//! multi-CU less efficient — emerge from resources × frequency × time.
+
+use super::Resources;
+
+/// Calibrated activity coefficients (Watts per unit at 450 MHz).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    /// Shell + HBM controller + idle card power.
+    pub static_w: f64,
+    pub lut_w: f64,
+    pub ff_w: f64,
+    pub bram_w: f64,
+    pub uram_w: f64,
+    pub dsp_w: f64,
+    /// Per active HBM pseudo-channel interface.
+    pub hbm_pc_w: f64,
+    /// Nominal frequency the coefficients are normalized to.
+    pub f_nom_mhz: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            static_w: 22.0, // U280 idle (shell + HBM stacks) ~20-25 W
+            lut_w: 11.0e-6,
+            ff_w: 2.5e-6,
+            bram_w: 2.6e-3,
+            uram_w: 9.0e-3,
+            dsp_w: 2.2e-3,
+            hbm_pc_w: 0.30,
+            f_nom_mhz: 450.0,
+        }
+    }
+}
+
+impl PowerModel {
+    /// Average power of a design using `r` resources at `f_mhz`, with
+    /// `active_pcs` HBM pseudo-channels in use.
+    pub fn average_power_w(&self, r: &Resources, f_mhz: f64, active_pcs: u32) -> f64 {
+        let scale = f_mhz / self.f_nom_mhz;
+        let dynamic = self.lut_w * r.lut as f64
+            + self.ff_w * r.ff as f64
+            + self.bram_w * r.bram as f64
+            + self.uram_w * r.uram as f64
+            + self.dsp_w * r.dsp as f64;
+        self.static_w + scale * dynamic + self.hbm_pc_w * active_pcs as f64
+    }
+
+    /// Peak power estimate (all toggling, +30% over average activity).
+    pub fn max_power_w(&self, r: &Resources, f_mhz: f64, active_pcs: u32) -> f64 {
+        let avg_dynamic =
+            self.average_power_w(r, f_mhz, active_pcs) - self.static_w;
+        self.static_w + 1.3 * avg_dynamic
+    }
+}
+
+/// The paper's CPU baseline power assumptions (§4.3): a conservative
+/// 100 W average for the Intel Xeon E5-2680 v3 under kernel load
+/// (TDP 120 W).
+pub const INTEL_XEON_AVG_W: f64 = 100.0;
+/// AMD EPYC 7282 (120 W TDP); same conservative convention.
+pub const AMD_EPYC_AVG_W: f64 = 100.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn df7_fx32_resources() -> Resources {
+        // paper Table 3, Fixed Point 32 row
+        Resources {
+            lut: 231_062,
+            ff: 346_507,
+            bram: 1_338,
+            uram: 0,
+            dsp: 2_294,
+        }
+    }
+
+    #[test]
+    fn fx32_power_in_paper_range() {
+        // Paper headline: ~103 GOPS at ~4 GOPS/W -> ~26 W average.
+        let pm = PowerModel::default();
+        let w = pm.average_power_w(&df7_fx32_resources(), 244.5, 16);
+        assert!(
+            (20.0..35.0).contains(&w),
+            "fx32 average power {w} W out of plausible range"
+        );
+    }
+
+    #[test]
+    fn power_scales_with_frequency() {
+        let pm = PowerModel::default();
+        let r = df7_fx32_resources();
+        let lo = pm.average_power_w(&r, 150.0, 2);
+        let hi = pm.average_power_w(&r, 300.0, 2);
+        assert!(hi > lo);
+        // dynamic part exactly doubles
+        let d_lo = lo - pm.static_w - 2.0 * pm.hbm_pc_w;
+        let d_hi = hi - pm.static_w - 2.0 * pm.hbm_pc_w;
+        assert!((d_hi / d_lo - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_exceeds_average() {
+        let pm = PowerModel::default();
+        let r = df7_fx32_resources();
+        assert!(pm.max_power_w(&r, 244.5, 2) > pm.average_power_w(&r, 244.5, 2));
+    }
+
+    #[test]
+    fn static_floor_without_logic() {
+        let pm = PowerModel::default();
+        let w = pm.average_power_w(&Resources::default(), 450.0, 0);
+        assert!((w - pm.static_w).abs() < 1e-9);
+    }
+}

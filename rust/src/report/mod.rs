@@ -1,0 +1,101 @@
+//! Report formatting and the paper's published numbers.
+//!
+//! Every bench target prints paper-value vs measured-value rows through
+//! these helpers; `paper` holds the published data transcribed from the
+//! evaluation section (Tables 2-5, Figs. 15-19).
+
+pub mod paper;
+
+/// Render an aligned text table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (c, cell) in row.iter().enumerate().take(ncols) {
+            widths[c] = widths[c].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::new();
+        for (c, cell) in cells.iter().enumerate() {
+            if c > 0 {
+                line.push_str("  ");
+            }
+            if c == 0 {
+                line.push_str(&format!("{:<w$}", cell, w = widths[c]));
+            } else {
+                line.push_str(&format!("{:>w$}", cell, w = widths[c]));
+            }
+        }
+        line
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format a float with sensible precision for reports.
+pub fn f(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 100.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Ratio annotation "measured (paper P, x1.10)".
+pub fn vs_paper(measured: f64, paper: f64) -> String {
+    if paper == 0.0 {
+        return f(measured);
+    }
+    format!("{} (paper {}, x{:.2})", f(measured), f(paper), measured / paper)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["long-name".into(), "123".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[3].starts_with("long-name"));
+        // right-aligned numbers end at the same column
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(f(0.0), "0");
+        assert_eq!(f(0.123456), "0.123");
+        assert_eq!(f(3.14159), "3.14");
+        assert_eq!(f(274.6), "275");
+    }
+
+    #[test]
+    fn vs_paper_annotates_ratio() {
+        let s = vs_paper(2.0, 1.0);
+        assert!(s.contains("x2.00"), "{s}");
+        assert_eq!(vs_paper(1.5, 0.0), "1.50");
+    }
+}

@@ -1,0 +1,183 @@
+//! Published evaluation numbers, transcribed from the paper
+//! (Soldavini et al., ACM TRETS 2022, §4). Used by the bench harnesses
+//! to print paper-vs-measured rows and by EXPERIMENTS.md.
+
+/// One Fig. 15 / Table 2 row: the p=11, 1-CU optimization ladder.
+#[derive(Debug, Clone, Copy)]
+pub struct LadderRow {
+    pub label: &'static str,
+    /// Table 2 "# Ops".
+    pub ops: u32,
+    /// Table 2 "f (MHz)".
+    pub f_mhz: f64,
+    /// Table 2 "Achieved GFLOPS" (system, Fig. 15 azure bars).
+    pub gflops: f64,
+    /// Table 2 "Efficiency".
+    pub efficiency: f64,
+}
+
+/// Table 2 (identical to the Fig. 15 series), p = 11, 1 CU, double.
+pub const TABLE2: [LadderRow; 8] = [
+    LadderRow { label: "Baseline", ops: 22, f_mhz: 274.6, gflops: 2.903, efficiency: 0.481 },
+    LadderRow { label: "Double Buffering", ops: 22, f_mhz: 259.8, gflops: 3.055, efficiency: 0.535 },
+    LadderRow { label: "Bus Opt (Serial)", ops: 4, f_mhz: 286.5, gflops: 0.959, efficiency: 0.837 },
+    LadderRow { label: "Bus Opt (Parallel)", ops: 16, f_mhz: 296.6, gflops: 3.759, efficiency: 0.792 },
+    LadderRow { label: "Dataflow (1 compute)", ops: 88, f_mhz: 286.2, gflops: 13.842, efficiency: 0.550 },
+    LadderRow { label: "Dataflow (2 compute)", ops: 176, f_mhz: 291.9, gflops: 23.363, efficiency: 0.455 },
+    LadderRow { label: "Dataflow (3 compute)", ops: 180, f_mhz: 266.3, gflops: 20.136, efficiency: 0.420 },
+    LadderRow { label: "Dataflow (7 compute)", ops: 532, f_mhz: 199.5, gflops: 43.410, efficiency: 0.409 },
+];
+
+/// One Table 3/4 row: resource utilization, p=11 (or 4) 1 CU.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceRow {
+    pub label: &'static str,
+    pub p: usize,
+    pub f_mhz: f64,
+    pub lut: u64,
+    pub ff: u64,
+    pub bram: u64,
+    pub uram: u64,
+    pub dsp: u64,
+}
+
+/// Table 3: resource utilization per optimization (p = 11, 1 CU).
+pub const TABLE3: [ResourceRow; 11] = [
+    ResourceRow { label: "Baseline", p: 11, f_mhz: 274.6, lut: 141_137, ff: 214_402, bram: 244, uram: 57, dsp: 150 },
+    ResourceRow { label: "Double Buffering", p: 11, f_mhz: 259.8, lut: 148_873, ff: 228_561, bram: 246, uram: 57, dsp: 150 },
+    ResourceRow { label: "Bus Opt (Serial)", p: 11, f_mhz: 286.5, lut: 146_088, ff: 225_542, bram: 268, uram: 3, dsp: 55 },
+    ResourceRow { label: "Bus Opt (Parallel)", p: 11, f_mhz: 296.6, lut: 182_632, ff: 295_340, bram: 330, uram: 12, dsp: 192 },
+    ResourceRow { label: "Dataflow (1 compute)", p: 11, f_mhz: 286.2, lut: 215_199, ff: 335_009, bram: 330, uram: 240, dsp: 592 },
+    ResourceRow { label: "Dataflow (2 compute)", p: 11, f_mhz: 291.9, lut: 291_964, ff: 446_258, bram: 330, uram: 240, dsp: 1_068 },
+    ResourceRow { label: "Dataflow (3 compute)", p: 11, f_mhz: 266.3, lut: 293_757, ff: 448_385, bram: 298, uram: 164, dsp: 1_096 },
+    ResourceRow { label: "Dataflow (7 compute)", p: 11, f_mhz: 199.5, lut: 473_743, ff: 735_030, bram: 330, uram: 252, dsp: 3_016 },
+    ResourceRow { label: "Mem Sharing (1 compute)", p: 11, f_mhz: 282.4, lut: 229_115, ff: 336_133, bram: 282, uram: 124, dsp: 592 },
+    ResourceRow { label: "Fixed Point 64", p: 11, f_mhz: 233.8, lut: 254_242, ff: 342_390, bram: 330, uram: 252, dsp: 4_368 },
+    ResourceRow { label: "Fixed Point 32", p: 11, f_mhz: 244.5, lut: 231_062, ff: 346_507, bram: 1_338, uram: 0, dsp: 2_294 },
+];
+
+/// Table 4: data representation x polynomial degree (Dataflow-7, 1 CU).
+pub const TABLE4: [ResourceRow; 6] = [
+    ResourceRow { label: "Double", p: 11, f_mhz: 199.5, lut: 473_743, ff: 735_030, bram: 330, uram: 252, dsp: 3_016 },
+    ResourceRow { label: "Double", p: 7, f_mhz: 225.9, lut: 328_267, ff: 527_809, bram: 438, uram: 0, dsp: 1_888 },
+    ResourceRow { label: "Fixed Point 64", p: 11, f_mhz: 233.8, lut: 254_242, ff: 342_390, bram: 330, uram: 252, dsp: 4_368 },
+    ResourceRow { label: "Fixed Point 64", p: 7, f_mhz: 201.4, lut: 191_348, ff: 299_992, bram: 438, uram: 0, dsp: 2_760 },
+    ResourceRow { label: "Fixed Point 32", p: 11, f_mhz: 244.5, lut: 231_062, ff: 346_507, bram: 1_338, uram: 0, dsp: 2_294 },
+    ResourceRow { label: "Fixed Point 32", p: 7, f_mhz: 297.0, lut: 177_280, ff: 306_386, bram: 438, uram: 0, dsp: 1_382 },
+];
+
+/// One Table 5 / Fig. 17 row: multi-CU replication.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiCuRow {
+    pub label: &'static str,
+    pub p: usize,
+    pub cus: usize,
+    pub f_mhz: f64,
+    pub lut: u64,
+    pub dsp: u64,
+}
+
+/// Table 5: multi-CU builds (225 MHz target).
+pub const TABLE5: [MultiCuRow; 6] = [
+    MultiCuRow { label: "Double", p: 11, cus: 2, f_mhz: 146.0, lut: 760_903, dsp: 6_020 },
+    MultiCuRow { label: "Double", p: 7, cus: 3, f_mhz: 179.2, lut: 777_208, dsp: 5_651 },
+    MultiCuRow { label: "Fixed Point 64", p: 11, cus: 2, f_mhz: 132.3, lut: 755_752, dsp: 7_316 },
+    MultiCuRow { label: "Fixed Point 64", p: 7, cus: 2, f_mhz: 168.2, lut: 268_285, dsp: 5_508 },
+    MultiCuRow { label: "Fixed Point 32", p: 11, cus: 3, f_mhz: 194.0, lut: 479_387, dsp: 6_868 },
+    MultiCuRow { label: "Fixed Point 32", p: 7, cus: 4, f_mhz: 178.3, lut: 404_747, dsp: 5_508 },
+];
+
+/// Fig. 16 system GFLOPS (Dataflow-7, 1 CU) by dtype and p.
+/// fx values are GOPS. (Fig. 16 is read off the described speedups:
+/// fx64 = 1.19x double, fx32 = 2.37x double at p=11; §4.2 text.)
+pub fn fig16_gflops(dtype: &str, p: usize) -> f64 {
+    match (dtype, p) {
+        ("f64", 11) => 43.410,
+        ("fx64", 11) => 43.410 * 1.19,
+        ("fx32", 11) => 103.0,
+        // p=7 "slightly slower" than p=11 counterparts
+        ("f64", 7) => 38.0,
+        ("fx64", 7) => 45.0,
+        ("fx32", 7) => 90.0,
+        _ => 0.0,
+    }
+}
+
+/// Fig. 17: multi-CU kernel (CU) and system GOPS for fx32 p=11, 3 CUs.
+pub const FIG17_FX32_P11_CU: f64 = 172.0;
+pub const FIG17_FX32_P11_SYSTEM: f64 = 87.0;
+
+/// Fig. 18 headline: most efficient implementation ~4 GOPS/W (fx32 p=11
+/// 1 CU); 24.5x the Intel estimate.
+pub const FIG18_BEST_GOPS_PER_W: f64 = 4.0;
+pub const FIG18_INTEL_RATIO: f64 = 24.5;
+
+/// Fig. 19 reference points (double precision).
+pub struct Fig19 {
+    /// Optimized-FPGA over naive-CPU speedup range reported.
+    pub fpga_opt_over_naive: (f64, f64),
+    /// Baseline-FPGA over naive-CPU speedup range.
+    pub fpga_base_over_naive: (f64, f64),
+    /// Optimized FPGA over Intel-optimized, Inverse Helmholtz.
+    pub helmholtz_vs_intel: f64,
+    /// Optimized FPGA over Intel-optimized, Interpolation.
+    pub interp_vs_intel: f64,
+    /// Energy-efficiency gains vs Intel (double precision).
+    pub efficiency_helmholtz: f64,
+    pub efficiency_interp: f64,
+}
+
+pub const FIG19: Fig19 = Fig19 {
+    fpga_opt_over_naive: (36.4, 160.2),
+    fpga_base_over_naive: (10.7, 38.3),
+    helmholtz_vs_intel: 2.7,
+    interp_vs_intel: 1.4,
+    efficiency_helmholtz: 7.0,
+    efficiency_interp: 4.8,
+};
+
+/// Intel-optimized CPU GFLOPS implied by Fig. 19 (43.41 / 2.7 etc.).
+pub fn intel_optimized_gflops(kernel: &str) -> f64 {
+    match kernel {
+        "helmholtz" => 43.410 / FIG19.helmholtz_vs_intel,
+        "interpolation" => 30.0 / FIG19.interp_vs_intel, // approx read-off
+        _ => 0.0,
+    }
+}
+
+/// Fixed-point MSE reported in §4.2.
+pub const MSE_FX64: f64 = 9.39e-22;
+pub const MSE_FX32: f64 = 3.58e-12;
+
+/// The paper's workload size.
+pub const N_ELEMENTS: u64 = 2_000_000;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_ops_column_is_fig15_consistent() {
+        assert_eq!(TABLE2[0].ops, 22);
+        assert_eq!(TABLE2[7].ops, 532);
+        // ideal = ops x f must exceed achieved everywhere
+        for r in TABLE2 {
+            let ideal = r.ops as f64 * r.f_mhz / 1e3;
+            assert!(ideal > r.gflops, "{}", r.label);
+            let eff = r.gflops / ideal;
+            assert!((eff - r.efficiency).abs() < 0.01, "{}: {eff}", r.label);
+        }
+    }
+
+    #[test]
+    fn mse_ratio_is_about_2_pow_32() {
+        let ratio = MSE_FX32 / MSE_FX64;
+        assert!(ratio > 2f64.powi(30) && ratio < 2f64.powi(34));
+    }
+
+    #[test]
+    fn table3_rows_align_with_table4() {
+        assert_eq!(TABLE3[7].lut, TABLE4[0].lut);
+        assert_eq!(TABLE3[10].bram, TABLE4[4].bram);
+    }
+}

@@ -1,0 +1,180 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: String,
+    pub kernel: String,
+    pub p: usize,
+    pub dtype: String,
+    pub batch: usize,
+    pub variant: String,
+    pub flops_per_element: u64,
+    pub num_outputs: usize,
+    /// (shape, dtype) per positional input.
+    pub inputs: Vec<(Vec<usize>, String)>,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<ArtifactMeta, String> {
+        let req_str = |k: &str| {
+            j.get(k)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("artifact missing {k}"))
+        };
+        let req_num = |k: &str| {
+            j.get(k)
+                .as_u64()
+                .ok_or_else(|| format!("artifact missing {k}"))
+        };
+        let inputs = j
+            .get("inputs")
+            .as_arr()
+            .ok_or("artifact missing inputs")?
+            .iter()
+            .map(|i| {
+                let shape = i
+                    .get("shape")
+                    .as_arr()
+                    .ok_or("input missing shape")?
+                    .iter()
+                    .map(|d| d.as_u64().ok_or("bad dim").map(|d| d as usize))
+                    .collect::<Result<Vec<_>, _>>()?;
+                let dt = i.get("dtype").as_str().ok_or("input missing dtype")?;
+                Ok::<_, String>((shape, dt.to_string()))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ArtifactMeta {
+            name: req_str("name")?,
+            path: req_str("path")?,
+            kernel: req_str("kernel")?,
+            p: req_num("p")? as usize,
+            dtype: req_str("dtype")?,
+            batch: req_num("batch")? as usize,
+            variant: req_str("variant")?,
+            flops_per_element: req_num("flops_per_element")?,
+            num_outputs: req_num("num_outputs")? as usize,
+            inputs,
+        })
+    }
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        let j = json::parse(&text)?;
+        if j.get("format").as_str() != Some("hlo-text") {
+            return Err("manifest format must be hlo-text".into());
+        }
+        let artifacts = j
+            .get("artifacts")
+            .as_arr()
+            .ok_or("manifest missing artifacts")?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find an artifact by attributes; `variant` is "pallas" or "ref".
+    pub fn find(
+        &self,
+        kernel: &str,
+        p: usize,
+        dtype: &str,
+        variant: &str,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kernel == kernel && a.p == p && a.dtype == dtype && a.variant == variant
+            })
+            .max_by_key(|a| a.batch)
+    }
+
+    pub fn hlo_path(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.path)
+    }
+}
+
+/// Repository-default artifacts directory.
+pub fn default_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load(default_dir()).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        assert!(m.artifacts.len() >= 10);
+        let h = m.get("helmholtz_p11_f64_b32").expect("main artifact");
+        assert_eq!(h.kernel, "helmholtz");
+        assert_eq!(h.p, 11);
+        assert_eq!(h.batch, 32);
+        assert_eq!(h.flops_per_element, 177_023);
+        assert_eq!(h.num_outputs, 1);
+        assert_eq!(h.inputs.len(), 3);
+        assert_eq!(h.inputs[0].0, vec![11, 11]);
+        assert_eq!(h.inputs[1].0, vec![32, 11, 11, 11]);
+        assert!(m.hlo_path(h).exists());
+    }
+
+    #[test]
+    fn find_prefers_largest_batch() {
+        let Some(m) = manifest() else { return };
+        let a = m.find("helmholtz", 11, "f64", "pallas").unwrap();
+        assert_eq!(a.batch, 32);
+        let r = m.find("helmholtz", 11, "f64", "ref").unwrap();
+        assert_eq!(r.variant, "ref");
+        assert!(m.find("helmholtz", 13, "f64", "pallas").is_none());
+    }
+
+    #[test]
+    fn gradient_artifact_has_three_outputs() {
+        let Some(m) = manifest() else { return };
+        let g = m.find("gradient", 8, "f64", "pallas").unwrap();
+        assert_eq!(g.num_outputs, 3);
+        assert_eq!(g.inputs.len(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join("hbmflow_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"format\": \"nope\"}").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), "not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! on the request path — Python is never involved here.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format;
+//! serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1.
+
+pub mod hlo_stats;
+pub mod manifest;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactMeta, Manifest};
+
+/// A loaded artifact ready to execute.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Runtime over the repository-default `artifacts/` directory.
+    pub fn from_default_dir() -> Result<Runtime> {
+        Runtime::new(manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+                .clone();
+            let path = self.manifest.hlo_path(&meta);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path")?,
+            )
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))?;
+            self.cache.insert(name.to_string(), Executable { meta, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on f64 row-major inputs. Input shapes must
+    /// match the manifest. Returns the flattened outputs.
+    pub fn run_f64(&mut self, name: &str, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let slices: Vec<&[f64]> = inputs.iter().map(|v| v.as_slice()).collect();
+        self.run_f64_slices(name, &slices)
+    }
+
+    /// Slice-based variant of `run_f64` — the coordinator's hot path
+    /// (§Perf: avoids one buffer copy per invocation).
+    pub fn run_f64_slices(
+        &mut self,
+        name: &str,
+        inputs: &[&[f64]],
+    ) -> Result<Vec<Vec<f64>>> {
+        let exec = self.load(name)?;
+        let meta = exec.meta.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, (shape, dtype)) in inputs.iter().zip(&meta.inputs) {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                return Err(anyhow!(
+                    "{name}: input size {} != shape {:?}",
+                    data.len(),
+                    shape
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = match dtype.as_str() {
+                "float64" => xla::Literal::vec1(*data).reshape(&dims)?,
+                "float32" => {
+                    let f32s: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+                    xla::Literal::vec1(&f32s).reshape(&dims)?
+                }
+                other => return Err(anyhow!("unsupported input dtype {other}")),
+            };
+            literals.push(lit);
+        }
+        let result = exec.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // AOT lowers with return_tuple=True
+        let parts = result.to_tuple()?;
+        if parts.len() != meta.num_outputs {
+            return Err(anyhow!(
+                "{name}: expected {} outputs, got {}",
+                meta.num_outputs,
+                parts.len()
+            ));
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for part in parts {
+            let out = match part.ty()? {
+                xla::ElementType::F64 => part.to_vec::<f64>()?,
+                xla::ElementType::F32 => part
+                    .to_vec::<f32>()?
+                    .into_iter()
+                    .map(|x| x as f64)
+                    .collect(),
+                other => return Err(anyhow!("unsupported output type {other:?}")),
+            };
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+
+    /// Metadata accessor that does not require loading.
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::tensor::Tensor;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::from_default_dir().ok()
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let Some(rt) = runtime() else {
+            eprintln!("artifacts missing; skipping");
+            return;
+        };
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn helmholtz_artifact_matches_native_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let name = "helmholtz_p7_f64_b8";
+        let meta = rt.meta(name).expect("artifact").clone();
+        let (p, b) = (meta.p, meta.batch);
+        let mut rng = Prng::new(42);
+        let s = Tensor::random(&[p, p], &mut rng);
+        let d = Tensor::random(&[b, p, p, p], &mut rng);
+        let u = Tensor::random(&[b, p, p, p], &mut rng);
+        let outs = rt
+            .run_f64(
+                name,
+                &[s.data().to_vec(), d.data().to_vec(), u.data().to_vec()],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let v = &outs[0];
+        assert_eq!(v.len(), b * p * p * p);
+        // native oracle per element
+        let st = {
+            let mut t = Tensor::zeros(&[p, p]);
+            for i in 0..p {
+                for j in 0..p {
+                    t.set(&[j, i], s.get(&[i, j]));
+                }
+            }
+            t
+        };
+        for e in 0..b {
+            let off = e * p * p * p;
+            let de = Tensor::from_vec(&[p, p, p], d.data()[off..off + p * p * p].to_vec());
+            let ue = Tensor::from_vec(&[p, p, p], u.data()[off..off + p * p * p].to_vec());
+            let t = ue.mode_apply(&s, 0).mode_apply(&s, 1).mode_apply(&s, 2);
+            let r = de.zip(&t, |a, b| a * b);
+            let want = r.mode_apply(&st, 0).mode_apply(&st, 1).mode_apply(&st, 2);
+            for (i, &w) in want.data().iter().enumerate() {
+                assert!(
+                    (v[off + i] - w).abs() < 1e-10,
+                    "element {e} idx {i}: {} vs {w}",
+                    v[off + i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let Some(mut rt) = runtime() else { return };
+        rt.load("helmholtz_p7_f64_b8").unwrap();
+        assert_eq!(rt.cache.len(), 1);
+        rt.load("helmholtz_p7_f64_b8").unwrap();
+        assert_eq!(rt.cache.len(), 1);
+    }
+
+    #[test]
+    fn wrong_input_count_is_rejected() {
+        let Some(mut rt) = runtime() else { return };
+        let err = rt.run_f64("helmholtz_p7_f64_b8", &[vec![0.0]]).unwrap_err();
+        assert!(err.to_string().contains("expected 3 inputs"));
+    }
+
+    #[test]
+    fn unknown_artifact_is_rejected() {
+        let Some(mut rt) = runtime() else { return };
+        assert!(rt.run_f64("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn gradient_artifact_returns_three_outputs() {
+        let Some(mut rt) = runtime() else { return };
+        let name = "gradient_8x7x6_f64_b32";
+        let Some(meta) = rt.meta(name).cloned() else { return };
+        let b = meta.batch;
+        let mut rng = Prng::new(3);
+        let dx = rng.unit_vec(8 * 8);
+        let dy = rng.unit_vec(7 * 7);
+        let dz = rng.unit_vec(6 * 6);
+        let u = rng.unit_vec(b * 8 * 7 * 6);
+        let outs = rt.run_f64(name, &[dx, dy, dz, u]).unwrap();
+        assert_eq!(outs.len(), 3);
+        for o in &outs {
+            assert_eq!(o.len(), b * 8 * 7 * 6);
+        }
+    }
+}

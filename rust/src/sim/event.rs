@@ -1,0 +1,206 @@
+//! Discrete-event batch timeline (paper §3.6.1, Fig. 14a).
+//!
+//! Resources: the PCIe link — full duplex, so host-to-HBM and HBM-to-host
+//! transfers ride separate directions, but each direction serializes
+//! across all CUs (the effect that kills multi-CU system throughput in
+//! Fig. 17) — and one compute resource per CU. Double buffering gives
+//! each CU two batch slots (ping/pong): the transfer of batch j+2's
+//! inputs into the idle channel overlaps the compute of batch j.
+
+/// Timeline inputs (all times in seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct TimelineConfig {
+    pub n_batches: u64,
+    pub n_cus: usize,
+    pub t_in: f64,
+    pub t_batch: f64,
+    pub t_out: f64,
+    pub double_buffering: bool,
+}
+
+/// Timeline outputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Timeline {
+    /// Wall-clock makespan (system time).
+    pub total_s: f64,
+    /// Busy time of the most-loaded CU (kernel-only time).
+    pub cu_busy_s: f64,
+    /// Busy time of the most-loaded PCIe direction.
+    pub pcie_busy_s: f64,
+    /// True when a PCIe direction is the limiting resource.
+    pub pcie_bound: bool,
+}
+
+/// Run the discrete-event timeline.
+pub fn run_timeline(cfg: TimelineConfig) -> Timeline {
+    assert!(cfg.n_cus >= 1);
+    let n = cfg.n_batches as usize;
+    // Per-batch completion times; batches are dealt round-robin to CUs.
+    let mut comp_done: Vec<f64> = vec![0.0; n];
+    let mut out_done: Vec<f64> = vec![0.0; n];
+    let mut in_done: Vec<f64> = vec![0.0; n];
+
+    // full-duplex PCIe: independent in/out directions, each FIFO
+    let mut in_link_free = 0.0f64;
+    let mut out_link_free = 0.0f64;
+    let mut cu_free = vec![0.0f64; cfg.n_cus];
+    let mut cu_busy = vec![0.0f64; cfg.n_cus];
+    // per-CU buffer slots: ping/pong when double buffering
+    let slots = if cfg.double_buffering { 2usize } else { 1 };
+
+    let mut per_cu_batches: Vec<Vec<usize>> = vec![Vec::new(); cfg.n_cus];
+    for b in 0..n {
+        per_cu_batches[b % cfg.n_cus].push(b);
+    }
+
+    // host enqueues input transfers in global batch order
+    for b in 0..n {
+        let cu = b % cfg.n_cus;
+        let j = b / cfg.n_cus; // per-CU sequence number
+        // the CU's buffer slot must be free: with ping/pong the inputs
+        // of per-CU batch j reuse the slot of batch j - slots
+        let slot_free = if j >= slots {
+            let prev = per_cu_batches[cu][j - slots];
+            if cfg.double_buffering {
+                // input channel reusable once that batch's compute read it
+                comp_done[prev]
+            } else {
+                // single buffer: must be fully drained first
+                out_done[prev]
+            }
+        } else {
+            0.0
+        };
+        let in_start = in_link_free.max(slot_free);
+        in_done[b] = in_start + cfg.t_in;
+        in_link_free = in_done[b];
+
+        let comp_start = cu_free[cu].max(in_done[b]);
+        comp_done[b] = comp_start + cfg.t_batch;
+        cu_free[cu] = comp_done[b];
+        cu_busy[cu] += cfg.t_batch;
+
+        // output transfer on the return direction
+        let out_start = out_link_free.max(comp_done[b]);
+        out_done[b] = out_start + cfg.t_out;
+        out_link_free = out_done[b];
+    }
+
+    let total_s = out_done.iter().copied().fold(0.0, f64::max);
+    let cu_busy_s = cu_busy.iter().copied().fold(0.0, f64::max);
+    let in_busy = cfg.n_batches as f64 * cfg.t_in;
+    let out_busy = cfg.n_batches as f64 * cfg.t_out;
+    let pcie_busy_s = in_busy.max(out_busy);
+    Timeline {
+        total_s,
+        cu_busy_s,
+        pcie_busy_s,
+        pcie_bound: pcie_busy_s > cu_busy_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn cfg(n: u64, cus: usize, db: bool, t_in: f64, t_b: f64, t_out: f64) -> TimelineConfig {
+        TimelineConfig {
+            n_batches: n,
+            n_cus: cus,
+            t_in,
+            t_batch: t_b,
+            t_out,
+            double_buffering: db,
+        }
+    }
+
+    #[test]
+    fn serial_chain_without_double_buffering() {
+        // 1 CU, no overlap: makespan = n * (in + batch + out)
+        let t = run_timeline(cfg(10, 1, false, 1.0, 2.0, 0.5));
+        assert!((t.total_s - 10.0 * 3.5).abs() < 1e-9, "{t:?}");
+    }
+
+    #[test]
+    fn double_buffering_overlaps_compute_with_transfers() {
+        // compute dominates: makespan ~ fill + n*t_batch
+        let t = run_timeline(cfg(100, 1, true, 0.2, 2.0, 0.1));
+        let ideal = 0.2 + 100.0 * 2.0 + 0.1;
+        assert!(t.total_s < ideal * 1.05, "{} vs {ideal}", t.total_s);
+        assert!(!t.pcie_bound);
+    }
+
+    #[test]
+    fn transfer_bound_when_pcie_dominates() {
+        let t = run_timeline(cfg(100, 1, true, 2.0, 0.5, 1.0));
+        assert!(t.pcie_bound);
+        // full duplex: the slow direction (in, 2.0 s) sets the pace
+        assert!(t.total_s >= 100.0 * 2.0);
+        assert!(t.total_s < 100.0 * 2.6);
+    }
+
+    #[test]
+    fn multi_cu_compute_scales_but_pcie_serializes() {
+        let one = run_timeline(cfg(120, 1, true, 0.5, 2.0, 0.25));
+        let four = run_timeline(cfg(120, 4, true, 0.5, 2.0, 0.25));
+        // per-CU busy time shrinks 4x
+        assert!((four.cu_busy_s - one.cu_busy_s / 4.0).abs() < 1e-9);
+        // but the makespan is now pinned by the serialized transfers
+        assert!(four.total_s >= four.pcie_busy_s * 0.99);
+        assert!(four.total_s < one.total_s, "still some gain");
+    }
+
+    #[test]
+    fn makespan_lower_bounds() {
+        prop::check("timeline lower bounds", 64, |rng| {
+            let n = rng.range_u64(1, 40);
+            let cus = rng.range_usize(1, 4);
+            let db = rng.bool();
+            let t_in = rng.range_f64(0.01, 2.0);
+            let t_b = rng.range_f64(0.01, 2.0);
+            let t_out = rng.range_f64(0.01, 2.0);
+            let t = run_timeline(cfg(n, cus, db, t_in, t_b, t_out));
+            // no resource can beat its busy time; chain latency bound
+            let per_cu = (n as f64 / cus as f64).ceil() * t_b;
+            let lower = (n as f64 * t_in.max(t_out))
+                .max(per_cu)
+                .max(t_in + t_b + t_out);
+            prop::assert_prop(
+                t.total_s >= lower - 1e-9,
+                format!("total {} < lower {}", t.total_s, lower),
+            )?;
+            // sanity: makespan no worse than fully serial everything
+            let serial = n as f64 * (t_in + t_b + t_out);
+            prop::assert_prop(
+                t.total_s <= serial + 1e-9,
+                format!("total {} > serial {}", t.total_s, serial),
+            )
+        });
+    }
+
+    #[test]
+    fn monotone_in_batch_count() {
+        prop::check("timeline monotonicity", 32, |rng| {
+            let cus = rng.range_usize(1, 3);
+            let db = rng.bool();
+            let t_in = rng.range_f64(0.01, 1.0);
+            let t_b = rng.range_f64(0.01, 1.0);
+            let t_out = rng.range_f64(0.01, 1.0);
+            let n = rng.range_u64(1, 30);
+            let a = run_timeline(cfg(n, cus, db, t_in, t_b, t_out));
+            let b = run_timeline(cfg(n + 5, cus, db, t_in, t_b, t_out));
+            prop::assert_prop(
+                b.total_s >= a.total_s,
+                format!("{} then {}", a.total_s, b.total_s),
+            )
+        });
+    }
+
+    #[test]
+    fn empty_workload_is_zero() {
+        let t = run_timeline(cfg(0, 2, true, 1.0, 1.0, 1.0));
+        assert_eq!(t.total_s, 0.0);
+        assert_eq!(t.cu_busy_s, 0.0);
+    }
+}

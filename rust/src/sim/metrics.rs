@@ -1,0 +1,105 @@
+//! Simulation metrics: the quantities the paper reports (GFLOPS,
+//! GFLOPS/W, power, efficiency vs ideal — §4.1, Table 2, Fig. 15-18).
+
+use super::event::Timeline;
+use super::StageIntervals;
+use crate::hls::Estimate;
+use crate::olympus::SystemSpec;
+
+/// Result of simulating one system on one workload.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub label: String,
+    /// Wall-clock including host transfers (the paper's "System" bars).
+    pub total_time_s: f64,
+    /// Kernel-only time (the paper's "CU" bars).
+    pub cu_time_s: f64,
+    pub transfer_time_s: f64,
+    pub gflops_system: f64,
+    pub gflops_cu: f64,
+    pub freq_mhz: f64,
+    /// #Ops x f (Table 2 "Ideal GFLOPS").
+    pub ideal_gflops: f64,
+    /// achieved / ideal (Table 2 "Efficiency").
+    pub efficiency_vs_ideal: f64,
+    pub avg_power_w: f64,
+    pub efficiency_gflops_w: f64,
+    pub energy_j: f64,
+    pub batches: u64,
+    pub batch_elements: usize,
+    /// Per-stage cycles per element (diagnostics; Fig. 11 intervals).
+    pub stage_intervals: Vec<(String, u64)>,
+    /// Name of the limiting stage or "pcie".
+    pub bottleneck: String,
+    pub total_flops: u64,
+}
+
+impl SimResult {
+    pub fn new(
+        spec: &SystemSpec,
+        est: &Estimate,
+        si: &StageIntervals,
+        total_flops: u64,
+        tl: Timeline,
+        avg_power_w: f64,
+    ) -> SimResult {
+        let gflops_system = total_flops as f64 / tl.total_s.max(1e-12) / 1e9;
+        let gflops_cu = total_flops as f64 / tl.cu_busy_s.max(1e-12) / 1e9;
+        let ideal = est.ideal_gflops() * spec.num_cus as f64;
+        let bottleneck = if tl.pcie_bound {
+            "pcie".to_string()
+        } else {
+            si.bottleneck().to_string()
+        };
+        SimResult {
+            label: spec.opts.label(),
+            total_time_s: tl.total_s,
+            cu_time_s: tl.cu_busy_s,
+            transfer_time_s: tl.pcie_busy_s,
+            gflops_system,
+            gflops_cu,
+            freq_mhz: est.fmax_mhz,
+            ideal_gflops: ideal,
+            efficiency_vs_ideal: gflops_cu / ideal.max(1e-12),
+            avg_power_w,
+            efficiency_gflops_w: gflops_system / avg_power_w.max(1e-12),
+            energy_j: avg_power_w * tl.total_s,
+            batches: (total_flops / spec.flops_per_element().max(1))
+                .div_ceil(spec.batch_elements as u64),
+            batch_elements: spec.batch_elements,
+            stage_intervals: si.stages.clone(),
+            bottleneck,
+            total_flops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::hls::estimate;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::olympus::{generate, OlympusOpts};
+    use crate::platform::Platform;
+
+    #[test]
+    fn metrics_are_self_consistent() {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        let platform = Platform::alveo_u280();
+        let s = generate(&k, &OlympusOpts::dataflow(7), &platform).unwrap();
+        let e = estimate(&s, &platform);
+        let r = crate::sim::simulate(&s, &e, &platform, 100_000);
+        // system throughput can never beat kernel-only throughput
+        assert!(r.gflops_system <= r.gflops_cu * (1.0 + 1e-9));
+        // efficiency vs ideal in (0, 1]
+        assert!(r.efficiency_vs_ideal > 0.0 && r.efficiency_vs_ideal <= 1.0);
+        // energy = power x time
+        assert!((r.energy_j - r.avg_power_w * r.total_time_s).abs() < 1e-6);
+        // flops bookkeeping
+        assert_eq!(r.total_flops, 100_000 * 177_023);
+        assert!(r.batches >= 1);
+    }
+}

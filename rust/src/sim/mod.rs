@@ -1,0 +1,446 @@
+//! Cycle-approximate system simulation (substitutes execution on the
+//! Alveo U280; see DESIGN.md "Hardware substitutions").
+//!
+//! Two levels:
+//!
+//!  * `stages` — per-element cycle intervals of the CU's dataflow stages
+//!    (Read, compute groups, Write), mechanistic from the affine IR:
+//!    a contraction nest takes `iterations x II` cycles; a group that
+//!    randomly accesses an external array first buffers it (the paper's
+//!    "data streamed in gets stored in an internal buffer"); elementwise
+//!    consumers are stream-order and need no buffering (the paper's
+//!    mmult observation). The Read module delivers one word per lane per
+//!    cycle (64-bit lanes on the 256-bit AXI port).
+//!
+//!  * `timeline` — a discrete-event simulation over batches: the PCIe
+//!    link is a single shared resource (host transfers serialize across
+//!    CUs — the effect that kills multi-CU system throughput in Fig. 17),
+//!    each CU is a resource, and double buffering gives each CU two
+//!    outstanding batch slots (ping/pong).
+//!
+//! One documented fudge factor: `STALL_FACTOR` (dataflow handshake +
+//! pipeline fill overheads Vitis reports as a few extra percent; fitted
+//! once against the paper's Dataflow-1 row, applied uniformly).
+
+pub mod event;
+pub mod metrics;
+
+use crate::hls::Estimate;
+use crate::ir::affine::NestKind;
+use crate::olympus::SystemSpec;
+use crate::platform::{power::PowerModel, Platform};
+
+pub use metrics::SimResult;
+
+/// Uniform dataflow/control overhead factor (see module docs).
+pub const STALL_FACTOR: f64 = 1.14;
+
+/// Read<->write direction-turnaround penalty on a shared HBM channel
+/// (paper Challenge 2: "frequently switching between read and write
+/// transactions is inefficient due to memory controller timing
+/// parameters"; tWTR/tRTW-class turnarounds ~tens of controller cycles).
+/// Paid once per element in each direction when a CU's read and write
+/// ports share a pseudo-channel; separating the directions onto
+/// different channels (the <8-CU Olympus layout) removes it.
+pub const DIR_SWITCH_CYCLES: u64 = 64;
+
+/// Per-element cycle interval of each CU stage, per lane.
+#[derive(Debug, Clone)]
+pub struct StageIntervals {
+    /// (name, cycles per element)
+    pub stages: Vec<(String, u64)>,
+}
+
+impl StageIntervals {
+    pub fn max_interval(&self) -> u64 {
+        self.stages.iter().map(|s| s.1).max().unwrap_or(0)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.stages.iter().map(|s| s.1).sum()
+    }
+
+    pub fn bottleneck(&self) -> &str {
+        // ties resolve to the earliest stage (the read module wins a tie
+        // against an equally-long compute group, matching the paper's
+        // DF7 observation)
+        let mx = self.max_interval();
+        self.stages
+            .iter()
+            .find(|s| s.1 == mx)
+            .map(|s| s.0.as_str())
+            .unwrap_or("none")
+    }
+}
+
+/// Compute the per-element stage intervals of the generated CU.
+pub fn stages(spec: &SystemSpec, est: &Estimate) -> StageIntervals {
+    let k = &spec.kernel;
+    let ii = est.ii as u64;
+    let in_words = k.input_words() as u64;
+    let out_words = k.output_words() as u64;
+
+    let mut stages: Vec<(String, u64)> = Vec::new();
+
+    // Challenge 2: shared read/write channels pay a direction-turnaround
+    // penalty per element in each direction.
+    let shared_channel = spec
+        .channels
+        .first()
+        .map(|c| c.read.iter().any(|pc| c.write.contains(pc)))
+        .unwrap_or(false);
+    let turnaround = if shared_channel { DIR_SWITCH_CYCLES } else { 0 };
+
+    // Read module: one word per lane per cycle on the 64-bit lane slice;
+    // the serial wide-bus variant re-serializes the packed words into a
+    // single kernel's buffers (paper: the optimization *degrades*).
+    let read = if spec.serial_packing {
+        in_words / (spec.bus_bits as u64 / spec.dtype.bits() as u64) + in_words
+    } else {
+        in_words
+    } + turnaround;
+    stages.push(("read".into(), read));
+
+    if spec.dataflow {
+        for g in &spec.schedule.groups {
+            let local: Vec<usize> = g.nests().map(|ni| k.nests[ni].write).collect();
+            // arrays this group must buffer before computing: external
+            // reads consumed with reuse/random access (contraction or
+            // permute nests). Elementwise reads are stream-order.
+            let mut fill = 0u64;
+            let mut seen: Vec<usize> = Vec::new();
+            for ni in g.nests() {
+                let n = &k.nests[ni];
+                let random_access = matches!(
+                    n.kind,
+                    NestKind::Contraction { .. } | NestKind::Permute { .. }
+                );
+                if !random_access {
+                    continue;
+                }
+                for &r in &n.reads {
+                    if !local.contains(&r) && !seen.contains(&r) {
+                        seen.push(r);
+                        fill += k.buffers[r].words() as u64;
+                    }
+                }
+            }
+            let compute: u64 = g
+                .nests()
+                .map(|ni| k.nests[ni].iterations() * ii)
+                .sum();
+            stages.push((g.name.clone(), fill + compute));
+        }
+    } else {
+        // flat kernel: local buffers are filled by the read phase; the
+        // compute phase runs every nest back to back — and it serializes
+        // with read/write (no overlap), which `timeline` accounts for by
+        // summing the stages instead of pipelining them.
+        let compute: u64 = k.nests.iter().map(|n| n.iterations() * ii).sum();
+        stages.push(("compute".into(), compute));
+    }
+
+    stages.push(("write".into(), out_words + turnaround));
+    StageIntervals { stages }
+}
+
+/// Cycles for one batch on one CU (all lanes in lockstep).
+pub fn batch_cycles(spec: &SystemSpec, si: &StageIntervals) -> u64 {
+    let per_lane_elements = (spec.batch_elements / spec.lanes.max(1)) as u64;
+    let raw = if spec.dataflow {
+        // pipelined stages: fill + steady state at the bottleneck
+        si.sum() + per_lane_elements.saturating_sub(1) * si.max_interval()
+    } else {
+        // serial read -> compute -> write per element
+        per_lane_elements * si.sum()
+    };
+    (raw as f64 * STALL_FACTOR) as u64
+}
+
+/// Simulate a full workload of `n_elements` on the generated system.
+pub fn simulate(
+    spec: &SystemSpec,
+    est: &Estimate,
+    platform: &Platform,
+    n_elements: u64,
+) -> SimResult {
+    simulate_multi_fpga(spec, est, platform, n_elements, 1)
+}
+
+/// The paper's §5 what-if: "if the host were interfaced with multiple
+/// FPGAs and were able to send data in parallel to all of them,
+/// replicating the compute units onto separate FPGAs would achieve
+/// increased performance." Each card gets its own full-duplex PCIe link
+/// and its own copy of the system; the workload splits evenly.
+pub fn simulate_multi_fpga(
+    spec: &SystemSpec,
+    est: &Estimate,
+    platform: &Platform,
+    n_elements: u64,
+    n_fpgas: u64,
+) -> SimResult {
+    assert!(n_fpgas >= 1);
+    let si = stages(spec, est);
+    let freq_hz = est.fmax_mhz * 1e6;
+    let t_batch = batch_cycles(spec, &si) as f64 / freq_hz;
+
+    let e = spec.batch_elements as u64;
+    // per-card share (cards run in parallel on independent PCIe links)
+    let n_batches = n_elements.div_ceil(e).div_ceil(n_fpgas);
+    let t_in = (spec.input_bytes_per_element() * e) as f64
+        / platform.pcie_eff_bytes_per_sec;
+    let t_out = (spec.output_bytes_per_element() * e) as f64
+        / platform.pcie_eff_bytes_per_sec;
+
+    let tl = event::run_timeline(event::TimelineConfig {
+        n_batches,
+        n_cus: spec.num_cus,
+        t_in,
+        t_batch,
+        t_out,
+        double_buffering: spec.double_buffering,
+    });
+
+    // makespan = the busiest card's timeline; all cards process the full
+    // workload together
+    let total_flops = n_elements * spec.flops_per_element();
+    let power = PowerModel::default();
+    let avg_power_w = power.average_power_w(
+        &est.total,
+        est.fmax_mhz,
+        spec.total_pcs() as u32,
+    );
+
+    metrics::SimResult::new(
+        spec,
+        est,
+        &si,
+        total_flops,
+        tl,
+        avg_power_w,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatype::DataType;
+    use crate::dsl;
+    use crate::hls::estimate;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::olympus::{generate, OlympusOpts};
+
+    fn sim(p: usize, opts: OlympusOpts, n: u64) -> SimResult {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        let platform = Platform::alveo_u280();
+        let s = generate(&k, &opts, &platform).unwrap();
+        let e = estimate(&s, &platform);
+        simulate(&s, &e, &platform, n)
+    }
+
+    const N: u64 = 2_000_000; // the paper's N_eq
+
+    #[test]
+    fn baseline_lands_near_paper_fig15() {
+        // Paper: Baseline = 2.903 GFLOPS system, CU ~9.2% higher.
+        let r = sim(11, OlympusOpts::baseline(), N);
+        assert!(
+            (2.0..4.5).contains(&r.gflops_system),
+            "baseline system {} GFLOPS",
+            r.gflops_system
+        );
+        assert!(r.gflops_cu > r.gflops_system);
+        let gap = (r.gflops_cu - r.gflops_system) / r.gflops_cu;
+        assert!((0.02..0.25).contains(&gap), "CU/system gap {gap}");
+    }
+
+    #[test]
+    fn double_buffering_hides_transfers() {
+        // Paper: after double buffering "the system performance is now
+        // the same as the CU performance".
+        let r = sim(11, OlympusOpts::double_buffering(), N);
+        let gap = (r.gflops_cu - r.gflops_system) / r.gflops_cu;
+        assert!(gap < 0.05, "gap {gap}");
+    }
+
+    #[test]
+    fn bus_serial_degrades_bus_parallel_recovers() {
+        // Paper Fig. 15: serial ~3x degradation; parallel ~3.9x over serial.
+        let db = sim(11, OlympusOpts::double_buffering(), N);
+        let ser = sim(11, OlympusOpts::bus_serial(), N);
+        let par = sim(11, OlympusOpts::bus_parallel(), N);
+        assert!(
+            ser.gflops_system < db.gflops_system / 2.0,
+            "serial {} vs db {}",
+            ser.gflops_system,
+            db.gflops_system
+        );
+        let speedup = par.gflops_system / ser.gflops_system;
+        assert!((3.0..5.0).contains(&speedup), "parallel/serial {speedup}");
+    }
+
+    #[test]
+    fn dataflow_ladder_matches_paper_shape() {
+        // Paper: DF1 3.68x over BusOpt-parallel; DF2 1.7x over DF1;
+        // DF3 <= DF2; DF7 best.
+        let par = sim(11, OlympusOpts::bus_parallel(), N);
+        let d1 = sim(11, OlympusOpts::dataflow(1), N);
+        let d2 = sim(11, OlympusOpts::dataflow(2), N);
+        let d3 = sim(11, OlympusOpts::dataflow(3), N);
+        let d7 = sim(11, OlympusOpts::dataflow(7), N);
+        assert!(d1.gflops_system > 2.5 * par.gflops_system);
+        assert!(d2.gflops_system > 1.3 * d1.gflops_system);
+        assert!(d3.gflops_system <= 1.05 * d2.gflops_system);
+        assert!(d7.gflops_system > d2.gflops_system);
+        // headline: DF7 lands in the paper's 43 GFLOPS neighborhood
+        assert!(
+            (30.0..60.0).contains(&d7.gflops_system),
+            "DF7 {}",
+            d7.gflops_system
+        );
+    }
+
+    #[test]
+    fn fixed_point_speeds_up() {
+        // Paper: FX64 1.19x over double; FX32 2.37x, reaching ~103.
+        let d = sim(11, OlympusOpts::dataflow(7), N);
+        let f64_ = sim(11, OlympusOpts::fixed_point(DataType::Fx64), N);
+        let f32_ = sim(11, OlympusOpts::fixed_point(DataType::Fx32), N);
+        assert!(f64_.gflops_system > d.gflops_system);
+        assert!(f32_.gflops_system > 1.7 * d.gflops_system);
+        assert!(
+            (70.0..140.0).contains(&f32_.gflops_system),
+            "FX32 {}",
+            f32_.gflops_system
+        );
+    }
+
+    #[test]
+    fn multi_cu_kernel_scales_but_system_drops() {
+        // Paper Fig. 17: CU-only GFLOPS scales; system GFLOPS drops
+        // because PCIe transfers serialize.
+        let one = sim(11, OlympusOpts::fixed_point(DataType::Fx32), N);
+        let three = sim(11, OlympusOpts::fixed_point(DataType::Fx32).with_cus(3), N);
+        assert!(three.gflops_cu > 1.3 * one.gflops_cu);
+        assert!(
+            three.gflops_system < three.gflops_cu / 1.3,
+            "system {} vs cu {}",
+            three.gflops_system,
+            three.gflops_cu
+        );
+        assert_eq!(three.bottleneck, "pcie");
+    }
+
+    #[test]
+    fn efficiency_metrics_consistent() {
+        let r = sim(11, OlympusOpts::fixed_point(DataType::Fx32), N);
+        assert!(r.avg_power_w > 20.0 && r.avg_power_w < 80.0);
+        let eff = r.gflops_system / r.avg_power_w;
+        assert!((r.efficiency_gflops_w - eff).abs() < 1e-9);
+        // paper headline: ~4 GOPS/W
+        assert!((2.0..7.0).contains(&eff), "efficiency {eff}");
+        assert!(r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn read_module_bounds_df7() {
+        // Paper: for DF7 the compute modules end up slightly below the
+        // read module -> read is the bottleneck stage.
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        let platform = Platform::alveo_u280();
+        let s = generate(&k, &OlympusOpts::dataflow(7), &platform).unwrap();
+        let e = estimate(&s, &platform);
+        let si = stages(&s, &e);
+        assert_eq!(si.bottleneck(), "read");
+        assert_eq!(si.stages[0].1, 121 + 2 * 1331);
+    }
+
+    #[test]
+    fn more_elements_scale_time_linearly() {
+        let a = sim(11, OlympusOpts::dataflow(7), 500_000);
+        let b = sim(11, OlympusOpts::dataflow(7), 1_000_000);
+        let ratio = b.total_time_s / a.total_time_s;
+        assert!((1.8..2.2).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn shared_channel_pays_direction_turnaround() {
+        // paper Challenge 2: separating reads and writes onto different
+        // channels removes the controller turnaround penalty. 8 CUs use
+        // shared ping/pong channels; 4 CUs separate the directions.
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        let platform = Platform::alveo_u280();
+        let mk = |cus: usize| {
+            let s = generate(&k, &OlympusOpts::dataflow(7).with_cus(cus), &platform).unwrap();
+            let e = estimate(&s, &platform);
+            stages(&s, &e)
+        };
+        let separate = mk(4); // <8 CUs: separate in/out channels
+        let shared = mk(8); // ping/pong channels carry both directions
+        assert_eq!(
+            shared.stages[0].1,
+            separate.stages[0].1 + DIR_SWITCH_CYCLES,
+            "read stage pays the turnaround on shared channels"
+        );
+        let wl = shared.stages.last().unwrap().1;
+        let ws = separate.stages.last().unwrap().1;
+        assert_eq!(wl, ws + DIR_SWITCH_CYCLES);
+    }
+
+    #[test]
+    fn multi_fpga_restores_replication_scaling() {
+        // Paper §5: with one PCIe link per card, replication pays again.
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        let platform = Platform::alveo_u280();
+        let opts = OlympusOpts::fixed_point(DataType::Fx32);
+        let s = generate(&k, &opts, &platform).unwrap();
+        let e = estimate(&s, &platform);
+        let one = simulate_multi_fpga(&s, &e, &platform, N, 1);
+        let four = simulate_multi_fpga(&s, &e, &platform, N, 4);
+        let scaling = four.gflops_system / one.gflops_system;
+        assert!(
+            (3.0..4.3).contains(&scaling),
+            "4 cards should scale ~4x: {scaling}"
+        );
+    }
+
+    #[test]
+    fn ddr4_limits_compute_units() {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        let platform = Platform::alveo_u280();
+        // two CUs without double buffering fit the two banks
+        let ok = generate(&k, &OlympusOpts::baseline().on_ddr4().with_cus(2), &platform);
+        assert!(ok.is_ok());
+        // three do not; double buffering caps at one
+        assert!(
+            generate(&k, &OlympusOpts::baseline().on_ddr4().with_cus(3), &platform).is_err()
+        );
+        assert!(generate(
+            &k,
+            &OlympusOpts::dataflow(7).on_ddr4().with_cus(2),
+            &platform
+        )
+        .is_err());
+        let one_db = generate(&k, &OlympusOpts::dataflow(7).on_ddr4(), &platform).unwrap();
+        assert_eq!(one_db.total_pcs(), 2, "ping/pong on the two banks");
+    }
+
+    #[test]
+    fn p7_performs_slightly_below_p11() {
+        // Paper Fig. 16: p=7 implementations are slightly slower.
+        let p11 = sim(11, OlympusOpts::dataflow(7), N);
+        let p7 = sim(7, OlympusOpts::dataflow(7), N);
+        assert!(p7.gflops_system < p11.gflops_system);
+        assert!(p7.gflops_system > 0.3 * p11.gflops_system);
+    }
+}

@@ -1,0 +1,133 @@
+//! Micro-benchmark harness (the offline registry has no criterion).
+//!
+//! `Bench::new("name").run(|| ...)` warms up, then samples wall-clock
+//! iterations until a time budget is reached and reports min/median/mean.
+//! Used by the `rust/benches/*` targets (harness = false) and the §Perf
+//! pass in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} min  {:>10} med  {:>10} mean  ({} samples)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            self.samples
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    budget: Duration,
+    max_samples: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            max_samples: 1000,
+        }
+    }
+
+    pub fn budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn warmup(mut self, warmup: Duration) -> Self {
+        self.warmup = warmup;
+        self
+    }
+
+    /// Time `f` repeatedly; `f`'s return value is black-boxed.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Sample.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let min = samples[0];
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        BenchResult {
+            name: self.name.clone(),
+            samples: samples.len(),
+            min,
+            median,
+            mean,
+        }
+    }
+}
+
+/// Print a standard bench section header (keeps bench binaries uniform).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let r = Bench::new("noop")
+            .warmup(Duration::from_millis(1))
+            .budget(Duration::from_millis(10))
+            .run(|| 1 + 1);
+        assert!(r.samples >= 1);
+        assert!(r.min <= r.median);
+        assert!(!r.report().is_empty());
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(10)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(10)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+}

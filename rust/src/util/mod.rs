@@ -1,0 +1,58 @@
+//! Small self-contained utilities.
+//!
+//! The offline crate registry only carries the `xla` closure, so JSON,
+//! property testing, benchmarking, and tensors are implemented in-crate.
+
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod tensor;
+
+/// Format a byte count human-readably (GiB/MiB/KiB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= K * K * K {
+        format!("{:.2} GiB", b / (K * K * K))
+    } else if b >= K * K {
+        format!("{:.2} MiB", b / (K * K))
+    } else if b >= K {
+        format!("{:.2} KiB", b / K)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    assert!(b != 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_rounds_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ceil_div_zero_divisor_panics() {
+        ceil_div(1, 0);
+    }
+
+    #[test]
+    fn fmt_bytes_scales() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(fmt_bytes(8 * 1024 * 1024 * 1024), "8.00 GiB");
+    }
+}

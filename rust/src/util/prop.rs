@@ -1,0 +1,120 @@
+//! Tiny property-testing harness (the offline registry has no proptest).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded
+//! PRNGs; a failure reports the seed so the case can be replayed with
+//! `replay(seed, ...)`. No shrinking — generators are kept small enough
+//! that raw counterexamples are readable.
+//!
+//! ```no_run
+//! use hbmflow::util::prop;
+//! prop::check("addition commutes", 64, |rng| {
+//!     let (a, b) = (rng.next_f64(), rng.next_f64());
+//!     prop::assert_prop(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+//! (no_run: doctest binaries lack the xla_extension rpath in this image)
+
+use super::prng::Prng;
+
+/// Result of one property case: Ok or a human-readable counterexample.
+pub type CaseResult = Result<(), String>;
+
+/// Assert helper returning a `CaseResult`.
+pub fn assert_prop(cond: bool, detail: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(detail.into())
+    }
+}
+
+/// Approximate float equality for property checks over numerics.
+pub fn close(a: f64, b: f64, rtol: f64) -> bool {
+    let scale = a.abs().max(b.abs()).max(1e-30);
+    (a - b).abs() <= rtol * scale
+}
+
+/// Element-wise closeness of two slices.
+pub fn all_close(a: &[f64], b: &[f64], rtol: f64) -> CaseResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        if !close(x, y, rtol) {
+            return Err(format!("index {i}: {x} vs {y} (rtol {rtol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Run `f` over `cases` independently seeded PRNGs; panic with the seed
+/// of the first failing case.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Prng) -> CaseResult,
+{
+    // Base seed is fixed: property suites are fully deterministic in CI.
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Prng::new(seed);
+        if let Err(detail) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {detail}\n\
+                 replay with prop::replay({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(seed: u64, mut f: F) -> CaseResult
+where
+    F: FnMut(&mut Prng) -> CaseResult,
+{
+    let mut rng = Prng::new(seed);
+    f(&mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("xor is involutive", 32, |rng| {
+            let x = rng.next_u64();
+            let k = rng.next_u64();
+            assert_prop((x ^ k) ^ k == x, format!("{x} {k}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_handles_scales() {
+        assert!(close(1.0, 1.0 + 1e-13, 1e-12));
+        assert!(!close(1.0, 1.1, 1e-12));
+        assert!(close(0.0, 0.0, 1e-12));
+        assert!(close(1e20, 1e20 * (1.0 + 1e-13), 1e-12));
+    }
+
+    #[test]
+    fn all_close_reports_index() {
+        let e = all_close(&[1.0, 2.0], &[1.0, 3.0], 1e-9).unwrap_err();
+        assert!(e.contains("index 1"));
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-9).is_ok());
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let seed = 0xDEAD;
+        let a = replay(seed, |rng| Err(format!("{}", rng.next_u64())));
+        let b = replay(seed, |rng| Err(format!("{}", rng.next_u64())));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,391 @@
+//! Dense row-major f64 tensors for the teil interpreter and baselines.
+//!
+//! This is deliberately small: shapes are `Vec<usize>`, storage is a flat
+//! `Vec<f64>`. It backs (a) the semantic oracle for IR rewrites, (b) the
+//! naive-CPU baseline of Fig. 19, and (c) host-side batch assembly in the
+//! coordinator.
+
+use std::fmt;
+
+/// Dense row-major tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Random tensor with entries in [-1, 1) (the paper's input domain).
+    pub fn random(shape: &[usize], rng: &mut super::prng::Prng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, rng.unit_vec(n))
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Flat index from a multi-index.
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut f = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {ix} out of bound {dim} at axis {i}");
+            f = f * dim + ix;
+        }
+        f
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f64 {
+        self.data[self.flat(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f64) {
+        let f = self.flat(idx);
+        self.data[f] = v;
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        Tensor::from_vec(shape, self.data.clone())
+    }
+
+    /// Outer (tensor) product: shape = self.shape ++ other.shape.
+    pub fn outer(&self, other: &Tensor) -> Tensor {
+        let mut shape = self.shape.clone();
+        shape.extend_from_slice(&other.shape);
+        let mut data = Vec::with_capacity(self.data.len() * other.data.len());
+        for &a in &self.data {
+            for &b in &other.data {
+                data.push(a * b);
+            }
+        }
+        Tensor { shape, data }
+    }
+
+    /// Elementwise binary op (shapes must match).
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        assert_eq!(self.shape, other.shape, "elementwise shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+
+    /// Take the diagonal of axes (i, j): result drops axis j and every
+    /// element has index_i == index_j. Matches `teil.diag`.
+    pub fn diag(&self, i: usize, j: usize) -> Tensor {
+        assert!(i < j, "diag expects i < j");
+        assert_eq!(self.shape[i], self.shape[j], "diag axes must match");
+        let mut out_shape = self.shape.clone();
+        out_shape.remove(j);
+        let mut out = Tensor::zeros(&out_shape);
+        let mut idx = vec![0usize; out_shape.len()];
+        let mut full = vec![0usize; self.shape.len()];
+        loop {
+            // reconstruct the full index: insert idx[i] at position j
+            for (k, v) in idx.iter().enumerate() {
+                match k.cmp(&j) {
+                    std::cmp::Ordering::Less => full[k] = *v,
+                    _ => full[k + 1] = *v,
+                }
+            }
+            full[j] = idx[i];
+            let flat_out = out.flat(&idx);
+            out.data[flat_out] = self.get(&full);
+            if !increment(&mut idx, &out_shape) {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Sum-reduce axis `axis`. Matches `teil.red add`.
+    pub fn reduce_add(&self, axis: usize) -> Tensor {
+        let mut out_shape = self.shape.clone();
+        let n = out_shape.remove(axis);
+        let mut out = Tensor::zeros(&out_shape);
+        let mut idx = vec![0usize; out_shape.len()];
+        let mut full = vec![0usize; self.shape.len()];
+        if out_shape.is_empty() {
+            let s: f64 = self.data.iter().sum();
+            return Tensor::from_vec(&[], vec![s]);
+        }
+        loop {
+            for (k, v) in idx.iter().enumerate() {
+                if k < axis {
+                    full[k] = *v;
+                } else {
+                    full[k + 1] = *v;
+                }
+            }
+            let mut s = 0.0;
+            for r in 0..n {
+                full[axis] = r;
+                s += self.get(&full);
+            }
+            let flat_out = out.flat(&idx);
+            out.data[flat_out] = s;
+            if !increment(&mut idx, &out_shape) {
+                break;
+            }
+        }
+        out
+    }
+
+    /// n-mode product: contract `m`'s second index with `self`'s `mode`
+    /// axis: out[.., i, ..] = sum_l m[i, l] * self[.., l, ..].
+    pub fn mode_apply(&self, m: &Tensor, mode: usize) -> Tensor {
+        assert_eq!(m.rank(), 2);
+        let (rows, cols) = (m.shape[0], m.shape[1]);
+        assert_eq!(self.shape[mode], cols, "mode product dim mismatch");
+        let mut out_shape = self.shape.clone();
+        out_shape[mode] = rows;
+        let mut out = Tensor::zeros(&out_shape);
+
+        // strides for walking the mode axis
+        let inner: usize = self.shape[mode + 1..].iter().product();
+        let outer: usize = self.shape[..mode].iter().product();
+        for o in 0..outer {
+            for i in 0..rows {
+                for inn in 0..inner {
+                    let mut s = 0.0;
+                    for l in 0..cols {
+                        s += m.data[i * cols + l]
+                            * self.data[(o * cols + l) * inner + inn];
+                    }
+                    out.data[(o * rows + i) * inner + inn] = s;
+                }
+            }
+        }
+        out
+    }
+
+    /// Move axis `from` to position `to` (numpy moveaxis semantics).
+    pub fn move_axis(&self, from: usize, to: usize) -> Tensor {
+        assert!(from < self.rank() && to < self.rank());
+        if from == to {
+            return self.clone();
+        }
+        let mut perm: Vec<usize> = (0..self.rank()).collect();
+        let ax = perm.remove(from);
+        perm.insert(to, ax);
+        // perm[k] = source axis for destination axis k
+        let out_shape: Vec<usize> = perm.iter().map(|&a| self.shape[a]).collect();
+        let mut out = Tensor::zeros(&out_shape);
+        let mut idx = vec![0usize; out_shape.len()];
+        let mut src = vec![0usize; out_shape.len()];
+        loop {
+            for (k, &a) in perm.iter().enumerate() {
+                src[a] = idx[k];
+            }
+            let fo = out.flat(&idx);
+            out.data[fo] = self.get(&src);
+            if !increment(&mut idx, &out_shape) {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Mean squared error against another tensor.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1) as f64;
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / n
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+/// Odometer increment; returns false on wrap-around (iteration done).
+fn increment(idx: &mut [usize], shape: &[usize]) -> bool {
+    for k in (0..idx.len()).rev() {
+        idx[k] += 1;
+        if idx[k] < shape[k] {
+            return true;
+        }
+        idx[k] = 0;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn flat_index_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.flat(&[0, 0, 0]), 0);
+        assert_eq!(t.flat(&[0, 0, 3]), 3);
+        assert_eq!(t.flat(&[0, 1, 0]), 4);
+        assert_eq!(t.flat(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn outer_product_shape_and_values() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[3], vec![3.0, 4.0, 5.0]);
+        let o = a.outer(&b);
+        assert_eq!(o.shape(), &[2, 3]);
+        assert_eq!(o.get(&[1, 2]), 10.0);
+        assert_eq!(o.get(&[0, 0]), 3.0);
+    }
+
+    #[test]
+    fn diag_of_outer_is_elementwise() {
+        // diag_{0,1}(a (x) b) over matching dims == a * b elementwise
+        let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![4.0, 5.0, 6.0]);
+        let d = a.outer(&b).diag(0, 1);
+        assert_eq!(d.shape(), &[3]);
+        assert_eq!(d.data(), &[4.0, 10.0, 18.0]);
+    }
+
+    #[test]
+    fn reduce_add_matches_manual() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r0 = t.reduce_add(0);
+        assert_eq!(r0.shape(), &[3]);
+        assert_eq!(r0.data(), &[5., 7., 9.]);
+        let r1 = t.reduce_add(1);
+        assert_eq!(r1.data(), &[6., 15.]);
+    }
+
+    #[test]
+    fn reduce_add_to_scalar() {
+        let t = Tensor::from_vec(&[3], vec![1., 2., 3.]);
+        let r = t.reduce_add(0);
+        assert_eq!(r.shape(), &[] as &[usize]);
+        assert_eq!(r.data(), &[6.0]);
+    }
+
+    #[test]
+    fn mode_apply_identity_is_noop() {
+        let mut rng = Prng::new(5);
+        let u = Tensor::random(&[4, 4, 4], &mut rng);
+        let i = Tensor::identity(4);
+        for mode in 0..3 {
+            assert_eq!(u.mode_apply(&i, mode), u);
+        }
+    }
+
+    #[test]
+    fn mode_apply_equals_diag_red_of_outer() {
+        // The teil lowering identity (Fig. 7b): prod + diag + red == GEMM.
+        let mut rng = Prng::new(6);
+        let s = Tensor::random(&[3, 3], &mut rng);
+        let u = Tensor::random(&[3, 3, 3], &mut rng);
+        // mode-0 apply: out_ijk = sum_l s_il u_ljk
+        let via_gemm = u.mode_apply(&s, 0);
+        // prod: s (x) u -> [3,3,3,3,3]; diag axes (1, 2) pairs l; red over it
+        let via_teil = s.outer(&u).diag(1, 2).reduce_add(1);
+        for i in 0..via_gemm.len() {
+            assert!((via_gemm.data()[i] - via_teil.data()[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mode_apply_nonsquare() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 0., 0., 0., 1., 0.]);
+        let mut rng = Prng::new(8);
+        let u = Tensor::random(&[3, 3, 3], &mut rng);
+        let out = u.mode_apply(&a, 1);
+        assert_eq!(out.shape(), &[3, 2, 3]);
+        assert_eq!(out.get(&[1, 0, 2]), u.get(&[1, 0, 2]));
+        assert_eq!(out.get(&[1, 1, 2]), u.get(&[1, 1, 2]));
+    }
+
+    #[test]
+    fn mse_and_max_abs_diff() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0, 4.0]);
+        assert_eq!(a.mse(&b), 2.0);
+        assert_eq!(a.max_abs_diff(&b), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_validates_length() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

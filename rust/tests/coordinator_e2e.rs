@@ -1,0 +1,99 @@
+//! Integration: the coordinator driving real numerics end to end,
+//! including multi-CU bookkeeping and fixed-point datapaths.
+
+use hbmflow::cli::build_kernel;
+use hbmflow::coordinator::{Driver, HelmholtzWorkload};
+use hbmflow::datatype::DataType;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn spec(dtype: DataType, p: usize, cus: usize) -> olympus::SystemSpec {
+    let k = build_kernel("helmholtz", p).unwrap();
+    let opts = if dtype.is_fixed() {
+        OlympusOpts::fixed_point(dtype)
+    } else {
+        OlympusOpts::dataflow(7)
+    }
+    .with_cus(cus);
+    olympus::generate(&k, &opts, &Platform::alveo_u280()).unwrap()
+}
+
+#[test]
+fn e2e_f64_batch_exactness() {
+    let Some(mut rt) = runtime() else { return };
+    let s = spec(DataType::F64, 7, 1);
+    let artifact = Driver::artifact_for(&rt, &s, 7).unwrap();
+    let w = HelmholtzWorkload::generate(7, 333, 1); // non-multiple of 32
+    let mut d = Driver::new(&mut rt, s, artifact);
+    let r = d.run(&w, 32).unwrap();
+    assert_eq!(r.elements, 333);
+    assert!(r.mse_vs_oracle < 1e-24);
+    // padded invocations: ceil(333/32) per plan (single batch covers all)
+    assert!(r.invocations >= 11);
+    assert_eq!(r.outputs.len(), 333 * 343);
+}
+
+#[test]
+fn e2e_outputs_nonzero_and_bounded() {
+    let Some(mut rt) = runtime() else { return };
+    let s = spec(DataType::F64, 11, 1);
+    let artifact = Driver::artifact_for(&rt, &s, 11).unwrap();
+    let w = HelmholtzWorkload::generate(11, 64, 2);
+    let mut d = Driver::new(&mut rt, s, artifact);
+    let r = d.run(&w, 8).unwrap();
+    let nonzero = r.outputs.iter().filter(|x| x.abs() > 1e-12).count();
+    assert!(nonzero > r.outputs.len() / 2);
+    // scaled-S workload keeps |v| <= 1
+    assert!(r.outputs.iter().all(|x| x.abs() <= 1.0 + 1e-9));
+}
+
+#[test]
+fn e2e_two_cus_split_work_evenly_across_batches() {
+    let Some(mut rt) = runtime() else { return };
+    let s = spec(DataType::F64, 7, 2);
+    let artifact = Driver::artifact_for(&rt, &s, 7).unwrap();
+    let w = HelmholtzWorkload::generate(7, 500, 3);
+    let mut d = Driver::new(&mut rt, s, artifact);
+    let r = d.run(&w, 16).unwrap();
+    assert_eq!(r.per_cu_elements.iter().sum::<u64>(), 500);
+    assert!(r.mse_vs_oracle < 1e-24);
+}
+
+#[test]
+fn e2e_fx32_end_to_end_error_budget() {
+    let Some(mut rt) = runtime() else { return };
+    let s = spec(DataType::Fx32, 11, 1);
+    let artifact = Driver::artifact_for(&rt, &s, 11).unwrap();
+    assert!(artifact.contains("fx32"));
+    let w = HelmholtzWorkload::generate(11, 64, 4);
+    let mut d = Driver::new(&mut rt, s, artifact);
+    let r = d.run(&w, 32).unwrap();
+    // Q8.24 grid: per-value error bounded by a few quantization steps
+    assert!(r.max_abs_err < 1e-5, "max err {}", r.max_abs_err);
+    assert!(r.mse_vs_oracle > 0.0);
+}
+
+#[test]
+fn e2e_deterministic_outputs() {
+    let Some(mut rt) = runtime() else { return };
+    let w = HelmholtzWorkload::generate(7, 96, 5);
+    let run = |rt: &mut Runtime| {
+        let s = spec(DataType::F64, 7, 1);
+        let artifact = Driver::artifact_for(rt, &s, 7).unwrap();
+        Driver::new(rt, s, artifact).run(&w, 0).unwrap().outputs
+    };
+    let a = run(&mut rt);
+    let b = run(&mut rt);
+    assert_eq!(a, b);
+}

@@ -1,0 +1,136 @@
+//! Integration: failure injection — the system must fail loudly and
+//! precisely, never silently.
+
+use std::fs;
+
+use hbmflow::cli::build_kernel;
+use hbmflow::dsl;
+use hbmflow::ir::{lower, rewrite, schedule, teil};
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::runtime::{manifest::Manifest, Runtime};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("hbmflow_fi_{name}"));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_artifacts_dir_reports_make_hint() {
+    let err = match Runtime::new("/nonexistent/path") {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_load_not_execute() {
+    let dir = tmpdir("corrupt_hlo");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format":"hlo-text","artifacts":[{"name":"bad","path":"bad.hlo.txt",
+            "kernel":"helmholtz","p":7,"dtype":"f64","batch":8,"variant":"pallas",
+            "flops_per_element":29155,"num_outputs":1,
+            "inputs":[{"shape":[7,7],"dtype":"float64"}]}]}"#
+            .replace('\n', " "),
+    )
+    .unwrap();
+    fs::write(dir.join("bad.hlo.txt"), "HloModule nonsense ENTRY {").unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let err = rt.run_f64("bad", &[vec![0.0; 49]]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("parse") || msg.contains("bad.hlo.txt") || msg.contains("compile"),
+        "{msg}"
+    );
+}
+
+#[test]
+fn manifest_shape_mismatch_is_caught_before_pjrt() {
+    let Ok(mut rt) = Runtime::from_default_dir() else {
+        eprintln!("artifacts missing; skipping");
+        return;
+    };
+    // deliberately wrong input length
+    let err = rt
+        .run_f64(
+            "helmholtz_p7_f64_b8",
+            &[vec![0.0; 10], vec![0.0; 10], vec![0.0; 10]],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("input size"), "{err}");
+}
+
+#[test]
+fn manifest_missing_fields_rejected() {
+    let dir = tmpdir("missing_fields");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format":"hlo-text","artifacts":[{"name":"x"}]}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.contains("missing"), "{err}");
+}
+
+#[test]
+fn dsl_semantic_errors_surface_with_context() {
+    for (src, needle) in [
+        ("var output v : [2]\nv = w", "undeclared"),
+        ("var input a : [2 2]\nvar output v : [2]\nv = a . [[0 3]]", "out of range"),
+        ("var input a : [2]\nvar output v : [4]\nv = a", "shape mismatch"),
+    ] {
+        let err = dsl::parse(src)
+            .map_err(|e| e)
+            .and_then(|p| teil::from_ast(&p).map(|_| ()))
+            .unwrap_err();
+        assert!(err.contains(needle), "{src}: {err}");
+    }
+}
+
+#[test]
+fn olympus_rejects_impossible_configurations() {
+    let k = build_kernel("helmholtz", 11).unwrap();
+    let platform = Platform::alveo_u280();
+    // 0 CUs
+    let mut o = OlympusOpts::baseline();
+    o.num_cus = 0;
+    assert!(olympus::generate(&k, &o, &platform).is_err());
+    // 17 double-buffered CUs exceed the PC budget
+    let mut o = OlympusOpts::double_buffering();
+    o.num_cus = 17;
+    assert!(olympus::generate(&k, &o, &platform).is_err());
+    // dataflow with more groups than nests
+    let mut o = OlympusOpts::baseline();
+    o.dataflow = Some(99);
+    assert!(olympus::generate(&k, &o, &platform).is_err());
+}
+
+#[test]
+fn schedule_and_kernel_validation_catch_corruption() {
+    let prog = dsl::parse(&dsl::inverse_helmholtz_source(7)).unwrap();
+    let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+    let mut k = lower::lower_kernel(&m, "helmholtz").unwrap();
+    let s = schedule::fixed(&k, 3).unwrap();
+    // corrupt the kernel after scheduling: validation must catch it
+    k.nests[0].out_trips = vec![1];
+    assert!(k.validate().is_err());
+    // and a schedule over a different nest count must not validate
+    let k2 = build_kernel("interpolation", 11).unwrap();
+    assert!(s.validate(&k2).is_err());
+}
+
+#[test]
+fn element_too_large_for_channel_is_rejected() {
+    // a degree so large one element exceeds 256 MB
+    let src = dsl::inverse_helmholtz_source(260); // 260^3 * 2 * 8B > 256MB
+    let prog = dsl::parse(&src).unwrap();
+    let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+    let k = lower::lower_kernel(&m, "huge").unwrap();
+    let err = olympus::generate(&k, &OlympusOpts::baseline(), &Platform::alveo_u280())
+        .unwrap_err();
+    assert!(err.contains("too large"), "{err}");
+}

@@ -1,0 +1,125 @@
+//! Integration: the full DSL -> system pipeline across all three kernels.
+
+use hbmflow::cli::build_kernel;
+use hbmflow::codegen::c_emit;
+use hbmflow::datatype::DataType;
+use hbmflow::dsl;
+use hbmflow::hls;
+use hbmflow::ir::{liveness, lower, rewrite, schedule, teil};
+use hbmflow::mnemosyne;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+
+#[test]
+fn helmholtz_full_pipeline_golden() {
+    let src = dsl::inverse_helmholtz_source(11);
+    let prog = dsl::parse(&src).unwrap();
+    let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+    let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+    assert_eq!(k.nests.len(), 7);
+    assert_eq!(k.flops_per_element(), 177_023);
+
+    let s = schedule::fixed(&k, 3).unwrap();
+    let c = c_emit::emit(&k, &s, "f64");
+    // golden fragments (Fig. 12b style)
+    assert!(c.contains("void gemm_0("));
+    assert!(c.contains("void mmult_1("));
+    assert!(c.contains("void gemm_inv_2("));
+    assert!(c.contains("121 * c0 + 11 * c1 + c2"));
+    assert!(c.contains("#pragma HLS unroll"));
+
+    let lv = liveness::analyze(&k);
+    let plan = mnemosyne::share(&k, &lv, None);
+    plan.validate(&k, &lv).unwrap();
+
+    let platform = Platform::alveo_u280();
+    let spec = olympus::generate(&k, &OlympusOpts::dataflow(7), &platform).unwrap();
+    spec.validate(&platform).unwrap();
+    let cfg = olympus::config::system_cfg(&spec);
+    assert!(cfg.contains("sp=helmholtz_1.m_axi_read0:HBM[0]"));
+
+    let est = hls::estimate(&spec, &platform);
+    assert_eq!(est.ops(), 532);
+}
+
+#[test]
+fn all_kernels_compile_through_every_stage() {
+    let platform = Platform::alveo_u280();
+    for (name, p, groups) in [
+        ("helmholtz", 7, 7),
+        ("helmholtz", 11, 2),
+        ("interpolation", 11, 3),
+        ("gradient", 8, 3),
+    ] {
+        let k = build_kernel(name, p).unwrap();
+        k.validate().unwrap();
+        let s = schedule::fixed(&k, groups.min(k.nests.len())).unwrap();
+        s.validate(&k).unwrap();
+        let c = c_emit::emit(&k, &s, "f64");
+        assert!(c.contains("void "), "{name}");
+        let mut opts = OlympusOpts::dataflow(groups.min(k.nests.len()));
+        opts.dtype = DataType::F64;
+        let spec = olympus::generate(&k, &opts, &platform).unwrap();
+        spec.validate(&platform).unwrap();
+        let est = hls::estimate(&spec, &platform);
+        assert!(est.fmax_mhz > 60.0, "{name}");
+        let r = hbmflow::sim::simulate(&spec, &est, &platform, 100_000);
+        assert!(r.gflops_system > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn fixed_point_pipeline_emits_ap_fixed_everywhere() {
+    let k = build_kernel("helmholtz", 11).unwrap();
+    let s = schedule::fixed(&k, 7).unwrap();
+    for (dt, pat) in [("fx64", "ap_fixed<64, 24>"), ("fx32", "ap_fixed<32, 8>")] {
+        let c = c_emit::emit(&k, &s, dt);
+        assert!(c.contains(pat), "{dt}");
+    }
+    let platform = Platform::alveo_u280();
+    let spec = olympus::generate(
+        &k,
+        &OlympusOpts::fixed_point(DataType::Fx32),
+        &platform,
+    )
+    .unwrap();
+    // host program must include the double<->fixed conversions
+    let hp = olympus::config::host_program(&spec);
+    assert!(hp.contains("ConvertToDevice"));
+    assert!(hp.contains("ConvertFromDevice"));
+    assert_eq!(spec.lanes, 8);
+}
+
+#[test]
+fn interpolation_pipeline_flops_model() {
+    let k = build_kernel("interpolation", 11).unwrap();
+    // 3 mode products, 2 * 11 per output element each
+    assert_eq!(k.flops_per_element(), 3 * 2 * 11 * 1331);
+    assert_eq!(k.input_words(), 121 + 1331);
+    assert_eq!(k.output_words(), 1331);
+}
+
+#[test]
+fn gradient_pipeline_structure() {
+    let k = build_kernel("gradient", 8).unwrap();
+    // 3 contractions + 2 permutes (gy, gz axis restore)
+    assert_eq!(k.nests.len(), 5);
+    assert_eq!(k.outputs().count(), 3);
+    let s = schedule::auto(&k, None);
+    s.validate(&k).unwrap();
+}
+
+#[test]
+fn cli_surface_smoke() {
+    let run = |args: &[&str]| {
+        let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        hbmflow::cli::main_with_args(&v).unwrap()
+    };
+    assert!(run(&["compile", "--kernel", "interpolation", "--emit", "c"]).contains("void"));
+    assert!(run(&["estimate", "--preset", "mem-sharing"]).contains("ops:"));
+    assert!(
+        run(&["simulate", "--preset", "dataflow7", "--dtype", "fx32", "--elements", "500000"])
+            .contains("GFLOPS/W")
+    );
+    assert!(run(&["sweep", "--elements", "200000"]).contains("configuration"));
+}

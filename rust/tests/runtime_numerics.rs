@@ -1,0 +1,184 @@
+//! Integration: PJRT runtime numerics vs the native tensor oracle across
+//! every kernel family and dtype variant. Skips cleanly when artifacts
+//! have not been built (`make artifacts`).
+
+use hbmflow::runtime::Runtime;
+use hbmflow::util::prng::Prng;
+use hbmflow::util::tensor::Tensor;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn helmholtz_oracle(s: &Tensor, d: &Tensor, u: &Tensor) -> Tensor {
+    let st = transpose(s);
+    let t = u.mode_apply(s, 0).mode_apply(s, 1).mode_apply(s, 2);
+    let r = d.zip(&t, |a, b| a * b);
+    r.mode_apply(&st, 0).mode_apply(&st, 1).mode_apply(&st, 2)
+}
+
+fn transpose(t: &Tensor) -> Tensor {
+    let (r, c) = (t.shape()[0], t.shape()[1]);
+    let mut out = Tensor::zeros(&[c, r]);
+    for i in 0..r {
+        for j in 0..c {
+            out.set(&[j, i], t.get(&[i, j]));
+        }
+    }
+    out
+}
+
+#[test]
+fn every_f64_helmholtz_artifact_matches_oracle() {
+    let Some(mut rt) = runtime() else { return };
+    let names: Vec<String> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.kernel == "helmholtz" && a.dtype == "f64")
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(!names.is_empty());
+    for name in names {
+        let meta = rt.meta(&name).unwrap().clone();
+        let (p, b) = (meta.p, meta.batch);
+        let mut rng = Prng::new(0xBEEF ^ p as u64 ^ (b as u64) << 8);
+        let s = Tensor::random(&[p, p], &mut rng);
+        let d = Tensor::random(&[b, p, p, p], &mut rng);
+        let u = Tensor::random(&[b, p, p, p], &mut rng);
+        let outs = rt
+            .run_f64(&name, &[s.data().to_vec(), d.data().to_vec(), u.data().to_vec()])
+            .unwrap();
+        let v = &outs[0];
+        let block = p * p * p;
+        for e in 0..b {
+            let de = Tensor::from_vec(&[p, p, p], d.data()[e * block..(e + 1) * block].to_vec());
+            let ue = Tensor::from_vec(&[p, p, p], u.data()[e * block..(e + 1) * block].to_vec());
+            let want = helmholtz_oracle(&s, &de, &ue);
+            for (i, &wv) in want.data().iter().enumerate() {
+                let got = v[e * block + i];
+                assert!(
+                    (got - wv).abs() < 1e-9 * wv.abs().max(1.0),
+                    "{name} e{e} i{i}: {got} vs {wv}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pallas_and_ref_variants_agree() {
+    let Some(mut rt) = runtime() else { return };
+    let p = 11;
+    let pal = rt.manifest.find("helmholtz", p, "f64", "pallas").unwrap().clone();
+    let refa = rt.manifest.find("helmholtz", p, "f64", "ref").unwrap().clone();
+    assert_eq!(pal.batch, refa.batch);
+    let b = pal.batch;
+    let mut rng = Prng::new(17);
+    let s = rng.unit_vec(p * p);
+    let d = rng.unit_vec(b * p * p * p);
+    let u = rng.unit_vec(b * p * p * p);
+    let v1 = rt
+        .run_f64(&pal.name, &[s.clone(), d.clone(), u.clone()])
+        .unwrap();
+    let v2 = rt.run_f64(&refa.name, &[s, d, u]).unwrap();
+    for (a, b_) in v1[0].iter().zip(&v2[0]) {
+        assert!((a - b_).abs() < 1e-10, "{a} vs {b_}");
+    }
+}
+
+#[test]
+fn interpolation_artifact_matches_oracle() {
+    let Some(mut rt) = runtime() else { return };
+    let meta = rt.manifest.find("interpolation", 11, "f64", "pallas").unwrap().clone();
+    let (n, b) = (11usize, meta.batch);
+    let mut rng = Prng::new(23);
+    let a = Tensor::random(&[n, n], &mut rng);
+    let u = Tensor::random(&[b, n, n, n], &mut rng);
+    let outs = rt
+        .run_f64(&meta.name, &[a.data().to_vec(), u.data().to_vec()])
+        .unwrap();
+    let block = n * n * n;
+    for e in 0..b {
+        let ue = Tensor::from_vec(&[n, n, n], u.data()[e * block..(e + 1) * block].to_vec());
+        let want = ue.mode_apply(&a, 0).mode_apply(&a, 1).mode_apply(&a, 2);
+        for (i, &wv) in want.data().iter().enumerate() {
+            let got = outs[0][e * block + i];
+            assert!((got - wv).abs() < 1e-10, "e{e} i{i}");
+        }
+    }
+}
+
+#[test]
+fn gradient_artifact_matches_oracle() {
+    let Some(mut rt) = runtime() else { return };
+    let meta = rt.manifest.find("gradient", 8, "f64", "pallas").unwrap().clone();
+    let b = meta.batch;
+    let (nx, ny, nz) = (8usize, 7, 6);
+    let mut rng = Prng::new(29);
+    let dx = Tensor::random(&[nx, nx], &mut rng);
+    let dy = Tensor::random(&[ny, ny], &mut rng);
+    let dz = Tensor::random(&[nz, nz], &mut rng);
+    let u = Tensor::random(&[b, nx, ny, nz], &mut rng);
+    let outs = rt
+        .run_f64(
+            &meta.name,
+            &[
+                dx.data().to_vec(),
+                dy.data().to_vec(),
+                dz.data().to_vec(),
+                u.data().to_vec(),
+            ],
+        )
+        .unwrap();
+    let block = nx * ny * nz;
+    for e in 0..b.min(4) {
+        let ue = Tensor::from_vec(&[nx, ny, nz], u.data()[e * block..(e + 1) * block].to_vec());
+        let wants = [
+            ue.mode_apply(&dx, 0),
+            ue.mode_apply(&dy, 1),
+            ue.mode_apply(&dz, 2),
+        ];
+        for (o, want) in outs.iter().zip(&wants) {
+            for (i, &wv) in want.data().iter().enumerate() {
+                assert!((o[e * block + i] - wv).abs() < 1e-10, "e{e} i{i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fx_artifacts_quantize_but_stay_close() {
+    let Some(mut rt) = runtime() else { return };
+    let p = 11;
+    let b = 32;
+    let mut rng = Prng::new(31);
+    // scaled S keeps intermediates in the fixed-point range
+    let mut s = rng.unit_vec(p * p);
+    for x in &mut s {
+        *x /= p as f64;
+    }
+    let d = rng.unit_vec(b * p * p * p);
+    let u = rng.unit_vec(b * p * p * p);
+    let exact = rt
+        .run_f64("helmholtz_p11_f64_b32", &[s.clone(), d.clone(), u.clone()])
+        .unwrap();
+    let fx64 = rt
+        .run_f64("helmholtz_p11_fx64_b32", &[s.clone(), d.clone(), u.clone()])
+        .unwrap();
+    let fx32 = rt.run_f64("helmholtz_p11_fx32_b32", &[s, d, u]).unwrap();
+    let mse = |a: &[f64], b: &[f64]| {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / a.len() as f64
+    };
+    let m64 = mse(&exact[0], &fx64[0]);
+    let m32 = mse(&exact[0], &fx32[0]);
+    assert!(m64 > 0.0 && m64 < 1e-20, "fx64 mse {m64}");
+    assert!(m32 > 1e-18 && m32 < 1e-10, "fx32 mse {m32}");
+    assert!(m32 / m64 > 1e6, "ratio {}", m32 / m64);
+}
