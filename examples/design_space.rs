@@ -1,102 +1,80 @@
-//! Design-space exploration: dtype x polynomial degree x CU count
-//! (the exploration the paper leaves "up to the designer", §3.6.4),
-//! with feasibility from the HLS estimator and objectives from the
-//! simulator.
+//! Design-space exploration (the exploration the paper leaves "up to
+//! the designer", §3.6.4) — a thin client of the first-class `dse`
+//! subsystem: declare the space, explore it in parallel, read the
+//! Pareto frontier.
 //!
 //! ```bash
 //! cargo run --release --example design_space
+//! # equivalent CLI: cargo run --release -- dse --kernel helmholtz --pareto-only
 //! ```
 
-use hbmflow::cli::build_kernel;
 use hbmflow::datatype::DataType;
-use hbmflow::hls;
-use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::dse::{self, SearchSpace};
 use hbmflow::platform::Platform;
-use hbmflow::report::{self, paper};
-use hbmflow::sim::{self, SimResult};
-
-struct Candidate {
-    name: String,
-    r: SimResult,
-    feasible: bool,
-}
+use hbmflow::report::paper;
 
 fn main() -> anyhow::Result<()> {
     let platform = Platform::alveo_u280();
-    let n = paper::N_ELEMENTS;
-    let mut candidates: Vec<Candidate> = Vec::new();
 
-    for p in [7usize, 11] {
-        let kernel = build_kernel("helmholtz", p)?;
-        for dtype in [DataType::F64, DataType::F32, DataType::Fx64, DataType::Fx32] {
-            for cus in 1..=4usize {
-                let mut opts = if dtype.is_fixed() {
-                    OlympusOpts::fixed_point(dtype)
-                } else {
-                    let mut o = OlympusOpts::dataflow(7);
-                    o.dtype = dtype;
-                    o
-                };
-                opts = opts.with_cus(cus);
-                let Ok(spec) = olympus::generate(&kernel, &opts, &platform) else {
-                    continue;
-                };
-                let est = hls::estimate(&spec, &platform);
-                let feasible = est.total.fits_in(&platform.total_resources());
-                let r = sim::simulate(&spec, &est, &platform, n);
-                candidates.push(Candidate {
-                    name: format!("{} p={p} x{cus}CU", dtype.display()),
-                    r,
-                    feasible,
-                });
-            }
-        }
-    }
+    // The full default space: every OlympusOpts axis the paper's Figs.
+    // 15-17 walk by hand (dtype x bus x dataflow x sharing x FIFO x CUs),
+    // times polynomial degree. Narrow any axis before exploring to zoom.
+    let space = SearchSpace::default_for("helmholtz");
+    let ex = dse::explore(&space, &platform, paper::N_ELEMENTS, None)
+        .map_err(anyhow::Error::msg)?;
 
-    let rows: Vec<Vec<String>> = candidates
+    // Ranked table of the 15 best feasible designs + frontier markers.
+    println!("{}", dse::report::text(&ex, 15, false));
+
+    // The designer's two classic picks, straight from the data.
+    let ranked = ex.ranked();
+    let Some(&best) = ranked.first() else {
+        anyhow::bail!("no feasible design in the space");
+    };
+    let best_perf = &ex.outcomes[best];
+    let best_eff = ranked
         .iter()
-        .map(|c| {
-            vec![
-                c.name.clone(),
-                if c.feasible { "yes" } else { "NO" }.into(),
-                report::f(c.r.freq_mhz),
-                report::f(c.r.gflops_cu),
-                report::f(c.r.gflops_system),
-                format!("{:.2}", c.r.efficiency_gflops_w),
-                c.r.bottleneck.clone(),
-            ]
+        .max_by(|&&a, &&b| {
+            let e = |i: usize| {
+                ex.outcomes[i]
+                    .result
+                    .as_ref()
+                    .unwrap()
+                    .sim
+                    .efficiency_gflops_w
+            };
+            e(a).total_cmp(&e(b))
         })
-        .collect();
-    println!(
-        "{}",
-        report::table(
-            &["configuration", "fits", "f(MHz)", "CU", "System", "GF/W", "bound"],
-            &rows
-        )
-    );
-
-    let feasible: Vec<&Candidate> = candidates.iter().filter(|c| c.feasible).collect();
-    let best_perf = feasible
-        .iter()
-        .max_by(|a, b| a.r.gflops_system.total_cmp(&b.r.gflops_system))
-        .unwrap();
-    let best_eff = feasible
-        .iter()
-        .max_by(|a, b| a.r.efficiency_gflops_w.total_cmp(&b.r.efficiency_gflops_w))
-        .unwrap();
+        .map(|&i| &ex.outcomes[i])
+        .expect("at least one feasible design");
     println!(
         "best throughput : {} ({:.1} GFLOPS system)",
-        best_perf.name, best_perf.r.gflops_system
+        best_perf.point.label(),
+        best_perf.result.as_ref().unwrap().sim.gflops_system
     );
     println!(
         "best efficiency : {} ({:.2} GFLOPS/W)",
-        best_eff.name, best_eff.r.efficiency_gflops_w
+        best_eff.point.label(),
+        best_eff.result.as_ref().unwrap().sim.efficiency_gflops_w
     );
     println!(
         "\npaper's conclusion holds when replication is PCIe-bound: \
          \"the design can be optimized for power efficiency by only \
          instantiating one compute unit\" — best-efficiency CU count = {}",
-        best_eff.name.chars().rev().nth(2).unwrap_or('1')
+        best_eff.point.opts.num_cus
     );
+
+    // Sanity: the paper's Fig. 16 custom-precision pick is on (or its
+    // FIFO-refined variant carries) the computed frontier.
+    if let Some(i) = ex.find_config(DataType::Fx32, 11, Some(7), 1) {
+        println!(
+            "Fig. 16 fx32 p=11 DF7 1CU: {}",
+            if ex.is_on_frontier(i) {
+                "on the Pareto frontier"
+            } else {
+                "off the frontier (investigate!)"
+            }
+        );
+    }
     Ok(())
 }

@@ -8,7 +8,12 @@
 //! hbmflow run      [--p 7|11] [--dtype ..] [--elements N] [--artifacts DIR]
 //! hbmflow sweep    [--elements N]
 //! hbmflow ladder   [--elements N]       # the Fig. 15 ladder
+//! hbmflow dse      [--kernel ..] [--p 7,11] [--dtype ..] [--max-cus N]
+//!                  [--ddr4] [--top-k N] [--pareto-only] [--format text|json|csv]
 //! ```
+//!
+//! Flags are `--key value` pairs; the registered boolean flags
+//! (`--pareto-only`, `--ddr4`) may appear bare.
 
 use std::collections::HashMap;
 
@@ -16,6 +21,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{Driver, HelmholtzWorkload};
 use crate::datatype::DataType;
+use crate::dse;
 use crate::dsl;
 use crate::hls;
 use crate::ir::{lower, rewrite, schedule, teil};
@@ -24,6 +30,9 @@ use crate::platform::Platform;
 use crate::report;
 use crate::runtime::Runtime;
 use crate::sim;
+
+/// Flags that may appear bare (no value); all other flags require one.
+const BOOL_FLAGS: &[&str] = &["pareto-only", "ddr4"];
 
 /// Parsed `--key value` flags.
 pub struct Args {
@@ -40,6 +49,17 @@ impl Args {
             let k = argv[i]
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got {}", argv[i]))?;
+            // registered boolean flags may appear bare; every other flag
+            // still requires a value
+            let next_is_flag = match argv.get(i + 1) {
+                Some(v) => v.starts_with("--"),
+                None => true,
+            };
+            if BOOL_FLAGS.contains(&k) && next_is_flag {
+                flags.insert(k.to_string(), "true".to_string());
+                i += 1;
+                continue;
+            }
             let v = argv
                 .get(i + 1)
                 .ok_or_else(|| anyhow!("--{k} needs a value"))?;
@@ -51,6 +71,11 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag: present (bare or any value but false/0) = true.
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some_and(|v| v != "false" && v != "0")
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
@@ -129,6 +154,7 @@ pub fn main_with_args(argv: &[String]) -> Result<String> {
         "ladder" => cmd_ladder(&args),
         "sweep" => cmd_sweep(&args),
         "explore" => cmd_explore(&args),
+        "dse" => cmd_dse(&args),
         "help" | "-h" | "--help" => Ok(HELP.to_string()),
         other => bail!("unknown command {other}\n{HELP}"),
     }
@@ -145,8 +171,12 @@ commands:
   ladder    the full Fig. 15 optimization ladder
   sweep     dtype x p x CUs design-space sweep
   explore   fixed-point format exploration under an error budget
+  dse       parallel design-space exploration with Pareto-frontier
+            extraction over (GFLOPS, energy, BRAM/URAM/DSP)
 flags: --kernel --p --dtype --preset --cus --elements --emit --artifacts
        --mse-budget --max-bits
+dse flags: --p 7,11  --max-cus N  --ddr4  --threads N  --elements N
+           --top-k N (0 = all)  --pareto-only  --format text|json|csv
 ";
 
 fn cmd_compile(args: &Args) -> Result<String> {
@@ -431,6 +461,51 @@ fn cmd_explore(args: &Args) -> Result<String> {
     ))
 }
 
+fn cmd_dse(args: &Args) -> Result<String> {
+    let kernel = args.get("kernel").unwrap_or("helmholtz");
+    let mut space = dse::SearchSpace::default_for(kernel);
+    if let Some(list) = args.get("p") {
+        space.degrees = list
+            .split(',')
+            .map(|s| s.trim().parse().with_context(|| format!("--p {list}")))
+            .collect::<Result<Vec<usize>>>()?;
+    }
+    // gradient's generator ignores p (fixed 8x7x6 operator): keep one
+    // degree so --p cannot enumerate duplicate physical designs
+    if kernel == "gradient" {
+        space.degrees.truncate(1);
+    }
+    if let Some(d) = args.get("dtype") {
+        if d != "all" {
+            let dt = DataType::parse(d).ok_or_else(|| anyhow!("unknown dtype {d}"))?;
+            space.dtypes = vec![dt];
+        }
+    }
+    let max_cus = args.usize_or("max-cus", 4)?.max(1);
+    space.cu_counts = (1..=max_cus).collect();
+    if args.flag("ddr4") {
+        space.memories.push(crate::olympus::MemoryKind::Ddr4);
+    }
+    let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
+    let threads = match args.get("threads") {
+        Some(t) => Some(t.parse::<usize>().with_context(|| format!("--threads {t}"))?),
+        None => None,
+    };
+
+    let platform = Platform::alveo_u280();
+    let ex = dse::explore(&space, &platform, n, threads).map_err(|e| anyhow!(e))?;
+
+    // default: whole frontier with --pareto-only, top 25 otherwise
+    let pareto_only = args.flag("pareto-only");
+    let top_k = args.usize_or("top-k", if pareto_only { 0 } else { 25 })?;
+    match args.get("format").unwrap_or("text") {
+        "text" => Ok(dse::report::text(&ex, top_k, pareto_only)),
+        "json" => Ok(dse::report::json(&ex)),
+        "csv" => Ok(dse::report::csv(&ex)),
+        other => bail!("unknown --format {other} (text|json|csv)"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -493,7 +568,57 @@ mod tests {
     #[test]
     fn bad_flags_are_rejected() {
         assert!(run(&["simulate", "oops"]).is_err());
-        assert!(run(&["simulate", "--p"]).is_err());
+        assert!(run(&["simulate", "--p"]).is_err(), "--p needs a value");
+        assert!(run(&["run", "--artifacts"]).is_err(), "--artifacts needs a value");
         assert!(run(&["simulate", "--dtype", "q4"]).is_err());
+    }
+
+    #[test]
+    fn bare_flags_parse_as_booleans() {
+        let a = Args::parse(&[
+            "dse".into(),
+            "--pareto-only".into(),
+            "--p".into(),
+            "11".into(),
+            "--ddr4".into(),
+        ])
+        .unwrap();
+        assert!(a.flag("pareto-only"));
+        assert!(a.flag("ddr4"));
+        assert!(!a.flag("absent"));
+        assert_eq!(a.get("p"), Some("11"));
+    }
+
+    #[test]
+    fn dse_reports_a_frontier() {
+        // narrow slice of the space so the debug-mode test stays fast
+        let s = run(&[
+            "dse", "--p", "11", "--dtype", "fx32", "--max-cus", "2",
+            "--elements", "200000", "--threads", "2", "--pareto-only",
+        ])
+        .unwrap();
+        assert!(s.contains("Pareto frontier"), "{s}");
+        assert!(s.contains("Fixed Point 32"), "{s}");
+        assert!(s.contains("candidates enumerated"), "{s}");
+    }
+
+    #[test]
+    fn dse_emits_json_and_csv() {
+        let base = [
+            "dse", "--p", "11", "--dtype", "f64", "--max-cus", "1",
+            "--elements", "100000", "--threads", "2",
+        ];
+        let mut j = base.to_vec();
+        j.extend(["--format", "json"]);
+        let js = run(&j).unwrap();
+        assert!(js.trim_start().starts_with('{'), "{js}");
+        assert!(js.contains("\"frontier_size\""), "{js}");
+        let mut c = base.to_vec();
+        c.extend(["--format", "csv"]);
+        let cs = run(&c).unwrap();
+        assert!(cs.starts_with("kernel,p,dtype"), "{cs}");
+        let mut bad = base.to_vec();
+        bad.extend(["--format", "xml"]);
+        assert!(run(&bad).is_err());
     }
 }

@@ -1,0 +1,214 @@
+//! Parallel candidate evaluation: `olympus::generate` →
+//! `hls::estimate` → `sim::simulate` per design point.
+//!
+//! The evaluator is a scoped-thread worker pool over an atomic work
+//! cursor (the offline registry has no rayon): each worker claims the
+//! next point, runs the full generate/estimate/simulate pipeline against
+//! the shared platform model, and writes its slot. Kernel builds
+//! (parse → rewrite → lower, by far the most expensive step) are
+//! memoized per `(kernel, degree)` in [`build_kernels`] before the pool
+//! starts, so every candidate evaluation is pure arithmetic over shared
+//! immutable state. Results come back in enumeration order regardless of
+//! completion order — exploration output is deterministic.
+//!
+//! A point Olympus rejects (e.g. three CUs on the two DDR4 banks) is an
+//! `Err` outcome carrying the reason, not a missing row: infeasibility
+//! is part of the answer the designer asked for.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::hls;
+use crate::ir::affine::Kernel;
+use crate::olympus;
+use crate::platform::{Platform, Resources};
+use crate::sim::{self, SimResult};
+
+use super::space::DesignPoint;
+
+/// Everything measured about one generated system.
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    /// Whole-design resources fit the device (paper Tables 3–5 check).
+    pub feasible: bool,
+    pub fmax_mhz: f64,
+    /// Whole-design resources (CUs + shell).
+    pub total: Resources,
+    /// Worst resource-class utilization against the device budget.
+    pub max_utilization: f64,
+    pub sim: SimResult,
+}
+
+/// One design point plus its evaluation; `Err` carries Olympus's
+/// rejection reason.
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    pub point: DesignPoint,
+    pub result: Result<Evaluated, String>,
+}
+
+impl EvalOutcome {
+    /// Generated and within the device's resource budget.
+    pub fn is_feasible(&self) -> bool {
+        self.result.as_ref().is_ok_and(|e| e.feasible)
+    }
+}
+
+/// Worker count when the caller does not specify one.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Build each distinct `(kernel, degree)` once — the memoized inputs the
+/// worker pool shares.
+pub fn build_kernels(
+    points: &[DesignPoint],
+) -> Result<HashMap<(String, usize), Kernel>, String> {
+    let mut kernels = HashMap::new();
+    for pt in points {
+        let key = (pt.kernel.clone(), pt.p);
+        if let std::collections::hash_map::Entry::Vacant(slot) = kernels.entry(key) {
+            let k = crate::cli::build_kernel(&pt.kernel, pt.p)
+                .map_err(|e| e.to_string())?;
+            slot.insert(k);
+        }
+    }
+    Ok(kernels)
+}
+
+/// Evaluate every point in parallel; results are in input order.
+pub fn evaluate(
+    points: Vec<DesignPoint>,
+    kernels: &HashMap<(String, usize), Kernel>,
+    platform: &Platform,
+    n_elements: u64,
+    threads: Option<usize>,
+) -> Vec<EvalOutcome> {
+    let workers = threads
+        .unwrap_or_else(default_threads)
+        .clamp(1, points.len().max(1));
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<EvalOutcome>>> =
+        points.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let pt = &points[i];
+                let kernel = kernels
+                    .get(&(pt.kernel.clone(), pt.p))
+                    .expect("build_kernels covered every (kernel, p)");
+                let outcome = eval_one(pt, kernel, platform, n_elements);
+                *slots[i].lock().unwrap() = Some(outcome);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("worker pool filled every slot")
+        })
+        .collect()
+}
+
+fn eval_one(
+    pt: &DesignPoint,
+    kernel: &Kernel,
+    platform: &Platform,
+    n_elements: u64,
+) -> EvalOutcome {
+    let result = olympus::generate(kernel, &pt.opts, platform).map(|spec| {
+        let est = hls::estimate(&spec, platform);
+        let budget = platform.total_resources();
+        let sim = sim::simulate(&spec, &est, platform, n_elements);
+        Evaluated {
+            feasible: est.total.fits_in(&budget),
+            fmax_mhz: est.fmax_mhz,
+            total: est.total,
+            max_utilization: est.total.max_utilization(&budget),
+            sim,
+        }
+    });
+    EvalOutcome {
+        point: pt.clone(),
+        result,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatype::DataType;
+    use crate::dse::SearchSpace;
+    use crate::olympus::{BusMode, MemoryKind};
+
+    fn tiny_space() -> SearchSpace {
+        let mut s = SearchSpace::default_for("helmholtz");
+        s.degrees = vec![11];
+        s.dtypes = vec![DataType::F64];
+        s.cu_counts = vec![1, 2];
+        s.dataflow = vec![Some(7)];
+        s.double_buffering = vec![true];
+        s.bus_modes = vec![BusMode::Wide256Parallel];
+        s.mem_sharing = vec![false];
+        s.fifo_depths = vec![None];
+        s
+    }
+
+    #[test]
+    fn results_are_deterministic_and_in_order() {
+        let platform = Platform::alveo_u280();
+        let points = tiny_space().enumerate();
+        let kernels = build_kernels(&points).unwrap();
+        let serial = evaluate(points.clone(), &kernels, &platform, 200_000, Some(1));
+        let parallel = evaluate(points.clone(), &kernels, &platform, 200_000, Some(4));
+        assert_eq!(serial.len(), points.len());
+        for (a, b) in serial.iter().zip(parallel.iter()) {
+            assert_eq!(a.point.label(), b.point.label());
+            let (ea, eb) = (a.result.as_ref().unwrap(), b.result.as_ref().unwrap());
+            assert_eq!(ea.sim.gflops_system, eb.sim.gflops_system);
+            assert_eq!(ea.total, eb.total);
+        }
+    }
+
+    #[test]
+    fn rejected_points_carry_the_olympus_reason() {
+        let mut s = tiny_space();
+        s.memories = vec![MemoryKind::Ddr4];
+        s.cu_counts = vec![3]; // DDR4 has two banks: rejected
+        let points = s.enumerate();
+        let kernels = build_kernels(&points).unwrap();
+        let platform = Platform::alveo_u280();
+        let out = evaluate(points, &kernels, &platform, 100_000, Some(2));
+        assert!(!out.is_empty());
+        for o in &out {
+            assert!(o.result.is_err(), "{}", o.point.label());
+            assert!(!o.is_feasible());
+        }
+    }
+
+    #[test]
+    fn kernel_builds_are_memoized_per_degree() {
+        let mut s = tiny_space();
+        s.degrees = vec![7, 11];
+        let points = s.enumerate();
+        let kernels = build_kernels(&points).unwrap();
+        assert_eq!(kernels.len(), 2);
+    }
+
+    #[test]
+    fn unknown_kernel_is_a_build_error() {
+        let s = SearchSpace::default_for("warp-drive");
+        assert!(build_kernels(&s.enumerate()).is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Design-space exploration engine (DESIGN.md §5).
+//!
+//! The paper integrates compiler and hardware optimizations but leaves
+//! the actual exploration "up to the designer" (§3.6.4). This subsystem
+//! closes that gap: it turns the hand-rolled sweep loops of the early
+//! examples into a first-class engine —
+//!
+//!  * [`SearchSpace`] — the space as a *value*: independent axes over
+//!    `OlympusOpts` (dtype, bus mode, dataflow groups, memory sharing,
+//!    FIFO depth, CU count, HBM vs DDR4) × kernel × polynomial degree;
+//!  * [`eval`] — a parallel evaluator running `olympus::generate` →
+//!    `hls::estimate` → `sim::simulate` per candidate, with memoized
+//!    kernel builds and deterministic result ordering;
+//!  * [`pareto`] — feasibility filtering against the platform's resource
+//!    budget and Pareto-frontier extraction over
+//!    (GFLOPS, energy, BRAM/URAM/DSP);
+//!  * [`report`] — ranked text / JSON / CSV output.
+//!
+//! Entry points: the `hbmflow dse` CLI subcommand, the
+//! `examples/design_space.rs` thin client, and [`explore`] for
+//! programmatic use. Every future optimization PR should prove its win
+//! against the whole space (is the new point on the frontier?) instead
+//! of a single hand-picked configuration.
+
+pub mod eval;
+pub mod pareto;
+pub mod report;
+pub mod space;
+
+use std::collections::HashSet;
+
+use crate::datatype::DataType;
+use crate::platform::Platform;
+
+pub use eval::{EvalOutcome, Evaluated};
+pub use pareto::{dominates, pareto_indices};
+pub use space::{DesignPoint, SearchSpace};
+
+/// The result of exploring one [`SearchSpace`]: every outcome (in
+/// deterministic enumeration order) plus the indices of the feasible
+/// Pareto-frontier members.
+#[derive(Debug, Clone)]
+pub struct Exploration {
+    pub kernel: String,
+    pub n_elements: u64,
+    pub outcomes: Vec<EvalOutcome>,
+    /// Indices into `outcomes` of the non-dominated feasible candidates.
+    pub frontier: Vec<usize>,
+}
+
+impl Exploration {
+    pub fn enumerated(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    pub fn feasible_count(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.is_feasible()).count()
+    }
+
+    /// Candidates Olympus refused to generate (channel/CU limits).
+    pub fn rejected_count(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.result.is_err()).count()
+    }
+
+    pub fn is_on_frontier(&self, idx: usize) -> bool {
+        self.frontier.contains(&idx)
+    }
+
+    /// Find a candidate identifying one of the paper's figure points
+    /// (Figs. 15–17): dtype, degree, dataflow groups, and CU count,
+    /// with the figures' shared methodology pinned (wide parallel bus,
+    /// double buffering, HBM, no sharing) so a Narrow-bus "Custom"
+    /// variant can never answer for a published design point. Only the
+    /// FIFO-depth refinement is left free (the multi-CU methodology
+    /// forces it); frontier members are preferred so callers land on
+    /// the surviving variant.
+    pub fn find_config(
+        &self,
+        dtype: DataType,
+        p: usize,
+        dataflow: Option<usize>,
+        cus: usize,
+    ) -> Option<usize> {
+        let matches = |o: &EvalOutcome| {
+            o.point.p == p
+                && o.point.opts.dtype == dtype
+                && o.point.opts.dataflow == dataflow
+                && o.point.opts.num_cus == cus
+                && o.point.opts.bus == crate::olympus::BusMode::Wide256Parallel
+                && o.point.opts.double_buffering
+                && o.point.opts.memory == crate::olympus::MemoryKind::Hbm
+                && !o.point.opts.mem_sharing
+        };
+        self.frontier
+            .iter()
+            .copied()
+            .find(|&i| matches(&self.outcomes[i]))
+            .or_else(|| self.outcomes.iter().position(matches))
+    }
+
+    /// Feasible candidates ranked by system GFLOPS, best first (ties
+    /// broken by enumeration order, which is deterministic).
+    pub fn ranked(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.outcomes.len())
+            .filter(|&i| self.outcomes[i].is_feasible())
+            .collect();
+        idx.sort_by(|&a, &b| {
+            let ga = self.outcomes[a].result.as_ref().unwrap().sim.gflops_system;
+            let gb = self.outcomes[b].result.as_ref().unwrap().sim.gflops_system;
+            gb.total_cmp(&ga).then(a.cmp(&b))
+        });
+        idx
+    }
+}
+
+/// Explore a search space on a platform: enumerate, normalize (clamp
+/// dataflow to the kernel's nest count), deduplicate, evaluate in
+/// parallel, and extract the feasible Pareto frontier.
+///
+/// `threads = None` uses one worker per available core.
+pub fn explore(
+    space: &SearchSpace,
+    platform: &Platform,
+    n_elements: u64,
+    threads: Option<usize>,
+) -> Result<Exploration, String> {
+    let mut points = space.enumerate();
+    let kernels = eval::build_kernels(&points)?;
+
+    // normalize: a kernel with fewer nests than the requested dataflow
+    // decomposition caps at one group per nest (cli::cmd_compile does
+    // the same clamp)
+    for pt in &mut points {
+        if let Some(g) = pt.opts.dataflow {
+            let nests = kernels[&(pt.kernel.clone(), pt.p)].nests.len();
+            pt.opts.dataflow = Some(g.min(nests));
+        }
+    }
+    let mut seen = HashSet::new();
+    points.retain(|pt| seen.insert(pt.fingerprint()));
+
+    let outcomes = eval::evaluate(points, &kernels, platform, n_elements, threads);
+
+    let feasible: Vec<usize> = (0..outcomes.len())
+        .filter(|&i| outcomes[i].is_feasible())
+        .collect();
+    let vectors: Vec<Vec<f64>> = feasible
+        .iter()
+        .map(|&i| pareto::objectives(outcomes[i].result.as_ref().unwrap()))
+        .collect();
+    let frontier: Vec<usize> = pareto::pareto_indices(&vectors)
+        .into_iter()
+        .map(|j| feasible[j])
+        .collect();
+
+    Ok(Exploration {
+        kernel: space.kernel.clone(),
+        n_elements,
+        outcomes,
+        frontier,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::olympus::BusMode;
+
+    fn small_exploration() -> Exploration {
+        let mut s = SearchSpace::default_for("helmholtz");
+        s.degrees = vec![11];
+        s.dtypes = vec![DataType::F64, DataType::Fx32];
+        s.cu_counts = vec![1];
+        s.dataflow = vec![Some(2), Some(7)];
+        s.double_buffering = vec![true];
+        s.bus_modes = vec![BusMode::Wide256Parallel];
+        s.mem_sharing = vec![false];
+        s.fifo_depths = vec![None];
+        explore(&s, &Platform::alveo_u280(), 200_000, Some(2)).unwrap()
+    }
+
+    #[test]
+    fn frontier_members_are_feasible_and_non_dominated() {
+        let ex = small_exploration();
+        assert!(!ex.frontier.is_empty());
+        assert!(ex.feasible_count() > 0);
+        for &i in &ex.frontier {
+            assert!(ex.outcomes[i].is_feasible());
+        }
+        for &a in &ex.frontier {
+            for &b in &ex.frontier {
+                if a != b {
+                    let oa = pareto::objectives(ex.outcomes[a].result.as_ref().unwrap());
+                    let ob = pareto::objectives(ex.outcomes[b].result.as_ref().unwrap());
+                    assert!(!dominates(&oa, &ob));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ranking_is_descending_in_system_gflops() {
+        let ex = small_exploration();
+        let ranked = ex.ranked();
+        let g = |i: usize| ex.outcomes[i].result.as_ref().unwrap().sim.gflops_system;
+        for w in ranked.windows(2) {
+            assert!(g(w[0]) >= g(w[1]));
+        }
+    }
+
+    #[test]
+    fn find_config_locates_the_df7_point() {
+        let ex = small_exploration();
+        let i = ex
+            .find_config(DataType::Fx32, 11, Some(7), 1)
+            .expect("fx32 p=11 DF7 1CU enumerated");
+        assert_eq!(ex.outcomes[i].point.opts.dtype, DataType::Fx32);
+        assert!(ex.find_config(DataType::F32, 99, None, 9).is_none());
+    }
+
+    #[test]
+    fn oversized_dataflow_requests_clamp_and_dedupe() {
+        let mut s = SearchSpace::default_for("helmholtz");
+        s.degrees = vec![11];
+        s.dtypes = vec![DataType::F64];
+        s.cu_counts = vec![1];
+        // helmholtz lowers to 7 nests: 7 and 99 normalize to the same point
+        s.dataflow = vec![Some(7), Some(99)];
+        s.double_buffering = vec![true];
+        s.bus_modes = vec![BusMode::Wide256Parallel];
+        s.mem_sharing = vec![false];
+        s.fifo_depths = vec![None];
+        let ex = explore(&s, &Platform::alveo_u280(), 100_000, Some(1)).unwrap();
+        assert_eq!(ex.enumerated(), 1, "duplicate clamped point removed");
+        assert_eq!(ex.outcomes[0].point.opts.dataflow, Some(7));
+    }
+}

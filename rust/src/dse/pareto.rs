@@ -1,0 +1,125 @@
+//! Pareto-frontier extraction over candidate objective vectors.
+//!
+//! Objectives are oriented so that **larger is always better**; quantities
+//! the designer minimizes (energy, BRAM/URAM/DSP) are negated when the
+//! vector is assembled. A candidate `a` *dominates* `b` when `a` is at
+//! least as good in every objective and strictly better in at least one —
+//! the standard strict Pareto dominance, so exact ties survive (two
+//! candidates with identical vectors are both frontier members; the
+//! designer breaks the tie on axes the objectives do not capture).
+//!
+//! The extraction is the O(n²) pairwise scan: with the full default
+//! helmholtz space (~2k candidates, 5 objectives) that is ~10⁷ float
+//! comparisons — noise next to the evaluation pass that produced the
+//! vectors. Replace with a divide-and-conquer skyline only if spaces grow
+//! by orders of magnitude.
+
+use super::eval::Evaluated;
+
+/// `true` when `a` Pareto-dominates `b` (both oriented larger-is-better):
+/// `a[i] >= b[i]` for all `i` and `a[j] > b[j]` for some `j`.
+///
+/// Vectors must be the same length and free of NaN (every objective in
+/// `objectives` is a finite simulator/estimator output).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x < y {
+            return false;
+        }
+        if x > y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the non-dominated points (the Pareto frontier), in input
+/// order. Empty input yields an empty frontier; a singleton is always
+/// its own frontier.
+pub fn pareto_indices(points: &[Vec<f64>]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, q)| j != i && dominates(q, &points[i]))
+        })
+        .collect()
+}
+
+/// Objective vector of one evaluated candidate, larger-is-better:
+/// `[system GFLOPS, −energy (J), −BRAM, −URAM, −DSP]` — the throughput /
+/// energy / resource trade the paper's Figs. 15–18 walk by hand.
+pub fn objectives(e: &Evaluated) -> Vec<f64> {
+    vec![
+        e.sim.gflops_system,
+        -e.sim.energy_j,
+        -(e.total.bram as f64),
+        -(e.total.uram as f64),
+        -(e.total.dsp as f64),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domination_requires_strict_improvement_somewhere() {
+        assert!(dominates(&[2.0, 1.0], &[1.0, 1.0]));
+        assert!(dominates(&[2.0, 2.0], &[1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal never dominates");
+        assert!(!dominates(&[1.0, 2.0], &[2.0, 1.0]), "trade-off: incomparable");
+        assert!(!dominates(&[0.5, 2.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn frontier_drops_dominated_points() {
+        let pts = vec![
+            vec![1.0, 1.0], // dominated by [2,2]
+            vec![2.0, 2.0],
+            vec![3.0, 0.0], // trade-off: survives
+        ];
+        assert_eq!(pareto_indices(&pts), vec![1, 2]);
+    }
+
+    #[test]
+    fn exact_ties_both_survive() {
+        let pts = vec![vec![1.0, 2.0], vec![1.0, 2.0], vec![0.5, 0.5]];
+        assert_eq!(pareto_indices(&pts), vec![0, 1]);
+    }
+
+    #[test]
+    fn empty_and_singleton_spaces() {
+        assert!(pareto_indices(&[]).is_empty());
+        assert_eq!(pareto_indices(&[vec![-1.0, -1.0]]), vec![0]);
+    }
+
+    #[test]
+    fn single_objective_keeps_only_the_max() {
+        let pts = vec![vec![1.0], vec![3.0], vec![2.0], vec![3.0]];
+        assert_eq!(pareto_indices(&pts), vec![1, 3], "tied maxima both kept");
+    }
+
+    #[test]
+    fn frontier_is_mutually_non_dominating() {
+        // a small grid: frontier members must be pairwise incomparable
+        let mut pts = Vec::new();
+        for i in 0..5 {
+            for j in 0..5 {
+                pts.push(vec![i as f64, j as f64, -((i * j) as f64)]);
+            }
+        }
+        let front = pareto_indices(&pts);
+        assert!(!front.is_empty());
+        for &a in &front {
+            for &b in &front {
+                if a != b {
+                    assert!(!dominates(&pts[a], &pts[b]), "{a} dominates {b}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! Ranked reporting for exploration results: text tables for humans,
+//! JSON/CSV for downstream tooling (plotting the Figs. 15–17 frontier,
+//! regression-tracking a PR's claimed win against the whole space).
+//!
+//! The text report footers the paper's own chosen configurations
+//! (Figs. 15–17) with their frontier status, so a reader can see at a
+//! glance whether the reproduction's frontier passes through the
+//! published design points.
+
+use crate::datatype::DataType;
+use crate::report as fmt;
+use crate::util::json::Json;
+
+use super::{EvalOutcome, Exploration};
+
+/// Human-readable ranked table. `top_k = 0` shows every feasible row;
+/// `pareto_only` restricts to frontier members.
+pub fn text(ex: &Exploration, top_k: usize, pareto_only: bool) -> String {
+    let mut shown: Vec<usize> = ex.ranked();
+    if pareto_only {
+        shown.retain(|&i| ex.is_on_frontier(i));
+    }
+    if top_k > 0 {
+        shown.truncate(top_k);
+    }
+
+    let rows: Vec<Vec<String>> = shown
+        .iter()
+        .map(|&i| {
+            let o = &ex.outcomes[i];
+            let e = o.result.as_ref().unwrap();
+            vec![
+                o.point.label(),
+                if ex.is_on_frontier(i) { "*" } else { "" }.into(),
+                fmt::f(e.fmax_mhz),
+                fmt::f(e.sim.gflops_cu),
+                fmt::f(e.sim.gflops_system),
+                format!("{:.2}", e.sim.efficiency_gflops_w),
+                fmt::f(e.sim.energy_j),
+                e.total.bram.to_string(),
+                e.total.uram.to_string(),
+                e.total.dsp.to_string(),
+                e.sim.bottleneck.clone(),
+            ]
+        })
+        .collect();
+
+    let mut out = fmt::table(
+        &[
+            "configuration",
+            "P",
+            "f(MHz)",
+            "CU",
+            "System",
+            "GF/W",
+            "J",
+            "BRAM",
+            "URAM",
+            "DSP",
+            "bound",
+        ],
+        &rows,
+    );
+    out.push('\n');
+    out.push_str(&summary(ex));
+    if ex.kernel == "helmholtz" {
+        out.push('\n');
+        out.push_str(&paper_reference_footer(ex));
+    }
+    out
+}
+
+fn summary(ex: &Exploration) -> String {
+    format!(
+        "{} candidates enumerated ({} feasible, {} over budget, {} rejected \
+         by olympus); Pareto frontier: {} designs",
+        ex.enumerated(),
+        ex.feasible_count(),
+        ex.enumerated() - ex.feasible_count() - ex.rejected_count(),
+        ex.rejected_count(),
+        ex.frontier.len(),
+    )
+}
+
+/// Frontier status of the paper's published design points (Figs. 15–17).
+fn paper_reference_footer(ex: &Exploration) -> String {
+    let refs = [
+        ("Fig. 15 Dataflow-7 double ", DataType::F64, 11, 1, 43.410),
+        ("Fig. 16 custom precision  ", DataType::Fx32, 11, 1, 103.0),
+        ("Fig. 17 replication       ", DataType::Fx32, 11, 3, 87.0),
+    ];
+    let mut out = String::from("paper reference points:\n");
+    for (name, dtype, p, cus, paper_gflops) in refs {
+        let line = match ex.find_config(dtype, p, Some(7), cus) {
+            Some(i) => {
+                let o = &ex.outcomes[i];
+                let status = if ex.is_on_frontier(i) {
+                    "on frontier"
+                } else if o.is_feasible() {
+                    "feasible, off frontier"
+                } else {
+                    "infeasible"
+                };
+                match &o.result {
+                    Ok(e) => format!(
+                        "  {name} ({} p={p} x{cus}CU): {status} — {} GFLOPS (paper {})",
+                        o.point.opts.dtype,
+                        fmt::f(e.sim.gflops_system),
+                        fmt::f(paper_gflops),
+                    ),
+                    Err(reason) => format!("  {name}: rejected — {reason}"),
+                }
+            }
+            None => format!("  {name}: not enumerated in this space"),
+        };
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+/// Machine-readable JSON: summary plus one record per outcome
+/// (rejections included, carrying their reason).
+pub fn json(ex: &Exploration) -> String {
+    let candidates: Vec<Json> = ex
+        .outcomes
+        .iter()
+        .enumerate()
+        .map(|(i, o)| candidate_json(ex, i, o))
+        .collect();
+    Json::obj(vec![
+        ("kernel", Json::str(ex.kernel.clone())),
+        ("elements", Json::num(ex.n_elements as f64)),
+        ("enumerated", Json::num(ex.enumerated() as f64)),
+        ("feasible", Json::num(ex.feasible_count() as f64)),
+        ("rejected", Json::num(ex.rejected_count() as f64)),
+        ("frontier_size", Json::num(ex.frontier.len() as f64)),
+        ("candidates", Json::Arr(candidates)),
+    ])
+    .to_string()
+}
+
+fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
+    let opts = &o.point.opts;
+    let mut pairs = vec![
+        ("label", Json::str(o.point.label())),
+        ("kernel", Json::str(o.point.kernel.clone())),
+        ("p", Json::num(o.point.p as f64)),
+        ("dtype", Json::str(opts.dtype.name())),
+        ("cus", Json::num(opts.num_cus as f64)),
+        ("bus", Json::str(opts.bus.name())),
+        ("memory", Json::str(opts.memory.name())),
+        ("double_buffering", Json::Bool(opts.double_buffering)),
+        (
+            "dataflow",
+            opts.dataflow.map(|g| Json::num(g as f64)).unwrap_or(Json::Null),
+        ),
+        ("mem_sharing", Json::Bool(opts.mem_sharing)),
+        (
+            "fifo_depth",
+            opts.fifo_depth.map(|d| Json::num(d as f64)).unwrap_or(Json::Null),
+        ),
+        ("pareto", Json::Bool(ex.is_on_frontier(i))),
+    ];
+    match &o.result {
+        Ok(e) => pairs.extend([
+            ("feasible", Json::Bool(e.feasible)),
+            ("fmax_mhz", Json::num(e.fmax_mhz)),
+            ("gflops_cu", Json::num(e.sim.gflops_cu)),
+            ("gflops_system", Json::num(e.sim.gflops_system)),
+            ("gflops_per_w", Json::num(e.sim.efficiency_gflops_w)),
+            ("power_w", Json::num(e.sim.avg_power_w)),
+            ("energy_j", Json::num(e.sim.energy_j)),
+            ("lut", Json::num(e.total.lut as f64)),
+            ("ff", Json::num(e.total.ff as f64)),
+            ("bram", Json::num(e.total.bram as f64)),
+            ("uram", Json::num(e.total.uram as f64)),
+            ("dsp", Json::num(e.total.dsp as f64)),
+            ("max_utilization", Json::num(e.max_utilization)),
+            ("bottleneck", Json::str(e.sim.bottleneck.clone())),
+        ]),
+        Err(reason) => pairs.extend([
+            ("feasible", Json::Bool(false)),
+            ("rejected", Json::str(reason.clone())),
+        ]),
+    }
+    Json::obj(pairs)
+}
+
+/// CSV with one row per outcome; rejected candidates keep their axis
+/// columns and carry the reason in the last field.
+pub fn csv(ex: &Exploration) -> String {
+    let mut out = String::from(
+        "kernel,p,dtype,cus,bus,memory,double_buffering,dataflow,mem_sharing,\
+         fifo_depth,status,feasible,pareto,fmax_mhz,gflops_cu,gflops_system,\
+         gflops_per_w,energy_j,lut,ff,bram,uram,dsp,bottleneck,reject_reason\n",
+    );
+    for (i, o) in ex.outcomes.iter().enumerate() {
+        let opts = &o.point.opts;
+        let axes = format!(
+            "{},{},{},{},{},{},{},{},{},{}",
+            o.point.kernel,
+            o.point.p,
+            opts.dtype.name(),
+            opts.num_cus,
+            opts.bus.name(),
+            opts.memory.name(),
+            opts.double_buffering,
+            opts.dataflow.map(|g| g.to_string()).unwrap_or_default(),
+            opts.mem_sharing,
+            opts.fifo_depth.map(|d| d.to_string()).unwrap_or_default(),
+        );
+        let row = match &o.result {
+            Ok(e) => format!(
+                "{axes},ok,{},{},{:.3},{:.4},{:.4},{:.4},{:.4},{},{},{},{},{},{},\n",
+                e.feasible,
+                ex.is_on_frontier(i),
+                e.fmax_mhz,
+                e.sim.gflops_cu,
+                e.sim.gflops_system,
+                e.sim.efficiency_gflops_w,
+                e.sim.energy_j,
+                e.total.lut,
+                e.total.ff,
+                e.total.bram,
+                e.total.uram,
+                e.total.dsp,
+                e.sim.bottleneck,
+            ),
+            Err(reason) => format!(
+                "{axes},rejected,false,false,,,,,,,,,,,,{}\n",
+                reason.replace(',', ";"),
+            ),
+        };
+        out.push_str(&row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{explore, SearchSpace};
+    use crate::olympus::BusMode;
+    use crate::platform::Platform;
+    use crate::util::json;
+
+    fn small() -> Exploration {
+        let mut s = SearchSpace::default_for("helmholtz");
+        s.degrees = vec![11];
+        s.dtypes = vec![DataType::F64, DataType::Fx32];
+        s.cu_counts = vec![1];
+        s.dataflow = vec![Some(7)];
+        s.double_buffering = vec![true];
+        s.bus_modes = vec![BusMode::Wide256Parallel];
+        s.mem_sharing = vec![false];
+        s.fifo_depths = vec![None];
+        explore(&s, &Platform::alveo_u280(), 200_000, Some(2)).unwrap()
+    }
+
+    #[test]
+    fn text_report_ranks_and_footers() {
+        let ex = small();
+        let t = text(&ex, 0, false);
+        assert!(t.contains("configuration"), "{t}");
+        assert!(t.contains("Pareto frontier"), "{t}");
+        assert!(t.contains("Fig. 16 custom precision"), "{t}");
+        // pareto-only is a subset of the full report
+        let p = text(&ex, 0, true);
+        assert!(p.lines().count() <= t.lines().count());
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn top_k_truncates_rows() {
+        let ex = small();
+        let all = text(&ex, 0, false);
+        let one = text(&ex, 1, false);
+        assert!(one.lines().count() < all.lines().count());
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_parser() {
+        let ex = small();
+        let j = json::parse(&json(&ex)).expect("valid JSON");
+        assert_eq!(j.get("kernel").as_str(), Some("helmholtz"));
+        let cands = j.get("candidates").as_arr().unwrap();
+        assert_eq!(cands.len(), ex.enumerated());
+        assert_eq!(cands[0].get("dtype").as_str(), Some("f64"));
+        assert!(cands[0].get("gflops_system").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn csv_has_one_row_per_outcome_plus_header() {
+        let ex = small();
+        let c = csv(&ex);
+        assert_eq!(c.lines().count(), 1 + ex.enumerated());
+        assert!(c.starts_with("kernel,p,dtype"));
+        assert!(c.contains("fx32"));
+        let ncols = c.lines().next().unwrap().split(',').count();
+        for line in c.lines() {
+            assert_eq!(line.split(',').count(), ncols, "{line}");
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Declarative design-space definition over `OlympusOpts` axes.
+//!
+//! The paper leaves exploration "up to the designer" (§3.6.4); here the
+//! space itself is a value: a `SearchSpace` is the cross product of
+//! independent axes — data type, bus mode, dataflow decomposition,
+//! Mnemosyne sharing, FIFO depth, CU count, HBM vs DDR4 — times kernel
+//! and polynomial degree. `enumerate` expands it into concrete
+//! `DesignPoint`s, pruning only combinations that are *structurally*
+//! meaningless (FIFO depth without dataflow streams; sharing on multi-
+//! group schedules, which the resource model scopes away per §3.6.4).
+//! Everything else — including configurations Olympus will reject, like
+//! three CUs on the two DDR4 banks — is enumerated and left to the
+//! evaluator, so infeasibility is *reported*, not silently skipped.
+
+use crate::datatype::DataType;
+use crate::olympus::{BusMode, MemoryKind, OlympusOpts};
+
+/// One concrete candidate: `kernel` at degree `p` generated with `opts`.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub kernel: String,
+    pub p: usize,
+    pub opts: OlympusOpts,
+}
+
+impl DesignPoint {
+    /// Row label, e.g. `"Fixed Point 32 (p-dataflow 7) p=11 x1CU"`.
+    pub fn label(&self) -> String {
+        format!("{} p={} x{}CU", self.opts.label(), self.p, self.opts.num_cus)
+    }
+
+    /// Stable identity string used to deduplicate points whose axis
+    /// values normalize to the same generated system (e.g. the multi-CU
+    /// methodology forces `fifo_depth = Some(64)`, collapsing the naive
+    /// FIFO axis value onto the reduced one).
+    pub fn fingerprint(&self) -> String {
+        format!("{}|p={}|{:?}", self.kernel, self.p, self.opts)
+    }
+}
+
+/// The cross product of exploration axes for one kernel.
+///
+/// Construct with [`SearchSpace::default_for`] and narrow axes from
+/// there; every `Vec` axis must stay non-empty.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub kernel: String,
+    /// Polynomial degrees (the paper evaluates p = 7 and p = 11).
+    pub degrees: Vec<usize>,
+    pub dtypes: Vec<DataType>,
+    pub cu_counts: Vec<usize>,
+    /// Dataflow decomposition: `None` = flat kernel, `Some(n)` =
+    /// n-compute-group pipeline (clamped to the kernel's nest count by
+    /// the explorer).
+    pub dataflow: Vec<Option<usize>>,
+    pub double_buffering: Vec<bool>,
+    pub bus_modes: Vec<BusMode>,
+    pub mem_sharing: Vec<bool>,
+    /// Stream FIFO depth in words (`None` = naive full-array sizing).
+    pub fifo_depths: Vec<Option<usize>>,
+    pub memories: Vec<MemoryKind>,
+}
+
+impl SearchSpace {
+    /// The default exploration space for a named kernel: the full
+    /// optimization ladder of the paper (Figs. 15–17) as independent
+    /// axes. ~2k candidates for helmholtz after normalization.
+    pub fn default_for(kernel: &str) -> SearchSpace {
+        SearchSpace {
+            kernel: kernel.to_string(),
+            // gradient's generator ignores p (fixed 8x7x6 operator), so a
+            // single degree avoids enumerating duplicates
+            degrees: match kernel {
+                "gradient" => vec![7],
+                _ => vec![7, 11],
+            },
+            dtypes: DataType::ALL.to_vec(),
+            cu_counts: vec![1, 2, 3, 4],
+            dataflow: vec![None, Some(1), Some(2), Some(3), Some(7)],
+            double_buffering: vec![false, true],
+            bus_modes: vec![
+                BusMode::Narrow64,
+                BusMode::Wide256Serial,
+                BusMode::Wide256Parallel,
+            ],
+            mem_sharing: vec![false, true],
+            fifo_depths: vec![None, Some(64)],
+            memories: vec![MemoryKind::Hbm],
+        }
+    }
+
+    /// Expand the axes into concrete design points. Points whose axis
+    /// values normalize to the same options are emitted once (e.g. the
+    /// multi-CU methodology forces `fifo_depth = Some(64)`, collapsing
+    /// both FIFO axis values); dataflow clamping against the kernel's
+    /// nest count happens later, in [`crate::dse::explore`].
+    pub fn enumerate(&self) -> Vec<DesignPoint> {
+        let mut seen = std::collections::HashSet::new();
+        let mut points = Vec::new();
+        for &p in &self.degrees {
+            for &dtype in &self.dtypes {
+                for &memory in &self.memories {
+                    for &bus in &self.bus_modes {
+                        for &db in &self.double_buffering {
+                            for &dataflow in &self.dataflow {
+                                for &sharing in &self.mem_sharing {
+                                    for &fifo in &self.fifo_depths {
+                                        if !coherent(dataflow, sharing, fifo) {
+                                            continue;
+                                        }
+                                        for &cus in &self.cu_counts {
+                                            let pt = self.point(
+                                                p, dtype, memory, bus, db,
+                                                dataflow, sharing, fifo, cus,
+                                            );
+                                            if seen.insert(pt.fingerprint()) {
+                                                points.push(pt);
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        points
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn point(
+        &self,
+        p: usize,
+        dtype: DataType,
+        memory: MemoryKind,
+        bus: BusMode,
+        double_buffering: bool,
+        dataflow: Option<usize>,
+        mem_sharing: bool,
+        fifo: Option<usize>,
+        cus: usize,
+    ) -> DesignPoint {
+        let mut opts = OlympusOpts {
+            double_buffering,
+            bus,
+            memory,
+            dataflow,
+            mem_sharing,
+            dtype,
+            num_cus: 1,
+            fifo_depth: None,
+            lut_mult_shift: false,
+            target_freq_mhz: 450.0,
+        }
+        // applies the paper's multi-CU methodology (225 MHz target,
+        // reduced FIFOs, LUT multiplier shift) when cus > 1
+        .with_cus(cus);
+        if fifo.is_some() {
+            opts.fifo_depth = fifo;
+        }
+        DesignPoint {
+            kernel: self.kernel.clone(),
+            p,
+            opts,
+        }
+    }
+}
+
+/// Structural pruning: drop axis combinations that cannot change the
+/// generated system.
+fn coherent(dataflow: Option<usize>, sharing: bool, fifo: Option<usize>) -> bool {
+    // stream FIFOs only exist *between* compute groups: flat kernels and
+    // 1-group dataflows have none, so the sizing axis is inert there
+    if fifo.is_some() && !dataflow.is_some_and(|g| g > 1) {
+        return false;
+    }
+    // Mnemosyne sharing is modeled for flat / 1-group schedules only
+    // (paper §3.6.4: lifetimes are scoped per subkernel); on >1 groups
+    // the resource model ignores the plan, so the combo is a duplicate
+    if sharing && dataflow.is_some_and(|g| g > 1) {
+        return false;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn default_helmholtz_space_is_large_and_unique() {
+        let points = SearchSpace::default_for("helmholtz").enumerate();
+        assert!(points.len() >= 100, "only {} candidates", points.len());
+        let unique: HashSet<String> =
+            points.iter().map(|pt| pt.fingerprint()).collect();
+        assert_eq!(unique.len(), points.len(), "raw enumeration never repeats");
+    }
+
+    #[test]
+    fn incoherent_combinations_are_pruned() {
+        let points = SearchSpace::default_for("helmholtz").enumerate();
+        for pt in &points {
+            if pt.opts.dataflow.unwrap_or(1) <= 1 {
+                // multi-CU methodology may set a FIFO depth, but the
+                // naive/reduced axis itself never reaches stream-less
+                // (flat or 1-group) schedules
+                assert!(
+                    pt.opts.num_cus > 1 || pt.opts.fifo_depth.is_none(),
+                    "{}",
+                    pt.fingerprint()
+                );
+            }
+            if pt.opts.mem_sharing {
+                assert!(pt.opts.dataflow.unwrap_or(1) <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn narrowing_axes_shrinks_the_space() {
+        let mut space = SearchSpace::default_for("helmholtz");
+        let full = space.enumerate().len();
+        space.dtypes = vec![DataType::Fx32];
+        space.degrees = vec![11];
+        let narrowed = space.enumerate().len();
+        assert!(narrowed < full / 4, "{narrowed} vs {full}");
+        assert!(narrowed > 0);
+    }
+
+    #[test]
+    fn multi_cu_points_carry_the_paper_methodology() {
+        let points = SearchSpace::default_for("helmholtz").enumerate();
+        for pt in points.iter().filter(|pt| pt.opts.num_cus > 1) {
+            assert_eq!(pt.opts.target_freq_mhz, 225.0, "{}", pt.label());
+            assert!(pt.opts.lut_mult_shift);
+        }
+    }
+
+    #[test]
+    fn gradient_space_uses_a_single_degree() {
+        let space = SearchSpace::default_for("gradient");
+        assert_eq!(space.degrees, vec![7]);
+    }
+
+    #[test]
+    fn labels_are_readable() {
+        let space = SearchSpace::default_for("helmholtz");
+        let pt = &space.enumerate()[0];
+        let l = pt.label();
+        assert!(l.contains("p="), "{l}");
+        assert!(l.contains("CU"), "{l}");
+    }
+}

@@ -1,4 +1,11 @@
-//! Shape inference and verification for teil ops.
+//! Shape inference and verification for teil ops (paper §3.3.2: TeIL
+//! values carry static shapes; every op's result shape is derivable).
+//!
+//! `infer` computes the result shape of one op against the module's
+//! existing values. `teil::Module::push` runs it on every op insertion,
+//! so malformed programs fail at IR-construction time, not at lowering —
+//! and since the rewriter (`ir::rewrite`) rebuilds modules through the
+//! same path, factorized contraction chains are shape-checked too.
 
 use super::teil::{Module, Op};
 

@@ -2,8 +2,10 @@
 //! from a tensor DSL — reproduction of Soldavini et al., ACM TRETS 2022
 //! (DOI 10.1145/3563553) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! See DESIGN.md for the system inventory and experiment index; see the
-//! module docs for per-subsystem detail. The top-level pipeline:
+//! See DESIGN.md for the system inventory and experiment index, and
+//! README.md for the quickstart; see the module docs for per-subsystem
+//! detail. The `dse` module explores the whole option space the pipeline
+//! below walks one configuration of. The top-level pipeline:
 //!
 //! ```no_run
 //! use hbmflow::prelude::*;
@@ -21,6 +23,7 @@ pub mod cli;
 pub mod codegen;
 pub mod coordinator;
 pub mod datatype;
+pub mod dse;
 pub mod dsl;
 pub mod hls;
 pub mod ir;

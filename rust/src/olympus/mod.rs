@@ -29,6 +29,17 @@ pub enum BusMode {
     Wide256Parallel,
 }
 
+impl BusMode {
+    /// Short name used in DSE reports and CSV/JSON output.
+    pub fn name(self) -> &'static str {
+        match self {
+            BusMode::Narrow64 => "64b",
+            BusMode::Wide256Serial => "256b-serial",
+            BusMode::Wide256Parallel => "256b-parallel",
+        }
+    }
+}
+
 /// Global-memory technology backing the CU channels (paper §2.3:
 /// "DDR4 memory is excellent for accessing large data sets with modest
 /// latency, but the transfer bandwidth is limited to 36 GB/s and no
@@ -37,6 +48,16 @@ pub enum BusMode {
 pub enum MemoryKind {
     Hbm,
     Ddr4,
+}
+
+impl MemoryKind {
+    /// Short name used in DSE reports and CSV/JSON output.
+    pub fn name(self) -> &'static str {
+        match self {
+            MemoryKind::Hbm => "hbm",
+            MemoryKind::Ddr4 => "ddr4",
+        }
+    }
 }
 
 /// Designer-selected optimizations (paper Fig. 5 "Optimize" step).
