@@ -25,7 +25,7 @@ use crate::dse;
 use crate::dsl;
 use crate::hls;
 use crate::ir::{lower, rewrite, schedule, teil};
-use crate::olympus::{self, OlympusOpts};
+use crate::olympus::{self, ChannelPolicy, OlympusOpts};
 use crate::platform::Platform;
 use crate::report;
 use crate::runtime::Runtime;
@@ -96,6 +96,15 @@ impl Args {
         match self.get("dtype") {
             Some(v) => DataType::parse(v).ok_or_else(|| anyhow!("unknown dtype {v}")),
             None => Ok(default),
+        }
+    }
+
+    /// `--policy local|striped` (single value; defaults to local-first).
+    pub fn policy(&self) -> Result<ChannelPolicy> {
+        match self.get("policy") {
+            Some(v) => ChannelPolicy::parse(v)
+                .ok_or_else(|| anyhow!("unknown --policy {v} (local|striped)")),
+            None => Ok(ChannelPolicy::LocalFirst),
         }
     }
 }
@@ -174,9 +183,10 @@ commands:
   dse       parallel design-space exploration with Pareto-frontier
             extraction over (GFLOPS, energy, BRAM/URAM/DSP)
 flags: --kernel --p --dtype --preset --cus --elements --emit --artifacts
-       --mse-budget --max-bits
+       --mse-budget --max-bits --policy local|striped (channel allocation)
 dse flags: --p 7,11  --max-cus N  --ddr4  --threads N  --elements N
-           --top-k N (0 = all)  --pareto-only  --format text|json|csv
+           --policy local,striped  --top-k N (0 = all)  --pareto-only
+           --format text|json|csv
 ";
 
 fn cmd_compile(args: &Args) -> Result<String> {
@@ -264,7 +274,8 @@ fn cmd_simulate(args: &Args) -> Result<String> {
     let dtype = args.dtype_or(DataType::F64)?;
     let cus = args.usize_or("cus", 1)?;
     let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
-    let opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?;
+    let opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?
+        .with_policy(args.policy()?);
     let k = build_kernel(kernel_name, p)?;
     let platform = Platform::alveo_u280();
     let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
@@ -275,13 +286,20 @@ fn cmd_simulate(args: &Args) -> Result<String> {
         .iter()
         .map(|(n, c)| format!("{n}={c}"))
         .collect();
+    let channels: Vec<String> = r
+        .channel_utilization
+        .iter()
+        .map(|(pc, u)| format!("HBM[{pc}]={u:.2}"))
+        .collect();
     Ok(format!(
         "{} p={p} dtype={} cus={cus} elements={n}\n\
          CU     : {:.3} GFLOPS ({:.3} s busy)\n\
          System : {:.3} GFLOPS ({:.3} s wall)\n\
          f={:.1} MHz  ideal={:.2} GFLOPS  efficiency={:.3}\n\
          power {:.1} W  ->  {:.2} GFLOPS/W  ({:.0} J)\n\
-         bottleneck: {}  stages/element: {}",
+         bottleneck: {}  stages/element: {}\n\
+         interconnect ({}): {} switch crossings, fill {} cyc/batch\n\
+         channel utilization: {}",
         r.label,
         dtype,
         r.gflops_cu,
@@ -296,6 +314,10 @@ fn cmd_simulate(args: &Args) -> Result<String> {
         r.energy_j,
         r.bottleneck,
         stages.join(" "),
+        spec.opts.channel_policy.name(),
+        r.switch_crossings,
+        r.hbm_fill_cycles,
+        channels.join(" "),
     ))
 }
 
@@ -486,6 +508,15 @@ fn cmd_dse(args: &Args) -> Result<String> {
     if args.flag("ddr4") {
         space.memories.push(crate::olympus::MemoryKind::Ddr4);
     }
+    if let Some(list) = args.get("policy") {
+        space.channel_policies = list
+            .split(',')
+            .map(|s| {
+                ChannelPolicy::parse(s.trim())
+                    .ok_or_else(|| anyhow!("unknown --policy {s} (local|striped)"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
     let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
     let threads = match args.get("threads") {
         Some(t) => Some(t.parse::<usize>().with_context(|| format!("--threads {t}"))?),
@@ -547,6 +578,23 @@ mod tests {
         let s = run(&["simulate", "--preset", "baseline", "--elements", "100000"]).unwrap();
         assert!(s.contains("System"), "{s}");
         assert!(s.contains("bottleneck"));
+    }
+
+    #[test]
+    fn simulate_reports_channel_utilization_and_crossings() {
+        let local = run(&["simulate", "--preset", "dataflow7", "--elements", "100000"])
+            .unwrap();
+        assert!(local.contains("channel utilization"), "{local}");
+        assert!(local.contains("HBM[0]"), "{local}");
+        assert!(local.contains("0 switch crossings"), "{local}");
+        let striped = run(&[
+            "simulate", "--preset", "dataflow7", "--elements", "100000",
+            "--policy", "striped",
+        ])
+        .unwrap();
+        assert!(striped.contains("(striped)"), "{striped}");
+        assert!(!striped.contains(" 0 switch crossings"), "{striped}");
+        assert!(run(&["simulate", "--policy", "bogus"]).is_err());
     }
 
     #[test]

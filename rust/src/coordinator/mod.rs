@@ -1,12 +1,32 @@
 //! L3 coordinator: the runtime counterpart of the Olympus-generated host
 //! program (paper §3.1, §3.5).
 //!
-//! The coordinator owns batching (N_b = N_eq / E, I = N_b / N_cu),
-//! the ping/pong double-buffer state machine, lane interleaving, and
-//! dispatch of real numerics through the PJRT runtime. Performance
-//! numbers for the FPGA come from `sim`; the coordinator produces the
-//! *numerical* results (and the measured XLA-CPU throughput used by the
-//! Fig. 19 software baselines).
+//! Where `sim` predicts how fast the generated system *would* run on
+//! the U280, the coordinator actually *runs* it: real numerics through
+//! the AOT-compiled PJRT artifacts, following the same host steps
+//! Olympus emits (`olympus::config::host_batch_steps`). Three layers:
+//!
+//!  * [`batch`] — the batching arithmetic the paper fixes per system
+//!    (N_b = N_eq / E batches of E elements, dealt round-robin over
+//!    N_cu CUs) plus the ping/pong double-buffer state machine
+//!    ([`PingPong`]) and the lane interleave/deinterleave permutations
+//!    of §3.6.2, validated by round-trip.
+//!  * [`workload`] — deterministic synthetic workloads for the three
+//!    published kernels (Helmholtz, Interpolation, Gradient), each with
+//!    a native f64 oracle (`expected_element`) for MSE cross-checks.
+//!  * [`driver`] — executes a workload against a `SystemSpec`:
+//!    interleave → transfer → invoke per CU with ping/pong bookkeeping →
+//!    de-interleave, chunked to the artifact's executable batch size.
+//!    Returns a [`RunReport`] with measured XLA-CPU GFLOPS (the Fig. 19
+//!    software-comparison datapath) and sampled MSE against the oracle
+//!    (the *measured* Fig. 16 / Table 4 numerics).
+//!
+//! Host transfers here are memcpys into PJRT literals — the PCIe cost
+//! they stand in for is modeled by `sim::event`, which mirrors the
+//! independent per-direction queues this driver issues its
+//! `TransferIn`/`TransferOut` steps on. Everything degrades gracefully
+//! when the artifacts or the `pjrt` feature are absent: `Runtime`
+//! construction fails and callers skip.
 
 pub mod batch;
 pub mod driver;

@@ -13,7 +13,7 @@
 //!    kernel builds and deterministic result ordering;
 //!  * [`pareto`] — feasibility filtering against the platform's resource
 //!    budget and Pareto-frontier extraction over
-//!    (GFLOPS, energy, BRAM/URAM/DSP);
+//!    (GFLOPS, energy, BRAM/URAM/DSP, switch crossings);
 //!  * [`report`] — ranked text / JSON / CSV output.
 //!
 //! Entry points: the `hbmflow dse` CLI subcommand, the

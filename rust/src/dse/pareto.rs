@@ -9,7 +9,7 @@
 //! designer breaks the tie on axes the objectives do not capture).
 //!
 //! The extraction is the O(n²) pairwise scan: with the full default
-//! helmholtz space (~2k candidates, 5 objectives) that is ~10⁷ float
+//! helmholtz space (~2k candidates, 6 objectives) that is ~10⁷ float
 //! comparisons — noise next to the evaluation pass that produced the
 //! vectors. Replace with a divide-and-conquer skyline only if spaces grow
 //! by orders of magnitude.
@@ -50,8 +50,11 @@ pub fn pareto_indices(points: &[Vec<f64>]) -> Vec<usize> {
 }
 
 /// Objective vector of one evaluated candidate, larger-is-better:
-/// `[system GFLOPS, −energy (J), −BRAM, −URAM, −DSP]` — the throughput /
-/// energy / resource trade the paper's Figs. 15–18 walk by hand.
+/// `[system GFLOPS, −energy (J), −BRAM, −URAM, −DSP, −switch
+/// crossings]` — the throughput / energy / resource trade the paper's
+/// Figs. 15–18 walk by hand, plus the interconnect-routing cost the
+/// `hbm` model now measures (all-local allocations tie at zero, so the
+/// axis only discriminates when a policy actually crosses the switch).
 pub fn objectives(e: &Evaluated) -> Vec<f64> {
     vec![
         e.sim.gflops_system,
@@ -59,6 +62,7 @@ pub fn objectives(e: &Evaluated) -> Vec<f64> {
         -(e.total.bram as f64),
         -(e.total.uram as f64),
         -(e.total.dsp as f64),
+        -(e.sim.switch_crossings as f64),
     ]
 }
 

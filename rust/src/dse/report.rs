@@ -40,6 +40,8 @@ pub fn text(ex: &Exploration, top_k: usize, pareto_only: bool) -> String {
                 e.total.bram.to_string(),
                 e.total.uram.to_string(),
                 e.total.dsp.to_string(),
+                format!("{:.2}", e.sim.max_channel_utilization),
+                e.sim.switch_crossings.to_string(),
                 e.sim.bottleneck.clone(),
             ]
         })
@@ -57,6 +59,8 @@ pub fn text(ex: &Exploration, top_k: usize, pareto_only: bool) -> String {
             "BRAM",
             "URAM",
             "DSP",
+            "ch.util",
+            "xings",
             "bound",
         ],
         &rows,
@@ -160,6 +164,7 @@ fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
             "fifo_depth",
             opts.fifo_depth.map(|d| Json::num(d as f64)).unwrap_or(Json::Null),
         ),
+        ("policy", Json::str(opts.channel_policy.name())),
         ("pareto", Json::Bool(ex.is_on_frontier(i))),
     ];
     match &o.result {
@@ -177,6 +182,29 @@ fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
             ("uram", Json::num(e.total.uram as f64)),
             ("dsp", Json::num(e.total.dsp as f64)),
             ("max_utilization", Json::num(e.max_utilization)),
+            (
+                "max_channel_util",
+                Json::num(e.sim.max_channel_utilization),
+            ),
+            (
+                "switch_crossings",
+                Json::num(e.sim.switch_crossings as f64),
+            ),
+            (
+                "channel_utilization",
+                Json::Arr(
+                    e.sim
+                        .channel_utilization
+                        .iter()
+                        .map(|&(pc, u)| {
+                            Json::obj(vec![
+                                ("channel", Json::num(pc as f64)),
+                                ("utilization", Json::num(u)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("bottleneck", Json::str(e.sim.bottleneck.clone())),
         ]),
         Err(reason) => pairs.extend([
@@ -192,13 +220,14 @@ fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
 pub fn csv(ex: &Exploration) -> String {
     let mut out = String::from(
         "kernel,p,dtype,cus,bus,memory,double_buffering,dataflow,mem_sharing,\
-         fifo_depth,status,feasible,pareto,fmax_mhz,gflops_cu,gflops_system,\
-         gflops_per_w,energy_j,lut,ff,bram,uram,dsp,bottleneck,reject_reason\n",
+         fifo_depth,policy,status,feasible,pareto,fmax_mhz,gflops_cu,\
+         gflops_system,gflops_per_w,energy_j,lut,ff,bram,uram,dsp,\
+         max_channel_util,switch_crossings,bottleneck,reject_reason\n",
     );
     for (i, o) in ex.outcomes.iter().enumerate() {
         let opts = &o.point.opts;
         let axes = format!(
-            "{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{}",
             o.point.kernel,
             o.point.p,
             opts.dtype.name(),
@@ -209,10 +238,12 @@ pub fn csv(ex: &Exploration) -> String {
             opts.dataflow.map(|g| g.to_string()).unwrap_or_default(),
             opts.mem_sharing,
             opts.fifo_depth.map(|d| d.to_string()).unwrap_or_default(),
+            opts.channel_policy.name(),
         );
         let row = match &o.result {
             Ok(e) => format!(
-                "{axes},ok,{},{},{:.3},{:.4},{:.4},{:.4},{:.4},{},{},{},{},{},{},\n",
+                "{axes},ok,{},{},{:.3},{:.4},{:.4},{:.4},{:.4},{},{},{},{},{},\
+                 {:.3},{},{},\n",
                 e.feasible,
                 ex.is_on_frontier(i),
                 e.fmax_mhz,
@@ -225,10 +256,12 @@ pub fn csv(ex: &Exploration) -> String {
                 e.total.bram,
                 e.total.uram,
                 e.total.dsp,
+                e.sim.max_channel_utilization,
+                e.sim.switch_crossings,
                 e.sim.bottleneck,
             ),
             Err(reason) => format!(
-                "{axes},rejected,false,false,,,,,,,,,,,,{}\n",
+                "{axes},rejected,false,false,,,,,,,,,,,,,,{}\n",
                 reason.replace(',', ";"),
             ),
         };

@@ -13,7 +13,7 @@
 //! evaluator, so infeasibility is *reported*, not silently skipped.
 
 use crate::datatype::DataType;
-use crate::olympus::{BusMode, MemoryKind, OlympusOpts};
+use crate::olympus::{BusMode, ChannelPolicy, MemoryKind, OlympusOpts};
 
 /// One concrete candidate: `kernel` at degree `p` generated with `opts`.
 #[derive(Debug, Clone)]
@@ -59,6 +59,10 @@ pub struct SearchSpace {
     /// Stream FIFO depth in words (`None` = naive full-array sizing).
     pub fifo_depths: Vec<Option<usize>>,
     pub memories: Vec<MemoryKind>,
+    /// Channel-allocation policies on the segmented AXI switch
+    /// (`hbm::alloc`). Default: local-first only; add `Striped` to let
+    /// the frontier demonstrate the cost of switch crossings.
+    pub channel_policies: Vec<ChannelPolicy>,
 }
 
 impl SearchSpace {
@@ -86,6 +90,7 @@ impl SearchSpace {
             mem_sharing: vec![false, true],
             fifo_depths: vec![None, Some(64)],
             memories: vec![MemoryKind::Hbm],
+            channel_policies: vec![ChannelPolicy::LocalFirst],
         }
     }
 
@@ -108,13 +113,16 @@ impl SearchSpace {
                                         if !coherent(dataflow, sharing, fifo) {
                                             continue;
                                         }
-                                        for &cus in &self.cu_counts {
-                                            let pt = self.point(
-                                                p, dtype, memory, bus, db,
-                                                dataflow, sharing, fifo, cus,
-                                            );
-                                            if seen.insert(pt.fingerprint()) {
-                                                points.push(pt);
+                                        for policy in &self.channel_policies {
+                                            for &cus in &self.cu_counts {
+                                                let pt = self.point(
+                                                    p, dtype, memory, bus, db,
+                                                    dataflow, sharing, fifo,
+                                                    policy.clone(), cus,
+                                                );
+                                                if seen.insert(pt.fingerprint()) {
+                                                    points.push(pt);
+                                                }
                                             }
                                         }
                                     }
@@ -139,6 +147,7 @@ impl SearchSpace {
         dataflow: Option<usize>,
         mem_sharing: bool,
         fifo: Option<usize>,
+        channel_policy: ChannelPolicy,
         cus: usize,
     ) -> DesignPoint {
         let mut opts = OlympusOpts {
@@ -152,6 +161,7 @@ impl SearchSpace {
             fifo_depth: None,
             lut_mult_shift: false,
             target_freq_mhz: 450.0,
+            channel_policy,
         }
         // applies the paper's multi-CU methodology (225 MHz target,
         // reduced FIFOs, LUT multiplier shift) when cus > 1
@@ -236,6 +246,15 @@ mod tests {
             assert_eq!(pt.opts.target_freq_mhz, 225.0, "{}", pt.label());
             assert!(pt.opts.lut_mult_shift);
         }
+    }
+
+    #[test]
+    fn policy_axis_multiplies_the_space() {
+        let mut s = SearchSpace::default_for("helmholtz");
+        let base = s.enumerate().len();
+        s.channel_policies =
+            vec![ChannelPolicy::LocalFirst, ChannelPolicy::Striped];
+        assert_eq!(s.enumerate().len(), 2 * base, "independent axis");
     }
 
     #[test]

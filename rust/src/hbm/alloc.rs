@@ -1,0 +1,314 @@
+//! Explicit channel-allocation policies (replaces Olympus's implicit
+//! sequential numbering, paper §3.6.1).
+//!
+//! Master slots are fixed by CU placement: the ports of CU 0, then
+//! CU 1, … occupy consecutive AXI master positions on the switch (one
+//! slot per allocated channel; a shared read/write channel is one
+//! bundled port). The *policy* decides which pseudo-channel number each
+//! slot is bound to:
+//!
+//!  * [`ChannelPolicy::LocalFirst`] — each slot takes the nearest free
+//!    channel (fewest switch boundaries, lowest number on ties). With an
+//!    empty switch this is the identity mapping, i.e. exactly the
+//!    sequential numbering the seed hard-coded — zero crossings.
+//!  * [`ChannelPolicy::Striped`] — slots round-robin across switch
+//!    segments, spreading each CU's traffic over the HBM stacks at the
+//!    cost of lateral-link crossings. This is the allocation the `dse`
+//!    engine must be able to *reject* mechanistically.
+//!  * [`ChannelPolicy::Pinned`] — the designer supplies the channel list
+//!    per CU (read channels first, then write channels; one list entry
+//!    per allocated channel). Invalid pins are a generation error, which
+//!    the DSE evaluator reports as a rejection.
+
+use super::{CuRoutes, Interconnect, Route};
+
+/// How Olympus binds CU ports to pseudo-channels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChannelPolicy {
+    LocalFirst,
+    Striped,
+    /// Per-CU explicit channel lists: read channels first, then write
+    /// channels (omit the write half when the CU shares channels).
+    Pinned(Vec<Vec<u32>>),
+}
+
+impl ChannelPolicy {
+    /// Short name used in labels and CSV/JSON output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChannelPolicy::LocalFirst => "local-first",
+            ChannelPolicy::Striped => "striped",
+            ChannelPolicy::Pinned(_) => "pinned",
+        }
+    }
+
+    /// Parse a CLI policy name (`local` / `local-first` / `striped`).
+    pub fn parse(s: &str) -> Option<ChannelPolicy> {
+        match s {
+            "local" | "local-first" => Some(ChannelPolicy::LocalFirst),
+            "striped" => Some(ChannelPolicy::Striped),
+            _ => None,
+        }
+    }
+}
+
+/// Channel demand of one CU, as Olympus derives it from the buffering
+/// mode: `shared` means the read and write sets are the same channels
+/// (ping/pong carrying both directions), so only `reads` channels are
+/// allocated.
+#[derive(Debug, Clone, Copy)]
+pub struct PortDemand {
+    pub reads: u32,
+    pub writes: u32,
+    pub shared: bool,
+}
+
+impl PortDemand {
+    /// Physical channels this CU occupies.
+    pub fn slots(&self) -> u32 {
+        if self.shared {
+            self.reads
+        } else {
+            self.reads + self.writes
+        }
+    }
+}
+
+/// Bind every CU's ports to channels under `policy`. Master slots are
+/// assigned sequentially in CU order; the returned routes carry the
+/// switch distance of each binding. Fails when the demand exceeds the
+/// interconnect or a pinned list is malformed.
+pub fn allocate(
+    policy: &ChannelPolicy,
+    demands: &[PortDemand],
+    ic: &Interconnect,
+) -> Result<Vec<CuRoutes>, String> {
+    let total: u32 = demands.iter().map(|d| d.slots()).sum();
+    if total > ic.channels {
+        return Err(format!(
+            "{total} channels required, {} available",
+            ic.channels
+        ));
+    }
+    for (i, d) in demands.iter().enumerate() {
+        if d.reads == 0 || d.writes == 0 {
+            return Err(format!("CU {i} demands no channels"));
+        }
+        if d.shared && d.reads != d.writes {
+            return Err(format!(
+                "CU {i}: shared channels need matching read/write counts"
+            ));
+        }
+    }
+
+    let mut free = vec![true; ic.channels as usize];
+    let mut master = 0u32;
+    let mut stripe = 0u32; // striped policy's rolling position
+    let mut out = Vec::with_capacity(demands.len());
+    for (cu, d) in demands.iter().enumerate() {
+        let mut routes = Vec::with_capacity(d.slots() as usize);
+        for _ in 0..d.slots() {
+            let channel = match policy {
+                ChannelPolicy::LocalFirst => nearest_free(&free, master, ic),
+                ChannelPolicy::Striped => {
+                    let c = striped_free(&free, &mut stripe, ic);
+                    stripe += 1;
+                    c
+                }
+                ChannelPolicy::Pinned(lists) => {
+                    pinned(lists, cu, routes.len(), &free, ic)?
+                }
+            };
+            free[channel as usize] = false;
+            routes.push(Route {
+                master,
+                channel,
+                hops: ic.hops(master, channel),
+            });
+            master += 1;
+        }
+        let (read, write) = if d.shared {
+            (routes.clone(), routes)
+        } else {
+            let write = routes.split_off(d.reads as usize);
+            (routes, write)
+        };
+        out.push(CuRoutes {
+            read,
+            write,
+            shared: d.shared,
+        });
+    }
+    Ok(out)
+}
+
+/// Free channel with the fewest switch boundaries from `master`, lowest
+/// channel number on ties.
+fn nearest_free(free: &[bool], master: u32, ic: &Interconnect) -> u32 {
+    let mut best = None;
+    for (c, &ok) in free.iter().enumerate() {
+        if !ok {
+            continue;
+        }
+        let h = ic.hops(master, c as u32);
+        let better = match best {
+            None => true,
+            Some((bh, _)) => h < bh,
+        };
+        if better {
+            best = Some((h, c as u32));
+        }
+    }
+    best.expect("allocate checked total demand <= channels").1
+}
+
+/// Next free channel in segment-transposed order: position `k` targets
+/// segment `k mod segments`, walking one channel deeper per full round.
+fn striped_free(free: &[bool], stripe: &mut u32, ic: &Interconnect) -> u32 {
+    let nseg = ic.segments().max(1);
+    loop {
+        let k = *stripe;
+        let c = (k % nseg) * ic.segment_channels + (k / nseg) % ic.segment_channels;
+        if free[c as usize] {
+            return c;
+        }
+        *stripe += 1;
+    }
+}
+
+fn pinned(
+    lists: &[Vec<u32>],
+    cu: usize,
+    slot: usize,
+    free: &[bool],
+    ic: &Interconnect,
+) -> Result<u32, String> {
+    let list = lists
+        .get(cu)
+        .ok_or_else(|| format!("pinned policy lists no channels for CU {cu}"))?;
+    let &c = list.get(slot).ok_or_else(|| {
+        format!(
+            "pinned policy lists {} channels for CU {cu}, slot {slot} needed",
+            list.len()
+        )
+    })?;
+    if c >= ic.channels {
+        return Err(format!("CU {cu} pinned to nonexistent channel {c}"));
+    }
+    if !free[c as usize] {
+        return Err(format!("channel {c} pinned twice"));
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    fn ic() -> Interconnect {
+        Interconnect::hbm(&Platform::alveo_u280().hbm)
+    }
+
+    fn sep(n: usize) -> Vec<PortDemand> {
+        vec![
+            PortDemand {
+                reads: 2,
+                writes: 2,
+                shared: false,
+            };
+            n
+        ]
+    }
+
+    #[test]
+    fn local_first_on_an_empty_switch_is_the_identity() {
+        let routes = allocate(&ChannelPolicy::LocalFirst, &sep(2), &ic()).unwrap();
+        let all: Vec<u32> = routes
+            .iter()
+            .flat_map(|r| r.read.iter().chain(&r.write).map(|x| x.channel))
+            .collect();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!(routes
+            .iter()
+            .flat_map(|r| r.unique_routes())
+            .all(|r| r.hops == 0));
+    }
+
+    #[test]
+    fn striped_spreads_across_segments() {
+        let routes = allocate(&ChannelPolicy::Striped, &sep(1), &ic()).unwrap();
+        let chans: Vec<u32> = routes[0]
+            .read
+            .iter()
+            .chain(&routes[0].write)
+            .map(|r| r.channel)
+            .collect();
+        assert_eq!(chans, vec![0, 4, 8, 12], "one channel per segment");
+        let hops: Vec<u32> = routes[0]
+            .read
+            .iter()
+            .chain(&routes[0].write)
+            .map(|r| r.hops)
+            .collect();
+        assert_eq!(hops, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn shared_demand_reuses_the_same_routes_both_ways() {
+        let d = [PortDemand {
+            reads: 2,
+            writes: 2,
+            shared: true,
+        }];
+        let routes = allocate(&ChannelPolicy::LocalFirst, &d, &ic()).unwrap();
+        assert_eq!(routes[0].read, routes[0].write);
+        assert_eq!(routes[0].unique_routes().len(), 2);
+    }
+
+    #[test]
+    fn pinned_routes_follow_the_designer() {
+        let policy = ChannelPolicy::Pinned(vec![vec![30, 31]]);
+        let d = [PortDemand {
+            reads: 1,
+            writes: 1,
+            shared: false,
+        }];
+        let routes = allocate(&policy, &d, &ic()).unwrap();
+        assert_eq!(routes[0].read[0].channel, 30);
+        assert_eq!(routes[0].write[0].channel, 31);
+        assert_eq!(routes[0].read[0].hops, 7, "master 0 to segment 7");
+    }
+
+    #[test]
+    fn malformed_pins_are_rejected() {
+        let d = [PortDemand {
+            reads: 1,
+            writes: 1,
+            shared: false,
+        }];
+        let short = ChannelPolicy::Pinned(vec![vec![0]]);
+        assert!(allocate(&short, &d, &ic()).is_err(), "list too short");
+        let oob = ChannelPolicy::Pinned(vec![vec![0, 99]]);
+        assert!(allocate(&oob, &d, &ic()).is_err(), "nonexistent channel");
+        let dup = ChannelPolicy::Pinned(vec![vec![5, 5]]);
+        assert!(allocate(&dup, &d, &ic()).is_err(), "channel pinned twice");
+    }
+
+    #[test]
+    fn over_demand_is_rejected() {
+        let err = allocate(&ChannelPolicy::LocalFirst, &sep(9), &ic());
+        assert!(err.is_err(), "36 channels on a 32-channel switch");
+    }
+
+    #[test]
+    fn policy_names_and_parsing() {
+        assert_eq!(ChannelPolicy::LocalFirst.name(), "local-first");
+        assert_eq!(ChannelPolicy::parse("striped"), Some(ChannelPolicy::Striped));
+        assert_eq!(
+            ChannelPolicy::parse("local"),
+            Some(ChannelPolicy::LocalFirst)
+        );
+        assert_eq!(ChannelPolicy::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,269 @@
+//! Mechanistic model of the U280 memory interconnect (paper §2.2–§2.3,
+//! Challenges 1–2): the 32 HBM pseudo-channels behind the segmented AXI
+//! switch, plus the 2-bank DDR4 alternative.
+//!
+//! The physical switch is eight 4×4 full-crossbar units chained by
+//! lateral links: a master reaches the four pseudo-channels of its own
+//! unit at full bandwidth, and every other channel by crossing one
+//! switch boundary per segment of distance. Three effects follow, and
+//! this module models each one explicitly instead of folding them into
+//! fitted constants:
+//!
+//!  * **switch-crossing latency** — every boundary adds round-trip
+//!    cycles; with a bounded number of outstanding AXI transactions the
+//!    latency·bandwidth product caps the sustainable rate, so far
+//!    crossings *throttle* a port, not just delay it
+//!    ([`Interconnect::effective_rate`]);
+//!  * **direction turnaround** — a pseudo-channel that serves both
+//!    reads and writes pays tWTR/tRTW-class controller penalties on
+//!    every direction switch (paper Challenge 2); the penalty is now a
+//!    per-channel property of the routing, not a global constant
+//!    (`traffic::stage_penalty`);
+//!  * **bandwidth sharing** — ports that overlap in time on one channel
+//!    (the ≥8-CU ping/pong layout streams reads *and* writes through
+//!    the same channel while dataflow overlaps the stages) contend for
+//!    its word slots (`traffic`).
+//!
+//! [`alloc`] turns Olympus's implicit sequential channel numbering into
+//! an explicit policy (local-first, striped, user-pinned); [`traffic`]
+//! converts a routed system into the stage penalties and per-channel
+//! utilization the simulator and the `dse` reports consume. The retired
+//! constants and the calibration of the new parameters are tabulated in
+//! DESIGN.md §"Memory interconnect model".
+
+pub mod alloc;
+pub mod traffic;
+
+pub use alloc::{allocate, ChannelPolicy, PortDemand};
+pub use traffic::{HbmReport, StagePenalty};
+
+use crate::platform::{HbmConfig, SwitchConfig};
+
+/// The memory-side interconnect a generated system routes through:
+/// channel count, switch segmentation, and the timing parameters of one
+/// channel/switch unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interconnect {
+    /// Pseudo-channels (HBM: 32) or banks (DDR4: 2).
+    pub channels: u32,
+    /// Masters/channels per switch unit (HBM: 4). A single segment
+    /// spanning every channel models a switchless memory (DDR4).
+    pub segment_channels: u32,
+    pub timing: SwitchConfig,
+}
+
+impl Interconnect {
+    /// The U280 HBM subsystem: 32 pseudo-channels behind eight 4×4
+    /// switch units.
+    pub fn hbm(cfg: &HbmConfig) -> Interconnect {
+        Interconnect {
+            channels: cfg.pseudo_channels,
+            segment_channels: cfg.switch.segment_channels,
+            timing: cfg.switch,
+        }
+    }
+
+    /// The two DDR4 banks: no segmented switch (one segment spans both
+    /// banks, so no route ever crosses), but the same controller-class
+    /// read/write turnaround timings apply.
+    pub fn ddr4(cfg: &HbmConfig) -> Interconnect {
+        Interconnect {
+            channels: 2,
+            segment_channels: 2,
+            timing: cfg.switch,
+        }
+    }
+
+    pub fn segments(&self) -> u32 {
+        self.channels / self.segment_channels.max(1)
+    }
+
+    /// Switch unit a channel (or the equally-numbered master slot)
+    /// belongs to.
+    pub fn segment_of(&self, slot: u32) -> u32 {
+        slot / self.segment_channels.max(1)
+    }
+
+    /// Switch boundaries between a master slot and a channel.
+    pub fn hops(&self, master: u32, channel: u32) -> u32 {
+        self.segment_of(master).abs_diff(self.segment_of(channel))
+    }
+
+    /// Round-trip latency of one transaction over `hops` boundaries.
+    pub fn round_trip_cycles(&self, hops: u32) -> u64 {
+        self.timing.base_latency_cycles
+            + hops as u64 * self.timing.lateral_hop_cycles
+    }
+
+    /// Sustainable fraction of the port's word rate at `hops` distance:
+    /// with `max_outstanding` transactions of `burst_words` in flight,
+    /// the latency·bandwidth product caps throughput at
+    /// `outstanding · burst / round_trip` words per cycle (≤ 1). Local
+    /// access is calibrated to exactly 1.0; every boundary past the
+    /// covered latency throttles proportionally.
+    pub fn effective_rate(&self, hops: u32) -> f64 {
+        let in_flight =
+            (self.timing.max_outstanding * self.timing.burst_words) as f64;
+        (in_flight / self.round_trip_cycles(hops) as f64).min(1.0)
+    }
+}
+
+/// One routed CU port: the AXI master slot it occupies, the channel the
+/// allocation policy bound it to, and the switch distance between them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    pub master: u32,
+    pub channel: u32,
+    pub hops: u32,
+}
+
+/// The routed ports of one CU. When `shared` is true the read and write
+/// routes are the same physical channels (ping/pong carrying both
+/// directions); otherwise the sets are disjoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CuRoutes {
+    pub read: Vec<Route>,
+    pub write: Vec<Route>,
+    pub shared: bool,
+}
+
+impl CuRoutes {
+    /// Physical routes, counting a shared read/write channel once.
+    pub fn unique_routes(&self) -> Vec<&Route> {
+        let mut v: Vec<&Route> = self.read.iter().collect();
+        for w in &self.write {
+            if !v
+                .iter()
+                .any(|r| r.master == w.master && r.channel == w.channel)
+            {
+                v.push(w);
+            }
+        }
+        v
+    }
+}
+
+/// Resolved port→channel routing for a whole generated system, stored on
+/// the `SystemSpec` so downstream consumers (sim, reports) never have to
+/// re-derive switch geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelMap {
+    pub interconnect: Interconnect,
+    pub cus: Vec<CuRoutes>,
+}
+
+impl ChannelMap {
+    /// Routes that cross at least one switch boundary.
+    pub fn switch_crossings(&self) -> u64 {
+        self.cus
+            .iter()
+            .flat_map(|cu| cu.unique_routes())
+            .filter(|r| r.hops > 0)
+            .count() as u64
+    }
+
+    /// Total boundary hops over all routes (the penalty-weighted count).
+    pub fn total_hops(&self) -> u64 {
+        self.cus
+            .iter()
+            .flat_map(|cu| cu.unique_routes())
+            .map(|r| r.hops as u64)
+            .sum()
+    }
+
+    /// Worst round-trip latency any CU's pipeline must fill (cycles).
+    pub fn fill_latency_cycles(&self) -> u64 {
+        self.cus
+            .iter()
+            .flat_map(|cu| cu.unique_routes())
+            .map(|r| self.interconnect.round_trip_cycles(r.hops))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    fn ic() -> Interconnect {
+        Interconnect::hbm(&Platform::alveo_u280().hbm)
+    }
+
+    #[test]
+    fn u280_switch_is_eight_4x4_units() {
+        let ic = ic();
+        assert_eq!(ic.channels, 32);
+        assert_eq!(ic.segment_channels, 4);
+        assert_eq!(ic.segments(), 8);
+        assert_eq!(ic.segment_of(0), 0);
+        assert_eq!(ic.segment_of(3), 0);
+        assert_eq!(ic.segment_of(4), 1);
+        assert_eq!(ic.segment_of(31), 7);
+    }
+
+    #[test]
+    fn hops_are_symmetric_segment_distances() {
+        let ic = ic();
+        assert_eq!(ic.hops(0, 3), 0, "same unit");
+        assert_eq!(ic.hops(0, 4), 1);
+        assert_eq!(ic.hops(4, 0), 1, "symmetric");
+        assert_eq!(ic.hops(0, 31), 7, "corner to corner");
+    }
+
+    #[test]
+    fn latency_grows_per_boundary() {
+        let ic = ic();
+        assert!(ic.round_trip_cycles(0) < ic.round_trip_cycles(1));
+        assert!(ic.round_trip_cycles(1) < ic.round_trip_cycles(3));
+        let per_hop = ic.round_trip_cycles(1) - ic.round_trip_cycles(0);
+        assert_eq!(
+            ic.round_trip_cycles(3) - ic.round_trip_cycles(2),
+            per_hop,
+            "linear in hops"
+        );
+    }
+
+    #[test]
+    fn local_rate_is_full_and_crossings_throttle() {
+        let ic = ic();
+        assert_eq!(ic.effective_rate(0), 1.0, "local access calibrated to 1");
+        assert!(ic.effective_rate(1) < 1.0);
+        assert!(ic.effective_rate(3) < ic.effective_rate(1));
+    }
+
+    #[test]
+    fn ddr4_has_two_banks_and_no_crossings() {
+        let ic = Interconnect::ddr4(&Platform::alveo_u280().hbm);
+        assert_eq!(ic.channels, 2);
+        assert_eq!(ic.segments(), 1);
+        assert_eq!(ic.hops(0, 1), 0);
+        assert_eq!(ic.effective_rate(0), 1.0);
+    }
+
+    #[test]
+    fn unique_routes_count_shared_channels_once() {
+        let r = Route {
+            master: 0,
+            channel: 0,
+            hops: 0,
+        };
+        let shared = CuRoutes {
+            read: vec![r],
+            write: vec![r],
+            shared: true,
+        };
+        assert_eq!(shared.unique_routes().len(), 1);
+        let separate = CuRoutes {
+            read: vec![r],
+            write: vec![Route {
+                master: 1,
+                channel: 1,
+                hops: 0,
+            }],
+            shared: false,
+        };
+        assert_eq!(separate.unique_routes().len(), 2);
+    }
+}

@@ -1,0 +1,262 @@
+//! Per-channel traffic analysis of a routed system: the stage penalties
+//! the cycle simulator applies and the per-channel utilization the
+//! reports surface.
+//!
+//! Everything here is derived from the [`super::ChannelMap`] Olympus
+//! stored on the `SystemSpec` — the switch geometry is resolved once at
+//! generation time and consumed mechanistically here:
+//!
+//!  * **turnaround** — a CU whose read and write ports share a channel
+//!    pays the controller's tWTR before each element's read burst and
+//!    tRTW before its write burst (paper Challenge 2); CUs with
+//!    separated directions pay nothing.
+//!  * **contention** — when the dataflow pipeline overlaps the Read and
+//!    Write stages *and* both directions share a channel (the ≥8-CU
+//!    ping/pong layout), each stage also waits out the other direction's
+//!    words on the wire: the channel, not the stage, is the binding
+//!    resource.
+//!  * **crossing slowdown** — a route through the segmented switch that
+//!    is longer than the outstanding-transaction window sustains less
+//!    than one word per cycle ([`super::Interconnect::effective_rate`]);
+//!    the worst route of each direction throttles that stage.
+//!
+//! The simulator applies the worst CU's penalties to the representative
+//! stage intervals (CUs are homogeneous under `LocalFirst`/`Striped`;
+//! under `Pinned` the worst-routed CU bounds the system, which is the
+//! conservative choice for a makespan model).
+
+use super::{ChannelMap, CuRoutes};
+use crate::olympus::SystemSpec;
+
+/// Additive/multiplicative corrections to the Read/Write stage
+/// intervals of one element, derived per channel from the routing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StagePenalty {
+    /// tWTR-class wait before an element's read burst (cycles).
+    pub read_turnaround: u64,
+    /// tRTW-class wait before an element's write burst (cycles).
+    pub write_turnaround: u64,
+    /// Channel cycles the Read stage loses to overlapped writes.
+    pub read_contention: u64,
+    /// Channel cycles the Write stage loses to overlapped reads.
+    pub write_contention: u64,
+    /// ≥ 1.0; switch-crossing bandwidth throttle on the Read stage.
+    pub read_slowdown: f64,
+    /// ≥ 1.0; switch-crossing bandwidth throttle on the Write stage.
+    pub write_slowdown: f64,
+    /// Round-trip latency the pipeline fills once per batch (cycles).
+    pub fill_cycles: u64,
+}
+
+impl StagePenalty {
+    fn none() -> StagePenalty {
+        StagePenalty {
+            read_turnaround: 0,
+            write_turnaround: 0,
+            read_contention: 0,
+            write_contention: 0,
+            read_slowdown: 1.0,
+            write_slowdown: 1.0,
+            fill_cycles: 0,
+        }
+    }
+}
+
+/// Worst-case stage penalties over the system's CUs (see module docs
+/// for why the worst CU is the representative one).
+pub fn stage_penalty(spec: &SystemSpec) -> StagePenalty {
+    let map = &spec.hbm_map;
+    let t = map.interconnect.timing;
+    let in_words = spec.kernel.input_words() as u64;
+    let out_words = spec.kernel.output_words() as u64;
+    let mut p = StagePenalty::none();
+    for cu in &map.cus {
+        let shared = shares_direction(cu);
+        if shared && spec.dataflow {
+            // Overlapped Read/Write stages are channel-bound: each sees
+            // the channel's full per-element busy time — the other
+            // direction's words plus both turnarounds (the channel
+            // switches W→R and R→W once per element period).
+            let pair = t.t_wtr_cycles + t.t_rtw_cycles;
+            p.read_turnaround = p.read_turnaround.max(pair);
+            p.write_turnaround = p.write_turnaround.max(pair);
+            p.read_contention = p.read_contention.max(out_words);
+            p.write_contention = p.write_contention.max(in_words);
+        } else if shared {
+            // serial stages: each direction only waits out its own
+            // switch before streaming
+            p.read_turnaround = p.read_turnaround.max(t.t_wtr_cycles);
+            p.write_turnaround = p.write_turnaround.max(t.t_rtw_cycles);
+        }
+        let slow = |routes: &[super::Route]| {
+            routes
+                .iter()
+                .map(|r| 1.0 / map.interconnect.effective_rate(r.hops))
+                .fold(1.0f64, f64::max)
+        };
+        p.read_slowdown = p.read_slowdown.max(slow(&cu.read));
+        p.write_slowdown = p.write_slowdown.max(slow(&cu.write));
+    }
+    p.fill_cycles = map.fill_latency_cycles();
+    p
+}
+
+fn shares_direction(cu: &CuRoutes) -> bool {
+    cu.shared
+        || cu
+            .read
+            .iter()
+            .any(|r| cu.write.iter().any(|w| w.channel == r.channel))
+}
+
+/// Time-averaged load on one pseudo-channel while its CU streams.
+#[derive(Debug, Clone)]
+pub struct ChannelLoad {
+    pub channel: u32,
+    pub cu: usize,
+    /// Read words per element served by this channel (ping/pong
+    /// alternation averaged over batches).
+    pub read_words: f64,
+    /// Write words per element served by this channel.
+    pub write_words: f64,
+    /// Direction-turnaround cycles per element on this channel.
+    pub turnaround_cycles: f64,
+    /// Busy fraction of the channel against the CU's element service
+    /// interval (1.0 = the channel is the pace-setter).
+    pub utilization: f64,
+}
+
+/// Everything the reports surface about the memory interconnect.
+#[derive(Debug, Clone)]
+pub struct HbmReport {
+    pub channels: Vec<ChannelLoad>,
+    /// Routes crossing at least one switch boundary.
+    pub switch_crossings: u64,
+    /// Total boundary hops (penalty-weighted crossing count).
+    pub total_hops: u64,
+    /// Pipeline-fill latency paid once per batch (cycles).
+    pub fill_cycles: u64,
+    pub max_utilization: f64,
+}
+
+/// Analyze the channel loads of a routed system. `element_interval` is
+/// the CU's steady-state element service interval in cycles (the
+/// bottleneck stage interval for dataflow systems, the stage sum for
+/// flat ones).
+pub fn report(spec: &SystemSpec, element_interval: u64) -> HbmReport {
+    let map: &ChannelMap = &spec.hbm_map;
+    let t = map.interconnect.timing;
+    let interval = element_interval.max(1) as f64;
+    let in_words = spec.kernel.input_words() as f64;
+    let out_words = spec.kernel.output_words() as f64;
+
+    let mut channels = Vec::new();
+    let mut max_util = 0.0f64;
+    for (cu, routes) in map.cus.iter().enumerate() {
+        let shared = shares_direction(routes);
+        let n_r = routes.read.len().max(1) as f64;
+        let n_w = routes.write.len().max(1) as f64;
+        for r in routes.unique_routes() {
+            let serves_read = routes.read.iter().any(|x| x.channel == r.channel);
+            let serves_write =
+                routes.write.iter().any(|x| x.channel == r.channel);
+            let read_words = if serves_read { in_words / n_r } else { 0.0 };
+            let write_words = if serves_write { out_words / n_w } else { 0.0 };
+            let turnaround = if shared && serves_read && serves_write {
+                (t.t_rtw_cycles + t.t_wtr_cycles) as f64 / n_r
+            } else {
+                0.0
+            };
+            let utilization =
+                (read_words + write_words + turnaround) / interval;
+            max_util = max_util.max(utilization);
+            channels.push(ChannelLoad {
+                channel: r.channel,
+                cu,
+                read_words,
+                write_words,
+                turnaround_cycles: turnaround,
+                utilization,
+            });
+        }
+    }
+    channels.sort_by_key(|c| c.channel);
+    HbmReport {
+        channels,
+        switch_crossings: map.switch_crossings(),
+        total_hops: map.total_hops(),
+        fill_cycles: map.fill_latency_cycles(),
+        max_utilization: max_util,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::olympus::{generate, OlympusOpts};
+    use crate::platform::Platform;
+
+    fn spec(opts: OlympusOpts) -> SystemSpec {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        generate(&k, &opts, &Platform::alveo_u280()).unwrap()
+    }
+
+    #[test]
+    fn separated_directions_pay_no_turnaround_or_contention() {
+        let s = spec(OlympusOpts::dataflow(7)); // 1 CU < 8: separate I/O
+        let p = stage_penalty(&s);
+        assert_eq!(p.read_turnaround, 0);
+        assert_eq!(p.write_turnaround, 0);
+        assert_eq!(p.read_contention, 0);
+        assert_eq!(p.write_contention, 0);
+        assert_eq!(p.read_slowdown, 1.0, "local-first routes at full rate");
+        assert_eq!(p.write_slowdown, 1.0);
+    }
+
+    #[test]
+    fn shared_channels_pay_turnaround_and_overlap_contention() {
+        let s = spec(OlympusOpts::dataflow(7).with_cus(8)); // ping/pong shared
+        let t = s.hbm_map.interconnect.timing;
+        let p = stage_penalty(&s);
+        let pair = t.t_wtr_cycles + t.t_rtw_cycles;
+        assert_eq!(p.read_turnaround, pair, "channel-bound: both switches");
+        assert_eq!(p.write_turnaround, pair);
+        assert_eq!(p.read_contention, s.kernel.output_words() as u64);
+        assert_eq!(p.write_contention, s.kernel.input_words() as u64);
+    }
+
+    #[test]
+    fn flat_kernels_pay_turnaround_but_never_contend() {
+        let s = spec(OlympusOpts::baseline()); // one shared channel, serial
+        let p = stage_penalty(&s);
+        assert!(p.read_turnaround > 0);
+        assert_eq!(p.read_contention, 0, "no stage overlap to contend");
+        assert_eq!(p.write_contention, 0);
+    }
+
+    #[test]
+    fn channel_report_covers_every_allocated_channel() {
+        let s = spec(OlympusOpts::dataflow(7).with_cus(2));
+        let rep = report(&s, 2783);
+        assert_eq!(rep.channels.len(), s.total_pcs());
+        assert_eq!(rep.switch_crossings, 0, "local-first default");
+        for c in &rep.channels {
+            assert!(c.utilization > 0.0 && c.utilization <= 1.0, "{c:?}");
+        }
+        // ping/pong read channels each carry half the input stream
+        let in_words = s.kernel.input_words() as f64;
+        let read_loads: Vec<&ChannelLoad> = rep
+            .channels
+            .iter()
+            .filter(|c| c.read_words > 0.0)
+            .collect();
+        assert_eq!(read_loads.len(), 4, "2 CUs x ping/pong inputs");
+        for c in read_loads {
+            assert_eq!(c.read_words, in_words / 2.0);
+        }
+    }
+}

@@ -25,6 +25,7 @@ pub mod coordinator;
 pub mod datatype;
 pub mod dse;
 pub mod dsl;
+pub mod hbm;
 pub mod hls;
 pub mod ir;
 pub mod mnemosyne;

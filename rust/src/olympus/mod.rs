@@ -3,14 +3,20 @@
 //! Olympus wraps the compiler-produced kernel into compute units (CUs),
 //! decides lane parallelism from the bus width, applies the HBM
 //! optimizations (double buffering, bus widening, dataflow decomposition,
-//! memory sharing, fixed-point conversion), allocates HBM pseudo-channels,
-//! sizes batches, and emits the system configuration + host steps
-//! (see `config`). The result — a `SystemSpec` — is consumed by the HLS
-//! estimator, the platform simulator, and the runtime coordinator.
+//! memory sharing, fixed-point conversion), binds CU ports to HBM
+//! pseudo-channels through an explicit allocation policy
+//! ([`ChannelPolicy`]: local-first / striped / user-pinned, resolved
+//! against the segmented AXI switch model in `hbm`), sizes batches, and
+//! emits the system configuration + host steps (see `config`). The
+//! result — a `SystemSpec` carrying both the flat channel map and the
+//! routed `hbm::ChannelMap` — is consumed by the HLS estimator, the
+//! platform simulator, and the runtime coordinator.
 
 pub mod config;
 
 use crate::datatype::DataType;
+use crate::hbm::{self, PortDemand};
+pub use crate::hbm::ChannelPolicy;
 use crate::ir::affine::Kernel;
 use crate::ir::liveness;
 use crate::ir::schedule::{self, Schedule};
@@ -82,6 +88,9 @@ pub struct OlympusOpts {
     pub lut_mult_shift: bool,
     /// Synthesis frequency target in MHz.
     pub target_freq_mhz: f64,
+    /// How CU ports are bound to pseudo-channels on the segmented AXI
+    /// switch (paper §3.6.1; `hbm::alloc`).
+    pub channel_policy: ChannelPolicy,
 }
 
 impl OlympusOpts {
@@ -98,6 +107,7 @@ impl OlympusOpts {
             fifo_depth: None,
             lut_mult_shift: false,
             target_freq_mhz: 450.0,
+            channel_policy: ChannelPolicy::LocalFirst,
         }
     }
 
@@ -163,6 +173,11 @@ impl OlympusOpts {
 
     pub fn on_ddr4(mut self) -> Self {
         self.memory = MemoryKind::Ddr4;
+        self
+    }
+
+    pub fn with_policy(mut self, p: ChannelPolicy) -> Self {
+        self.channel_policy = p;
         self
     }
 
@@ -233,6 +248,10 @@ pub struct SystemSpec {
     pub serial_packing: bool,
     pub num_cus: usize,
     pub channels: Vec<CuChannels>,
+    /// Resolved port→channel routing on the segmented AXI switch
+    /// (masters, hops, timing); `channels` is the flat projection of
+    /// this map kept for config emission and capacity checks.
+    pub hbm_map: hbm::ChannelMap,
     /// Elements per batch per CU (paper's E).
     pub batch_elements: usize,
     pub double_buffering: bool,
@@ -277,6 +296,16 @@ impl SystemSpec {
                 if !seen.insert(pc) {
                     return Err(format!("PC {pc} assigned to multiple CUs"));
                 }
+            }
+        }
+        if self.hbm_map.cus.len() != self.num_cus {
+            return Err("one switch route map per CU required".into());
+        }
+        for (i, (c, r)) in self.channels.iter().zip(&self.hbm_map.cus).enumerate() {
+            let rd: Vec<u32> = r.read.iter().map(|x| x.channel).collect();
+            let wr: Vec<u32> = r.write.iter().map(|x| x.channel).collect();
+            if rd != c.read || wr != c.write {
+                return Err(format!("CU {i}: channel map and switch routes disagree"));
             }
         }
         if self.batch_elements == 0 {
@@ -358,53 +387,44 @@ pub fn generate(
     }
     let separate_io =
         opts.double_buffering && opts.num_cus < 8 && opts.memory == MemoryKind::Hbm;
-    let pcs_per_cu: u32 = match (opts.double_buffering, separate_io) {
-        (false, _) => 1,
-        (true, false) => 2,
-        (true, true) => 4,
+    // per-CU channel demand: one shared channel flat, shared ping/pong
+    // pairs when buffers double, fully separated directions below 8 CUs
+    let demand = match (opts.double_buffering, separate_io) {
+        (false, _) => PortDemand {
+            reads: 1,
+            writes: 1,
+            shared: true,
+        },
+        (true, false) => PortDemand {
+            reads: 2,
+            writes: 2,
+            shared: true,
+        },
+        (true, true) => PortDemand {
+            reads: 2,
+            writes: 2,
+            shared: false,
+        },
     };
-    let need = pcs_per_cu as usize * opts.num_cus;
-    let avail = match opts.memory {
-        MemoryKind::Hbm => platform.hbm.pseudo_channels as usize,
-        MemoryKind::Ddr4 => 2,
+    let interconnect = match opts.memory {
+        MemoryKind::Hbm => hbm::Interconnect::hbm(&platform.hbm),
+        MemoryKind::Ddr4 => hbm::Interconnect::ddr4(&platform.hbm),
     };
-    if need > avail {
-        return Err(format!(
-            "{need} channels required, {avail} available on {:?}",
-            opts.memory
-        ));
-    }
-    let mut next_pc = 0u32;
-    let mut alloc = || {
-        let pc = next_pc;
-        next_pc += 1;
-        pc
-    };
-    let channels: Vec<CuChannels> = (0..opts.num_cus)
-        .map(|_| match (opts.double_buffering, separate_io) {
-            (false, _) => {
-                let pc = alloc();
-                CuChannels {
-                    read: vec![pc],
-                    write: vec![pc],
-                }
-            }
-            (true, false) => {
-                // ping/pong channels carry both directions
-                let a = alloc();
-                let b = alloc();
-                CuChannels {
-                    read: vec![a, b],
-                    write: vec![a, b],
-                }
-            }
-            (true, true) => {
-                let r = vec![alloc(), alloc()];
-                let w = vec![alloc(), alloc()];
-                CuChannels { read: r, write: w }
-            }
+    // over-demand is caught authoritatively inside hbm::allocate
+    let demands = vec![demand; opts.num_cus];
+    let routes = hbm::allocate(&opts.channel_policy, &demands, &interconnect)
+        .map_err(|e| format!("channel allocation ({}): {e}", opts.channel_policy.name()))?;
+    let channels: Vec<CuChannels> = routes
+        .iter()
+        .map(|cu| CuChannels {
+            read: cu.read.iter().map(|r| r.channel).collect(),
+            write: cu.write.iter().map(|r| r.channel).collect(),
         })
         .collect();
+    let hbm_map = hbm::ChannelMap {
+        interconnect,
+        cus: routes,
+    };
 
     // ---- batch sizing (paper §3.6: elements per HBM channel) ----
     let in_bytes = kernel.input_words() as u64 * opts.dtype.bytes() as u64;
@@ -444,6 +464,7 @@ pub fn generate(
         serial_packing,
         num_cus: opts.num_cus,
         channels,
+        hbm_map,
         batch_elements,
         double_buffering: opts.double_buffering,
         opts: opts.clone(),
@@ -589,6 +610,50 @@ mod tests {
         assert!(OlympusOpts::fixed_point(crate::datatype::DataType::Fx32)
             .label()
             .contains("Fixed Point 32"));
+    }
+
+    #[test]
+    fn local_first_reproduces_sequential_numbering() {
+        let s = generate(
+            &helmholtz(11),
+            &OlympusOpts::dataflow(7).with_cus(2),
+            &u280(),
+        )
+        .unwrap();
+        assert_eq!(s.channels[0].read, vec![0, 1]);
+        assert_eq!(s.channels[0].write, vec![2, 3]);
+        assert_eq!(s.channels[1].read, vec![4, 5]);
+        assert_eq!(s.hbm_map.switch_crossings(), 0, "all routes local");
+    }
+
+    #[test]
+    fn striped_policy_spreads_and_crosses_segments() {
+        let o = OlympusOpts::dataflow(7).with_policy(ChannelPolicy::Striped);
+        let s = generate(&helmholtz(11), &o, &u280()).unwrap();
+        assert_eq!(s.channels[0].read, vec![0, 4], "one channel per segment");
+        assert_eq!(s.channels[0].write, vec![8, 12]);
+        assert!(s.hbm_map.switch_crossings() > 0);
+        s.validate(&u280()).unwrap();
+    }
+
+    #[test]
+    fn pinned_policy_honors_and_rejects() {
+        let pin = ChannelPolicy::Pinned(vec![vec![31]]);
+        let s = generate(
+            &helmholtz(11),
+            &OlympusOpts::baseline().with_policy(pin),
+            &u280(),
+        )
+        .unwrap();
+        assert_eq!(s.channels[0].read, vec![31]);
+        assert_eq!(s.hbm_map.cus[0].read[0].hops, 7);
+        let bad = ChannelPolicy::Pinned(vec![vec![99]]);
+        assert!(generate(
+            &helmholtz(11),
+            &OlympusOpts::baseline().with_policy(bad),
+            &u280()
+        )
+        .is_err());
     }
 
     #[test]

@@ -74,6 +74,29 @@ pub struct Slr {
     pub plram_mb: u64,
 }
 
+/// Segmented-AXI-switch and channel-controller timing parameters
+/// (paper §2.2 Fig. 3: the 32 pseudo-channels sit behind eight 4×4
+/// switch units chained by lateral links; §2.3 Challenge 2: read/write
+/// turnaround). Consumed by `hbm::Interconnect`; the calibration of
+/// each value is tabulated in DESIGN.md §"Memory interconnect model".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchConfig {
+    /// Masters/channels per 4×4 switch unit.
+    pub segment_channels: u32,
+    /// Local round-trip latency of one AXI transaction (cycles).
+    pub base_latency_cycles: u64,
+    /// Extra round-trip cycles per switch boundary a route crosses.
+    pub lateral_hop_cycles: u64,
+    /// Outstanding AXI transactions a master sustains.
+    pub max_outstanding: u64,
+    /// Words per AXI burst.
+    pub burst_words: u64,
+    /// Controller read→write turnaround (tRTW class, cycles).
+    pub t_rtw_cycles: u64,
+    /// Controller write→read turnaround (tWTR class, cycles).
+    pub t_wtr_cycles: u64,
+}
+
 /// HBM subsystem parameters (paper §2.2).
 #[derive(Debug, Clone, Copy)]
 pub struct HbmConfig {
@@ -81,6 +104,8 @@ pub struct HbmConfig {
     pub pc_capacity_bytes: u64,
     pub pc_bus_bits: u32,
     pub pc_clock_mhz: f64,
+    /// Segmented AXI switch in front of the channels.
+    pub switch: SwitchConfig,
 }
 
 impl HbmConfig {
@@ -158,6 +183,19 @@ impl Platform {
                 pc_capacity_bytes: 256 * 1024 * 1024,
                 pc_bus_bits: 256,
                 pc_clock_mhz: 450.0,
+                switch: SwitchConfig {
+                    segment_channels: 4,
+                    // 4 transactions x 16-word bursts exactly cover the
+                    // 64-cycle local round trip: local ports stream at
+                    // one word/cycle, every boundary past that window
+                    // throttles proportionally (DESIGN.md penalty table)
+                    base_latency_cycles: 64,
+                    lateral_hop_cycles: 32,
+                    max_outstanding: 4,
+                    burst_words: 16,
+                    t_rtw_cycles: 64,
+                    t_wtr_cycles: 64,
+                },
             },
             pcie_eff_bytes_per_sec: 7.0e9,
             target_freq_mhz: 450.0,
@@ -220,6 +258,16 @@ mod tests {
         let p = Platform::alveo_u280();
         let total = p.hbm.pc_capacity_bytes * p.hbm.pseudo_channels as u64;
         assert_eq!(total, 8 * 1024 * 1024 * 1024);
+    }
+
+    #[test]
+    fn switch_outstanding_window_covers_local_latency_exactly() {
+        // local ports must stream at one word/cycle (the seed's read
+        // model); any slack here would silently speed up every design
+        let p = Platform::alveo_u280();
+        let s = p.hbm.switch;
+        assert_eq!(p.hbm.pseudo_channels / s.segment_channels, 8, "8 units");
+        assert_eq!(s.max_outstanding * s.burst_words, s.base_latency_cycles);
     }
 
     #[test]

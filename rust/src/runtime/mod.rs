@@ -5,9 +5,18 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`. HLO *text* is the interchange format;
 //! serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1.
+//!
+//! The `xla` crate lives only in the offline registry, so it is gated
+//! behind the `pjrt` feature: a bare checkout builds against the
+//! in-crate stub (`xla_stub`), whose client constructor fails — every
+//! caller already skips gracefully when `Runtime` cannot come up.
 
 pub mod hlo_stats;
 pub mod manifest;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
+mod xla;
 
 use std::collections::HashMap;
 

@@ -1,0 +1,116 @@
+//! Offline stand-in for the private `xla` crate (the PJRT /
+//! xla_extension closure carried only by the offline registry).
+//!
+//! Compiled when the `pjrt` feature is **off** — the default for a bare
+//! checkout, where the real crate cannot be fetched. It mirrors exactly
+//! the API surface `runtime` touches so the module typechecks, and
+//! fails at the first constructor ([`PjRtClient::cpu`]): `Runtime::new`
+//! returns an error, and every runtime-dependent test and bench already
+//! skips gracefully when the runtime is unavailable. Enable `pjrt` (and
+//! add the `xla` dependency from the offline registry — see the
+//! commented block in `rust/Cargo.toml`) to execute real numerics.
+
+use std::fmt;
+
+/// Error every stub entry point returns.
+#[derive(Debug)]
+pub struct Unavailable;
+
+impl fmt::Display for Unavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "PJRT runtime not built: enable the `pjrt` feature with the \
+             offline registry's `xla` crate (see rust/Cargo.toml)"
+        )
+    }
+}
+
+impl std::error::Error for Unavailable {}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        String::new()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F64,
+    F32,
+    /// The real crate has many more element types; one stand-in keeps
+    /// the `other =>` match arms in `runtime` reachable.
+    Unsupported,
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn ty(&self) -> Result<ElementType, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Unavailable> {
+        Err(Unavailable)
+    }
+}

@@ -1,11 +1,32 @@
 //! Discrete-event batch timeline (paper §3.6.1, Fig. 14a).
 //!
-//! Resources: the PCIe link — full duplex, so host-to-HBM and HBM-to-host
-//! transfers ride separate directions, but each direction serializes
-//! across all CUs (the effect that kills multi-CU system throughput in
-//! Fig. 17) — and one compute resource per CU. Double buffering gives
-//! each CU two batch slots (ping/pong): the transfer of batch j+2's
-//! inputs into the idle channel overlaps the compute of batch j.
+//! Three resource classes pace a workload of `n_batches` dealt
+//! round-robin to the CUs:
+//!
+//!  * **PCIe, per direction** — the link is full duplex: host→HBM input
+//!    transfers and HBM→host output transfers ride independent FIFO
+//!    queues, so the two directions never contend with each other, and
+//!    the *slower* direction sets the transfer pace (for the Helmholtz
+//!    kernel that is the input side, which outweighs outputs roughly
+//!    3:1). Within a direction, transfers serialize across **all** CUs
+//!    in global batch order — the effect that caps multi-CU system
+//!    throughput in Fig. 17.
+//!  * **CUs** — one compute resource each; a batch occupies its CU for
+//!    `t_batch` seconds after its inputs land.
+//!  * **buffer slots** — double buffering gives each CU two batch slots
+//!    (ping/pong): the input transfer of per-CU batch `j` may start once
+//!    batch `j − 2`'s compute has drained its slot, overlapping transfer
+//!    with compute; without it the single slot forces the full
+//!    in → compute → out chain per batch.
+//!
+//! The simulation is a deterministic list scheduler over completion
+//! times, not an event queue: batches are issued in global order, each
+//! taking `max(link free, slot free)` as its transfer start. Outputs are
+//! the makespan, the busiest CU's busy time, and the busiest PCIe
+//! *direction*'s busy time (`pcie_busy_s` — the quantity `pcie_bound`
+//! compares against compute). Property tests pin the lower bounds
+//! (no resource beats its busy time; chain latency) and monotonicity in
+//! batch count.
 
 /// Timeline inputs (all times in seconds).
 #[derive(Debug, Clone, Copy)]

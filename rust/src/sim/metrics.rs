@@ -1,8 +1,11 @@
 //! Simulation metrics: the quantities the paper reports (GFLOPS,
-//! GFLOPS/W, power, efficiency vs ideal — §4.1, Table 2, Fig. 15-18).
+//! GFLOPS/W, power, efficiency vs ideal — §4.1, Table 2, Fig. 15-18),
+//! plus the interconnect-side diagnostics the `hbm` model produces
+//! (per-channel utilization, switch crossings, fill latency).
 
 use super::event::Timeline;
 use super::StageIntervals;
+use crate::hbm::HbmReport;
 use crate::hls::Estimate;
 use crate::olympus::SystemSpec;
 
@@ -32,6 +35,14 @@ pub struct SimResult {
     /// Name of the limiting stage or "pcie".
     pub bottleneck: String,
     pub total_flops: u64,
+    /// Busy fraction of each allocated pseudo-channel while its CU
+    /// streams, `(channel, utilization)` in channel order.
+    pub channel_utilization: Vec<(u32, f64)>,
+    pub max_channel_utilization: f64,
+    /// Port→channel routes crossing at least one switch boundary.
+    pub switch_crossings: u64,
+    /// Switch round-trip latency filled once per batch (cycles).
+    pub hbm_fill_cycles: u64,
 }
 
 impl SimResult {
@@ -42,6 +53,7 @@ impl SimResult {
         total_flops: u64,
         tl: Timeline,
         avg_power_w: f64,
+        hbm: HbmReport,
     ) -> SimResult {
         let gflops_system = total_flops as f64 / tl.total_s.max(1e-12) / 1e9;
         let gflops_cu = total_flops as f64 / tl.cu_busy_s.max(1e-12) / 1e9;
@@ -70,6 +82,14 @@ impl SimResult {
             stage_intervals: si.stages.clone(),
             bottleneck,
             total_flops,
+            channel_utilization: hbm
+                .channels
+                .iter()
+                .map(|c| (c.channel, c.utilization))
+                .collect(),
+            max_channel_utilization: hbm.max_utilization,
+            switch_crossings: hbm.switch_crossings,
+            hbm_fill_cycles: hbm.fill_cycles,
         }
     }
 }
@@ -101,5 +121,14 @@ mod tests {
         // flops bookkeeping
         assert_eq!(r.total_flops, 100_000 * 177_023);
         assert!(r.batches >= 1);
+        // interconnect diagnostics: every allocated channel is reported,
+        // utilizations are sane, and the default layout never crosses
+        assert_eq!(r.channel_utilization.len(), s.total_pcs());
+        for &(_, u) in &r.channel_utilization {
+            assert!(u > 0.0 && u <= 1.0, "channel utilization {u}");
+        }
+        assert!(r.max_channel_utilization <= 1.0);
+        assert_eq!(r.switch_crossings, 0, "local-first allocation");
+        assert!(r.hbm_fill_cycles > 0);
     }
 }

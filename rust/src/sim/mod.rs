@@ -10,13 +10,22 @@
 //!    "data streamed in gets stored in an internal buffer"); elementwise
 //!    consumers are stream-order and need no buffering (the paper's
 //!    mmult observation). The Read module delivers one word per lane per
-//!    cycle (64-bit lanes on the 256-bit AXI port).
+//!    cycle (64-bit lanes on the 256-bit AXI port) when its route through
+//!    the HBM switch sustains it; turnaround, contention, and
+//!    switch-crossing throttles come per-channel from `hbm::traffic`
+//!    (no flat direction-switch constant — see DESIGN.md §"Memory
+//!    interconnect model" for what replaced it).
 //!
 //!  * `timeline` — a discrete-event simulation over batches: the PCIe
-//!    link is a single shared resource (host transfers serialize across
-//!    CUs — the effect that kills multi-CU system throughput in Fig. 17),
-//!    each CU is a resource, and double buffering gives each CU two
-//!    outstanding batch slots (ping/pong).
+//!    link is **full duplex** — host→HBM and HBM→host transfers ride
+//!    independent per-direction queues, and the *slower direction* sets
+//!    the pace (inputs here, which outweigh outputs ~3:1 for the
+//!    Helmholtz kernel) — but each direction serializes across all CUs,
+//!    the effect that kills multi-CU system throughput in Fig. 17. This
+//!    matches the coordinator's host program, which issues `TransferIn`
+//!    and `TransferOut` steps on independent queues; each CU is a
+//!    resource, and double buffering gives each CU two outstanding batch
+//!    slots (ping/pong).
 //!
 //! One documented fudge factor: `STALL_FACTOR` (dataflow handshake +
 //! pipeline fill overheads Vitis reports as a few extra percent; fitted
@@ -25,6 +34,7 @@
 pub mod event;
 pub mod metrics;
 
+use crate::hbm;
 use crate::hls::Estimate;
 use crate::ir::affine::NestKind;
 use crate::olympus::SystemSpec;
@@ -35,20 +45,16 @@ pub use metrics::SimResult;
 /// Uniform dataflow/control overhead factor (see module docs).
 pub const STALL_FACTOR: f64 = 1.14;
 
-/// Read<->write direction-turnaround penalty on a shared HBM channel
-/// (paper Challenge 2: "frequently switching between read and write
-/// transactions is inefficient due to memory controller timing
-/// parameters"; tWTR/tRTW-class turnarounds ~tens of controller cycles).
-/// Paid once per element in each direction when a CU's read and write
-/// ports share a pseudo-channel; separating the directions onto
-/// different channels (the <8-CU Olympus layout) removes it.
-pub const DIR_SWITCH_CYCLES: u64 = 64;
-
 /// Per-element cycle interval of each CU stage, per lane.
 #[derive(Debug, Clone)]
 pub struct StageIntervals {
     /// (name, cycles per element)
     pub stages: Vec<(String, u64)>,
+    /// Switch round-trip latency the pipeline fills once per batch
+    /// (from the same `hbm::traffic` penalty pass that shaped the
+    /// stage intervals — kept here so `batch_cycles` never recomputes
+    /// or drifts from it).
+    pub fill_cycles: u64,
 }
 
 impl StageIntervals {
@@ -82,23 +88,25 @@ pub fn stages(spec: &SystemSpec, est: &Estimate) -> StageIntervals {
 
     let mut stages: Vec<(String, u64)> = Vec::new();
 
-    // Challenge 2: shared read/write channels pay a direction-turnaround
-    // penalty per element in each direction.
-    let shared_channel = spec
-        .channels
-        .first()
-        .map(|c| c.read.iter().any(|pc| c.write.contains(pc)))
-        .unwrap_or(false);
-    let turnaround = if shared_channel { DIR_SWITCH_CYCLES } else { 0 };
+    // Challenge 2 + switch geometry, per channel from the routed map:
+    // tWTR/tRTW turnarounds when a CU's directions share a channel,
+    // cross-direction contention when dataflow overlaps Read and Write
+    // on that channel, and a bandwidth throttle on routes whose switch
+    // crossings outrun the outstanding-transaction window.
+    let pen = hbm::traffic::stage_penalty(spec);
 
     // Read module: one word per lane per cycle on the 64-bit lane slice;
     // the serial wide-bus variant re-serializes the packed words into a
     // single kernel's buffers (paper: the optimization *degrades*).
-    let read = if spec.serial_packing {
+    let read_words = if spec.serial_packing {
         in_words / (spec.bus_bits as u64 / spec.dtype.bits() as u64) + in_words
     } else {
         in_words
-    } + turnaround;
+    };
+    let read = throttle(
+        read_words + pen.read_turnaround + pen.read_contention,
+        pen.read_slowdown,
+    );
     stages.push(("read".into(), read));
 
     if spec.dataflow {
@@ -140,21 +148,47 @@ pub fn stages(spec: &SystemSpec, est: &Estimate) -> StageIntervals {
         stages.push(("compute".into(), compute));
     }
 
-    stages.push(("write".into(), out_words + turnaround));
-    StageIntervals { stages }
+    let write = throttle(
+        out_words + pen.write_turnaround + pen.write_contention,
+        pen.write_slowdown,
+    );
+    stages.push(("write".into(), write));
+    StageIntervals {
+        stages,
+        fill_cycles: pen.fill_cycles,
+    }
 }
 
-/// Cycles for one batch on one CU (all lanes in lockstep).
+/// Inflate a stage interval by a switch-crossing bandwidth factor
+/// (exact identity at the calibrated local rate of 1.0).
+fn throttle(cycles: u64, slowdown: f64) -> u64 {
+    (cycles as f64 * slowdown).ceil() as u64
+}
+
+/// Cycles for one batch on one CU (all lanes in lockstep). The switch
+/// round-trip of the CU's longest route is filled once per batch before
+/// the first word lands (`hbm::traffic`).
 pub fn batch_cycles(spec: &SystemSpec, si: &StageIntervals) -> u64 {
     let per_lane_elements = (spec.batch_elements / spec.lanes.max(1)) as u64;
-    let raw = if spec.dataflow {
-        // pipelined stages: fill + steady state at the bottleneck
-        si.sum() + per_lane_elements.saturating_sub(1) * si.max_interval()
-    } else {
-        // serial read -> compute -> write per element
-        per_lane_elements * si.sum()
-    };
+    let raw = si.fill_cycles
+        + if spec.dataflow {
+            // pipelined stages: fill + steady state at the bottleneck
+            si.sum() + per_lane_elements.saturating_sub(1) * si.max_interval()
+        } else {
+            // serial read -> compute -> write per element
+            per_lane_elements * si.sum()
+        };
     (raw as f64 * STALL_FACTOR) as u64
+}
+
+/// Steady-state element service interval of one CU in cycles — the
+/// denominator for per-channel utilization.
+fn element_interval(spec: &SystemSpec, si: &StageIntervals) -> u64 {
+    if spec.dataflow {
+        si.max_interval()
+    } else {
+        si.sum()
+    }
 }
 
 /// Simulate a full workload of `n_elements` on the generated system.
@@ -210,6 +244,7 @@ pub fn simulate_multi_fpga(
         est.fmax_mhz,
         spec.total_pcs() as u32,
     );
+    let hbm_report = hbm::traffic::report(spec, element_interval(spec, &si));
 
     metrics::SimResult::new(
         spec,
@@ -218,6 +253,7 @@ pub fn simulate_multi_fpga(
         total_flops,
         tl,
         avg_power_w,
+        hbm_report,
     )
 }
 
@@ -368,10 +404,12 @@ mod tests {
     }
 
     #[test]
-    fn shared_channel_pays_direction_turnaround() {
+    fn shared_channel_pays_turnaround_and_contention() {
         // paper Challenge 2: separating reads and writes onto different
         // channels removes the controller turnaround penalty. 8 CUs use
-        // shared ping/pong channels; 4 CUs separate the directions.
+        // shared ping/pong channels; 4 CUs separate the directions. On
+        // the shared layout each overlapped stage also waits out the
+        // other direction's words on the wire (channel-bound pipeline).
         let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
         let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
         let k = lower::lower_kernel(&m, "helmholtz").unwrap();
@@ -383,14 +421,20 @@ mod tests {
         };
         let separate = mk(4); // <8 CUs: separate in/out channels
         let shared = mk(8); // ping/pong channels carry both directions
+        let t = platform.hbm.switch;
+        let turn = t.t_wtr_cycles + t.t_rtw_cycles;
+        let in_words = (121 + 2 * 1331) as u64;
+        let out_words = 1331u64;
+        assert_eq!(separate.stages[0].1, in_words, "separated reads are clean");
         assert_eq!(
             shared.stages[0].1,
-            separate.stages[0].1 + DIR_SWITCH_CYCLES,
-            "read stage pays the turnaround on shared channels"
+            in_words + out_words + turn,
+            "shared reads see the channel's full busy time"
         );
         let wl = shared.stages.last().unwrap().1;
         let ws = separate.stages.last().unwrap().1;
-        assert_eq!(wl, ws + DIR_SWITCH_CYCLES);
+        assert_eq!(ws, out_words);
+        assert_eq!(wl, out_words + in_words + turn);
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Integration: the U280 interconnect model end to end (DESIGN.md
+//! §"Memory interconnect model") — switch-crossing latency ordering,
+//! per-channel turnaround appearing only on shared-direction layouts,
+//! the ≥8-CU shared-channel throughput regression (paper Fig. 17
+//! direction), and the DSE frontier rejecting crossing-heavy
+//! allocations mechanistically.
+
+use hbmflow::cli::build_kernel;
+use hbmflow::datatype::DataType;
+use hbmflow::dse::{self, SearchSpace};
+use hbmflow::hbm::Interconnect;
+use hbmflow::hls;
+use hbmflow::olympus::{self, BusMode, ChannelPolicy, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::sim::{self, SimResult};
+
+fn run(opts: OlympusOpts, p: usize, n: u64) -> SimResult {
+    let platform = Platform::alveo_u280();
+    let k = build_kernel("helmholtz", p).unwrap();
+    let spec = olympus::generate(&k, &opts, &platform).unwrap();
+    let est = hls::estimate(&spec, &platform);
+    sim::simulate(&spec, &est, &platform, n)
+}
+
+const N: u64 = 500_000;
+
+#[test]
+fn same_segment_beats_cross_segment_latency_and_rate() {
+    let ic = Interconnect::hbm(&Platform::alveo_u280().hbm);
+    // latency: strictly ordered in switch distance
+    assert!(ic.round_trip_cycles(0) < ic.round_trip_cycles(1));
+    assert!(ic.round_trip_cycles(1) < ic.round_trip_cycles(3));
+    assert!(ic.round_trip_cycles(3) < ic.round_trip_cycles(7));
+    // sustainable rate: local is full, crossings throttle monotonically
+    assert_eq!(ic.effective_rate(0), 1.0);
+    assert!(ic.effective_rate(1) < ic.effective_rate(0));
+    assert!(ic.effective_rate(3) < ic.effective_rate(1));
+    assert!(ic.effective_rate(7) < ic.effective_rate(3));
+}
+
+#[test]
+fn turnaround_only_when_directions_share_a_channel() {
+    // <8 CUs: Olympus separates read and write channels — the read
+    // stage is exactly the input word count, no controller turnaround.
+    let separated = run(OlympusOpts::dataflow(7).with_cus(4), 11, N);
+    let in_words = (121 + 2 * 1331) as u64;
+    assert_eq!(separated.stage_intervals[0].1, in_words);
+
+    // ≥8 CUs: ping/pong channels carry both directions — the read stage
+    // pays tWTR+tRTW and waits out the overlapped write stream.
+    let shared = run(OlympusOpts::dataflow(7).with_cus(8), 11, N);
+    let t = Platform::alveo_u280().hbm.switch;
+    assert_eq!(
+        shared.stage_intervals[0].1,
+        in_words + 1331 + t.t_wtr_cycles + t.t_rtw_cycles
+    );
+}
+
+#[test]
+fn shared_channel_layout_loses_per_cu_throughput() {
+    // Paper Fig. 17 direction: past 8 CUs the shared-channel layout
+    // erodes per-CU throughput, so doubling CUs from 4 to 8 must yield
+    // strictly less than 2x aggregate kernel throughput (in cycles, so
+    // the comparison is frequency-independent).
+    let platform = Platform::alveo_u280();
+    let k = build_kernel("helmholtz", 11).unwrap();
+    let interval = |cus: usize| {
+        let opts = OlympusOpts::dataflow(7).with_cus(cus);
+        let spec = olympus::generate(&k, &opts, &platform).unwrap();
+        let est = hls::estimate(&spec, &platform);
+        sim::stages(&spec, &est).max_interval() as f64
+    };
+    let separated = interval(4);
+    let shared = interval(8);
+    assert!(shared > separated, "shared channels slow the pipeline");
+    let agg4 = 4.0 / separated; // elements per cycle, aggregate
+    let agg8 = 8.0 / shared;
+    assert!(
+        agg8 < 2.0 * agg4,
+        "8-CU aggregate {agg8} must fall short of 2x the 4-CU {agg4}"
+    );
+    assert!(agg8 > agg4, "replication still gains in kernel cycles");
+}
+
+#[test]
+fn striped_allocation_pays_for_its_crossings() {
+    let local = run(OlympusOpts::dataflow(7), 11, N);
+    let striped = run(
+        OlympusOpts::dataflow(7).with_policy(ChannelPolicy::Striped),
+        11,
+        N,
+    );
+    assert_eq!(local.switch_crossings, 0);
+    assert!(striped.switch_crossings > 0);
+    assert!(striped.hbm_fill_cycles > local.hbm_fill_cycles);
+    assert!(
+        striped.gflops_system < local.gflops_system,
+        "crossing throttle must cost throughput: striped {} vs local {}",
+        striped.gflops_system,
+        local.gflops_system
+    );
+}
+
+#[test]
+fn channel_utilization_is_reported_per_allocated_channel() {
+    let r = run(OlympusOpts::dataflow(7).with_cus(2), 11, N);
+    assert_eq!(r.channel_utilization.len(), 8, "2 CUs x 4 PCs");
+    for &(pc, u) in &r.channel_utilization {
+        assert!(pc < 8, "local-first keeps the first eight channels");
+        assert!(u > 0.0 && u <= 1.0, "HBM[{pc}] utilization {u}");
+    }
+    assert!(r.max_channel_utilization <= 1.0);
+}
+
+#[test]
+fn dse_frontier_rejects_the_striped_twin() {
+    let mut s = SearchSpace::default_for("helmholtz");
+    s.degrees = vec![11];
+    s.dtypes = vec![DataType::Fx32];
+    s.cu_counts = vec![1];
+    s.dataflow = vec![Some(7)];
+    s.double_buffering = vec![true];
+    s.bus_modes = vec![BusMode::Wide256Parallel];
+    s.mem_sharing = vec![false];
+    s.fifo_depths = vec![None];
+    s.channel_policies = vec![ChannelPolicy::LocalFirst, ChannelPolicy::Striped];
+    let ex = dse::explore(&s, &Platform::alveo_u280(), 200_000, Some(2)).unwrap();
+    assert_eq!(ex.enumerated(), 2, "one local-first twin, one striped");
+
+    let policy_of = |i: usize| ex.outcomes[i].point.opts.channel_policy.clone();
+    let g = |i: usize| ex.outcomes[i].result.as_ref().unwrap().sim.gflops_system;
+    let local = (0..2).find(|&i| policy_of(i) == ChannelPolicy::LocalFirst).unwrap();
+    let striped = 1 - local;
+    assert!(g(local) > g(striped));
+    assert!(
+        ex.is_on_frontier(local),
+        "the all-local allocation survives"
+    );
+    assert!(
+        !ex.is_on_frontier(striped),
+        "the crossing-heavy allocation is dominated, not fitted away"
+    );
+}
