@@ -1,30 +1,36 @@
 //! Command-line interface (hand-rolled; the offline registry has no clap).
 //!
 //! ```text
-//! hbmflow compile  [--kernel helmholtz|interpolation|gradient] [--p 11]
-//!                  [--dataflow N] [--dtype f64|f32|fx64|fx32] [--emit c|cfg|wrapper|host|teil]
-//! hbmflow estimate [--kernel ..] [--p ..] [--preset ..] [--cus N]
-//! hbmflow simulate [--kernel ..] [--p ..] [--preset ..] [--cus N] [--elements N]
+//! hbmflow compile  [--kernel helmholtz|interpolation|gradient | --file prog.cfd]
+//!                  [--p 11] [--dataflow N] [--dtype f64|f32|fx64|fx32]
+//!                  [--emit c|cfg|wrapper|host|teil]
+//! hbmflow estimate [--kernel .. | --file ..] [--p ..] [--preset ..] [--cus N]
+//! hbmflow simulate [--kernel .. | --file ..] [--p ..] [--preset ..] [--cus N]
+//!                  [--elements N]            # alias: sim
 //! hbmflow run      [--p 7|11] [--dtype ..] [--elements N] [--artifacts DIR]
 //! hbmflow sweep    [--elements N]
 //! hbmflow ladder   [--elements N]       # the Fig. 15 ladder
-//! hbmflow dse      [--kernel ..] [--p 7,11] [--dtype ..] [--max-cus N]
-//!                  [--ddr4] [--top-k N] [--pareto-only] [--format text|json|csv]
+//! hbmflow dse      [--kernel .. | --file ..] [--p 7,11] [--dtype ..]
+//!                  [--max-cus N] [--ddr4] [--top-k N] [--pareto-only]
+//!                  [--format text|json|csv]
 //! ```
 //!
 //! Flags are `--key value` pairs; the registered boolean flags
-//! (`--pareto-only`, `--ddr4`) may appear bare.
+//! (`--pareto-only`, `--ddr4`) may appear bare. `--file prog.cfd` feeds
+//! an arbitrary CFDlang program (see docs/CFDLANG.md) through the same
+//! flow as the builtin kernels; `--kernel` and `--file` are mutually
+//! exclusive.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{Driver, HelmholtzWorkload};
+use crate::coordinator::{Driver, GenericWorkload, HelmholtzWorkload};
 use crate::datatype::DataType;
 use crate::dse;
-use crate::dsl;
 use crate::hls;
-use crate::ir::{lower, rewrite, schedule, teil};
+use crate::ir::schedule;
+use crate::kernels::KernelSource;
 use crate::olympus::{self, ChannelPolicy, OlympusOpts};
 use crate::platform::Platform;
 use crate::report;
@@ -109,17 +115,33 @@ impl Args {
     }
 }
 
-/// Build the kernel for a named operator.
+/// Build the kernel for a named builtin operator (thin wrapper over the
+/// registry, kept for tests/benches/examples).
 pub fn build_kernel(kernel: &str, p: usize) -> Result<crate::ir::affine::Kernel> {
-    let src = match kernel {
-        "helmholtz" => dsl::inverse_helmholtz_source(p),
-        "interpolation" => dsl::interpolation_source(p, p),
-        "gradient" => dsl::gradient_source(8, 7, 6),
-        other => bail!("unknown kernel {other} (helmholtz|interpolation|gradient)"),
-    };
-    let prog = dsl::parse(&src).map_err(|e| anyhow!(e))?;
-    let m = rewrite::optimize(teil::from_ast(&prog).map_err(|e| anyhow!(e))?);
-    lower::lower_kernel(&m, kernel).map_err(|e| anyhow!(e))
+    KernelSource::builtin(kernel).build(p).map_err(|e| anyhow!(e))
+}
+
+/// Resolve the `--kernel` / `--file` flag pair into a program source.
+fn source_from(args: &Args) -> Result<KernelSource> {
+    KernelSource::from_flags(args.get("kernel"), args.get("file")).map_err(|e| anyhow!(e))
+}
+
+/// Effective degree: `--p` for parameterized builtins; fixed-extent
+/// sources (files, inline, gradient) report their nominal degree, and
+/// an explicit `--p` on them is an error (it could not be applied) —
+/// consistent across compile/estimate/simulate/explore/dse.
+fn degree_for(source: &KernelSource, args: &Args, default: usize) -> Result<usize> {
+    if source.parameterized() {
+        args.usize_or("p", default)
+    } else if args.get("p").is_some() {
+        bail!(
+            "--p only applies to the parameterized builtin kernels; {} has \
+             fixed extents",
+            source.name()
+        );
+    } else {
+        Ok(source.nominal_degree())
+    }
 }
 
 /// Resolve a preset name to Olympus options.
@@ -158,7 +180,7 @@ pub fn main_with_args(argv: &[String]) -> Result<String> {
     match args.cmd.as_str() {
         "compile" => cmd_compile(&args),
         "estimate" => cmd_estimate(&args),
-        "simulate" => cmd_simulate(&args),
+        "simulate" | "sim" => cmd_simulate(&args),
         "run" => cmd_run(&args),
         "ladder" => cmd_ladder(&args),
         "sweep" => cmd_sweep(&args),
@@ -175,26 +197,37 @@ hbmflow — DSL-to-HBM-architecture flow (Soldavini et al. 2022 repro)
 commands:
   compile   emit C99 / system.cfg / CU wrapper / host steps / teil IR
   estimate  HLS resource + frequency estimate for a configuration
-  simulate  cycle-approximate system simulation (GFLOPS, power)
+  simulate  cycle-approximate system simulation (GFLOPS, power) plus the
+            teil::eval numerics oracle (alias: sim)
   run       real numerics through the PJRT artifacts
   ladder    the full Fig. 15 optimization ladder
   sweep     dtype x p x CUs design-space sweep
   explore   fixed-point format exploration under an error budget
   dse       parallel design-space exploration with Pareto-frontier
             extraction over (GFLOPS, energy, BRAM/URAM/DSP)
-flags: --kernel --p --dtype --preset --cus --elements --emit --artifacts
-       --mse-budget --max-bits --policy local|striped (channel allocation)
+
+kernel sources (compile / estimate / simulate / explore / dse):
+  --kernel helmholtz|interpolation|gradient   builtin generators
+  --file prog.cfd                             any CFDlang program
+  (mutually exclusive; see docs/CFDLANG.md and examples/kernels/*.cfd)
+
+flags: --kernel --file --p --dtype --preset --cus --elements --emit
+       --artifacts --mse-budget --max-bits
+       --policy local|striped (channel allocation)
 dse flags: --p 7,11  --max-cus N  --ddr4  --threads N  --elements N
            --policy local,striped  --top-k N (0 = all)  --pareto-only
            --format text|json|csv
 ";
 
 fn cmd_compile(args: &Args) -> Result<String> {
-    let kernel_name = args.get("kernel").unwrap_or("helmholtz");
-    let p = args.usize_or("p", 11)?;
+    let source = source_from(args)?;
+    let p = degree_for(&source, args, 11)?;
     let dtype = args.dtype_or(DataType::F64)?;
     let groups = args.usize_or("dataflow", 7)?;
-    let k = build_kernel(kernel_name, p)?;
+    // one parse for every emit mode: the teil module and the lowered
+    // kernel come from the same read (and unknown kernel names are an
+    // error on the teil path too)
+    let (module, k) = source.compile(p).map_err(|e| anyhow!(e))?;
     let opts = {
         let mut o = OlympusOpts::dataflow(groups.min(k.nests.len()));
         o.dtype = dtype;
@@ -211,28 +244,19 @@ fn cmd_compile(args: &Args) -> Result<String> {
         "cfg" => olympus::config::system_cfg(&spec),
         "wrapper" => olympus::config::cu_wrapper(&spec),
         "host" => olympus::config::host_program(&spec),
-        "teil" => {
-            let src = match kernel_name {
-                "helmholtz" => dsl::inverse_helmholtz_source(p),
-                "interpolation" => dsl::interpolation_source(p, p),
-                _ => dsl::gradient_source(8, 7, 6),
-            };
-            let prog = dsl::parse(&src).map_err(|e| anyhow!(e))?;
-            let m = rewrite::optimize(teil::from_ast(&prog).map_err(|e| anyhow!(e))?);
-            m.to_string()
-        }
+        "teil" => module.to_string(),
         other => bail!("unknown --emit {other} (c|cfg|wrapper|host|teil)"),
     };
     Ok(out)
 }
 
 fn cmd_estimate(args: &Args) -> Result<String> {
-    let kernel_name = args.get("kernel").unwrap_or("helmholtz");
-    let p = args.usize_or("p", 11)?;
+    let source = source_from(args)?;
+    let p = degree_for(&source, args, 11)?;
     let dtype = args.dtype_or(DataType::F64)?;
     let cus = args.usize_or("cus", 1)?;
     let opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?;
-    let k = build_kernel(kernel_name, p)?;
+    let k = source.build(p).map_err(|e| anyhow!(e))?;
     let platform = Platform::alveo_u280();
     let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
     let e = hls::estimate(&spec, &platform);
@@ -269,14 +293,21 @@ fn cmd_estimate(args: &Args) -> Result<String> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<String> {
-    let kernel_name = args.get("kernel").unwrap_or("helmholtz");
-    let p = args.usize_or("p", 11)?;
+    let source = source_from(args)?;
+    let p = degree_for(&source, args, 11)?;
     let dtype = args.dtype_or(DataType::F64)?;
     let cus = args.usize_or("cus", 1)?;
     let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
     let opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?
         .with_policy(args.policy()?);
-    let k = build_kernel(kernel_name, p)?;
+    // generic numerics oracle: the lowered kernel vs teil::eval on a few
+    // seeded elements (no closed form needed — works for any --file);
+    // module and kernel come from one parse so the cross-check is always
+    // of the same program
+    let (module, k) = source.compile(p).map_err(|e| anyhow!(e))?;
+    let oracle = GenericWorkload::new(&source.name(), module, k.clone(), 2024)
+        .check(4)
+        .map_err(|e| anyhow!(e))?;
     let platform = Platform::alveo_u280();
     let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
     let e = hls::estimate(&spec, &platform);
@@ -292,15 +323,18 @@ fn cmd_simulate(args: &Args) -> Result<String> {
         .map(|(pc, u)| format!("HBM[{pc}]={u:.2}"))
         .collect();
     Ok(format!(
-        "{} p={p} dtype={} cus={cus} elements={n}\n\
+        "{} [{}] p={p} dtype={} cus={cus} elements={n}\n\
          CU     : {:.3} GFLOPS ({:.3} s busy)\n\
          System : {:.3} GFLOPS ({:.3} s wall)\n\
          f={:.1} MHz  ideal={:.2} GFLOPS  efficiency={:.3}\n\
          power {:.1} W  ->  {:.2} GFLOPS/W  ({:.0} J)\n\
          bottleneck: {}  stages/element: {}\n\
          interconnect ({}): {} switch crossings, fill {} cyc/batch\n\
-         channel utilization: {}",
+         channel utilization: {}\n\
+         oracle : MSE {:.3e}  max|err| {:.3e} (lowered kernel vs \
+         teil::eval, {} elements)",
         r.label,
+        source.name(),
         dtype,
         r.gflops_cu,
         r.cu_time_s,
@@ -318,6 +352,9 @@ fn cmd_simulate(args: &Args) -> Result<String> {
         r.switch_crossings,
         r.hbm_fill_cycles,
         channels.join(" "),
+        oracle.mse,
+        oracle.max_abs_err,
+        oracle.elements,
     ))
 }
 
@@ -445,23 +482,16 @@ fn cmd_sweep(args: &Args) -> Result<String> {
 
 fn cmd_explore(args: &Args) -> Result<String> {
     use crate::precision::{self, Interval};
-    let kernel_name = args.get("kernel").unwrap_or("helmholtz");
-    let p = args.usize_or("p", 11)?;
+    let source = source_from(args)?;
+    let p = degree_for(&source, args, 11)?;
     let budget: f64 = match args.get("mse-budget") {
         Some(v) => v.parse().with_context(|| format!("--mse-budget {v}"))?,
         None => 3.6e-12, // the paper's fx32 error
     };
     let max_bits = args.usize_or("max-bits", 64)? as u32;
-    let src = match kernel_name {
-        "helmholtz" => dsl::inverse_helmholtz_source(p),
-        "interpolation" => dsl::interpolation_source(p, p),
-        "gradient" => dsl::gradient_source(8, 7, 6),
-        other => bail!("unknown kernel {other}"),
-    };
-    let prog = dsl::parse(&src).map_err(|e| anyhow!(e))?;
-    let module = rewrite::optimize(teil::from_ast(&prog).map_err(|e| anyhow!(e))?);
+    let module = source.module(p).map_err(|e| anyhow!(e))?;
     // the workload rescales operators to near-orthonormal rows (~1/p)
-    let range = Interval::symmetric(1.0 / p as f64);
+    let range = Interval::symmetric(1.0 / p.max(1) as f64);
     let analysis = precision::analyze_ranges(&module, range);
     let cands = precision::explore(&module, range, budget, max_bits);
     let mut rows = Vec::new();
@@ -484,18 +514,22 @@ fn cmd_explore(args: &Args) -> Result<String> {
 }
 
 fn cmd_dse(args: &Args) -> Result<String> {
-    let kernel = args.get("kernel").unwrap_or("helmholtz");
-    let mut space = dse::SearchSpace::default_for(kernel);
+    let source = source_from(args)?;
+    let mut space = dse::SearchSpace::for_source(source);
     if let Some(list) = args.get("p") {
+        if !space.source.parameterized() {
+            // fixed-extent programs (files, inline, gradient) would
+            // enumerate duplicate physical designs per degree
+            bail!(
+                "--p only applies to the parameterized builtin kernels; \
+                 {} has fixed extents",
+                space.kernel
+            );
+        }
         space.degrees = list
             .split(',')
             .map(|s| s.trim().parse().with_context(|| format!("--p {list}")))
             .collect::<Result<Vec<usize>>>()?;
-    }
-    // gradient's generator ignores p (fixed 8x7x6 operator): keep one
-    // degree so --p cannot enumerate duplicate physical designs
-    if kernel == "gradient" {
-        space.degrees.truncate(1);
     }
     if let Some(d) = args.get("dtype") {
         if d != "all" {
@@ -564,6 +598,93 @@ mod tests {
         assert!(run(&["compile", "--emit", "wrapper"]).unwrap().contains("dataflow"));
         assert!(run(&["compile", "--emit", "host"]).unwrap().contains("TransferIn"));
         assert!(run(&["compile", "--emit", "teil"]).unwrap().contains("mode_apply"));
+    }
+
+    #[test]
+    fn compile_unknown_kernel_is_an_error_in_every_emit_mode() {
+        // regression: --emit teil used to fall through to the gradient
+        // source for any unrecognized --kernel name
+        for emit in ["c", "cfg", "wrapper", "host", "teil"] {
+            let err = run(&["compile", "--kernel", "bogus", "--emit", emit])
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("unknown kernel"), "--emit {emit}: {err}");
+        }
+    }
+
+    #[test]
+    fn kernel_and_file_are_mutually_exclusive() {
+        let err = run(&["compile", "--kernel", "helmholtz", "--file", "x.cfd"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn compile_from_file_supports_every_emit_mode() {
+        let path = std::env::temp_dir().join("hbmflow_cli_compile.cfd");
+        std::fs::write(
+            &path,
+            "var input A : [4 4]\nvar input u : [4 4 4]\n\
+             var output w : [4 4 4]\nw = A # u . [[1 2]]\n",
+        )
+        .unwrap();
+        let f = path.to_str().unwrap();
+        assert!(run(&["compile", "--file", f, "--emit", "c"])
+            .unwrap()
+            .contains("#pragma HLS"));
+        assert!(run(&["compile", "--file", f, "--emit", "cfg"])
+            .unwrap()
+            .contains("[connectivity]"));
+        assert!(run(&["compile", "--file", f, "--emit", "wrapper"])
+            .unwrap()
+            .contains("void"));
+        assert!(run(&["compile", "--file", f, "--emit", "host"])
+            .unwrap()
+            .contains("TransferIn"));
+        assert!(run(&["compile", "--file", f, "--emit", "teil"])
+            .unwrap()
+            .contains("mode_apply"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compile_missing_file_reports_path() {
+        let err = run(&["compile", "--file", "/no/such/prog.cfd"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("/no/such/prog.cfd"), "{err}");
+    }
+
+    #[test]
+    fn simulate_reports_the_generic_oracle() {
+        let s = run(&["simulate", "--preset", "baseline", "--elements", "50000"])
+            .unwrap();
+        assert!(s.contains("oracle"), "{s}");
+        assert!(s.contains("MSE"), "{s}");
+        assert!(s.contains("teil::eval"), "{s}");
+        // exact lowering: the f64 datapaths agree bit-for-bit
+        assert!(s.contains("MSE 0.000e0") || s.contains("MSE 0e0"), "{s}");
+    }
+
+    #[test]
+    fn sim_alias_matches_simulate() {
+        let a = run(&["sim", "--preset", "baseline", "--elements", "50000"]).unwrap();
+        let b = run(&["simulate", "--preset", "baseline", "--elements", "50000"])
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn explicit_p_on_fixed_extent_sources_errors_everywhere() {
+        // consistent across subcommands: --p cannot be applied to a
+        // fixed-extent program, so it is an error rather than ignored
+        for cmd in ["compile", "estimate", "simulate", "explore", "dse"] {
+            let err = run(&[cmd, "--kernel", "gradient", "--p", "7"])
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("fixed extents"), "{cmd}: {err}");
+        }
     }
 
     #[test]

@@ -13,7 +13,12 @@
 //!    of §3.6.2, validated by round-trip.
 //!  * [`workload`] — deterministic synthetic workloads for the three
 //!    published kernels (Helmholtz, Interpolation, Gradient), each with
-//!    a native f64 oracle (`expected_element`) for MSE cross-checks.
+//!    a native f64 oracle (`expected_element`) for MSE cross-checks —
+//!    plus [`GenericWorkload`], the front-door counterpart: seeded
+//!    inputs derived from any program's declared shapes and a
+//!    `teil::eval` oracle against the lowered kernel (`ir::interp`),
+//!    so user `.cfd` kernels get MSE cross-checks with no hand-written
+//!    closed form.
 //!  * [`driver`] — executes a workload against a `SystemSpec`:
 //!    interleave → transfer → invoke per CU with ping/pong bookkeeping →
 //!    de-interleave, chunked to the artifact's executable batch size.
@@ -34,4 +39,7 @@ pub mod workload;
 
 pub use batch::{BatchPlan, PingPong};
 pub use driver::{run_gradient, run_interpolation, Driver, RunReport};
-pub use workload::{GradientWorkload, HelmholtzWorkload, InterpolationWorkload};
+pub use workload::{
+    GenericWorkload, GradientWorkload, HelmholtzWorkload, InterpolationWorkload,
+    OracleCheck,
+};

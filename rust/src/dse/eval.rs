@@ -21,6 +21,7 @@ use std::sync::Mutex;
 
 use crate::hls;
 use crate::ir::affine::Kernel;
+use crate::kernels::KernelSource;
 use crate::olympus;
 use crate::platform::{Platform, Resources};
 use crate::sim::{self, SimResult};
@@ -62,18 +63,17 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
-/// Build each distinct `(kernel, degree)` once — the memoized inputs the
-/// worker pool shares.
+/// Build each distinct `(kernel, degree)` once from the space's source —
+/// the memoized inputs the worker pool shares.
 pub fn build_kernels(
+    source: &KernelSource,
     points: &[DesignPoint],
 ) -> Result<HashMap<(String, usize), Kernel>, String> {
     let mut kernels = HashMap::new();
     for pt in points {
         let key = (pt.kernel.clone(), pt.p);
         if let std::collections::hash_map::Entry::Vacant(slot) = kernels.entry(key) {
-            let k = crate::cli::build_kernel(&pt.kernel, pt.p)
-                .map_err(|e| e.to_string())?;
-            slot.insert(k);
+            slot.insert(source.build(pt.p)?);
         }
     }
     Ok(kernels)
@@ -168,8 +168,9 @@ mod tests {
     #[test]
     fn results_are_deterministic_and_in_order() {
         let platform = Platform::alveo_u280();
-        let points = tiny_space().enumerate();
-        let kernels = build_kernels(&points).unwrap();
+        let space = tiny_space();
+        let points = space.enumerate();
+        let kernels = build_kernels(&space.source, &points).unwrap();
         let serial = evaluate(points.clone(), &kernels, &platform, 200_000, Some(1));
         let parallel = evaluate(points.clone(), &kernels, &platform, 200_000, Some(4));
         assert_eq!(serial.len(), points.len());
@@ -187,7 +188,7 @@ mod tests {
         s.memories = vec![MemoryKind::Ddr4];
         s.cu_counts = vec![3]; // DDR4 has two banks: rejected
         let points = s.enumerate();
-        let kernels = build_kernels(&points).unwrap();
+        let kernels = build_kernels(&s.source, &points).unwrap();
         let platform = Platform::alveo_u280();
         let out = evaluate(points, &kernels, &platform, 100_000, Some(2));
         assert!(!out.is_empty());
@@ -202,13 +203,22 @@ mod tests {
         let mut s = tiny_space();
         s.degrees = vec![7, 11];
         let points = s.enumerate();
-        let kernels = build_kernels(&points).unwrap();
+        let kernels = build_kernels(&s.source, &points).unwrap();
         assert_eq!(kernels.len(), 2);
     }
 
     #[test]
     fn unknown_kernel_is_a_build_error() {
         let s = SearchSpace::default_for("warp-drive");
-        assert!(build_kernels(&s.enumerate()).is_err());
+        let err = build_kernels(&s.source, &s.enumerate()).unwrap_err();
+        assert!(err.contains("unknown kernel"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_source_is_a_build_error() {
+        let mut s = SearchSpace::for_source(KernelSource::file("/no/such.cfd"));
+        s.degrees = vec![7];
+        let err = build_kernels(&s.source, &s.enumerate()).unwrap_err();
+        assert!(err.contains("/no/such.cfd"), "{err}");
     }
 }

@@ -7,7 +7,10 @@
 //!
 //!  * [`SearchSpace`] — the space as a *value*: independent axes over
 //!    `OlympusOpts` (dtype, bus mode, dataflow groups, memory sharing,
-//!    FIFO depth, CU count, HBM vs DDR4) × kernel × polynomial degree;
+//!    FIFO depth, CU count, HBM vs DDR4) × kernel × polynomial degree.
+//!    The kernel is any `kernels::KernelSource` — a builtin generator,
+//!    a user `.cfd` file (`hbmflow dse --file my.cfd`), or an inline
+//!    program — so exploration is not limited to the published trio;
 //!  * [`eval`] — a parallel evaluator running `olympus::generate` →
 //!    `hls::estimate` → `sim::simulate` per candidate, with memoized
 //!    kernel builds and deterministic result ordering;
@@ -125,7 +128,7 @@ pub fn explore(
     threads: Option<usize>,
 ) -> Result<Exploration, String> {
     let mut points = space.enumerate();
-    let kernels = eval::build_kernels(&points)?;
+    let kernels = eval::build_kernels(&space.source, &points)?;
 
     // normalize: a kernel with fewer nests than the requested dataflow
     // decomposition caps at one group per nest (cli::cmd_compile does

@@ -47,7 +47,11 @@ pub fn text(ex: &Exploration, top_k: usize, pareto_only: bool) -> String {
         })
         .collect();
 
-    let mut out = fmt::table(
+    let mut out = format!(
+        "kernel: {} ({} elements/run)\n",
+        ex.kernel, ex.n_elements
+    );
+    out.push_str(&fmt::table(
         &[
             "configuration",
             "P",
@@ -64,7 +68,7 @@ pub fn text(ex: &Exploration, top_k: usize, pareto_only: bool) -> String {
             "bound",
         ],
         &rows,
-    );
+    ));
     out.push('\n');
     out.push_str(&summary(ex));
     if ex.kernel == "helmholtz" {

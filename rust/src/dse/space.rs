@@ -13,6 +13,7 @@
 //! evaluator, so infeasibility is *reported*, not silently skipped.
 
 use crate::datatype::DataType;
+use crate::kernels::KernelSource;
 use crate::olympus::{BusMode, ChannelPolicy, MemoryKind, OlympusOpts};
 
 /// One concrete candidate: `kernel` at degree `p` generated with `opts`.
@@ -44,8 +45,13 @@ impl DesignPoint {
 /// there; every `Vec` axis must stay non-empty.
 #[derive(Debug, Clone)]
 pub struct SearchSpace {
+    /// Display name of the kernel (`source.name()`).
     pub kernel: String,
-    /// Polynomial degrees (the paper evaluates p = 7 and p = 11).
+    /// Where the program comes from: builtin generator, `.cfd` file, or
+    /// inline string — any front-door source is explorable.
+    pub source: KernelSource,
+    /// Polynomial degrees (the paper evaluates p = 7 and p = 11;
+    /// fixed-extent file/inline sources carry a single nominal degree).
     pub degrees: Vec<usize>,
     pub dtypes: Vec<DataType>,
     pub cu_counts: Vec<usize>,
@@ -66,18 +72,24 @@ pub struct SearchSpace {
 }
 
 impl SearchSpace {
-    /// The default exploration space for a named kernel: the full
-    /// optimization ladder of the paper (Figs. 15–17) as independent
-    /// axes. ~2k candidates for helmholtz after normalization.
+    /// The default exploration space for a named builtin kernel: the
+    /// full optimization ladder of the paper (Figs. 15–17) as
+    /// independent axes. ~2k candidates for helmholtz after
+    /// normalization.
     pub fn default_for(kernel: &str) -> SearchSpace {
+        Self::for_source(KernelSource::builtin(kernel))
+    }
+
+    /// The same default axes over an arbitrary front-door source — a
+    /// `.cfd` file explores exactly the space a builtin does. Degrees
+    /// come from the source: p ∈ {7, 11} for parameterized builtins, a
+    /// single nominal degree for fixed-extent programs (more would
+    /// enumerate duplicate physical designs).
+    pub fn for_source(source: KernelSource) -> SearchSpace {
         SearchSpace {
-            kernel: kernel.to_string(),
-            // gradient's generator ignores p (fixed 8x7x6 operator), so a
-            // single degree avoids enumerating duplicates
-            degrees: match kernel {
-                "gradient" => vec![7],
-                _ => vec![7, 11],
-            },
+            kernel: source.name(),
+            degrees: source.default_degrees(),
+            source,
             dtypes: DataType::ALL.to_vec(),
             cu_counts: vec![1, 2, 3, 4],
             dataflow: vec![None, Some(1), Some(2), Some(3), Some(7)],
@@ -259,8 +271,24 @@ mod tests {
 
     #[test]
     fn gradient_space_uses_a_single_degree() {
+        // the gradient generator ignores p (fixed 8x7x6 operator): one
+        // nominal degree, no duplicate physical designs
         let space = SearchSpace::default_for("gradient");
-        assert_eq!(space.degrees, vec![7]);
+        assert_eq!(space.degrees, vec![8]);
+    }
+
+    #[test]
+    fn inline_source_space_enumerates_like_a_builtin() {
+        let src = "var input A : [4 4]\n\
+                   var input u : [4 4 4]\n\
+                   var output w : [4 4 4]\n\
+                   w = A # u . [[1 2]]\n";
+        let space = SearchSpace::for_source(KernelSource::inline("mode0", src));
+        assert_eq!(space.kernel, "mode0");
+        assert_eq!(space.degrees, vec![4]);
+        let points = space.enumerate();
+        assert!(!points.is_empty());
+        assert!(points.iter().all(|pt| pt.kernel == "mode0" && pt.p == 4));
     }
 
     #[test]

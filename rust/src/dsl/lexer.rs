@@ -47,11 +47,13 @@ impl fmt::Display for Tok {
     }
 }
 
-/// A token with its source line (1-based) for diagnostics.
+/// A token with its source position (1-based line and column) for
+/// diagnostics. Columns count characters from the start of the line.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Spanned {
     pub tok: Tok,
     pub line: usize,
+    pub col: usize,
 }
 
 /// Tokenize CFDlang source. `//` starts a line comment.
@@ -64,7 +66,11 @@ pub fn lex(src: &str) -> Result<Vec<Spanned>, String> {
             None => line,
         };
         let mut chars = code.char_indices().peekable();
+        // byte offset -> 1-based character column (identifiers and the
+        // grammar are ASCII; comments may not be, but they are stripped)
+        let col_of = |byte: usize| code[..byte].chars().count() + 1;
         while let Some(&(i, c)) = chars.peek() {
+            let tok_col = col_of(i);
             let tok = match c {
                 c if c.is_whitespace() => {
                     chars.next();
@@ -129,10 +135,11 @@ pub fn lex(src: &str) -> Result<Vec<Spanned>, String> {
                         }
                     }
                     let text = &code[i..=end];
-                    Tok::Int(
-                        text.parse()
-                            .map_err(|e| format!("line {line_num}: bad integer {text:?}: {e}"))?,
-                    )
+                    Tok::Int(text.parse().map_err(|e| {
+                        format!(
+                            "line {line_num}, col {tok_col}: bad integer {text:?}: {e}"
+                        )
+                    })?)
                 }
                 c if c.is_alphabetic() || c == '_' => {
                     let mut end = i;
@@ -153,13 +160,14 @@ pub fn lex(src: &str) -> Result<Vec<Spanned>, String> {
                 }
                 other => {
                     return Err(format!(
-                        "line {line_num}: unexpected character {other:?}"
+                        "line {line_num}, col {tok_col}: unexpected character {other:?}"
                     ))
                 }
             };
             out.push(Spanned {
                 tok,
                 line: line_num,
+                col: tok_col,
             });
         }
     }
@@ -216,14 +224,20 @@ mod tests {
     }
 
     #[test]
-    fn rejects_unknown_chars() {
-        assert!(lex("x = $").is_err());
+    fn rejects_unknown_chars_with_position() {
+        let err = lex("x = $").unwrap_err();
+        assert!(err.contains("line 1, col 5"), "{err}");
     }
 
     #[test]
-    fn tracks_line_numbers() {
+    fn tracks_line_and_column_numbers() {
         let spanned = lex("var x : [1]\nx = y").unwrap();
-        assert_eq!(spanned.first().unwrap().line, 1);
-        assert_eq!(spanned.last().unwrap().line, 2);
+        let first = spanned.first().unwrap();
+        assert_eq!((first.line, first.col), (1, 1));
+        let last = spanned.last().unwrap();
+        assert_eq!((last.line, last.col), (2, 5));
+        // the `x` ident on line 1 starts at column 5
+        let x = &spanned[1];
+        assert_eq!((x.line, x.col), (1, 5));
     }
 }

@@ -1,8 +1,11 @@
 //! CFDlang DSL front-end (paper §2.1, Fig. 2).
 //!
 //! CFDlang is a small declarative language for tensor expressions used by
-//! spectral-element CFD codes. The grammar implemented here covers the
-//! published language:
+//! spectral-element CFD codes. The full language reference — grammar,
+//! contraction semantics, rewriter guarantees, lowering boundary — is
+//! docs/CFDLANG.md; arbitrary programs enter the flow through
+//! `crate::kernels::KernelSource` (`hbmflow compile --file my.cfd`).
+//! The grammar implemented here covers the published language:
 //!
 //! ```text
 //! program   := decl* stmt*

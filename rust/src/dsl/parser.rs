@@ -3,6 +3,11 @@
 //! Precedence (loosest to tightest): contraction `.` < `+`/`-` < `*`/`/`
 //! < `#`. This matches the paper's listing where
 //! `t = S#S#S#u . [[1 6][3 7][5 8]]` contracts the *whole* product.
+//!
+//! Every error — lexical, syntactic, or semantic — carries a source
+//! position (`line L, col C` for token errors, the statement's line for
+//! semantic ones), so a typo in a user `.cfd` file points at the
+//! offending token. See docs/CFDLANG.md for the full grammar.
 
 use super::ast::{Decl, Expr, IndexPair, Program, Stmt, VarKind};
 use super::lexer::{lex, Spanned, Tok};
@@ -10,15 +15,24 @@ use super::lexer::{lex, Spanned, Tok};
 /// Parse and semantically validate a CFDlang program.
 pub fn parse(src: &str) -> Result<Program, String> {
     let toks = lex(src)?;
-    let mut p = Parser { toks, pos: 0 };
+    let mut p = Parser {
+        toks,
+        pos: 0,
+        decl_lines: Vec::new(),
+        stmt_lines: Vec::new(),
+    };
     let prog = p.program()?;
-    validate(&prog)?;
+    validate(&prog, &p.decl_lines, &p.stmt_lines)?;
     Ok(prog)
 }
 
 struct Parser {
     toks: Vec<Spanned>,
     pos: usize,
+    /// Source line of each declaration / statement, parallel to
+    /// `Program::decls` / `Program::stmts` — anchors semantic errors.
+    decl_lines: Vec<usize>,
+    stmt_lines: Vec<usize>,
 }
 
 impl Parser {
@@ -26,11 +40,13 @@ impl Parser {
         self.toks.get(self.pos).map(|s| &s.tok)
     }
 
-    fn line(&self) -> usize {
+    /// (line, col) of the current token, or of the last token when the
+    /// input ended early.
+    fn here(&self) -> (usize, usize) {
         self.toks
             .get(self.pos.min(self.toks.len().saturating_sub(1)))
-            .map(|s| s.line)
-            .unwrap_or(0)
+            .map(|s| (s.line, s.col))
+            .unwrap_or((0, 0))
     }
 
     fn bump(&mut self) -> Option<Tok> {
@@ -42,33 +58,33 @@ impl Parser {
     }
 
     fn expect(&mut self, want: &Tok) -> Result<(), String> {
-        let line = self.line();
+        let (line, col) = self.here();
         match self.bump() {
             Some(ref t) if t == want => Ok(()),
             got => Err(format!(
-                "line {line}: expected '{want}', got {}",
+                "line {line}, col {col}: expected '{want}', got {}",
                 got.map(|t| t.to_string()).unwrap_or_else(|| "EOF".into())
             )),
         }
     }
 
     fn ident(&mut self) -> Result<String, String> {
-        let line = self.line();
+        let (line, col) = self.here();
         match self.bump() {
             Some(Tok::Ident(s)) => Ok(s),
             got => Err(format!(
-                "line {line}: expected identifier, got {}",
+                "line {line}, col {col}: expected identifier, got {}",
                 got.map(|t| t.to_string()).unwrap_or_else(|| "EOF".into())
             )),
         }
     }
 
     fn int(&mut self) -> Result<usize, String> {
-        let line = self.line();
+        let (line, col) = self.here();
         match self.bump() {
             Some(Tok::Int(n)) => Ok(n),
             got => Err(format!(
-                "line {line}: expected integer, got {}",
+                "line {line}, col {col}: expected integer, got {}",
                 got.map(|t| t.to_string()).unwrap_or_else(|| "EOF".into())
             )),
         }
@@ -77,15 +93,20 @@ impl Parser {
     fn program(&mut self) -> Result<Program, String> {
         let mut prog = Program::default();
         while self.peek() == Some(&Tok::Var) {
+            let line = self.here().0;
             prog.decls.push(self.decl()?);
+            self.decl_lines.push(line);
         }
         while self.peek().is_some() {
+            let line = self.here().0;
             prog.stmts.push(self.stmt()?);
+            self.stmt_lines.push(line);
         }
         Ok(prog)
     }
 
     fn decl(&mut self) -> Result<Decl, String> {
+        let (line, col) = self.here();
         self.expect(&Tok::Var)?;
         let kind = match self.peek() {
             Some(Tok::Input) => {
@@ -107,7 +128,9 @@ impl Parser {
         }
         self.expect(&Tok::RBracket)?;
         if shape.is_empty() {
-            return Err(format!("variable {name} has empty shape"));
+            return Err(format!(
+                "line {line}, col {col}: variable {name} has empty shape"
+            ));
         }
         Ok(Decl { name, kind, shape })
     }
@@ -182,18 +205,21 @@ impl Parser {
                 Ok(e)
             }
             Some(Tok::Ident(_)) => Ok(Expr::Var(self.ident()?)),
-            other => Err(format!(
-                "line {}: expected expression, got {}",
-                self.line(),
-                other
-                    .map(|t| t.to_string())
-                    .unwrap_or_else(|| "EOF".into())
-            )),
+            other => {
+                let (line, col) = self.here();
+                Err(format!(
+                    "line {line}, col {col}: expected expression, got {}",
+                    other
+                        .map(|t| t.to_string())
+                        .unwrap_or_else(|| "EOF".into())
+                ))
+            }
         }
     }
 
     /// contraction := '[' ('[' int int ']')+ ']'
     fn contraction(&mut self) -> Result<Vec<IndexPair>, String> {
+        let (line, col) = self.here();
         self.expect(&Tok::LBracket)?;
         let mut pairs = Vec::new();
         while self.peek() == Some(&Tok::LBracket) {
@@ -205,7 +231,9 @@ impl Parser {
         }
         self.expect(&Tok::RBracket)?;
         if pairs.is_empty() {
-            return Err("empty contraction spec".into());
+            return Err(format!(
+                "line {line}, col {col}: empty contraction spec"
+            ));
         }
         Ok(pairs)
     }
@@ -213,35 +241,52 @@ impl Parser {
 
 /// Semantic checks: declared-before-use, single assignment, every output
 /// assigned, no input assigned, contraction pairs in range and disjoint.
-fn validate(prog: &Program) -> Result<(), String> {
+/// Errors are anchored to the offending statement's (or declaration's)
+/// source line via the parallel line tables the parser records.
+fn validate(prog: &Program, decl_lines: &[usize], stmt_lines: &[usize]) -> Result<(), String> {
     use std::collections::HashSet;
     let mut assigned = HashSet::new();
-    for stmt in &prog.stmts {
-        let decl = prog
-            .decl(&stmt.target)
-            .ok_or_else(|| format!("assignment to undeclared variable {}", stmt.target))?;
+    for (si, stmt) in prog.stmts.iter().enumerate() {
+        let line = stmt_lines.get(si).copied().unwrap_or(0);
+        let decl = prog.decl(&stmt.target).ok_or_else(|| {
+            format!(
+                "line {line}: assignment to undeclared variable {}",
+                stmt.target
+            )
+        })?;
         if decl.kind == VarKind::Input {
-            return Err(format!("cannot assign to input variable {}", stmt.target));
+            return Err(format!(
+                "line {line}: cannot assign to input variable {}",
+                stmt.target
+            ));
         }
         if !assigned.insert(stmt.target.clone()) {
-            return Err(format!("variable {} assigned twice", stmt.target));
+            return Err(format!(
+                "line {line}: variable {} assigned twice",
+                stmt.target
+            ));
         }
         for v in stmt.expr.vars() {
-            let vd = prog
-                .decl(v)
-                .ok_or_else(|| format!("use of undeclared variable {v}"))?;
+            let vd = prog.decl(v).ok_or_else(|| {
+                format!("line {line}: use of undeclared variable {v}")
+            })?;
             if vd.kind != VarKind::Input && !assigned.contains(v) {
                 return Err(format!(
-                    "variable {v} used before assignment in '{} = ...'",
+                    "line {line}: variable {v} used before assignment in '{} = ...'",
                     stmt.target
                 ));
             }
         }
-        validate_contractions(&stmt.expr, prog)?;
+        validate_contractions(&stmt.expr, prog)
+            .map_err(|e| format!("line {line}: {e}"))?;
     }
-    for out in prog.outputs() {
-        if !assigned.contains(&out.name) {
-            return Err(format!("output variable {} never assigned", out.name));
+    for (di, d) in prog.decls.iter().enumerate() {
+        if d.kind == VarKind::Output && !assigned.contains(&d.name) {
+            return Err(format!(
+                "line {}: output variable {} never assigned",
+                decl_lines.get(di).copied().unwrap_or(0),
+                d.name
+            ));
         }
     }
     Ok(())
@@ -393,6 +438,54 @@ mod tests {
     fn parse_error_reports_line() {
         let err = parse("var input a : [2]\nvar output x : [2]\nx = = a").unwrap_err();
         assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn stray_token_in_expression_points_at_the_column() {
+        // the second '=' sits on line 3, column 5
+        let err = parse("var input a : [2]\nvar output x : [2]\nx = = a").unwrap_err();
+        assert!(err.contains("line 3, col 5"), "{err}");
+        assert!(err.contains("expected expression"), "{err}");
+    }
+
+    #[test]
+    fn missing_shape_bracket_points_at_the_offending_token() {
+        // ':' is followed by '2' where '[' is required (line 2, col 16)
+        let err = parse("var input a : [2]\nvar output x : 2]\nx = a").unwrap_err();
+        assert!(err.contains("line 2, col 16"), "{err}");
+        assert!(err.contains("expected '['"), "{err}");
+    }
+
+    #[test]
+    fn malformed_contraction_pair_points_at_the_column() {
+        // contraction pair wants an integer, finds ']' on line 3
+        let err =
+            parse("var input a : [2 2]\nvar output x : [2]\nx = a . [[0]]").unwrap_err();
+        assert!(err.contains("line 3, col 12"), "{err}");
+        assert!(err.contains("expected integer"), "{err}");
+    }
+
+    #[test]
+    fn truncated_program_reports_last_token_position() {
+        let err = parse("var input a : [2]\nvar output x : [2]\nx =").unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("EOF"), "{err}");
+    }
+
+    #[test]
+    fn semantic_errors_are_anchored_to_statement_lines() {
+        let err = parse(
+            "var input a : [2]\nvar output x : [2]\n\nx = a\nx = a\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("line 5"), "{err}");
+        assert!(err.contains("assigned twice"), "{err}");
+        let err = parse("var input a : [2 2]\nvar output x : [2 2]\nx = a . [[0 5]]")
+            .unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+        let err = parse("var output x : [2]").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("never assigned"), "{err}");
     }
 
     #[test]

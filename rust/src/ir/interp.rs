@@ -1,0 +1,179 @@
+//! Reference interpreter for lowered affine kernels.
+//!
+//! Executes a [`Kernel`]'s loop nests in order on dense f64 buffers —
+//! the software twin of the generated hardware datapath. This is what
+//! makes a *generic* numerics oracle possible: for any program the
+//! front door accepts (`kernels::KernelSource`), the lowered kernel is
+//! run here and cross-checked against `teil::eval` of the rewritten
+//! module (see `coordinator::GenericWorkload`), with no hand-written
+//! closed form per kernel. Both paths evaluate the same mode-product
+//! chain in the same order, so agreement is exact in f64; any deviation
+//! indicates a lowering bug (wrong mode, missing transpose, bad buffer
+//! wiring), not roundoff.
+
+use std::collections::HashMap;
+
+use super::affine::{BufKind, EwOp, Kernel, LoopNest, NestKind};
+use crate::util::tensor::Tensor;
+
+/// Operand `slot` of a nest (operand order follows `lower::build_nest`:
+/// contraction reads are `[matrix, tensor]`, elementwise `[lhs, rhs]`).
+fn operand<'a>(
+    bufs: &'a [Option<Tensor>],
+    n: &LoopNest,
+    slot: usize,
+) -> Result<&'a Tensor, String> {
+    let id = *n
+        .reads
+        .get(slot)
+        .ok_or_else(|| format!("nest {}: missing read operand {slot}", n.name))?;
+    bufs[id]
+        .as_ref()
+        .ok_or_else(|| format!("nest {}: reads unwritten buffer", n.name))
+}
+
+/// Run the kernel on named input tensors; returns its output buffers by
+/// name. Inputs must match the kernel's declared buffer shapes.
+pub fn interpret(
+    k: &Kernel,
+    inputs: &HashMap<String, Tensor>,
+) -> Result<HashMap<String, Tensor>, String> {
+    let mut bufs: Vec<Option<Tensor>> = vec![None; k.buffers.len()];
+    for (id, b) in k.buffers.iter().enumerate() {
+        if b.kind == BufKind::Input {
+            let t = inputs
+                .get(&b.name)
+                .ok_or_else(|| format!("missing input {}", b.name))?;
+            if t.shape() != b.shape.as_slice() {
+                return Err(format!(
+                    "input {}: shape {:?} does not match declared {:?}",
+                    b.name,
+                    t.shape(),
+                    b.shape
+                ));
+            }
+            bufs[id] = Some(t.clone());
+        }
+    }
+
+    for n in &k.nests {
+        let out = match &n.kind {
+            NestKind::Contraction {
+                transpose, mode, ..
+            } => {
+                let m = operand(&bufs, n, 0)?;
+                let x = operand(&bufs, n, 1)?;
+                let m = if *transpose { m.transposed() } else { m.clone() };
+                x.mode_apply(&m, *mode)
+            }
+            NestKind::Elementwise(op) => {
+                let a = operand(&bufs, n, 0)?;
+                let b = operand(&bufs, n, 1)?;
+                match op {
+                    EwOp::Add => a.zip(b, |x, y| x + y),
+                    EwOp::Sub => a.zip(b, |x, y| x - y),
+                    EwOp::Mul => a.zip(b, |x, y| x * y),
+                    EwOp::Div => a.zip(b, |x, y| x / y),
+                }
+            }
+            NestKind::Permute { from, to } => {
+                operand(&bufs, n, 0)?.move_axis(*from, *to)
+            }
+        };
+        if out.shape() != k.buffers[n.write].shape.as_slice() {
+            return Err(format!(
+                "nest {}: produced shape {:?}, buffer {} declares {:?}",
+                n.name,
+                out.shape(),
+                k.buffers[n.write].name,
+                k.buffers[n.write].shape
+            ));
+        }
+        bufs[n.write] = Some(out);
+    }
+
+    let mut out = HashMap::new();
+    for (id, b) in k.outputs() {
+        let t = bufs[id]
+            .clone()
+            .ok_or_else(|| format!("output {} never written", b.name))?;
+        out.insert(b.name.clone(), t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::util::prng::Prng;
+
+    fn lowered(src: &str) -> (teil::Module, Kernel) {
+        let prog = dsl::parse(src).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "k").unwrap();
+        (m, k)
+    }
+
+    #[test]
+    fn helmholtz_kernel_matches_teil_eval_exactly() {
+        let p = 5;
+        let (m, k) = lowered(&dsl::inverse_helmholtz_source(p));
+        let mut rng = Prng::new(7);
+        let mut inputs = HashMap::new();
+        inputs.insert("S".into(), Tensor::random(&[p, p], &mut rng));
+        inputs.insert("D".into(), Tensor::random(&[p, p, p], &mut rng));
+        inputs.insert("u".into(), Tensor::random(&[p, p, p], &mut rng));
+        let want = teil::eval(&m, &inputs).unwrap();
+        let got = interpret(&k, &inputs).unwrap();
+        // identical op order in f64: exact agreement, not tolerance
+        assert_eq!(want["v"].data(), got["v"].data());
+    }
+
+    #[test]
+    fn gradient_kernel_matches_including_permutes() {
+        let (m, k) = lowered(&dsl::gradient_source(4, 3, 2));
+        let mut rng = Prng::new(9);
+        let mut inputs = HashMap::new();
+        inputs.insert("Dx".into(), Tensor::random(&[4, 4], &mut rng));
+        inputs.insert("Dy".into(), Tensor::random(&[3, 3], &mut rng));
+        inputs.insert("Dz".into(), Tensor::random(&[2, 2], &mut rng));
+        inputs.insert("u".into(), Tensor::random(&[4, 3, 2], &mut rng));
+        let want = teil::eval(&m, &inputs).unwrap();
+        let got = interpret(&k, &inputs).unwrap();
+        for name in ["gx", "gy", "gz"] {
+            assert_eq!(want[name].data(), got[name].data(), "{name}");
+            assert_eq!(want[name].shape(), got[name].shape(), "{name}");
+        }
+    }
+
+    #[test]
+    fn elementwise_kernel_evaluates() {
+        let (m, k) = lowered(
+            "var input a : [3]\nvar input b : [3]\nvar output c : [3]\nc = a + b * a",
+        );
+        let mut rng = Prng::new(1);
+        let mut inputs = HashMap::new();
+        inputs.insert("a".into(), Tensor::random(&[3], &mut rng));
+        inputs.insert("b".into(), Tensor::random(&[3], &mut rng));
+        let want = teil::eval(&m, &inputs).unwrap();
+        let got = interpret(&k, &inputs).unwrap();
+        assert_eq!(want["c"].data(), got["c"].data());
+    }
+
+    #[test]
+    fn missing_and_misshapen_inputs_are_rejected() {
+        let (_, k) = lowered(
+            "var input a : [3]\nvar input b : [3]\nvar output c : [3]\nc = a + b",
+        );
+        let mut rng = Prng::new(2);
+        let mut inputs = HashMap::new();
+        inputs.insert("a".into(), Tensor::random(&[3], &mut rng));
+        let err = interpret(&k, &inputs).unwrap_err();
+        assert!(err.contains("missing input b"), "{err}");
+        inputs.insert("b".into(), Tensor::random(&[4], &mut rng));
+        let err = interpret(&k, &inputs).unwrap_err();
+        assert!(err.contains("does not match"), "{err}");
+    }
+}

@@ -16,6 +16,7 @@
 //! ```
 
 pub mod affine;
+pub mod interp;
 pub mod liveness;
 pub mod lower;
 pub mod rewrite;

@@ -331,7 +331,7 @@ pub fn eval(
             } => {
                 let matt = vals[*mat].as_ref().unwrap();
                 let matt = if *transpose {
-                    transpose2(matt)
+                    matt.transposed()
                 } else {
                     matt.clone()
                 };
@@ -357,18 +357,6 @@ pub fn eval(
     Ok(out)
 }
 
-fn transpose2(t: &Tensor) -> Tensor {
-    assert_eq!(t.rank(), 2);
-    let (r, c) = (t.shape()[0], t.shape()[1]);
-    let mut out = Tensor::zeros(&[c, r]);
-    for i in 0..r {
-        for j in 0..c {
-            out.set(&[j, i], t.get(&[i, j]));
-        }
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -391,7 +379,7 @@ mod tests {
         let u = &inp["u"];
         let t = u.mode_apply(s, 0).mode_apply(s, 1).mode_apply(s, 2);
         let r = d.zip(&t, |a, b| a * b);
-        let st = transpose2(s);
+        let st = s.transposed();
         r.mode_apply(&st, 0).mode_apply(&st, 1).mode_apply(&st, 2)
     }
 

@@ -1,0 +1,273 @@
+//! Kernel registry: where programs enter the flow.
+//!
+//! The paper's premise (§2.1, §3) is that a *domain expert* writes a
+//! CFDlang tensor program and the toolchain produces the HBM
+//! architecture automatically. [`KernelSource`] is that front door: a
+//! program can come from the builtin generators reproducing the
+//! published trio (Inverse Helmholtz, Interpolation, Gradient), from a
+//! `.cfd` file on disk (`hbmflow compile --file my.cfd`), or from an
+//! inline string (tests, embedding). Every consumer — the CLI, the dse
+//! search space, the generic oracle — resolves programs through this one
+//! type, so a user kernel flows through exactly the same
+//! parse → rewrite → lower pipeline as the paper's figures.
+//!
+//! See docs/CFDLANG.md for the language reference and the shipped
+//! kernel library under `examples/kernels/*.cfd`.
+
+use std::path::PathBuf;
+
+use crate::dsl::{self, Program};
+use crate::ir::affine::Kernel;
+use crate::ir::{lower, rewrite, teil};
+
+/// Names accepted by [`KernelSource::Builtin`] (the published trio).
+pub const BUILTIN_NAMES: &[&str] = &["helmholtz", "interpolation", "gradient"];
+
+/// Where a kernel's CFDlang source comes from.
+///
+/// `Builtin` resolves lazily: an unknown name is an error at
+/// [`KernelSource::source`] time, not at construction, so callers like
+/// the dse space can be built first and report the failure per point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KernelSource {
+    /// A named builtin generator (`helmholtz`, `interpolation`,
+    /// `gradient`), parameterized by polynomial degree `p`.
+    Builtin(String),
+    /// A `.cfd` program on disk; extents are fixed by the file.
+    File(PathBuf),
+    /// An inline program string under a chosen display name.
+    Inline { name: String, source: String },
+}
+
+impl KernelSource {
+    pub fn builtin(name: &str) -> KernelSource {
+        KernelSource::Builtin(name.to_string())
+    }
+
+    pub fn file(path: impl Into<PathBuf>) -> KernelSource {
+        KernelSource::File(path.into())
+    }
+
+    pub fn inline(name: &str, source: &str) -> KernelSource {
+        KernelSource::Inline {
+            name: name.to_string(),
+            source: source.to_string(),
+        }
+    }
+
+    /// Resolve the CLI's `--kernel` / `--file` flag pair.
+    pub fn from_flags(kernel: Option<&str>, file: Option<&str>) -> Result<KernelSource, String> {
+        match (kernel, file) {
+            (Some(_), Some(_)) => Err("--kernel and --file are mutually exclusive".into()),
+            (_, Some(f)) => Ok(KernelSource::file(f)),
+            (k, None) => Ok(KernelSource::builtin(k.unwrap_or("helmholtz"))),
+        }
+    }
+
+    /// Display name: the builtin name, the file stem, or the inline name.
+    pub fn name(&self) -> String {
+        match self {
+            KernelSource::Builtin(n) => n.clone(),
+            KernelSource::File(p) => p
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "kernel".into()),
+            KernelSource::Inline { name, .. } => name.clone(),
+        }
+    }
+
+    /// Where the program text lives, for error prefixes.
+    fn origin(&self) -> String {
+        match self {
+            KernelSource::Builtin(n) => format!("builtin {n}"),
+            KernelSource::File(p) => p.display().to_string(),
+            KernelSource::Inline { name, .. } => format!("inline {name}"),
+        }
+    }
+
+    /// True when the degree argument `p` changes the generated program.
+    /// File and inline programs carry fixed extents; the gradient builtin
+    /// uses the paper's fixed (8, 7, 6) operator.
+    pub fn parameterized(&self) -> bool {
+        matches!(self, KernelSource::Builtin(n)
+            if n == "helmholtz" || n == "interpolation")
+    }
+
+    /// The CFDlang source text. `p` parameterizes builtin generators and
+    /// is ignored by file / inline sources.
+    pub fn source(&self, p: usize) -> Result<String, String> {
+        match self {
+            KernelSource::Builtin(n) => match n.as_str() {
+                "helmholtz" => Ok(dsl::inverse_helmholtz_source(p)),
+                "interpolation" => Ok(dsl::interpolation_source(p, p)),
+                "gradient" => Ok(dsl::gradient_source(8, 7, 6)),
+                other => Err(format!(
+                    "unknown kernel {other} (builtins: {}; use --file for a \
+                     .cfd program)",
+                    BUILTIN_NAMES.join("|"),
+                )),
+            },
+            KernelSource::File(path) => std::fs::read_to_string(path)
+                .map_err(|e| format!("cannot read {}: {e}", path.display())),
+            KernelSource::Inline { source, .. } => Ok(source.clone()),
+        }
+    }
+
+    /// Parse and semantically validate the program.
+    pub fn program(&self, p: usize) -> Result<Program, String> {
+        dsl::parse(&self.source(p)?).map_err(|e| format!("{}: {e}", self.origin()))
+    }
+
+    /// The unrewritten teil module — reference semantics straight from
+    /// the AST (naive `prod`/`diag`/`red` contractions).
+    pub fn module_naive(&self, p: usize) -> Result<teil::Module, String> {
+        teil::from_ast(&self.program(p)?)
+            .map_err(|e| format!("{}: {e}", self.origin()))
+    }
+
+    /// The rewritten (factorized, GEMM-shaped) teil module the hardware
+    /// flow implements.
+    pub fn module(&self, p: usize) -> Result<teil::Module, String> {
+        Ok(rewrite::optimize(self.module_naive(p)?))
+    }
+
+    /// Full front-end in one pass: parse → rewrite once, then lower
+    /// from that same module. Callers needing both IR forms (e.g. the
+    /// generic oracle cross-checking the lowered kernel against
+    /// `teil::eval`) must use this rather than separate `module` /
+    /// `build` calls — a file source could change between reads.
+    pub fn compile(&self, p: usize) -> Result<(teil::Module, Kernel), String> {
+        let m = self.module(p)?;
+        let k = lower::lower_kernel(&m, &self.name())
+            .map_err(|e| format!("{}: {e}", self.origin()))?;
+        Ok((m, k))
+    }
+
+    /// Full front-end: parse → rewrite → lower to an affine kernel.
+    pub fn build(&self, p: usize) -> Result<Kernel, String> {
+        Ok(self.compile(p)?.1)
+    }
+
+    /// Degrees the dse explores by default: the paper's p ∈ {7, 11} for
+    /// parameterized builtins, a single nominal degree otherwise (the
+    /// program is fixed, so more degrees would enumerate duplicates).
+    pub fn default_degrees(&self) -> Vec<usize> {
+        if self.parameterized() {
+            vec![7, 11]
+        } else {
+            vec![self.nominal_degree()]
+        }
+    }
+
+    /// Display degree for fixed-extent sources: the largest declared
+    /// extent (a readable stand-in for `p` in reports). Falls back to 7
+    /// for unknown builtin names so the space still enumerates and the
+    /// build step reports the real error.
+    pub fn nominal_degree(&self) -> usize {
+        self.program(7)
+            .ok()
+            .and_then(|prog| {
+                prog.decls
+                    .iter()
+                    .flat_map(|d| d.shape.iter().copied())
+                    .max()
+            })
+            .unwrap_or(7)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_sources_build() {
+        for name in BUILTIN_NAMES {
+            let k = KernelSource::builtin(name).build(7).unwrap();
+            assert!(!k.nests.is_empty(), "{name}");
+            assert_eq!(k.name, *name);
+        }
+    }
+
+    #[test]
+    fn unknown_builtin_is_an_error_with_suggestions() {
+        let err = KernelSource::builtin("warp-drive").build(7).unwrap_err();
+        assert!(err.contains("unknown kernel"), "{err}");
+        assert!(err.contains("helmholtz"), "{err}");
+    }
+
+    #[test]
+    fn from_flags_resolves_precedence() {
+        assert_eq!(
+            KernelSource::from_flags(None, None).unwrap(),
+            KernelSource::builtin("helmholtz")
+        );
+        assert_eq!(
+            KernelSource::from_flags(Some("gradient"), None).unwrap(),
+            KernelSource::builtin("gradient")
+        );
+        assert!(matches!(
+            KernelSource::from_flags(None, Some("a.cfd")).unwrap(),
+            KernelSource::File(_)
+        ));
+        assert!(KernelSource::from_flags(Some("x"), Some("a.cfd")).is_err());
+    }
+
+    #[test]
+    fn inline_source_builds_end_to_end() {
+        let src = "var input A : [4 4]\n\
+                   var input u : [4 4 4]\n\
+                   var output w : [4 4 4]\n\
+                   w = A # u . [[1 2]]\n";
+        let s = KernelSource::inline("mode0", src);
+        assert_eq!(s.name(), "mode0");
+        assert!(!s.parameterized());
+        assert_eq!(s.nominal_degree(), 4);
+        assert_eq!(s.default_degrees(), vec![4]);
+        let k = s.build(0).unwrap();
+        assert_eq!(k.nests.len(), 1);
+        assert_eq!(k.name, "mode0");
+    }
+
+    #[test]
+    fn file_source_reads_and_names_from_stem() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("hbmflow_kernels_test.cfd");
+        std::fs::write(
+            &path,
+            "var input a : [3]\nvar input b : [3]\nvar output c : [3]\nc = a + b\n",
+        )
+        .unwrap();
+        let s = KernelSource::file(&path);
+        assert_eq!(s.name(), "hbmflow_kernels_test");
+        let k = s.build(0).unwrap();
+        assert_eq!(k.nests.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_reports_the_path() {
+        let err = KernelSource::file("/no/such/dir/x.cfd").build(0).unwrap_err();
+        assert!(err.contains("/no/such/dir/x.cfd"), "{err}");
+    }
+
+    #[test]
+    fn parse_errors_carry_the_origin() {
+        let s = KernelSource::inline("bad", "var input a : [2]\na = = a\n");
+        let err = s.program(0).unwrap_err();
+        assert!(err.contains("inline bad"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn builtin_degrees_match_the_paper() {
+        assert_eq!(
+            KernelSource::builtin("helmholtz").default_degrees(),
+            vec![7, 11]
+        );
+        // the gradient generator ignores p (fixed 8x7x6 operator)
+        let g = KernelSource::builtin("gradient");
+        assert!(!g.parameterized());
+        assert_eq!(g.default_degrees(), vec![8]);
+    }
+}

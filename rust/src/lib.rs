@@ -2,10 +2,14 @@
 //! from a tensor DSL — reproduction of Soldavini et al., ACM TRETS 2022
 //! (DOI 10.1145/3563553) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! See DESIGN.md for the system inventory and experiment index, and
-//! README.md for the quickstart; see the module docs for per-subsystem
-//! detail. The `dse` module explores the whole option space the pipeline
-//! below walks one configuration of. The top-level pipeline:
+//! See DESIGN.md for the system inventory and experiment index,
+//! README.md for the quickstart, and docs/CFDLANG.md for the language
+//! reference; see the module docs for per-subsystem detail. The `dse`
+//! module explores the whole option space the pipeline below walks one
+//! configuration of, and the `kernels` front door
+//! (`kernels::KernelSource`) feeds *any* CFDlang program — builtin,
+//! `.cfd` file, or inline — through the same stages. The top-level
+//! pipeline:
 //!
 //! ```no_run
 //! use hbmflow::prelude::*;
@@ -28,6 +32,7 @@ pub mod dsl;
 pub mod hbm;
 pub mod hls;
 pub mod ir;
+pub mod kernels;
 pub mod mnemosyne;
 pub mod olympus;
 pub mod platform;
@@ -42,5 +47,6 @@ pub mod prelude {
     pub use crate::dsl::{parse, Program};
     pub use crate::ir::affine::Kernel;
     pub use crate::ir::schedule::Schedule;
+    pub use crate::kernels::KernelSource;
     pub use crate::util::tensor::Tensor;
 }

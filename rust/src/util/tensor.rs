@@ -220,6 +220,19 @@ impl Tensor {
         out
     }
 
+    /// Matrix transpose (rank-2 only).
+    pub fn transposed(&self) -> Tensor {
+        assert_eq!(self.rank(), 2, "transposed is rank-2 only");
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
     /// Move axis `from` to position `to` (numpy moveaxis semantics).
     pub fn move_axis(&self, from: usize, to: usize) -> Tensor {
         assert!(from < self.rank() && to < self.rank());

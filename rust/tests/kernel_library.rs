@@ -1,0 +1,140 @@
+//! Integration: every shipped `examples/kernels/*.cfd` program flows
+//! through the whole stack — parse, lossless rewrite (naive vs
+//! optimized `teil::eval`), lower, Olympus generation under the
+//! baseline preset, a small simulation run, and the generic numerics
+//! oracle — plus a dse smoke test over a file-sourced kernel. A grammar
+//! or lowering regression on user-facing programs fails here.
+
+use std::path::PathBuf;
+
+use hbmflow::coordinator::GenericWorkload;
+use hbmflow::datatype::DataType;
+use hbmflow::dse::{self, SearchSpace};
+use hbmflow::ir::teil;
+use hbmflow::kernels::KernelSource;
+use hbmflow::olympus::{self, BusMode, OlympusOpts};
+use hbmflow::platform::Platform;
+
+fn kernel_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/kernels")
+}
+
+fn shipped_kernels() -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(kernel_dir())
+        .expect("examples/kernels exists")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "cfd"))
+        .collect();
+    files.sort();
+    files
+}
+
+#[test]
+fn the_library_ships_at_least_five_kernels() {
+    assert!(
+        shipped_kernels().len() >= 5,
+        "kernel library shrank: {:?}",
+        shipped_kernels()
+    );
+}
+
+#[test]
+fn every_shipped_kernel_compiles_rewrites_losslessly_and_simulates() {
+    let platform = Platform::alveo_u280();
+    for path in shipped_kernels() {
+        let name = path.file_stem().unwrap().to_string_lossy().into_owned();
+        let source = KernelSource::file(&path);
+
+        // parse + both IR forms (module and kernel from one parse)
+        let naive = source.module_naive(0).unwrap_or_else(|e| panic!("{e}"));
+        let (opt, k) = source.compile(0).unwrap_or_else(|e| panic!("{e}"));
+        assert!(!opt.defs.is_empty(), "{name}");
+
+        // lossless rewrite: naive and optimized teil::eval agree on
+        // seeded inputs (kernel extents are chosen so the naive
+        // outer-product materialization stays affordable)
+        let w = GenericWorkload::new(&name, opt.clone(), k.clone(), 77);
+        let inputs = w.element_inputs(0);
+        let a = teil::eval(&naive, &inputs).unwrap();
+        let b = teil::eval(&opt, &inputs).unwrap();
+        for d in opt.outputs() {
+            let diff = a[&d.name].max_abs_diff(&b[&d.name]);
+            assert!(diff < 1e-10, "{name}/{}: rewrite drift {diff}", d.name);
+        }
+
+        // the generic oracle: lowered kernel vs teil::eval, exact
+        let check = w.check(2).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(check.mse, 0.0, "{name}: oracle MSE {:.3e}", check.mse);
+
+        // hardware generation + simulation at a small size
+        k.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let spec = olympus::generate(&k, &OlympusOpts::baseline(), &platform)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        spec.validate(&platform).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let est = hbmflow::hls::estimate(&spec, &platform);
+        assert!(est.fmax_mhz > 50.0, "{name}");
+        let r = hbmflow::sim::simulate(&spec, &est, &platform, 20_000);
+        assert!(r.gflops_system > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn every_shipped_kernel_compiles_through_the_cli_in_all_emit_modes() {
+    for path in shipped_kernels() {
+        let f = path.to_str().unwrap();
+        for emit in ["c", "cfg", "wrapper", "host", "teil"] {
+            let args: Vec<String> =
+                ["compile", "--file", f, "--emit", emit]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect();
+            let out = hbmflow::cli::main_with_args(&args)
+                .unwrap_or_else(|e| panic!("{f} --emit {emit}: {e}"));
+            assert!(!out.is_empty(), "{f} --emit {emit}");
+        }
+    }
+}
+
+#[test]
+fn file_sourced_dse_produces_a_nonempty_frontier() {
+    let path = kernel_dir().join("advect.cfd");
+    let mut s = SearchSpace::for_source(KernelSource::file(&path));
+    // narrow slice so the debug-mode test stays fast
+    s.dtypes = vec![DataType::F64];
+    s.cu_counts = vec![1];
+    s.dataflow = vec![Some(3)];
+    s.double_buffering = vec![true];
+    s.bus_modes = vec![BusMode::Wide256Parallel];
+    s.mem_sharing = vec![false];
+    s.fifo_depths = vec![None];
+    let ex = dse::explore(&s, &Platform::alveo_u280(), 50_000, Some(2)).unwrap();
+    assert_eq!(ex.kernel, "advect");
+    assert!(ex.feasible_count() > 0);
+    assert!(!ex.frontier.is_empty());
+    let report = dse::report::text(&ex, 0, true);
+    assert!(report.contains("kernel: advect"), "{report}");
+    assert!(report.contains("Pareto frontier"), "{report}");
+}
+
+#[test]
+fn file_sourced_simulate_reports_gflops_and_oracle_mse() {
+    for file in ["stiffness.cfd", "smoother.cfd"] {
+        let path = kernel_dir().join(file);
+        let args: Vec<String> = [
+            "sim",
+            "--file",
+            path.to_str().unwrap(),
+            "--preset",
+            "baseline",
+            "--elements",
+            "20000",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let out = hbmflow::cli::main_with_args(&args).unwrap();
+        assert!(out.contains("GFLOPS"), "{file}: {out}");
+        assert!(out.contains("oracle"), "{file}: {out}");
+        assert!(out.contains("MSE 0.000e0"), "{file}: {out}");
+    }
+}
