@@ -11,12 +11,12 @@
 //! hbmflow sweep    [--elements N]
 //! hbmflow ladder   [--elements N]       # the Fig. 15 ladder
 //! hbmflow dse      [--kernel .. | --file ..] [--p 7,11] [--dtype ..]
-//!                  [--max-cus N] [--ddr4] [--top-k N] [--pareto-only]
-//!                  [--format text|json|csv]
+//!                  [--max-cus N] [--ddr4] [--mem-plan] [--top-k N]
+//!                  [--pareto-only] [--format text|json|csv]
 //! ```
 //!
 //! Flags are `--key value` pairs; the registered boolean flags
-//! (`--pareto-only`, `--ddr4`) may appear bare. `--file prog.cfd` feeds
+//! (`--pareto-only`, `--ddr4`, `--mem-plan`) may appear bare. `--file prog.cfd` feeds
 //! an arbitrary CFDlang program (see docs/CFDLANG.md) through the same
 //! flow as the builtin kernels; `--kernel` and `--file` are mutually
 //! exclusive.
@@ -38,7 +38,7 @@ use crate::runtime::Runtime;
 use crate::sim;
 
 /// Flags that may appear bare (no value); all other flags require one.
-const BOOL_FLAGS: &[&str] = &["pareto-only", "ddr4"];
+const BOOL_FLAGS: &[&str] = &["pareto-only", "ddr4", "mem-plan"];
 
 /// Parsed `--key value` flags.
 pub struct Args {
@@ -102,6 +102,18 @@ impl Args {
         match self.get("dtype") {
             Some(v) => DataType::parse(v).ok_or_else(|| anyhow!("unknown dtype {v}")),
             None => Ok(default),
+        }
+    }
+
+    /// `--partition-cap N`: cap the memory plan's partition factor
+    /// (None = match the access degree, conflict-free).
+    pub fn partition_cap(&self) -> Result<Option<usize>> {
+        match self.get("partition-cap") {
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .with_context(|| format!("--partition-cap {v}")),
+            None => Ok(None),
         }
     }
 
@@ -214,8 +226,12 @@ kernel sources (compile / estimate / simulate / explore / dse):
 flags: --kernel --file --p --dtype --preset --cus --elements --emit
        --artifacts --mse-budget --max-bits
        --policy local|striped (channel allocation)
+       --partition-cap N (cap the memory plan's banking factor;
+         estimate/simulate — below the reduction trip the simulator
+         charges bank-conflict stalls)
 dse flags: --p 7,11  --max-cus N  --ddr4  --threads N  --elements N
-           --policy local,striped  --top-k N (0 = all)  --pareto-only
+           --policy local,striped  --mem-plan (explore partition-factor
+           caps x sharing)  --top-k N (0 = all)  --pareto-only
            --format text|json|csv
 ";
 
@@ -255,7 +271,8 @@ fn cmd_estimate(args: &Args) -> Result<String> {
     let p = degree_for(&source, args, 11)?;
     let dtype = args.dtype_or(DataType::F64)?;
     let cus = args.usize_or("cus", 1)?;
-    let opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?;
+    let mut opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?;
+    opts.partition_cap = args.partition_cap()?;
     let k = source.build(p).map_err(|e| anyhow!(e))?;
     let platform = Platform::alveo_u280();
     let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
@@ -298,8 +315,9 @@ fn cmd_simulate(args: &Args) -> Result<String> {
     let dtype = args.dtype_or(DataType::F64)?;
     let cus = args.usize_or("cus", 1)?;
     let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
-    let opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?
+    let mut opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?
         .with_policy(args.policy()?);
+    opts.partition_cap = args.partition_cap()?;
     // generic numerics oracle: the lowered kernel vs teil::eval on a few
     // seeded elements (no closed form needed — works for any --file);
     // module and kernel come from one parse so the cross-check is always
@@ -331,6 +349,8 @@ fn cmd_simulate(args: &Args) -> Result<String> {
          bottleneck: {}  stages/element: {}\n\
          interconnect ({}): {} switch crossings, fill {} cyc/batch\n\
          channel utilization: {}\n\
+         memory plan: {} arrays in {} banks, {} words/lane on chip \
+         ({} unshared), conflict stalls {} cyc/element\n\
          oracle : MSE {:.3e}  max|err| {:.3e} (lowered kernel vs \
          teil::eval, {} elements)",
         r.label,
@@ -352,6 +372,11 @@ fn cmd_simulate(args: &Args) -> Result<String> {
         r.switch_crossings,
         r.hbm_fill_cycles,
         channels.join(" "),
+        spec.memory.arrays.len(),
+        r.mem_banks,
+        r.mem_shared_words,
+        r.mem_unshared_words,
+        r.conflict_stalls,
         oracle.mse,
         oracle.max_abs_err,
         oracle.elements,
@@ -541,6 +566,13 @@ fn cmd_dse(args: &Args) -> Result<String> {
     space.cu_counts = (1..=max_cus).collect();
     if args.flag("ddr4") {
         space.memories.push(crate::olympus::MemoryKind::Ddr4);
+    }
+    if args.flag("mem-plan") {
+        // the memory axis: partition-factor caps below the kernel's
+        // access degree trade BRAM/URAM banks for simulated
+        // bank-conflict stalls (sharing on/off is already a default
+        // axis; inert caps normalize away in dse::explore)
+        space.partition_caps = vec![None, Some(4), Some(2)];
     }
     if let Some(list) = args.get("policy") {
         space.channel_policies = list
@@ -769,6 +801,42 @@ mod tests {
         assert!(s.contains("Pareto frontier"), "{s}");
         assert!(s.contains("Fixed Point 32"), "{s}");
         assert!(s.contains("candidates enumerated"), "{s}");
+    }
+
+    #[test]
+    fn simulate_reports_the_memory_plan_and_cap_stalls() {
+        let s = run(&["simulate", "--preset", "dataflow7", "--elements", "100000"])
+            .unwrap();
+        assert!(s.contains("memory plan:"), "{s}");
+        assert!(s.contains("conflict stalls 0 cyc/element"), "{s}");
+        let capped = run(&[
+            "simulate", "--preset", "dataflow7", "--elements", "100000",
+            "--partition-cap", "4",
+        ])
+        .unwrap();
+        assert!(!capped.contains("conflict stalls 0 cyc/element"), "{capped}");
+        assert!(capped.contains("cap4"), "label carries the cap: {capped}");
+        assert!(run(&["simulate", "--partition-cap", "x"]).is_err());
+    }
+
+    #[test]
+    fn dse_mem_plan_flag_explores_the_memory_axis() {
+        let s = run(&[
+            "dse", "--p", "11", "--dtype", "f64", "--max-cus", "1",
+            "--elements", "100000", "--threads", "2", "--mem-plan",
+            "--format", "csv",
+        ])
+        .unwrap();
+        assert!(s.contains("partition_cap"), "{s}");
+        assert!(s.contains("conflict_stalls"), "{s}");
+        // capped candidates are enumerated (column 9 = partition_cap)
+        let capped_rows = s
+            .lines()
+            .skip(1)
+            .filter_map(|l| l.split(',').nth(9))
+            .filter(|c| !c.is_empty())
+            .count();
+        assert!(capped_rows > 0, "capped candidates enumerated:\n{s}");
     }
 
     #[test]

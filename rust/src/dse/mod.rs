@@ -7,7 +7,8 @@
 //!
 //!  * [`SearchSpace`] — the space as a *value*: independent axes over
 //!    `OlympusOpts` (dtype, bus mode, dataflow groups, memory sharing,
-//!    FIFO depth, CU count, HBM vs DDR4) × kernel × polynomial degree.
+//!    memory-plan partition cap, FIFO depth, CU count, HBM vs DDR4) ×
+//!    kernel × polynomial degree.
 //!    The kernel is any `kernels::KernelSource` — a builtin generator,
 //!    a user `.cfd` file (`hbmflow dse --file my.cfd`), or an inline
 //!    program — so exploration is not limited to the published trio;
@@ -72,8 +73,9 @@ impl Exploration {
     /// Find a candidate identifying one of the paper's figure points
     /// (Figs. 15–17): dtype, degree, dataflow groups, and CU count,
     /// with the figures' shared methodology pinned (wide parallel bus,
-    /// double buffering, HBM, no sharing) so a Narrow-bus "Custom"
-    /// variant can never answer for a published design point. Only the
+    /// double buffering, HBM, no sharing, no partition cap) so a
+    /// Narrow-bus or bank-starved "Custom" variant can never answer for
+    /// a published design point. Only the
     /// FIFO-depth refinement is left free (the multi-CU methodology
     /// forces it); frontier members are preferred so callers land on
     /// the surviving variant.
@@ -93,6 +95,7 @@ impl Exploration {
                 && o.point.opts.double_buffering
                 && o.point.opts.memory == crate::olympus::MemoryKind::Hbm
                 && !o.point.opts.mem_sharing
+                && o.point.opts.partition_cap.is_none()
         };
         self.frontier
             .iter()
@@ -132,11 +135,18 @@ pub fn explore(
 
     // normalize: a kernel with fewer nests than the requested dataflow
     // decomposition caps at one group per nest (cli::cmd_compile does
-    // the same clamp)
+    // the same clamp), and a partition cap at or above the kernel's max
+    // access degree is the uncapped plan (both collapse to duplicates
+    // the dedup below removes)
     for pt in &mut points {
+        let k = &kernels[&(pt.kernel.clone(), pt.p)];
         if let Some(g) = pt.opts.dataflow {
-            let nests = kernels[&(pt.kernel.clone(), pt.p)].nests.len();
-            pt.opts.dataflow = Some(g.min(nests));
+            pt.opts.dataflow = Some(g.min(k.nests.len()));
+        }
+        if let Some(c) = pt.opts.partition_cap {
+            if c >= crate::ir::access::max_read_degree(k) {
+                pt.opts.partition_cap = None;
+            }
         }
     }
     let mut seen = HashSet::new();
@@ -219,6 +229,57 @@ mod tests {
             .expect("fx32 p=11 DF7 1CU enumerated");
         assert_eq!(ex.outcomes[i].point.opts.dtype, DataType::Fx32);
         assert!(ex.find_config(DataType::F32, 99, None, 9).is_none());
+    }
+
+    #[test]
+    fn memory_axis_trades_uram_for_stalls() {
+        let mut s = SearchSpace::default_for("helmholtz");
+        s.degrees = vec![11];
+        s.dtypes = vec![DataType::F64];
+        s.cu_counts = vec![1];
+        s.dataflow = vec![Some(7)];
+        s.double_buffering = vec![true];
+        s.bus_modes = vec![BusMode::Wide256Parallel];
+        s.mem_sharing = vec![false];
+        s.fifo_depths = vec![None];
+        s.partition_caps = vec![None, Some(4)];
+        let ex = explore(&s, &Platform::alveo_u280(), 200_000, Some(2)).unwrap();
+        assert_eq!(ex.enumerated(), 2);
+        let by_cap = |cap: Option<usize>| {
+            ex.outcomes
+                .iter()
+                .find(|o| o.point.opts.partition_cap == cap)
+                .and_then(|o| o.result.as_ref().ok())
+                .expect("both points evaluate")
+        };
+        let full = by_cap(None);
+        let capped = by_cap(Some(4));
+        assert_eq!(full.sim.conflict_stalls, 0);
+        assert!(capped.sim.conflict_stalls > 0);
+        assert!(capped.total.uram < full.total.uram);
+        assert!(capped.sim.gflops_system < full.sim.gflops_system);
+        // a genuine trade: both ends of the axis survive on the frontier
+        for (i, o) in ex.outcomes.iter().enumerate() {
+            assert!(ex.is_on_frontier(i), "{} dominated", o.point.label());
+        }
+    }
+
+    #[test]
+    fn oversized_partition_caps_normalize_to_uncapped() {
+        let mut s = SearchSpace::default_for("helmholtz");
+        s.degrees = vec![11];
+        s.dtypes = vec![DataType::F64];
+        s.cu_counts = vec![1];
+        s.dataflow = vec![Some(7)];
+        s.double_buffering = vec![true];
+        s.bus_modes = vec![BusMode::Wide256Parallel];
+        s.mem_sharing = vec![false];
+        s.fifo_depths = vec![None];
+        // helmholtz p=11 unrolls an 11-wide reduction: cap 16 is inert
+        s.partition_caps = vec![None, Some(16)];
+        let ex = explore(&s, &Platform::alveo_u280(), 100_000, Some(1)).unwrap();
+        assert_eq!(ex.enumerated(), 1, "inert cap collapses onto uncapped");
+        assert_eq!(ex.outcomes[0].point.opts.partition_cap, None);
     }
 
     #[test]

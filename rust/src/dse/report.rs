@@ -40,6 +40,9 @@ pub fn text(ex: &Exploration, top_k: usize, pareto_only: bool) -> String {
                 e.total.bram.to_string(),
                 e.total.uram.to_string(),
                 e.total.dsp.to_string(),
+                e.sim.mem_banks.to_string(),
+                e.sim.mem_shared_words.to_string(),
+                e.sim.conflict_stalls.to_string(),
                 format!("{:.2}", e.sim.max_channel_utilization),
                 e.sim.switch_crossings.to_string(),
                 e.sim.bottleneck.clone(),
@@ -63,6 +66,9 @@ pub fn text(ex: &Exploration, top_k: usize, pareto_only: bool) -> String {
             "BRAM",
             "URAM",
             "DSP",
+            "banks",
+            "shmem",
+            "stalls",
             "ch.util",
             "xings",
             "bound",
@@ -165,6 +171,10 @@ fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
         ),
         ("mem_sharing", Json::Bool(opts.mem_sharing)),
         (
+            "partition_cap",
+            opts.partition_cap.map(|c| Json::num(c as f64)).unwrap_or(Json::Null),
+        ),
+        (
             "fifo_depth",
             opts.fifo_depth.map(|d| Json::num(d as f64)).unwrap_or(Json::Null),
         ),
@@ -185,6 +195,10 @@ fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
             ("bram", Json::num(e.total.bram as f64)),
             ("uram", Json::num(e.total.uram as f64)),
             ("dsp", Json::num(e.total.dsp as f64)),
+            ("mem_banks", Json::num(e.sim.mem_banks as f64)),
+            ("mem_shared_words", Json::num(e.sim.mem_shared_words as f64)),
+            ("mem_unshared_words", Json::num(e.sim.mem_unshared_words as f64)),
+            ("conflict_stalls", Json::num(e.sim.conflict_stalls as f64)),
             ("max_utilization", Json::num(e.max_utilization)),
             (
                 "max_channel_util",
@@ -224,14 +238,15 @@ fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
 pub fn csv(ex: &Exploration) -> String {
     let mut out = String::from(
         "kernel,p,dtype,cus,bus,memory,double_buffering,dataflow,mem_sharing,\
-         fifo_depth,policy,status,feasible,pareto,fmax_mhz,gflops_cu,\
-         gflops_system,gflops_per_w,energy_j,lut,ff,bram,uram,dsp,\
-         max_channel_util,switch_crossings,bottleneck,reject_reason\n",
+         partition_cap,fifo_depth,policy,status,feasible,pareto,fmax_mhz,\
+         gflops_cu,gflops_system,gflops_per_w,energy_j,lut,ff,bram,uram,dsp,\
+         mem_banks,mem_shared_words,conflict_stalls,max_channel_util,\
+         switch_crossings,bottleneck,reject_reason\n",
     );
     for (i, o) in ex.outcomes.iter().enumerate() {
         let opts = &o.point.opts;
         let axes = format!(
-            "{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{}",
             o.point.kernel,
             o.point.p,
             opts.dtype.name(),
@@ -241,13 +256,14 @@ pub fn csv(ex: &Exploration) -> String {
             opts.double_buffering,
             opts.dataflow.map(|g| g.to_string()).unwrap_or_default(),
             opts.mem_sharing,
+            opts.partition_cap.map(|c| c.to_string()).unwrap_or_default(),
             opts.fifo_depth.map(|d| d.to_string()).unwrap_or_default(),
             opts.channel_policy.name(),
         );
         let row = match &o.result {
             Ok(e) => format!(
                 "{axes},ok,{},{},{:.3},{:.4},{:.4},{:.4},{:.4},{},{},{},{},{},\
-                 {:.3},{},{},\n",
+                 {},{},{},{:.3},{},{},\n",
                 e.feasible,
                 ex.is_on_frontier(i),
                 e.fmax_mhz,
@@ -260,12 +276,15 @@ pub fn csv(ex: &Exploration) -> String {
                 e.total.bram,
                 e.total.uram,
                 e.total.dsp,
+                e.sim.mem_banks,
+                e.sim.mem_shared_words,
+                e.sim.conflict_stalls,
                 e.sim.max_channel_utilization,
                 e.sim.switch_crossings,
                 e.sim.bottleneck,
             ),
             Err(reason) => format!(
-                "{axes},rejected,false,false,,,,,,,,,,,,,,{}\n",
+                "{axes},rejected,false,false,,,,,,,,,,,,,,,,,{}\n",
                 reason.replace(',', ";"),
             ),
         };

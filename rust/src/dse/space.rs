@@ -3,7 +3,8 @@
 //! The paper leaves exploration "up to the designer" (§3.6.4); here the
 //! space itself is a value: a `SearchSpace` is the cross product of
 //! independent axes — data type, bus mode, dataflow decomposition,
-//! Mnemosyne sharing, FIFO depth, CU count, HBM vs DDR4 — times kernel
+//! Mnemosyne sharing, memory-plan partition cap, FIFO depth, CU count,
+//! HBM vs DDR4 — times kernel
 //! and polynomial degree. `enumerate` expands it into concrete
 //! `DesignPoint`s, pruning only combinations that are *structurally*
 //! meaningless (FIFO depth without dataflow streams; sharing on multi-
@@ -62,6 +63,13 @@ pub struct SearchSpace {
     pub double_buffering: Vec<bool>,
     pub bus_modes: Vec<BusMode>,
     pub mem_sharing: Vec<bool>,
+    /// Memory-plan partition-factor caps (`None` = match the unrolled
+    /// access degree, conflict-free). Capping below a kernel's
+    /// reduction trip saves BRAM/URAM banks at the price of simulated
+    /// bank-conflict stalls — together with `mem_sharing` this is the
+    /// memory axis (`hbmflow dse --mem-plan`). Caps at or above the
+    /// kernel's max access degree normalize to `None` in `explore`.
+    pub partition_caps: Vec<Option<usize>>,
     /// Stream FIFO depth in words (`None` = naive full-array sizing).
     pub fifo_depths: Vec<Option<usize>>,
     pub memories: Vec<MemoryKind>,
@@ -100,6 +108,7 @@ impl SearchSpace {
                 BusMode::Wide256Parallel,
             ],
             mem_sharing: vec![false, true],
+            partition_caps: vec![None],
             fifo_depths: vec![None, Some(64)],
             memories: vec![MemoryKind::Hbm],
             channel_policies: vec![ChannelPolicy::LocalFirst],
@@ -125,15 +134,18 @@ impl SearchSpace {
                                         if !coherent(dataflow, sharing, fifo) {
                                             continue;
                                         }
-                                        for policy in &self.channel_policies {
-                                            for &cus in &self.cu_counts {
-                                                let pt = self.point(
-                                                    p, dtype, memory, bus, db,
-                                                    dataflow, sharing, fifo,
-                                                    policy.clone(), cus,
-                                                );
-                                                if seen.insert(pt.fingerprint()) {
-                                                    points.push(pt);
+                                        for &cap in &self.partition_caps {
+                                            for policy in &self.channel_policies {
+                                                for &cus in &self.cu_counts {
+                                                    let pt = self.point(
+                                                        p, dtype, memory, bus,
+                                                        db, dataflow, sharing,
+                                                        cap, fifo,
+                                                        policy.clone(), cus,
+                                                    );
+                                                    if seen.insert(pt.fingerprint()) {
+                                                        points.push(pt);
+                                                    }
                                                 }
                                             }
                                         }
@@ -158,6 +170,7 @@ impl SearchSpace {
         double_buffering: bool,
         dataflow: Option<usize>,
         mem_sharing: bool,
+        partition_cap: Option<usize>,
         fifo: Option<usize>,
         channel_policy: ChannelPolicy,
         cus: usize,
@@ -168,6 +181,7 @@ impl SearchSpace {
             memory,
             dataflow,
             mem_sharing,
+            partition_cap,
             dtype,
             num_cus: 1,
             fifo_depth: None,
@@ -258,6 +272,21 @@ mod tests {
             assert_eq!(pt.opts.target_freq_mhz, 225.0, "{}", pt.label());
             assert!(pt.opts.lut_mult_shift);
         }
+    }
+
+    #[test]
+    fn partition_cap_axis_multiplies_the_space() {
+        let mut s = SearchSpace::default_for("helmholtz");
+        let base = s.enumerate().len();
+        s.partition_caps = vec![None, Some(2), Some(4)];
+        assert_eq!(s.enumerate().len(), 3 * base, "independent memory axis");
+        // and the capped points carry the cap into the options
+        let capped = s
+            .enumerate()
+            .into_iter()
+            .filter(|pt| pt.opts.partition_cap == Some(2))
+            .count();
+        assert_eq!(capped, base);
     }
 
     #[test]

@@ -7,9 +7,10 @@
 //!                  the sharing rules Vitis exhibited in the paper's
 //!                  Table 2 (one operator set per dataflow module; wide
 //!                  flat buses are memory-port limited to 2+2).
-//!  * `resources` — LUT/FF/DSP from per-operator costs, BRAM/URAM from
-//!                  buffer mapping (unroll partitioning, 8 KiB URAM
-//!                  eligibility, FIFO sizing).
+//!  * `resources` — LUT/FF/DSP from per-operator costs; BRAM/URAM read
+//!                  off the `mnemosyne::MemoryPlan` on the spec (banked
+//!                  arrays, shared banks, FIFO sizing — one source of
+//!                  truth with the simulator's conflict model).
 //!  * `timing`    — achieved frequency from a congestion model over
 //!                  utilization (calibrated against the paper's own
 //!                  fmax reports, Tables 3–5).

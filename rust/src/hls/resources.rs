@@ -9,7 +9,6 @@
 //! fx32 BRAM blow-up from lane doubling).
 
 use crate::datatype::DataType;
-use crate::ir::affine::NestKind;
 use crate::olympus::SystemSpec;
 use crate::platform::Resources;
 
@@ -112,165 +111,26 @@ const PACKING_FF_PER_LANE: u64 = 8_000;
 const SERIAL_ALIGN_LUT: u64 = 22_000; // paper: serial alignment "complexity"
 const SERIAL_ALIGN_FF: u64 = 26_000;
 
-/// URAM eligibility threshold: Vitis maps arrays to URAM only when they
-/// are large enough; 8 KiB reproduces the paper's switches (p=11 doubles
-/// -> URAM; p=7 or 32-bit -> BRAM; Tables 3-4).
-const URAM_MIN_BYTES: u64 = 8 * 1024;
-/// Below this, arrays land in LUTRAM (distributed memory), not BRAM.
-const LUTRAM_MAX_BYTES: u64 = 2 * 1024;
-/// BRAM36 tile: 4 KiB payload; a half tile (BRAM18) holds 2 KiB.
-const BRAM_TILE_BYTES: u64 = 4 * 1024;
-
-/// Storage mapping of one array instance: (bram_halves, uram, lutram_lut).
-///
-/// Partitioned (unroll-cyclic) arrays map each bank independently; banks
-/// of URAM-eligible arrays stay in URAM (this is what produces the
-/// paper's URAM 240/252 counts for the p=11 double dataflow variants),
-/// while small banks pack into BRAM18 halves.
-fn map_array(bytes: u64, partitions: u64) -> (u64, u64, u64) {
-    let parts = partitions.max(1);
-    if bytes >= URAM_MIN_BYTES {
-        return (0, parts, 0);
-    }
-    if bytes < LUTRAM_MAX_BYTES {
-        // distributed RAM: ~1 LUT per 64 bits plus addressing
-        return (0, 0, bytes / 4 + 32);
-    }
-    let per_bank = bytes.div_ceil(parts);
-    let halves_per_bank = if per_bank <= BRAM_TILE_BYTES / 2 {
-        1
-    } else {
-        2 * per_bank.div_ceil(BRAM_TILE_BYTES)
-    };
-    (parts * halves_per_bank, 0, 0)
-}
-
-/// Buffer partitioning factor: arrays *read* by an unrolled contraction
-/// must sustain `red_trip` parallel reads -> cyclic partitioning.
-/// (Writes are one element per cycle and need no partitioning.)
-fn partitions_for(spec: &SystemSpec, buf: usize) -> u64 {
-    spec.kernel
-        .nests
-        .iter()
-        .filter(|n| n.reads.contains(&buf))
-        .filter_map(|n| match n.kind {
-            NestKind::Contraction { .. } => Some(n.red_trip as u64),
-            _ => None,
-        })
-        .max()
-        .unwrap_or(1)
-}
-
 /// On-chip memory for one lane's kernel instance:
 /// (bram_halves, uram, lutram_lut).
+///
+/// Everything comes from the `mnemosyne::MemoryPlan` Olympus attached
+/// to the spec — per-group buffered copies, lifetime-shared banks,
+/// partition factors from the affine access analysis, and stream FIFO
+/// depths. (The old private `partitions_for` heuristic that re-derived
+/// factors here is retired; see DESIGN.md "On-chip memory plan".)
 fn lane_memory(spec: &SystemSpec) -> (u64, u64, u64) {
-    let k = &spec.kernel;
-    let bytes_of = |words: usize| words as u64 * spec.dtype.bytes() as u64;
     let mut bram_halves = 0u64;
     let mut uram = 0u64;
     let mut lutram = 0u64;
-    let mut acc = |m: (u64, u64, u64)| {
-        bram_halves += m.0;
-        uram += m.1;
-        lutram += m.2;
-    };
-
-    if spec.dataflow && spec.schedule.num_groups() > 1 {
-        // Every group buffers each array it reads that is produced
-        // outside the group (paper §4.2: "the S array is needed by both
-        // modules and must be buffered twice"). The group's last write
-        // is streamed out — the *consumer* buffers it.
-        for g in &spec.schedule.groups {
-            let local: Vec<usize> = g.nests().map(|ni| k.nests[ni].write).collect();
-            let mut buffered: Vec<usize> = Vec::new();
-            for ni in g.nests() {
-                for &r in &k.nests[ni].reads {
-                    if !local.contains(&r) && !buffered.contains(&r) {
-                        buffered.push(r);
-                    }
-                }
-            }
-            for b in buffered {
-                acc(map_array(
-                    bytes_of(k.buffers[b].words()),
-                    partitions_for(spec, b),
-                ));
-            }
-            // intra-group temporaries: writes consumed by a later nest
-            // of the same group
-            for (pos, ni) in g.nests().enumerate() {
-                let w = k.nests[ni].write;
-                let read_later = g
-                    .nests()
-                    .skip(pos + 1)
-                    .any(|nj| k.nests[nj].reads.contains(&w));
-                if read_later {
-                    acc(map_array(
-                        bytes_of(k.buffers[w].words()),
-                        partitions_for(spec, w),
-                    ));
-                }
-            }
-        }
-        // inter-group stream FIFOs
-        for w in stream_widths(spec) {
-            let depth_words = spec.opts.fifo_depth.unwrap_or(w);
-            let fifo_bytes = depth_words as u64 * spec.dtype.bytes() as u64;
-            bram_halves += if fifo_bytes <= BRAM_TILE_BYTES / 2 {
-                1
-            } else {
-                2 * fifo_bytes.div_ceil(BRAM_TILE_BYTES)
-            };
-        }
-    } else {
-        // flat kernel (or 1-group dataflow): every buffer lives once;
-        // Mnemosyne sharing applies to the temps.
-        match &spec.sharing {
-            Some(plan) => {
-                for bank in &plan.banks {
-                    let parts = bank
-                        .residents
-                        .iter()
-                        .map(|&b| partitions_for(spec, b))
-                        .max()
-                        .unwrap_or(1);
-                    acc(map_array(bytes_of(bank.words), parts));
-                }
-                for (b, buf) in k.buffers.iter().enumerate() {
-                    if buf.kind != crate::ir::affine::BufKind::Temp {
-                        acc(map_array(
-                            bytes_of(buf.words()),
-                            partitions_for(spec, b),
-                        ));
-                    }
-                }
-            }
-            None => {
-                for (b, buf) in k.buffers.iter().enumerate() {
-                    acc(map_array(
-                        bytes_of(buf.words()),
-                        partitions_for(spec, b),
-                    ));
-                }
-            }
-        }
+    for a in &spec.memory.arrays {
+        let (b, u, l) = a.footprint();
+        bram_halves += b;
+        uram += u;
+        lutram += l;
     }
+    bram_halves += spec.memory.fifo_bram_halves();
     (bram_halves, uram, lutram)
-}
-
-/// Width (in words) of each inter-group stream: the producing group's
-/// output array.
-fn stream_widths(spec: &SystemSpec) -> Vec<usize> {
-    let k = &spec.kernel;
-    let mut widths = Vec::new();
-    for (gi, g) in spec.schedule.groups.iter().enumerate() {
-        if gi + 1 == spec.schedule.groups.len() {
-            break;
-        }
-        let last = g.end - 1;
-        widths.push(k.buffers[k.nests[last].write].words());
-    }
-    widths
 }
 
 /// Resources of one CU.
@@ -469,6 +329,36 @@ mod tests {
         let full = total(11, OlympusOpts::dataflow(7));
         let small = total(11, OlympusOpts::dataflow(7).with_fifo_depth(64));
         assert!(small.bram < full.bram);
+    }
+
+    #[test]
+    fn partition_cap_cuts_uram_banks() {
+        // capping the factor below the p=11 reduction trip provisions
+        // fewer URAM banks per tensor — the resource side of the
+        // bank-conflict trade the dse memory axis explores
+        let full = total(11, OlympusOpts::dataflow(7));
+        let capped = total(11, OlympusOpts::dataflow(7).with_partition_cap(4));
+        assert!(
+            capped.uram < full.uram / 2,
+            "capped {} vs full {}",
+            capped.uram,
+            full.uram
+        );
+        assert_eq!(capped.dsp, full.dsp, "the datapath is untouched");
+    }
+
+    #[test]
+    fn resources_and_plan_agree_on_banks() {
+        // the estimator consumes the plan verbatim: URAM count equals
+        // lanes x the plan's URAM-array bank total
+        let s = spec_p(11, OlympusOpts::dataflow(7));
+        let planned: u64 = s
+            .memory
+            .arrays
+            .iter()
+            .map(|a| a.footprint().1)
+            .sum();
+        assert_eq!(per_cu(&s).uram, planned * s.lanes as u64);
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Affine access-pattern analysis: parallel-read demand per buffer.
+//!
+//! The hardware-facing question Mnemosyne's banking answers is "how many
+//! words of this buffer must be readable in one cycle?". With the
+//! innermost reduction loop of every contraction nest fully unrolled
+//! (paper §3.4.4, the 11-parallel-multiplier MAC), a buffer read by such
+//! a nest is indexed by the unrolled loop variable and must deliver
+//! `red_trip` words per cycle. Elementwise and permute nests consume one
+//! word per buffer per cycle (stream-order or strided, never unrolled),
+//! so their demand is 1. The demand of a buffer is the maximum over the
+//! nests that read it — computed here once, globally and per nest range,
+//! and consumed by `mnemosyne::plan` instead of ad-hoc re-derivations
+//! (the retired `hls::resources::partitions_for`).
+
+use super::affine::{BufId, Kernel, NestKind};
+
+/// Parallel-read demand a single nest places on one of its read buffers.
+pub fn nest_read_degree(k: &Kernel, nest: usize, buf: BufId) -> usize {
+    let n = &k.nests[nest];
+    if !n.reads.contains(&buf) {
+        return 0;
+    }
+    match n.kind {
+        // the unrolled reduction reads `red_trip` words of every operand
+        // (the streamed tensor slice and the operator matrix column) in
+        // the same cycle
+        NestKind::Contraction { .. } => n.red_trip,
+        NestKind::Elementwise(_) | NestKind::Permute { .. } => 1,
+    }
+}
+
+/// Parallel-read demand on `buf` over a range of nests (a dataflow
+/// group, or the whole kernel): max over the reading nests, and 1 for a
+/// buffer the range never reads (storage still needs one port).
+pub fn read_degree_in(k: &Kernel, nests: impl Iterator<Item = usize>, buf: BufId) -> usize {
+    nests
+        .map(|ni| nest_read_degree(k, ni, buf))
+        .max()
+        .unwrap_or(0)
+        .max(1)
+}
+
+/// Per-buffer access summary over the whole kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AccessMap {
+    /// Max parallel-read demand per buffer (≥ 1).
+    pub read_degree: Vec<usize>,
+    /// Nest indices reading each buffer, in nest order.
+    pub readers: Vec<Vec<usize>>,
+}
+
+/// Analyze every buffer's readers and parallel-read demand.
+pub fn analyze(k: &Kernel) -> AccessMap {
+    let mut read_degree = vec![1usize; k.buffers.len()];
+    let mut readers = vec![Vec::new(); k.buffers.len()];
+    for (ni, n) in k.nests.iter().enumerate() {
+        for &r in &n.reads {
+            readers[r].push(ni);
+            read_degree[r] = read_degree[r].max(nest_read_degree(k, ni, r));
+        }
+    }
+    AccessMap { read_degree, readers }
+}
+
+/// The kernel's largest parallel-read demand — the partition factor an
+/// uncapped memory plan chooses, and the point past which a DSE
+/// partition-factor cap is a no-op.
+pub fn max_read_degree(k: &Kernel) -> usize {
+    k.nests
+        .iter()
+        .filter(|n| matches!(n.kind, NestKind::Contraction { .. }))
+        .map(|n| n.red_trip)
+        .max()
+        .unwrap_or(1)
+        .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+
+    fn helmholtz(p: usize) -> Kernel {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        lower::lower_kernel(&m, "helmholtz").unwrap()
+    }
+
+    #[test]
+    fn contraction_reads_demand_the_reduction_trip() {
+        let k = helmholtz(11);
+        let am = analyze(&k);
+        // every buffer read by a gemm nest needs p parallel words
+        for (ni, n) in k.nests.iter().enumerate() {
+            if matches!(n.kind, NestKind::Contraction { .. }) {
+                for &r in &n.reads {
+                    assert!(am.read_degree[r] >= 11, "nest {ni} buf {r}");
+                }
+            }
+        }
+        assert_eq!(max_read_degree(&k), 11);
+    }
+
+    #[test]
+    fn elementwise_only_buffers_demand_one() {
+        // `t` (third mode-product output) is consumed only by the
+        // hadamard nest — stream-order, one word per cycle.
+        let k = helmholtz(11);
+        let am = analyze(&k);
+        let (tid, _) = k
+            .buffers
+            .iter()
+            .enumerate()
+            .find(|(_, b)| b.name == "t")
+            .unwrap();
+        assert_eq!(am.read_degree[tid], 1);
+        assert_eq!(am.readers[tid].len(), 1);
+    }
+
+    #[test]
+    fn write_only_buffers_default_to_one_port() {
+        let k = helmholtz(11);
+        let am = analyze(&k);
+        for (i, _) in k.outputs() {
+            assert_eq!(am.read_degree[i], 1, "outputs are never read back");
+            assert!(am.readers[i].is_empty());
+        }
+    }
+
+    #[test]
+    fn range_scoped_degree_sees_only_the_range() {
+        let k = helmholtz(11);
+        // u is read by nest 0 (gemm, degree p); a range excluding nest 0
+        // sees only the default single port
+        let (uid, _) = k
+            .buffers
+            .iter()
+            .enumerate()
+            .find(|(_, b)| b.name == "u")
+            .unwrap();
+        assert_eq!(read_degree_in(&k, 0..1, uid), 11);
+        assert_eq!(read_degree_in(&k, 1..k.nests.len(), uid), 1);
+    }
+
+    #[test]
+    fn degrees_agree_with_global_analysis() {
+        let k = helmholtz(7);
+        let am = analyze(&k);
+        for b in 0..k.buffers.len() {
+            assert_eq!(am.read_degree[b], read_degree_in(&k, 0..k.nests.len(), b));
+        }
+    }
+}

@@ -130,6 +130,120 @@ mod tests {
         assert_eq!(iv.last_use, 3, "t read by the hadamard nest");
     }
 
+    use crate::ir::affine::{Buffer, EwOp, LoopNest, NestKind};
+
+    fn buf(name: &str, kind: BufKind) -> Buffer {
+        Buffer {
+            name: name.into(),
+            shape: vec![4, 4],
+            kind,
+        }
+    }
+
+    fn ew_nest(name: &str, reads: Vec<usize>, write: usize, stmt: usize) -> LoopNest {
+        LoopNest {
+            name: name.into(),
+            out_trips: vec![4, 4],
+            red_trip: 1,
+            reads,
+            write,
+            kind: NestKind::Elementwise(EwOp::Add),
+            stmt,
+        }
+    }
+
+    #[test]
+    fn single_statement_kernel_has_no_temp_intervals() {
+        // one nest, input -> output: nothing for Mnemosyne to color
+        let k = Kernel {
+            name: "copyish".into(),
+            buffers: vec![buf("a", BufKind::Input), buf("y", BufKind::Output)],
+            nests: vec![ew_nest("only", vec![0], 1, 0)],
+        };
+        k.validate().unwrap();
+        let lv = analyze(&k);
+        assert!(lv.intervals.iter().all(|iv| iv.is_none()));
+        assert!(lv.compat.is_empty());
+        // and the sharing pass degenerates gracefully to zero banks
+        let plan = crate::mnemosyne::share(&k, &lv, None);
+        plan.validate(&k, &lv).unwrap();
+        assert_eq!(plan.shared_words(), 0);
+    }
+
+    #[test]
+    fn write_only_temp_is_dead_on_arrival() {
+        // t is produced and never consumed: its lifetime is the single
+        // defining nest, and it still needs (its own) storage
+        let k = Kernel {
+            name: "deadtemp".into(),
+            buffers: vec![
+                buf("a", BufKind::Input),
+                buf("t", BufKind::Temp),
+                buf("y", BufKind::Output),
+            ],
+            nests: vec![
+                ew_nest("mk_t", vec![0], 1, 0),
+                ew_nest("mk_y", vec![0], 2, 1),
+            ],
+        };
+        k.validate().unwrap();
+        let lv = analyze(&k);
+        let iv = lv.intervals[1].expect("written temp is analyzed");
+        assert_eq!((iv.def, iv.last_use), (0, 0), "dead on arrival");
+        let plan = crate::mnemosyne::share(&k, &lv, None);
+        plan.validate(&k, &lv).unwrap();
+        assert_eq!(plan.banks.len(), 1);
+    }
+
+    #[test]
+    fn two_dead_temps_at_different_nests_share_one_bank() {
+        let k = Kernel {
+            name: "twodead".into(),
+            buffers: vec![
+                buf("a", BufKind::Input),
+                buf("t0", BufKind::Temp),
+                buf("t1", BufKind::Temp),
+                buf("y", BufKind::Output),
+            ],
+            nests: vec![
+                ew_nest("mk_t0", vec![0], 1, 0),
+                ew_nest("mk_t1", vec![0], 2, 1),
+                ew_nest("mk_y", vec![0], 3, 2),
+            ],
+        };
+        k.validate().unwrap();
+        let lv = analyze(&k);
+        let plan = crate::mnemosyne::share(&k, &lv, None);
+        plan.validate(&k, &lv).unwrap();
+        // [0,0] and [1,1] are disjoint: the left-edge pass merges them
+        assert_eq!(plan.banks.len(), 1);
+        assert_eq!(plan.shared_words(), 16);
+    }
+
+    #[test]
+    fn unused_temp_is_unanalyzed_and_needs_no_bank() {
+        // a temp buffer that is never written (and never read) passes
+        // kernel validation but has no lifetime; the sharing plan must
+        // leave it unplaced rather than reject the kernel (regression:
+        // SharingPlan::validate used to demand a bank for every temp)
+        let k = Kernel {
+            name: "unused".into(),
+            buffers: vec![
+                buf("a", BufKind::Input),
+                buf("ghost", BufKind::Temp),
+                buf("y", BufKind::Output),
+            ],
+            nests: vec![ew_nest("mk_y", vec![0], 2, 0)],
+        };
+        k.validate().unwrap();
+        let lv = analyze(&k);
+        assert!(lv.intervals[1].is_none(), "never written -> no lifetime");
+        let plan = crate::mnemosyne::share(&k, &lv, None);
+        plan.validate(&k, &lv).unwrap();
+        assert!(plan.bank_of[1].is_none());
+        assert!(plan.banks.is_empty());
+    }
+
     #[test]
     fn interval_disjointness_is_symmetric_and_irreflexive() {
         prop::check("interval disjointness", 64, |rng| {

@@ -10,11 +10,12 @@
 //!                                        │ lower::lower_kernel (§3.4.4)
 //!                                        ▼
 //!                                     affine::Kernel (loop nests + buffers)
-//!                                        │ liveness / schedule (§3.4.3)
+//!                                        │ liveness / access / schedule (§3.4.3)
 //!                                        ▼
 //!                  codegen::c_emit / olympus::generate
 //! ```
 
+pub mod access;
 pub mod affine;
 pub mod interp;
 pub mod liveness;

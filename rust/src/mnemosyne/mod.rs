@@ -1,19 +1,48 @@
-//! Mnemosyne: on-chip memory sharing (paper §3.5, Fig. 13/14d; Pilato et
-//! al., IEEE TCAD 2017).
+//! Mnemosyne: the on-chip memory planner (paper §3.5, Fig. 13/14d;
+//! Pilato et al., IEEE TCAD 2017; Soldavini & Pilato, *Compiler
+//! Infrastructure for Specializing Domain-Specific Memory Templates*).
 //!
-//! Given the buffer compatibility graph exported by the compiler's
-//! liveness analysis, assign temp buffers to physical banks so that
-//! buffers with overlapping lifetimes never share a bank. This is
-//! interval-graph coloring on the *conflict* graph (complement of the
-//! compatibility graph); we color greedily in def order, which is optimal
-//! for interval graphs (left-edge algorithm).
+//! Two layers, composed by [`plan`] into the single [`MemoryPlan`] every
+//! downstream consumer (HLS resource estimation, the cycle simulator,
+//! the DSE reports) derives its memory answers from:
 //!
-//! The bank's physical size is the maximum word count of its residents —
-//! the BRAM/URAM saving the paper reports for the 1-compute dataflow
-//! implementation (BRAM −14.5%, URAM −48.3%, Table 3 "Mem Sharing").
+//!  * **Lifetime sharing** ([`share`]) — given the buffer compatibility
+//!    graph exported by the compiler's liveness analysis, assign temp
+//!    buffers to physical banks so that buffers with overlapping
+//!    lifetimes never share a bank. This is interval-graph coloring on
+//!    the *conflict* graph (complement of the compatibility graph); we
+//!    color greedily in def order, which is optimal for interval graphs
+//!    (left-edge algorithm). The bank's physical size is the maximum
+//!    word count of its residents — the BRAM/URAM saving the paper
+//!    reports for the 1-compute dataflow implementation (BRAM −14.5%,
+//!    URAM −48.3%, Table 3 "Mem Sharing").
+//!
+//!  * **Access-pattern-driven banking** — each physical array must
+//!    sustain the parallel reads of the unrolled datapath
+//!    (`ir::access`): a buffer read by a contraction nest with its
+//!    reduction loop fully unrolled needs `red_trip` words per cycle,
+//!    so the planner partitions it cyclically into that many banks
+//!    (one read port per bank; the second RAM port is the writer's).
+//!    Storage below the LUTRAM bound is completely partitioned into
+//!    distributed registers; everything else maps onto BRAM18 halves,
+//!    BRAM36 tiles, or URAM blocks by size. A DSE-imposed partition
+//!    cap under-provisions ports and the simulator charges the
+//!    resulting bank-conflict stalls — the mechanism that lets the
+//!    frontier trade BRAM/URAM against throughput.
 
-use crate::ir::affine::{BufKind, Kernel};
-use crate::ir::liveness::Liveness;
+use crate::ir::access;
+use crate::ir::affine::{BufId, BufKind, Kernel};
+use crate::ir::liveness::{self, Liveness};
+use crate::ir::schedule::Schedule;
+
+/// URAM eligibility threshold: Vitis maps arrays to URAM only when they
+/// are large enough; 8 KiB reproduces the paper's switches (p=11 doubles
+/// -> URAM; p=7 or 32-bit -> BRAM; Tables 3-4).
+const URAM_MIN_BYTES: u64 = 8 * 1024;
+/// Below this, arrays land in LUTRAM (distributed memory), not BRAM.
+const LUTRAM_MAX_BYTES: u64 = 2 * 1024;
+/// BRAM36 tile: 4 KiB payload; a half tile (BRAM18) holds 2 KiB.
+const BRAM_TILE_BYTES: u64 = 4 * 1024;
 
 /// A physical bank shared by one or more temp buffers.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -24,10 +53,11 @@ pub struct Bank {
     pub words: usize,
 }
 
-/// Result of the sharing optimization.
-#[derive(Debug, Clone)]
+/// Result of the lifetime-sharing optimization.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SharingPlan {
-    /// bank id per buffer (None for inputs/outputs — not shared).
+    /// bank id per buffer (None for inputs/outputs — not shared — and
+    /// for unused temps, which need no storage at all).
     pub bank_of: Vec<Option<usize>>,
     pub banks: Vec<Bank>,
 }
@@ -67,10 +97,13 @@ impl SharingPlan {
                 }
             }
         }
-        // every temp must be placed exactly once
+        // every *live* temp must be placed exactly once; an unused temp
+        // (never written — liveness has no interval for it) needs no
+        // storage and must stay unplaced
         for (i, b) in k.buffers.iter().enumerate() {
             let placed = self.bank_of[i].is_some();
-            if (b.kind == BufKind::Temp) != placed {
+            let needs_bank = b.kind == BufKind::Temp && lv.intervals[i].is_some();
+            if needs_bank != placed {
                 return Err(format!("buffer {} placement inconsistent", b.name));
             }
             if let Some(bk) = self.bank_of[i] {
@@ -142,6 +175,497 @@ pub fn share(k: &Kernel, lv: &Liveness, scope: Option<&[(usize, usize)]>) -> Sha
     SharingPlan { bank_of, banks }
 }
 
+// ---------------------------------------------------------------------
+// Memory plan: banking + storage mapping composed with sharing
+// ---------------------------------------------------------------------
+
+/// How an array's words are distributed over its banks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BankingScheme {
+    /// Word `i` lives in bank `i % factor` — the scheme for reduction-
+    /// unrolled reads, which touch `factor` consecutive words per cycle.
+    Cyclic,
+    /// One contiguous bank (factor 1): stream-order or strided access,
+    /// one word per cycle.
+    Block,
+    /// Every word its own register (LUTRAM / full partitioning): any
+    /// access pattern is conflict-free.
+    Complete,
+}
+
+/// Physical RAM primitive backing one bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RamKind {
+    /// Distributed LUT memory (arrays below the 2 KiB bound).
+    Lutram,
+    /// Half BRAM tile (≤ 2 KiB payload per bank).
+    Bram18,
+    /// Full BRAM36 tiles (> 2 KiB per bank).
+    Bram36,
+    /// UltraRAM block (arrays ≥ 8 KiB).
+    Uram,
+}
+
+impl RamKind {
+    /// Physical ports per bank. Every hard RAM primitive on UltraScale+
+    /// is dual-port; the planner dedicates one port to the writer, so a
+    /// bank delivers one read per cycle.
+    pub fn ports(self) -> usize {
+        2
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RamKind::Lutram => "lutram",
+            RamKind::Bram18 => "bram18",
+            RamKind::Bram36 => "bram36",
+            RamKind::Uram => "uram",
+        }
+    }
+}
+
+/// One physical array in the generated hardware (per lane): a buffer —
+/// or a lifetime-shared set of temp buffers — mapped to banks of one
+/// RAM primitive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayInstance {
+    /// Buffers resident in this storage (one unless lifetime-shared).
+    pub residents: Vec<BufId>,
+    /// Physical words = max resident words.
+    pub words: usize,
+    /// Array size in bytes at the design's data type.
+    pub bytes: u64,
+    /// Parallel reads the unrolled datapath demands (max over residents).
+    pub access_degree: usize,
+    /// Chosen number of banks (≤ `access_degree` when capped).
+    pub factor: usize,
+    pub scheme: BankingScheme,
+    pub ram: RamKind,
+    /// Dataflow group that instantiates this copy (`None` = the flat /
+    /// single-group kernel's global storage).
+    pub group: Option<usize>,
+}
+
+impl ArrayInstance {
+    /// Parallel words per cycle the banked storage can deliver: one read
+    /// port per bank (the second port belongs to the writer), except
+    /// completely-partitioned storage where every word is a register.
+    pub fn read_ports(&self) -> usize {
+        match self.scheme {
+            BankingScheme::Complete => self.words.max(self.access_degree).max(1),
+            _ => self.factor.max(1),
+        }
+    }
+
+    /// Storage cost of this array: (bram18 halves, uram blocks, lutram
+    /// LUTs). Mirrors the Vitis mapping the paper's Tables 3–4 exhibit.
+    pub fn footprint(&self) -> (u64, u64, u64) {
+        let parts = self.factor.max(1) as u64;
+        match self.ram {
+            RamKind::Uram => (0, parts, 0),
+            // distributed RAM: ~1 LUT per 64 bits plus addressing
+            RamKind::Lutram => (0, 0, self.bytes / 4 + 32),
+            RamKind::Bram18 => (parts, 0, 0),
+            RamKind::Bram36 => {
+                let per_bank = self.bytes.div_ceil(parts);
+                (parts * 2 * per_bank.div_ceil(BRAM_TILE_BYTES), 0, 0)
+            }
+        }
+    }
+}
+
+/// Options the designer (or the DSE memory axis) feeds the planner.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanOpts {
+    /// Apply lifetime sharing to the temps (flat / 1-group schedules).
+    pub sharing: bool,
+    /// Cap the partition factor below the access degree (None = match
+    /// the demand exactly — conflict-free by construction).
+    pub partition_cap: Option<usize>,
+    /// Inter-group stream FIFO depth in words (None = full array size).
+    pub fifo_depth: Option<usize>,
+}
+
+/// The unified on-chip memory plan of one generated system (per lane).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoryPlan {
+    pub arrays: Vec<ArrayInstance>,
+    /// Inter-group stream FIFO depths in words (empty unless the
+    /// dataflow schedule has ≥ 2 groups).
+    pub fifos: Vec<usize>,
+    /// Bytes per word at the design's data type.
+    pub word_bytes: usize,
+    /// The cap the plan was built under (recorded for validation).
+    pub partition_cap: Option<usize>,
+    /// The lifetime-sharing coloring, when applied.
+    pub sharing: Option<SharingPlan>,
+}
+
+/// Summary numbers the DSE reports surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Physical array instances per lane.
+    pub arrays: usize,
+    /// Total banks across all instances.
+    pub banks: usize,
+    /// Physical on-chip words (after sharing).
+    pub shared_words: usize,
+    /// Words if every resident had private storage.
+    pub unshared_words: usize,
+}
+
+impl MemoryPlan {
+    /// Physical on-chip words per lane (bank-merged residents counted
+    /// once, at the bank's size).
+    pub fn shared_words(&self) -> usize {
+        self.arrays.iter().map(|a| a.words).sum()
+    }
+
+    /// Words if every resident buffer had private storage — the
+    /// baseline the sharing saving is measured against.
+    pub fn unshared_words(&self, k: &Kernel) -> usize {
+        self.arrays
+            .iter()
+            .map(|a| a.residents.iter().map(|&b| k.buffers[b].words()).sum::<usize>())
+            .sum()
+    }
+
+    /// Total banks across all array instances.
+    pub fn total_banks(&self) -> usize {
+        self.arrays.iter().map(|a| a.factor).sum()
+    }
+
+    /// BRAM18 halves consumed by the inter-group stream FIFOs (FIFOs
+    /// are always BRAM: URAM has no FIFO primitive and LUTRAM depths
+    /// this size would swamp the logic budget).
+    pub fn fifo_bram_halves(&self) -> u64 {
+        self.fifos
+            .iter()
+            .map(|&d| {
+                let bytes = d as u64 * self.word_bytes as u64;
+                if bytes <= BRAM_TILE_BYTES / 2 {
+                    1
+                } else {
+                    2 * bytes.div_ceil(BRAM_TILE_BYTES)
+                }
+            })
+            .sum()
+    }
+
+    pub fn stats(&self, k: &Kernel) -> PlanStats {
+        PlanStats {
+            arrays: self.arrays.len(),
+            banks: self.total_banks(),
+            shared_words: self.shared_words(),
+            unshared_words: self.unshared_words(k),
+        }
+    }
+
+    /// The instance serving reads of `buf` issued from dataflow group
+    /// `group` (falls back to the global flat storage).
+    pub fn instance_for(&self, buf: BufId, group: Option<usize>) -> Option<&ArrayInstance> {
+        self.arrays
+            .iter()
+            .find(|a| a.group == group && a.residents.contains(&buf))
+            .or_else(|| {
+                self.arrays
+                    .iter()
+                    .find(|a| a.group.is_none() && a.residents.contains(&buf))
+            })
+    }
+
+    /// Cycles one iteration of nest `ni` (issued from `group`) takes
+    /// relative to the conflict-free ideal of 1: the limiting read
+    /// buffer's `ceil(demand / provisioned ports)`. 1 when the plan
+    /// provisions the full access degree (the uncapped default).
+    pub fn nest_conflict_factor(&self, k: &Kernel, ni: usize, group: Option<usize>) -> u64 {
+        k.nests[ni]
+            .reads
+            .iter()
+            .map(|&b| {
+                let demand = access::nest_read_degree(k, ni, b).max(1);
+                let ports = self
+                    .instance_for(b, group)
+                    .map(|a| a.read_ports())
+                    .unwrap_or(demand);
+                (demand as u64).div_ceil(ports.max(1) as u64)
+            })
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Structural invariants; property-tested in
+    /// `rust/tests/memory_plan_prop.rs`.
+    pub fn validate(&self, k: &Kernel) -> Result<(), String> {
+        let lv = liveness::analyze(k);
+        if let Some(sp) = &self.sharing {
+            sp.validate(k, &lv)?;
+        }
+        for (i, a) in self.arrays.iter().enumerate() {
+            if a.residents.is_empty() {
+                return Err(format!("array {i} has no residents"));
+            }
+            let max_words = a
+                .residents
+                .iter()
+                .map(|&b| k.buffers[b].words())
+                .max()
+                .unwrap();
+            if a.words != max_words {
+                return Err(format!(
+                    "array {i}: words {} != max resident words {max_words}",
+                    a.words
+                ));
+            }
+            if a.bytes != a.words as u64 * self.word_bytes as u64 {
+                return Err(format!("array {i}: byte size inconsistent"));
+            }
+            if a.factor == 0 || a.factor > a.words.max(1) {
+                return Err(format!(
+                    "array {i}: factor {} out of range (words {})",
+                    a.factor, a.words
+                ));
+            }
+            // the factor never exceeds the demand, and meets it unless
+            // the designer capped it
+            if a.factor > a.access_degree.max(1) {
+                return Err(format!("array {i}: over-partitioned"));
+            }
+            let target = match self.partition_cap {
+                Some(c) => a.access_degree.min(c.max(1)),
+                None => a.access_degree,
+            }
+            .min(a.words.max(1));
+            if a.factor != target {
+                return Err(format!(
+                    "array {i}: factor {} != planned {target}",
+                    a.factor
+                ));
+            }
+            // conflict-free guarantee: uncapped plans provision at least
+            // the access degree
+            if self.partition_cap.is_none() && a.read_ports() < a.access_degree {
+                return Err(format!(
+                    "array {i}: {} read ports < access degree {}",
+                    a.read_ports(),
+                    a.access_degree
+                ));
+            }
+            // shared banks only hold lifetime-disjoint temps
+            if a.residents.len() > 1 {
+                for (x, &bi) in a.residents.iter().enumerate() {
+                    if k.buffers[bi].kind != BufKind::Temp {
+                        return Err(format!("array {i} shares a non-temp buffer"));
+                    }
+                    for &bj in &a.residents[x + 1..] {
+                        match (&lv.intervals[bi], &lv.intervals[bj]) {
+                            (Some(x), Some(y)) if x.disjoint(y) => {}
+                            _ => {
+                                return Err(format!(
+                                    "array {i}: residents {} and {} have \
+                                     overlapping lifetimes",
+                                    k.buffers[bi].name, k.buffers[bj].name
+                                ))
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if self.shared_words() > self.unshared_words(k) {
+            return Err("sharing increased the footprint".into());
+        }
+        Ok(())
+    }
+}
+
+/// Storage mapping of one array: RAM primitive by size (see module
+/// docs), matching Vitis' eligibility bounds.
+fn ram_for(bytes: u64, factor: usize) -> RamKind {
+    if bytes >= URAM_MIN_BYTES {
+        RamKind::Uram
+    } else if bytes < LUTRAM_MAX_BYTES {
+        RamKind::Lutram
+    } else {
+        let per_bank = bytes.div_ceil(factor.max(1) as u64);
+        if per_bank <= BRAM_TILE_BYTES / 2 {
+            RamKind::Bram18
+        } else {
+            RamKind::Bram36
+        }
+    }
+}
+
+/// Assemble one array instance: choose factor (demand capped by the
+/// designer and by the word count), RAM primitive, and banking scheme.
+fn instance(
+    residents: Vec<BufId>,
+    words: usize,
+    degree: usize,
+    word_bytes: usize,
+    cap: Option<usize>,
+    group: Option<usize>,
+) -> ArrayInstance {
+    let degree = degree.max(1);
+    let factor = match cap {
+        Some(c) => degree.min(c.max(1)),
+        None => degree,
+    }
+    .min(words.max(1));
+    let bytes = words as u64 * word_bytes as u64;
+    let ram = ram_for(bytes, factor);
+    let scheme = if ram == RamKind::Lutram || factor >= words.max(1) {
+        BankingScheme::Complete
+    } else if factor > 1 {
+        BankingScheme::Cyclic
+    } else {
+        BankingScheme::Block
+    };
+    ArrayInstance {
+        residents,
+        words,
+        bytes,
+        access_degree: degree,
+        factor,
+        scheme,
+        ram,
+        group,
+    }
+}
+
+/// Build the unified memory plan for a kernel under a schedule.
+///
+/// Flat and 1-group schedules get global storage, with lifetime sharing
+/// composed in when requested (shared banks are partitioned for the max
+/// demand of their residents). Multi-group dataflow schedules follow
+/// the paper's §4.2 buffering: every group privately buffers each
+/// external array it reads and each intra-group temp; a sharing request
+/// there only records the per-group scoped coloring for audit ("each
+/// compute module only uses arrays that cannot be shared"), which is
+/// why the `dse` space prunes that combination as a duplicate.
+pub fn plan(
+    k: &Kernel,
+    schedule: &Schedule,
+    dataflow: bool,
+    word_bytes: usize,
+    opts: &PlanOpts,
+) -> MemoryPlan {
+    let cap = opts.partition_cap;
+    let mut arrays: Vec<ArrayInstance> = Vec::new();
+    let mut fifos: Vec<usize> = Vec::new();
+    let mut sharing = None;
+
+    if dataflow && schedule.num_groups() > 1 {
+        // Sharing "can operate only inside each subkernel" (§3.6.4);
+        // when requested, record the per-group scoped coloring so the
+        // designer can audit why it saves nothing here (for the paper's
+        // kernels every scoped bank is private, Table 3) — the arrays
+        // below still buffer privately per group either way.
+        if opts.sharing {
+            let lv = liveness::analyze(k);
+            let ranges: Vec<(usize, usize)> =
+                schedule.groups.iter().map(|g| (g.start, g.end)).collect();
+            sharing = Some(share(k, &lv, Some(&ranges)));
+        }
+        // Every group buffers each array it reads that is produced
+        // outside the group (paper §4.2: "the S array is needed by both
+        // modules and must be buffered twice"). The group's last write
+        // is streamed out — the *consumer* buffers it.
+        for (gi, g) in schedule.groups.iter().enumerate() {
+            let local: Vec<usize> = g.nests().map(|ni| k.nests[ni].write).collect();
+            let mut buffered: Vec<usize> = Vec::new();
+            for ni in g.nests() {
+                for &r in &k.nests[ni].reads {
+                    if !local.contains(&r) && !buffered.contains(&r) {
+                        buffered.push(r);
+                    }
+                }
+            }
+            for b in buffered {
+                let deg = access::read_degree_in(k, g.nests(), b);
+                arrays.push(instance(
+                    vec![b],
+                    k.buffers[b].words(),
+                    deg,
+                    word_bytes,
+                    cap,
+                    Some(gi),
+                ));
+            }
+            // intra-group temporaries: writes consumed by a later nest
+            // of the same group
+            for (pos, ni) in g.nests().enumerate() {
+                let w = k.nests[ni].write;
+                let read_later = g
+                    .nests()
+                    .skip(pos + 1)
+                    .any(|nj| k.nests[nj].reads.contains(&w));
+                if read_later {
+                    let deg = access::read_degree_in(k, g.nests(), w);
+                    arrays.push(instance(
+                        vec![w],
+                        k.buffers[w].words(),
+                        deg,
+                        word_bytes,
+                        cap,
+                        Some(gi),
+                    ));
+                }
+            }
+        }
+        // inter-group stream FIFOs: the producing group's output array
+        for (gi, g) in schedule.groups.iter().enumerate() {
+            if gi + 1 == schedule.num_groups() {
+                break;
+            }
+            let width = k.buffers[k.nests[g.end - 1].write].words();
+            fifos.push(opts.fifo_depth.unwrap_or(width));
+        }
+    } else {
+        // flat kernel (or 1-group dataflow): every buffer lives once;
+        // Mnemosyne sharing applies to the temps.
+        let am = access::analyze(k);
+        let lv = liveness::analyze(k);
+        if opts.sharing {
+            let sp = share(k, &lv, None);
+            for bank in &sp.banks {
+                let deg = bank
+                    .residents
+                    .iter()
+                    .map(|&b| am.read_degree[b])
+                    .max()
+                    .unwrap_or(1);
+                arrays.push(instance(
+                    bank.residents.clone(),
+                    bank.words,
+                    deg,
+                    word_bytes,
+                    cap,
+                    None,
+                ));
+            }
+            sharing = Some(sp);
+        }
+        for (b, buf) in k.buffers.iter().enumerate() {
+            if opts.sharing && buf.kind == BufKind::Temp {
+                continue; // placed (or unused) under the sharing plan
+            }
+            if buf.kind == BufKind::Temp && lv.intervals[b].is_none() {
+                continue; // unused temp: never written, needs no storage
+            }
+            arrays.push(instance(vec![b], buf.words(), am.read_degree[b], word_bytes, cap, None));
+        }
+    }
+
+    MemoryPlan {
+        arrays,
+        fifos,
+        word_bytes,
+        partition_cap: cap,
+        sharing,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +677,21 @@ mod tests {
         let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
         let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
         lower::lower_kernel(&m, "helmholtz").unwrap()
+    }
+
+    fn flat_plan(k: &Kernel, sharing: bool, cap: Option<usize>) -> MemoryPlan {
+        let s = schedule::fixed(k, 1).unwrap();
+        plan(
+            k,
+            &s,
+            false,
+            8,
+            &PlanOpts {
+                sharing,
+                partition_cap: cap,
+                fifo_depth: None,
+            },
+        )
     }
 
     #[test]
@@ -226,5 +765,150 @@ mod tests {
         let plan = share(&k, &lv, None);
         let ratio = plan.shared_words() as f64 / plan.unshared_words(&k) as f64;
         assert!(ratio < 0.7, "ratio {ratio}");
+    }
+
+    #[test]
+    fn uncapped_plan_is_conflict_free() {
+        let k = helmholtz(11);
+        let mp = flat_plan(&k, true, None);
+        mp.validate(&k).unwrap();
+        for a in &mp.arrays {
+            assert!(a.read_ports() >= a.access_degree, "{a:?}");
+        }
+        for ni in 0..k.nests.len() {
+            assert_eq!(mp.nest_conflict_factor(&k, ni, None), 1, "nest {ni}");
+        }
+    }
+
+    #[test]
+    fn capped_plan_reports_conflicts_on_unrolled_reads() {
+        let k = helmholtz(11);
+        let mp = flat_plan(&k, false, Some(4));
+        mp.validate(&k).unwrap();
+        // the gemm nests read p=11 words/cycle from 4 banks -> 3 cycles
+        let worst = (0..k.nests.len())
+            .map(|ni| mp.nest_conflict_factor(&k, ni, None))
+            .max()
+            .unwrap();
+        assert_eq!(worst, 3, "ceil(11/4)");
+    }
+
+    #[test]
+    fn banking_schemes_follow_the_access_pattern() {
+        let k = helmholtz(11);
+        let mp = flat_plan(&k, false, None);
+        for a in &mp.arrays {
+            match a.ram {
+                RamKind::Lutram => assert_eq!(a.scheme, BankingScheme::Complete),
+                _ if a.factor > 1 => assert_eq!(a.scheme, BankingScheme::Cyclic),
+                _ => assert_eq!(a.scheme, BankingScheme::Block),
+            }
+        }
+        // the p=11 doubles tensors are URAM; the 11x11 operator is LUTRAM
+        assert!(mp.arrays.iter().any(|a| a.ram == RamKind::Uram));
+        assert!(mp.arrays.iter().any(|a| a.ram == RamKind::Lutram));
+    }
+
+    #[test]
+    fn shared_plan_banks_meet_max_resident_demand() {
+        let k = helmholtz(11);
+        let mp = flat_plan(&k, true, None);
+        let sp = mp.sharing.as_ref().unwrap();
+        assert!(!sp.banks.is_empty());
+        for a in mp.arrays.iter().filter(|a| a.residents.len() > 1) {
+            // a bank resident read by a gemm nest forces the whole bank
+            // to that partition factor
+            assert_eq!(a.factor, a.access_degree);
+        }
+        assert!(mp.shared_words() < mp.unshared_words(&k));
+    }
+
+    #[test]
+    fn multi_group_plan_buffers_per_group() {
+        let k = helmholtz(11);
+        let s = schedule::fixed(&k, 7).unwrap();
+        let mp = plan(
+            &k,
+            &s,
+            true,
+            8,
+            &PlanOpts {
+                sharing: false,
+                partition_cap: None,
+                fifo_depth: None,
+            },
+        );
+        mp.validate(&k).unwrap();
+        assert_eq!(mp.fifos.len(), 6, "one stream between adjacent groups");
+        assert!(mp.arrays.iter().all(|a| a.group.is_some()));
+        // the operator matrix is buffered by every gemm group privately
+        let s_copies = mp
+            .arrays
+            .iter()
+            .filter(|a| a.residents == vec![0] || k.buffers[a.residents[0]].words() == 121)
+            .count();
+        assert!(s_copies >= 2, "operator buffered per group, got {s_copies}");
+    }
+
+    #[test]
+    fn multi_group_sharing_request_records_the_scoped_coloring() {
+        // paper §3.6.4 / Table 3: on multi-group schedules sharing is
+        // inert (all scoped banks private) — the plan records the
+        // coloring for audit but the arrays still buffer per group
+        let k = helmholtz(11);
+        let s = schedule::fixed(&k, 7).unwrap();
+        let mp = plan(
+            &k,
+            &s,
+            true,
+            8,
+            &PlanOpts {
+                sharing: true,
+                partition_cap: None,
+                fifo_depth: None,
+            },
+        );
+        mp.validate(&k).unwrap();
+        let sp = mp.sharing.as_ref().unwrap();
+        assert_eq!(sp.shared_words(), sp.unshared_words(&k), "all private");
+        // identical physical arrays to the no-sharing multi-group plan
+        let without = plan(
+            &k,
+            &s,
+            true,
+            8,
+            &PlanOpts {
+                sharing: false,
+                partition_cap: None,
+                fifo_depth: None,
+            },
+        );
+        assert_eq!(mp.arrays, without.arrays);
+    }
+
+    #[test]
+    fn fifo_depth_override_is_recorded() {
+        let k = helmholtz(11);
+        let s = schedule::fixed(&k, 7).unwrap();
+        let mp = plan(
+            &k,
+            &s,
+            true,
+            8,
+            &PlanOpts {
+                sharing: false,
+                partition_cap: None,
+                fifo_depth: Some(64),
+            },
+        );
+        assert!(mp.fifos.iter().all(|&d| d == 64));
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let k = helmholtz(9);
+        let a = flat_plan(&k, true, Some(3));
+        let b = flat_plan(&k, true, Some(3));
+        assert_eq!(a, b);
     }
 }

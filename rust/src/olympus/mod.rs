@@ -8,9 +8,10 @@
 //! ([`ChannelPolicy`]: local-first / striped / user-pinned, resolved
 //! against the segmented AXI switch model in `hbm`), sizes batches, and
 //! emits the system configuration + host steps (see `config`). The
-//! result — a `SystemSpec` carrying both the flat channel map and the
-//! routed `hbm::ChannelMap` — is consumed by the HLS estimator, the
-//! platform simulator, and the runtime coordinator.
+//! result — a `SystemSpec` carrying the flat channel map, the routed
+//! `hbm::ChannelMap`, and the unified `mnemosyne::MemoryPlan` (banking
+//! composed with lifetime sharing) — is consumed by the HLS estimator,
+//! the platform simulator, and the runtime coordinator.
 
 pub mod config;
 
@@ -18,9 +19,8 @@ use crate::datatype::DataType;
 use crate::hbm::{self, PortDemand};
 pub use crate::hbm::ChannelPolicy;
 use crate::ir::affine::Kernel;
-use crate::ir::liveness;
 use crate::ir::schedule::{self, Schedule};
-use crate::mnemosyne::{self, SharingPlan};
+use crate::mnemosyne::{self, MemoryPlan};
 use crate::platform::Platform;
 
 /// AXI bus configuration of a CU's data ports (paper §4.2 "Bus Opt").
@@ -79,6 +79,12 @@ pub struct OlympusOpts {
     pub dataflow: Option<usize>,
     /// Mnemosyne bank sharing (effective for 1-compute dataflow).
     pub mem_sharing: bool,
+    /// Cap on the memory plan's per-array partition factor (None =
+    /// match the unrolled datapath's access degree, conflict-free).
+    /// Capping below a contraction's reduction trip saves BRAM/URAM
+    /// banks but makes the simulator charge bank-conflict stalls —
+    /// the DSE memory axis.
+    pub partition_cap: Option<usize>,
     pub dtype: DataType,
     pub num_cus: usize,
     /// Stream FIFO depth in words (None = full array size, the paper's
@@ -102,6 +108,7 @@ impl OlympusOpts {
             memory: MemoryKind::Hbm,
             dataflow: None,
             mem_sharing: false,
+            partition_cap: None,
             dtype: DataType::F64,
             num_cus: 1,
             fifo_depth: None,
@@ -181,8 +188,21 @@ impl OlympusOpts {
         self
     }
 
+    pub fn with_partition_cap(mut self, cap: usize) -> Self {
+        self.partition_cap = Some(cap);
+        self
+    }
+
     /// Short label used in reports (matches paper row names).
     pub fn label(&self) -> String {
+        let mut base = self.base_label();
+        if let Some(c) = self.partition_cap {
+            base.push_str(&format!(" cap{c}"));
+        }
+        base
+    }
+
+    fn base_label(&self) -> String {
         if self.dtype.is_fixed() {
             return format!(
                 "{} (p-dataflow {})",
@@ -238,7 +258,10 @@ pub struct SystemSpec {
     pub schedule: Schedule,
     /// Whether groups execute as an overlapped dataflow pipeline.
     pub dataflow: bool,
-    pub sharing: Option<SharingPlan>,
+    /// The unified on-chip memory plan (banking + lifetime sharing) —
+    /// the single source the HLS estimator, the simulator's conflict
+    /// model, and the DSE reports derive memory answers from.
+    pub memory: MemoryPlan,
     pub dtype: DataType,
     /// Kernel lanes per CU.
     pub lanes: usize,
@@ -281,6 +304,7 @@ impl SystemSpec {
     /// Structural invariants (property-tested).
     pub fn validate(&self, platform: &Platform) -> Result<(), String> {
         self.schedule.validate(&self.kernel)?;
+        self.memory.validate(&self.kernel)?;
         if self.channels.len() != self.num_cus {
             return Err("one channel map per CU required".into());
         }
@@ -349,25 +373,22 @@ pub fn generate(
         None => (schedule::fixed(kernel, 1)?, false),
     };
 
-    // ---- memory sharing ----
-    // Sharing operates only inside each subkernel (paper §3.6.4): with
-    // more than one compute group the lifetimes are scoped per group.
-    let sharing = if opts.mem_sharing {
-        let lv = liveness::analyze(kernel);
-        let ranges: Vec<(usize, usize)> = schedule
-            .groups
-            .iter()
-            .map(|g| (g.start, g.end))
-            .collect();
-        let scope = if dataflow && schedule.num_groups() > 1 {
-            Some(ranges.as_slice())
-        } else {
-            None
-        };
-        Some(mnemosyne::share(kernel, &lv, scope))
-    } else {
-        None
-    };
+    // ---- memory plan (paper §3.5) ----
+    // One plan per design: access-pattern-driven banking composed with
+    // lifetime sharing. Sharing operates only inside each subkernel
+    // (paper §3.6.4): with more than one compute group every module
+    // buffers privately and sharing does not apply.
+    let memory = mnemosyne::plan(
+        kernel,
+        &schedule,
+        dataflow,
+        opts.dtype.bytes() as usize,
+        &mnemosyne::PlanOpts {
+            sharing: opts.mem_sharing,
+            partition_cap: opts.partition_cap,
+            fifo_depth: opts.fifo_depth,
+        },
+    );
 
     // ---- channel allocation (paper §3.6.1) ----
     // DDR4 offers only two banks ("no more than two parallel accesses",
@@ -457,7 +478,7 @@ pub fn generate(
         kernel: kernel.clone(),
         schedule,
         dataflow,
-        sharing,
+        memory,
         dtype: opts.dtype,
         lanes,
         bus_bits,
@@ -557,8 +578,37 @@ mod tests {
     #[test]
     fn mem_sharing_populates_plan() {
         let s = generate(&helmholtz(11), &OlympusOpts::mem_sharing(), &u280()).unwrap();
-        let plan = s.sharing.as_ref().unwrap();
-        assert!(plan.shared_words() < plan.unshared_words(&s.kernel));
+        assert!(s.memory.sharing.is_some());
+        assert!(s.memory.shared_words() < s.memory.unshared_words(&s.kernel));
+    }
+
+    #[test]
+    fn every_spec_carries_a_validated_memory_plan() {
+        for opts in [
+            OlympusOpts::baseline(),
+            OlympusOpts::dataflow(1),
+            OlympusOpts::dataflow(7),
+            OlympusOpts::mem_sharing(),
+        ] {
+            let s = generate(&helmholtz(11), &opts, &u280()).unwrap();
+            s.memory.validate(&s.kernel).unwrap();
+            assert!(!s.memory.arrays.is_empty());
+        }
+    }
+
+    #[test]
+    fn partition_cap_shrinks_banks_and_labels() {
+        let o = OlympusOpts::dataflow(7).with_partition_cap(4);
+        assert!(o.label().ends_with("cap4"), "{}", o.label());
+        let capped = generate(&helmholtz(11), &o, &u280()).unwrap();
+        let full = generate(&helmholtz(11), &OlympusOpts::dataflow(7), &u280()).unwrap();
+        assert!(
+            capped.memory.total_banks() < full.memory.total_banks(),
+            "cap {} vs full {}",
+            capped.memory.total_banks(),
+            full.memory.total_banks()
+        );
+        capped.memory.validate(&capped.kernel).unwrap();
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Simulation metrics: the quantities the paper reports (GFLOPS,
 //! GFLOPS/W, power, efficiency vs ideal — §4.1, Table 2, Fig. 15-18),
 //! plus the interconnect-side diagnostics the `hbm` model produces
-//! (per-channel utilization, switch crossings, fill latency).
+//! (per-channel utilization, switch crossings, fill latency) and the
+//! on-chip memory-plan diagnostics (banks, shared words, bank-conflict
+//! stalls) derived from the `mnemosyne::MemoryPlan` on the spec.
 
 use super::event::Timeline;
 use super::StageIntervals;
@@ -43,6 +45,15 @@ pub struct SimResult {
     pub switch_crossings: u64,
     /// Switch round-trip latency filled once per batch (cycles).
     pub hbm_fill_cycles: u64,
+    /// Bank-conflict stall cycles per element (0 unless the memory
+    /// plan's partition factor is capped below the access degree).
+    pub conflict_stalls: u64,
+    /// Memory-plan summary: total banks per lane.
+    pub mem_banks: usize,
+    /// Memory-plan summary: physical on-chip words per lane.
+    pub mem_shared_words: usize,
+    /// Memory-plan summary: words before lifetime sharing.
+    pub mem_unshared_words: usize,
 }
 
 impl SimResult {
@@ -55,6 +66,7 @@ impl SimResult {
         avg_power_w: f64,
         hbm: HbmReport,
     ) -> SimResult {
+        let mem = spec.memory.stats(&spec.kernel);
         let gflops_system = total_flops as f64 / tl.total_s.max(1e-12) / 1e9;
         let gflops_cu = total_flops as f64 / tl.cu_busy_s.max(1e-12) / 1e9;
         let ideal = est.ideal_gflops() * spec.num_cus as f64;
@@ -90,6 +102,10 @@ impl SimResult {
             max_channel_utilization: hbm.max_utilization,
             switch_crossings: hbm.switch_crossings,
             hbm_fill_cycles: hbm.fill_cycles,
+            conflict_stalls: si.conflict_stalls,
+            mem_banks: mem.banks,
+            mem_shared_words: mem.shared_words,
+            mem_unshared_words: mem.unshared_words,
         }
     }
 }
@@ -130,5 +146,10 @@ mod tests {
         assert!(r.max_channel_utilization <= 1.0);
         assert_eq!(r.switch_crossings, 0, "local-first allocation");
         assert!(r.hbm_fill_cycles > 0);
+        // memory-plan diagnostics mirror the spec's plan
+        assert_eq!(r.conflict_stalls, 0, "uncapped plan is conflict-free");
+        assert_eq!(r.mem_banks, s.memory.total_banks());
+        assert_eq!(r.mem_shared_words, s.memory.shared_words());
+        assert_eq!(r.mem_unshared_words, s.memory.unshared_words(&s.kernel));
     }
 }

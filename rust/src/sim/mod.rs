@@ -5,7 +5,11 @@
 //!
 //!  * `stages` — per-element cycle intervals of the CU's dataflow stages
 //!    (Read, compute groups, Write), mechanistic from the affine IR:
-//!    a contraction nest takes `iterations x II` cycles; a group that
+//!    a contraction nest takes `iterations x II` cycles — inflated by
+//!    the memory plan's bank-conflict factor when the plan provisions
+//!    fewer read ports than the unrolled reduction demands
+//!    (`mnemosyne::MemoryPlan::nest_conflict_factor`; zero stalls at
+//!    the uncapped default); a group that
 //!    randomly accesses an external array first buffers it (the paper's
 //!    "data streamed in gets stored in an internal buffer"); elementwise
 //!    consumers are stream-order and need no buffering (the paper's
@@ -55,6 +59,14 @@ pub struct StageIntervals {
     /// stage intervals — kept here so `batch_cycles` never recomputes
     /// or drifts from it).
     pub fill_cycles: u64,
+    /// Bank-conflict stall cycles per element, already folded into the
+    /// compute-stage intervals: when the memory plan provisions fewer
+    /// banks than a nest's unrolled reduction demands, every iteration
+    /// takes `ceil(demand / ports)` cycles
+    /// (`mnemosyne::MemoryPlan::nest_conflict_factor`), composed with
+    /// the port-limited II by max (both serialize the same reads).
+    /// Zero at the plan's uncapped default.
+    pub conflict_stalls: u64,
 }
 
 impl StageIntervals {
@@ -109,8 +121,15 @@ pub fn stages(spec: &SystemSpec, est: &Estimate) -> StageIntervals {
     );
     stages.push(("read".into(), read));
 
+    // Bank-conflict stalls: the memory plan provisions each array's
+    // parallel-read ports; a nest whose unrolled reduction outruns them
+    // (a DSE-capped partition factor) takes `ceil(demand / ports)`
+    // cycles per iteration instead of one.
+    let mut conflict_stalls = 0u64;
+
     if spec.dataflow {
-        for g in &spec.schedule.groups {
+        let multi = spec.schedule.num_groups() > 1;
+        for (gi, g) in spec.schedule.groups.iter().enumerate() {
             let local: Vec<usize> = g.nests().map(|ni| k.nests[ni].write).collect();
             // arrays this group must buffer before computing: external
             // reads consumed with reuse/random access (contraction or
@@ -133,10 +152,17 @@ pub fn stages(spec: &SystemSpec, est: &Estimate) -> StageIntervals {
                     }
                 }
             }
-            let compute: u64 = g
-                .nests()
-                .map(|ni| k.nests[ni].iterations() * ii)
-                .sum();
+            // the plan's per-group buffered copies serve multi-group
+            // schedules; flat/1-group reads hit the global storage
+            let plan_group = if multi { Some(gi) } else { None };
+            let mut compute = 0u64;
+            for ni in g.nests() {
+                let cf = spec.memory.nest_conflict_factor(k, ni, plan_group);
+                let iters = k.nests[ni].iterations();
+                // ports and II serialize the same reads: compose by max
+                compute += iters * ii.max(cf);
+                conflict_stalls += iters * (ii.max(cf) - ii);
+            }
             stages.push((g.name.clone(), fill + compute));
         }
     } else {
@@ -144,7 +170,17 @@ pub fn stages(spec: &SystemSpec, est: &Estimate) -> StageIntervals {
         // compute phase runs every nest back to back — and it serializes
         // with read/write (no overlap), which `timeline` accounts for by
         // summing the stages instead of pipelining them.
-        let compute: u64 = k.nests.iter().map(|n| n.iterations() * ii).sum();
+        let mut compute = 0u64;
+        for (ni, n) in k.nests.iter().enumerate() {
+            let cf = spec.memory.nest_conflict_factor(k, ni, None);
+            // a port-limited II (flat wide bus: 2 words/cycle from the
+            // local memory) and a bank cap (factor words/cycle from the
+            // banks) throttle the same unrolled reads — the slower of
+            // the two sets the pace, so they compose by max, never by
+            // product
+            compute += n.iterations() * ii.max(cf);
+            conflict_stalls += n.iterations() * (ii.max(cf) - ii);
+        }
         stages.push(("compute".into(), compute));
     }
 
@@ -156,6 +192,7 @@ pub fn stages(spec: &SystemSpec, est: &Estimate) -> StageIntervals {
     StageIntervals {
         stages,
         fill_cycles: pen.fill_cycles,
+        conflict_stalls,
     }
 }
 
@@ -393,6 +430,58 @@ mod tests {
         let si = stages(&s, &e);
         assert_eq!(si.bottleneck(), "read");
         assert_eq!(si.stages[0].1, 121 + 2 * 1331);
+    }
+
+    #[test]
+    fn uncapped_plan_has_zero_conflict_stalls() {
+        // acceptance: at the plan's chosen partition factor the banks
+        // sustain the unrolled reduction — no stalls anywhere on the
+        // ladder
+        for opts in [
+            OlympusOpts::baseline(),
+            OlympusOpts::dataflow(1),
+            OlympusOpts::dataflow(7),
+            OlympusOpts::mem_sharing(),
+        ] {
+            let r = sim(11, opts, 100_000);
+            assert_eq!(r.conflict_stalls, 0, "{}", r.label);
+        }
+    }
+
+    #[test]
+    fn capped_plan_charges_stalls_and_slows_down() {
+        // capping the partition factor below the p=11 reduction trip
+        // under-provisions ports: ceil(11/4) = 3 cycles per unrolled
+        // iteration -> >0 stalls and lower throughput
+        let full = sim(11, OlympusOpts::dataflow(7), 200_000);
+        let capped = sim(11, OlympusOpts::dataflow(7).with_partition_cap(4), 200_000);
+        assert_eq!(full.conflict_stalls, 0);
+        assert!(capped.conflict_stalls > 0);
+        // each gemm group now runs 3x its iterations: 2 extra cycles
+        // per iteration on six contraction groups of 1331 iterations
+        assert_eq!(capped.conflict_stalls, 6 * 1331 * 2);
+        // the bottleneck moves from the read module (2783 cyc) to the
+        // stalled gemm groups (fill 1452 + 3x1331 compute = 5445 cyc)
+        assert!(
+            capped.gflops_system < 0.8 * full.gflops_system,
+            "capped {} vs full {}",
+            capped.gflops_system,
+            full.gflops_system
+        );
+        assert_ne!(capped.bottleneck, "read");
+    }
+
+    #[test]
+    fn capped_banks_compose_with_port_limited_ii_by_max() {
+        // bus-serial is port-limited: II = ceil(11/2) = 6 already
+        // serializes the unrolled reads over the two local-memory
+        // ports, so a bank cap adds nothing until ceil(11/cap) exceeds
+        // the II — the two throttles must never multiply
+        let mild = sim(11, OlympusOpts::bus_serial().with_partition_cap(4), 100_000);
+        assert_eq!(mild.conflict_stalls, 0, "ceil(11/4)=3 <= II=6");
+        let harsh = sim(11, OlympusOpts::bus_serial().with_partition_cap(1), 100_000);
+        // six gemm nests of 1331 iterations each pay ceil(11/1) - II
+        assert_eq!(harsh.conflict_stalls, 6 * 1331 * (11 - 6));
     }
 
     #[test]

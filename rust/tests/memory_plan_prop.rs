@@ -1,0 +1,353 @@
+//! Property suite for the unified on-chip memory plan
+//! (`mnemosyne::plan`), over *randomized affine kernels* — not just the
+//! paper's operators — plus the Table 3 "Mem Sharing" regression pins.
+//!
+//! Properties (ISSUE 4):
+//!  * every plan is conflict-free: no two lifetime-overlapping buffers
+//!    share a bank, and bank read ports cover the resident access
+//!    degree (at the uncapped default);
+//!  * `shared_words() <= unshared_words()`;
+//!  * plans are deterministic across runs;
+//!  * a partition cap bounds the conflict factor by `ceil(trip / cap)`
+//!    and never produces conflicts past that bound.
+//!
+//! Seeds are pinned by `util::prop` (fixed base seed), so CI replays
+//! the exact same kernels every run.
+
+use hbmflow::datatype::DataType;
+use hbmflow::dsl;
+use hbmflow::hls;
+use hbmflow::ir::affine::{Buffer, BufKind, EwOp, Kernel, LoopNest, NestKind};
+use hbmflow::ir::{lower, rewrite, schedule, teil};
+use hbmflow::mnemosyne::{self, PlanOpts};
+use hbmflow::olympus::{generate, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::util::prng::Prng;
+use hbmflow::util::prop;
+
+/// A random valid affine kernel: a chain of contraction / elementwise /
+/// permute nests over `[d, d, d]` tensors with a `[d, d]` operator
+/// matrix, with some write-only (dead) temps, an optional unused temp
+/// buffer, and a final contraction into the output.
+fn random_kernel(rng: &mut Prng) -> Kernel {
+    let d = rng.range_usize(2, 6);
+    let tensor = vec![d, d, d];
+    let mut buffers = vec![
+        Buffer {
+            name: "m".into(),
+            shape: vec![d, d],
+            kind: BufKind::Input,
+        },
+        Buffer {
+            name: "x".into(),
+            shape: tensor.clone(),
+            kind: BufKind::Input,
+        },
+    ];
+    let mut nests: Vec<LoopNest> = Vec::new();
+    // tensor-shaped buffers a later nest may read
+    let mut live: Vec<usize> = vec![1];
+    let n_nests = rng.range_usize(2, 6);
+    for ni in 0..n_nests {
+        let wid = buffers.len();
+        buffers.push(Buffer {
+            name: format!("t{ni}"),
+            shape: tensor.clone(),
+            kind: BufKind::Temp,
+        });
+        let src = *rng.choose(&live);
+        let (kind, reads, red) = match rng.range_usize(0, 2) {
+            0 => (
+                NestKind::Contraction {
+                    matrix: 0,
+                    transpose: rng.bool(),
+                    mode: rng.range_usize(0, 2),
+                },
+                vec![0, src],
+                d,
+            ),
+            1 => {
+                let other = *rng.choose(&live);
+                let mut reads = vec![src];
+                if other != src {
+                    reads.push(other);
+                }
+                (NestKind::Elementwise(EwOp::Mul), reads, 1)
+            }
+            _ => (NestKind::Permute { from: 0, to: 2 }, vec![src], 1),
+        };
+        nests.push(LoopNest {
+            name: format!("n{ni}"),
+            out_trips: tensor.clone(),
+            red_trip: red,
+            reads,
+            write: wid,
+            kind,
+            stmt: ni,
+        });
+        // a write kept out of `live` is a dead (write-only) temp
+        if rng.bool() {
+            live.push(wid);
+        }
+    }
+    if rng.bool() {
+        // an unused temp: never written, never read — must not break
+        // the planner (regression for the SharingPlan placement check)
+        buffers.push(Buffer {
+            name: "ghost".into(),
+            shape: tensor.clone(),
+            kind: BufKind::Temp,
+        });
+    }
+    let out = buffers.len();
+    buffers.push(Buffer {
+        name: "y".into(),
+        shape: tensor.clone(),
+        kind: BufKind::Output,
+    });
+    let src = *rng.choose(&live);
+    nests.push(LoopNest {
+        name: "out".into(),
+        out_trips: tensor,
+        red_trip: d,
+        reads: vec![0, src],
+        write: out,
+        kind: NestKind::Contraction {
+            matrix: 0,
+            transpose: false,
+            mode: 0,
+        },
+        stmt: n_nests,
+    });
+    let k = Kernel {
+        name: "rand".into(),
+        buffers,
+        nests,
+    };
+    k.validate().expect("generator emits valid kernels");
+    k
+}
+
+/// Random plan inputs for one kernel.
+fn random_plan(
+    rng: &mut Prng,
+    k: &Kernel,
+) -> (mnemosyne::MemoryPlan, schedule::Schedule, bool, PlanOpts) {
+    let groups = rng.range_usize(1, k.nests.len());
+    let s = schedule::fixed(k, groups).unwrap();
+    let dataflow = groups > 1 || rng.bool();
+    let d = hbmflow::ir::access::max_read_degree(k);
+    let opts = PlanOpts {
+        sharing: rng.bool(),
+        partition_cap: if rng.bool() {
+            Some(rng.range_usize(1, d))
+        } else {
+            None
+        },
+        fifo_depth: if rng.bool() { Some(64) } else { None },
+    };
+    let word_bytes = if rng.bool() { 8 } else { 4 };
+    let mp = mnemosyne::plan(k, &s, dataflow, word_bytes, &opts);
+    (mp, s, dataflow, opts)
+}
+
+#[test]
+fn prop_plans_are_conflict_free_and_validated() {
+    prop::check("memory plan soundness", 48, |rng| {
+        let k = random_kernel(rng);
+        let (mp, _, _, _) = random_plan(rng, &k);
+        mp.validate(&k)?;
+        // conflict-free by construction at the uncapped default
+        if mp.partition_cap.is_none() {
+            for a in &mp.arrays {
+                prop::assert_prop(
+                    a.read_ports() >= a.access_degree,
+                    format!("{} ports < degree {}", a.read_ports(), a.access_degree),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shared_words_never_exceed_unshared() {
+    prop::check("sharing never grows storage", 48, |rng| {
+        let k = random_kernel(rng);
+        let (mp, _, _, _) = random_plan(rng, &k);
+        prop::assert_prop(
+            mp.shared_words() <= mp.unshared_words(&k),
+            format!("{} > {}", mp.shared_words(), mp.unshared_words(&k)),
+        )
+    });
+}
+
+#[test]
+fn prop_plans_are_deterministic() {
+    prop::check("plan determinism", 24, |rng| {
+        let k = random_kernel(rng);
+        let groups = rng.range_usize(1, k.nests.len());
+        let s = schedule::fixed(&k, groups).unwrap();
+        let opts = PlanOpts {
+            sharing: rng.bool(),
+            partition_cap: if rng.bool() { Some(2) } else { None },
+            fifo_depth: None,
+        };
+        let a = mnemosyne::plan(&k, &s, groups > 1, 8, &opts);
+        let b = mnemosyne::plan(&k, &s, groups > 1, 8, &opts);
+        prop::assert_prop(a == b, "same inputs, different plans".to_string())
+    });
+}
+
+#[test]
+fn prop_conflict_factor_is_one_uncapped_and_bounded_capped() {
+    prop::check("conflict factor bounds", 48, |rng| {
+        let k = random_kernel(rng);
+        let (mp, s, dataflow, opts) = random_plan(rng, &k);
+        let multi = dataflow && s.num_groups() > 1;
+        for (gi, g) in s.groups.iter().enumerate() {
+            let plan_group = if multi { Some(gi) } else { None };
+            for ni in g.nests() {
+                let cf = mp.nest_conflict_factor(&k, ni, plan_group);
+                match opts.partition_cap {
+                    None => prop::assert_prop(
+                        cf == 1,
+                        format!("uncapped nest {ni} stalls x{cf}"),
+                    )?,
+                    Some(c) => {
+                        let trip = k.nests[ni].red_trip as u64;
+                        let bound = trip.div_ceil(c.max(1) as u64);
+                        prop::assert_prop(
+                            cf <= bound,
+                            format!("nest {ni}: {cf} > ceil({trip}/{c})"),
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generated_specs_carry_sound_plans_end_to_end() {
+    // the full olympus path on the paper kernel under random memory-axis
+    // options: spec validation (which validates the plan) plus the
+    // stall/cap acceptance invariant
+    let prog = dsl::parse(&dsl::inverse_helmholtz_source(7)).unwrap();
+    let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+    let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+    let platform = Platform::alveo_u280();
+    prop::check("olympus memory axis", 12, |rng| {
+        let mut opts = if rng.bool() {
+            OlympusOpts::mem_sharing()
+        } else {
+            OlympusOpts::dataflow(rng.range_usize(1, 7))
+        };
+        let cap = if rng.bool() {
+            Some(rng.range_usize(1, 9))
+        } else {
+            None
+        };
+        opts.partition_cap = cap;
+        let spec = generate(&k, &opts, &platform)?;
+        spec.validate(&platform)?;
+        let est = hls::estimate(&spec, &platform);
+        let r = hbmflow::sim::simulate(&spec, &est, &platform, 50_000);
+        let capped_below_trip = cap.is_some_and(|c| c < 7);
+        prop::assert_prop(
+            (r.conflict_stalls > 0) == capped_below_trip,
+            format!("cap {cap:?} -> stalls {}", r.conflict_stalls),
+        )
+    });
+}
+
+// ---------------------------------------------------------------------
+// Table 3 "Mem Sharing" regression (satellite): pin the deltas so the
+// resource model cannot silently drift.
+// ---------------------------------------------------------------------
+
+fn helmholtz(p: usize) -> Kernel {
+    let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
+    let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+    lower::lower_kernel(&m, "helmholtz").unwrap()
+}
+
+#[test]
+fn table3_mem_sharing_deltas_stay_pinned() {
+    // Paper Table 3, 1-CU dataflow design: Mem Sharing takes URAM
+    // 240 -> 124 (-48.3%) and BRAM -14.5%. The model reproduces the
+    // URAM delta mechanistically (two shared banks instead of six
+    // private temp arrays); its BRAM on this row is the constant AXI
+    // infrastructure floor (the paper's BRAM saving comes from P&R-level
+    // packing the model books as that fitted constant), so the pin for
+    // BRAM is "never increases, never drops past the paper's band".
+    let k = helmholtz(11);
+    let platform = Platform::alveo_u280();
+    let total = |opts: &OlympusOpts| {
+        let spec = generate(&k, opts, &platform).unwrap();
+        hls::estimate(&spec, &platform).total
+    };
+    let no = total(&OlympusOpts::dataflow(1));
+    let yes = total(&OlympusOpts::mem_sharing());
+
+    let uram_delta = yes.uram as f64 / no.uram as f64 - 1.0;
+    assert!(
+        (uram_delta - (-0.483)).abs() < 0.06,
+        "URAM delta {uram_delta:.3} drifted from the paper's -48.3%"
+    );
+    // absolute counts stay in the paper's neighborhood
+    assert!(
+        (no.uram as f64 - 240.0).abs() / 240.0 < 0.20,
+        "unshared URAM {} vs paper 240",
+        no.uram
+    );
+    assert!(
+        (yes.uram as f64 - 124.0).abs() / 124.0 < 0.20,
+        "shared URAM {} vs paper 124",
+        yes.uram
+    );
+
+    let bram_delta = yes.bram as f64 / no.bram as f64 - 1.0;
+    assert!(bram_delta <= 0.0, "sharing must never cost BRAM");
+    assert!(
+        bram_delta >= -0.25,
+        "BRAM delta {bram_delta:.3} overshoots the paper's -14.5% band"
+    );
+
+    // plan-level pin: six p^3 temps collapse into exactly two banks
+    let spec = generate(&k, &OlympusOpts::mem_sharing(), &platform).unwrap();
+    let sp = spec.memory.sharing.as_ref().unwrap();
+    assert_eq!(sp.banks.len(), 2, "left-edge coloring of the temp chain");
+    assert_eq!(
+        3 * sp.shared_words(),
+        sp.unshared_words(&k),
+        "6 temps x p^3 share 2 banks x p^3"
+    );
+}
+
+#[test]
+fn table3_sharing_leaves_the_datapath_alone() {
+    let k = helmholtz(11);
+    let platform = Platform::alveo_u280();
+    let mk = |opts: &OlympusOpts| {
+        let spec = generate(&k, opts, &platform).unwrap();
+        hls::estimate(&spec, &platform)
+    };
+    let no = mk(&OlympusOpts::dataflow(1));
+    let yes = mk(&OlympusOpts::mem_sharing());
+    assert_eq!(no.total.dsp, yes.total.dsp);
+    assert_eq!(no.ops(), yes.ops());
+    // and the fixed-point path keeps its own invariant: fx32 arrays are
+    // all BRAM/LUTRAM, so sharing moves BRAM instead of URAM there
+    let mut fx = OlympusOpts::mem_sharing();
+    fx.dtype = DataType::Fx32;
+    let fx_no = {
+        let mut o = OlympusOpts::dataflow(1);
+        o.dtype = DataType::Fx32;
+        mk(&o)
+    };
+    let fx_yes = mk(&fx);
+    assert_eq!(fx_yes.total.uram, 0);
+    assert!(fx_yes.total.bram < fx_no.total.bram);
+}
