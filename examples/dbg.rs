@@ -1,14 +1,14 @@
-use hbmflow::dsl;
-use hbmflow::ir::{lower, rewrite, teil};
-use hbmflow::olympus::{generate, OlympusOpts};
+//! Scratch resource-table dump across a few option sets (debug aid) —
+//! a thin client of `flow::Session`.
+
+use hbmflow::flow::Session;
+use hbmflow::kernels::KernelSource;
+use hbmflow::olympus::OlympusOpts;
 use hbmflow::platform::Platform;
-use hbmflow::hls::estimate;
 
 fn main() {
-    let prog = dsl::parse(&dsl::inverse_helmholtz_source(11)).unwrap();
-    let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
-    let k = lower::lower_kernel(&m, "helmholtz").unwrap();
-    let platform = Platform::alveo_u280();
+    let session = Session::new(Platform::alveo_u280());
+    let src = KernelSource::builtin("helmholtz");
     for (name, opts) in [
         ("baseline", OlympusOpts::baseline()),
         ("df1", OlympusOpts::dataflow(1)),
@@ -17,9 +17,9 @@ fn main() {
         ("fx64", OlympusOpts::fixed_point(hbmflow::datatype::DataType::Fx64)),
         ("fx32", OlympusOpts::fixed_point(hbmflow::datatype::DataType::Fx32)),
     ] {
-        let s = generate(&k, &opts, &platform).unwrap();
-        let e = estimate(&s, &platform);
-        let u = e.utilization(&platform);
+        let ev = session.mapped(&src, 11, &opts).unwrap().estimate();
+        let e = &ev.hls;
+        let u = e.utilization(session.platform());
         println!("{name:9} lut {:7} ({:4.1}%)  ff {:7} ({:4.1}%)  bram {:5} ({:4.1}%)  uram {:4} ({:5.1}%)  dsp {:5} ({:4.1}%)  f={:.1} span={}",
             e.total.lut, u[0]*100.0, e.total.ff, u[1]*100.0, e.total.bram, u[2]*100.0,
             e.total.uram, u[3]*100.0, e.total.dsp, u[4]*100.0, e.fmax_mhz, e.slr_span);

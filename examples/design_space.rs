@@ -10,17 +10,20 @@
 
 use hbmflow::datatype::DataType;
 use hbmflow::dse::{self, SearchSpace};
+use hbmflow::flow::Session;
 use hbmflow::platform::Platform;
 use hbmflow::report::paper;
 
 fn main() -> anyhow::Result<()> {
-    let platform = Platform::alveo_u280();
+    // The flow Session is the entry point: a shared artifact cache the
+    // whole sweep evaluates over (one parse + one lower per degree).
+    let session = Session::new(Platform::alveo_u280());
 
     // The full default space: every OlympusOpts axis the paper's Figs.
     // 15-17 walk by hand (dtype x bus x dataflow x sharing x FIFO x CUs),
     // times polynomial degree. Narrow any axis before exploring to zoom.
     let space = SearchSpace::default_for("helmholtz");
-    let ex = dse::explore(&space, &platform, paper::N_ELEMENTS, None)
+    let ex = dse::explore_in(&session, &space, paper::N_ELEMENTS, None)
         .map_err(anyhow::Error::msg)?;
 
     // Ranked table of the 15 best feasible designs + frontier markers.
@@ -76,5 +79,16 @@ fn main() -> anyhow::Result<()> {
             }
         );
     }
+
+    // The point of the shared cache: thousands of candidates, two
+    // front-end runs (p = 7 and p = 11).
+    let st = session.stats();
+    println!(
+        "\nflow cache: {} parse+lower runs served {} candidates \
+         ({} lowered-cache hits)",
+        st.lowered_misses,
+        ex.enumerated(),
+        st.lowered_hits
+    );
     Ok(())
 }

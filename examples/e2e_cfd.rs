@@ -19,21 +19,21 @@
 //!   * measured XLA-CPU datapath throughput;
 //!   * simulated FPGA GFLOPS / power / GFLOPS/W for the same system.
 
-use hbmflow::cli::build_kernel;
 use hbmflow::coordinator::{Driver, HelmholtzWorkload};
 use hbmflow::datatype::DataType;
-use hbmflow::hls;
-use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::flow::Session;
+use hbmflow::kernels::KernelSource;
+use hbmflow::olympus::OlympusOpts;
 use hbmflow::platform::Platform;
 use hbmflow::report::{self, paper};
 use hbmflow::runtime::Runtime;
-use hbmflow::sim;
 
 fn main() -> anyhow::Result<()> {
     let p = 11usize;
     let n_real = 2048usize; // elements executed with real numerics
-    let platform = Platform::alveo_u280();
-    let kernel = build_kernel("helmholtz", p)?;
+    // one flow Session: the three data formats share a parse + lower
+    let session = Session::new(Platform::alveo_u280());
+    let src = KernelSource::builtin("helmholtz");
     let mut rt = Runtime::from_default_dir()?;
     println!(
         "PJRT platform: {}  |  artifacts: {}",
@@ -45,22 +45,22 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
 
     for dtype in [DataType::F64, DataType::Fx64, DataType::Fx32] {
-        // --- generate the system for this data format ---
+        // --- generate the system for this data format (flow Mapped) ---
         let opts = if dtype.is_fixed() {
             OlympusOpts::fixed_point(dtype)
         } else {
             OlympusOpts::dataflow(7)
         };
-        let spec = olympus::generate(&kernel, &opts, &platform).map_err(anyhow::Error::msg)?;
-        let est = hls::estimate(&spec, &platform);
+        let mapped = session.mapped(&src, p, &opts)?;
 
         // --- real numerics through the AOT artifact ---
-        let artifact = Driver::artifact_for(&rt, &spec, p)?;
-        let mut driver = Driver::new(&mut rt, spec.clone(), artifact.clone());
+        let artifact = Driver::artifact_for(&rt, &mapped.spec, p)?;
+        let mut driver = Driver::new(&mut rt, mapped.spec.clone(), artifact.clone());
         let run = driver.run(&workload, 64)?;
 
         // --- simulated FPGA execution of the same system, N_eq = 2M ---
-        let simr = sim::simulate(&spec, &est, &platform, paper::N_ELEMENTS);
+        let ev = mapped.simulate(paper::N_ELEMENTS);
+        let simr = ev.sim().expect("simulate evaluation carries a sim result");
 
         println!("\n=== {} ===", dtype.display());
         println!(

@@ -1,20 +1,23 @@
 //! Walk the paper's §4.2 optimization ladder (Fig. 15) and explain what
 //! each optimization changes, printing paper-vs-measured at each step.
 //!
+//! A thin client of `flow::Session`: the eight rungs share one parse +
+//! lower through the session cache, and each rung is a `mapped` +
+//! `simulate` call — no stage wiring in the example.
+//!
 //! ```bash
 //! cargo run --release --example optimize_helmholtz
 //! ```
 
-use hbmflow::cli::build_kernel;
-use hbmflow::hls;
-use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::flow::Session;
+use hbmflow::kernels::KernelSource;
+use hbmflow::olympus::OlympusOpts;
 use hbmflow::platform::Platform;
 use hbmflow::report::{self, paper};
-use hbmflow::sim;
 
 fn main() -> anyhow::Result<()> {
-    let kernel = build_kernel("helmholtz", 11)?;
-    let platform = Platform::alveo_u280();
+    let session = Session::new(Platform::alveo_u280());
+    let src = KernelSource::builtin("helmholtz");
     let n = paper::N_ELEMENTS;
 
     let ladder: Vec<(&str, OlympusOpts)> = vec![
@@ -57,9 +60,8 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     for (i, (why, opts)) in ladder.into_iter().enumerate() {
-        let spec = olympus::generate(&kernel, &opts, &platform).map_err(anyhow::Error::msg)?;
-        let est = hls::estimate(&spec, &platform);
-        let r = sim::simulate(&spec, &est, &platform, n);
+        let ev = session.mapped(&src, 11, &opts)?.simulate(n);
+        let r = ev.sim().expect("simulate evaluation carries a sim result");
         let p = paper::TABLE2[i];
         println!("== {} ==", opts.label());
         println!("   {why}");
@@ -69,7 +71,7 @@ fn main() -> anyhow::Result<()> {
         );
         rows.push(vec![
             opts.label(),
-            format!("{}", est.ops()),
+            format!("{}", ev.hls.ops()),
             report::f(r.gflops_system),
             report::f(p.gflops),
             format!("{:.2}", r.gflops_system / p.gflops),
@@ -84,6 +86,12 @@ fn main() -> anyhow::Result<()> {
     println!(
         "paper shape checks: serial degrades ~3x; parallel recovers ~3.9x; \
          DF3 <= DF2; DF7 best."
+    );
+    let st = session.stats();
+    println!(
+        "(flow cache: {} parse+lower for {} rungs)",
+        st.lowered_misses,
+        st.mapped_misses
     );
     Ok(())
 }

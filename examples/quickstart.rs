@@ -1,62 +1,61 @@
-//! Quickstart: the whole flow on one page.
+//! Quickstart: the whole flow on one page, through the typed `flow`
+//! pipeline (the crate's public API).
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Parses the paper's Inverse Helmholtz DSL program (Fig. 2), runs the
-//! compiler pipeline (teil -> rewrite -> affine -> schedule), generates
-//! the HBM system with Olympus, estimates it like Vitis HLS would, and
-//! simulates the paper's 2M-element workload.
+//! Parses the paper's Inverse Helmholtz DSL program (Fig. 2), walks the
+//! staged pipeline (`Parsed` → `Lowered` → `Mapped` → `Evaluated`), and
+//! simulates the paper's 2M-element workload on the Alveo U280 model.
 
-use hbmflow::dsl;
-use hbmflow::hls;
-use hbmflow::ir::{lower, rewrite, schedule, teil};
+use hbmflow::flow::Flow;
+use hbmflow::kernels::KernelSource;
 use hbmflow::olympus::{self, OlympusOpts};
 use hbmflow::platform::Platform;
-use hbmflow::sim;
 
 fn main() -> anyhow::Result<()> {
-    // 1. The DSL program (paper Fig. 2, p = 11).
-    let src = dsl::inverse_helmholtz_source(11);
-    println!("--- CFDlang source ---\n{src}");
+    // 1. The DSL program (paper Fig. 2, p = 11) enters the flow.
+    let flow = Flow::from_source(KernelSource::builtin("helmholtz"));
 
-    // 2. Front-end + middle-end: parse, build teil, factorize.
-    let program = dsl::parse(&src).map_err(anyhow::Error::msg)?;
-    let module = teil::from_ast(&program).map_err(anyhow::Error::msg)?;
-    let naive_flops = module.flops();
-    let module = rewrite::optimize(module);
+    // 2. Parsed: AST + lossless rewrite (contraction factorization).
+    let parsed = flow.parse(11)?;
+    println!("--- CFDlang source ---\n{}", parsed.provenance.source);
     println!(
         "contraction factorization: {} -> {} flops/element (paper Eq. 2: 177,023)\n",
-        naive_flops,
-        module.flops()
+        parsed.rewrite.naive_flops, parsed.rewrite.optimized_flops
     );
 
-    // 3. Back-end: lower to the affine kernel, schedule 7 dataflow groups.
-    let kernel = lower::lower_kernel(&module, "helmholtz").map_err(anyhow::Error::msg)?;
-    let sched = schedule::fixed(&kernel, 7).map_err(anyhow::Error::msg)?;
-    println!("{kernel}\n");
+    // 3. Lowered: the affine kernel plus access/liveness analyses.
+    let lowered = parsed.lower()?;
+    println!("{}\n", lowered.kernel);
+
+    // 4. Mapped: Olympus system generation on the Alveo U280.
+    let platform = Platform::alveo_u280();
+    let mapped = lowered.map(&OlympusOpts::dataflow(7), &platform)?;
     println!(
         "dataflow groups: {:?}\n",
-        sched.groups.iter().map(|g| g.name.as_str()).collect::<Vec<_>>()
+        mapped
+            .spec
+            .schedule
+            .groups
+            .iter()
+            .map(|g| g.name.as_str())
+            .collect::<Vec<_>>()
     );
-
-    // 4. Olympus system generation on the Alveo U280.
-    let platform = Platform::alveo_u280();
-    let opts = OlympusOpts::dataflow(7);
-    let spec = olympus::generate(&kernel, &opts, &platform).map_err(anyhow::Error::msg)?;
     println!(
         "system: {} lanes x {} CU(s), {} HBM PCs, batch E = {} elements",
-        spec.lanes,
-        spec.num_cus,
-        spec.total_pcs(),
-        spec.batch_elements
+        mapped.spec.lanes,
+        mapped.spec.num_cus,
+        mapped.spec.total_pcs(),
+        mapped.spec.batch_elements
     );
-    println!("{}", olympus::config::system_cfg(&spec));
+    println!("{}", olympus::config::system_cfg(&mapped.spec));
 
-    // 5. HLS estimate + system simulation (N_eq = 2,000,000).
-    let est = hls::estimate(&spec, &platform);
-    let r = sim::simulate(&spec, &est, &platform, 2_000_000);
+    // 5. Evaluated: HLS estimate + system simulation (N_eq = 2,000,000).
+    let ev = mapped.simulate(2_000_000);
+    let est = &ev.hls;
+    let r = ev.sim().expect("simulate evaluation carries a sim result");
     println!(
         "estimate: {} ops, fmax {:.1} MHz, DSP {} LUT {}",
         est.ops(),

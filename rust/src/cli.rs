@@ -1,9 +1,11 @@
-//! Command-line interface (hand-rolled; the offline registry has no clap).
+//! Command-line interface (hand-rolled; the offline registry has no
+//! clap) — a thin client of the `flow` pipeline.
 //!
 //! ```text
 //! hbmflow compile  [--kernel helmholtz|interpolation|gradient | --file prog.cfd]
 //!                  [--p 11] [--dataflow N] [--dtype f64|f32|fx64|fx32]
 //!                  [--emit c|cfg|wrapper|host|teil]
+//!                  [--save-artifact out.json] [--from-artifact in.json]
 //! hbmflow estimate [--kernel .. | --file ..] [--p ..] [--preset ..] [--cus N]
 //! hbmflow simulate [--kernel .. | --file ..] [--p ..] [--preset ..] [--cus N]
 //!                  [--elements N]            # alias: sim
@@ -15,30 +17,137 @@
 //!                  [--pareto-only] [--format text|json|csv]
 //! ```
 //!
-//! Flags are `--key value` pairs; the registered boolean flags
-//! (`--pareto-only`, `--ddr4`, `--mem-plan`) may appear bare. `--file prog.cfd` feeds
-//! an arbitrary CFDlang program (see docs/CFDLANG.md) through the same
-//! flow as the builtin kernels; `--kernel` and `--file` are mutually
-//! exclusive.
+//! Flags are `--key value` pairs validated against a per-subcommand
+//! registry (a misspelled flag errors with a did-you-mean suggestion
+//! instead of being silently swallowed); the registered boolean flags
+//! (`--pareto-only`, `--ddr4`, `--mem-plan`) may appear bare.
+//! `--file prog.cfd` feeds an arbitrary CFDlang program (see
+//! docs/CFDLANG.md) through the same flow as the builtin kernels;
+//! `--kernel` and `--file` are mutually exclusive. Every subcommand
+//! reaches the pipeline through `flow::{Flow, Session}` — this module
+//! owns no stage wiring of its own.
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{Driver, GenericWorkload, HelmholtzWorkload};
+use crate::coordinator::{Driver, HelmholtzWorkload};
 use crate::datatype::DataType;
 use crate::dse;
-use crate::hls;
-use crate::ir::schedule;
+use crate::flow::{Artifact, Flow, Session};
 use crate::kernels::KernelSource;
 use crate::olympus::{self, ChannelPolicy, OlympusOpts};
 use crate::platform::Platform;
 use crate::report;
 use crate::runtime::Runtime;
-use crate::sim;
 
 /// Flags that may appear bare (no value); all other flags require one.
 const BOOL_FLAGS: &[&str] = &["pareto-only", "ddr4", "mem-plan"];
+
+/// Flags shared by `simulate` and its `sim` alias.
+const SIM_FLAGS: &[&str] = &[
+    "kernel",
+    "file",
+    "p",
+    "dtype",
+    "preset",
+    "cus",
+    "elements",
+    "policy",
+    "partition-cap",
+];
+
+/// Per-subcommand flag registry: every flag a command reads. Anything
+/// else is a typo and errors at parse time with a suggestion.
+const FLAG_REGISTRY: &[(&str, &[&str])] = &[
+    (
+        "compile",
+        &[
+            "kernel",
+            "file",
+            "p",
+            "dtype",
+            "dataflow",
+            "emit",
+            "save-artifact",
+            "from-artifact",
+        ],
+    ),
+    (
+        "estimate",
+        &["kernel", "file", "p", "dtype", "preset", "cus", "partition-cap"],
+    ),
+    ("simulate", SIM_FLAGS),
+    ("sim", SIM_FLAGS),
+    ("run", &["p", "dtype", "elements", "cus", "artifacts"]),
+    ("ladder", &["elements"]),
+    ("sweep", &["elements"]),
+    ("explore", &["kernel", "file", "p", "mse-budget", "max-bits"]),
+    (
+        "dse",
+        &[
+            "kernel",
+            "file",
+            "p",
+            "dtype",
+            "max-cus",
+            "ddr4",
+            "mem-plan",
+            "top-k",
+            "pareto-only",
+            "format",
+            "threads",
+            "elements",
+            "policy",
+        ],
+    ),
+];
+
+/// Known flags for a subcommand (None for unknown commands and help,
+/// which are handled by the dispatcher).
+fn known_flags(cmd: &str) -> Option<&'static [&'static str]> {
+    FLAG_REGISTRY
+        .iter()
+        .find(|(c, _)| *c == cmd)
+        .map(|(_, flags)| *flags)
+}
+
+/// Levenshtein edit distance (registry is tiny; O(n·m) is fine).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur.push((prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// The closest registered flag within edit distance 2, if any. An
+/// exact match is never a suggestion (hinting "--p" at a user who
+/// typed "--p" helps nobody).
+fn suggestion(flag: &str, known: &[&'static str]) -> Option<&'static str> {
+    known
+        .iter()
+        .copied()
+        .map(|k| (edit_distance(flag, k), k))
+        .filter(|&(d, _)| (1..=2).contains(&d))
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, k)| k)
+}
+
+/// `" (did you mean --X?)"` when a close registered flag exists.
+fn suggestion_suffix(cmd: &str, flag: &str) -> String {
+    known_flags(cmd)
+        .and_then(|known| suggestion(flag, known))
+        .map(|s| format!(" (did you mean --{s}?)"))
+        .unwrap_or_default()
+}
 
 /// Parsed `--key value` flags.
 pub struct Args {
@@ -66,11 +175,35 @@ impl Args {
                 i += 1;
                 continue;
             }
-            let v = argv
-                .get(i + 1)
-                .ok_or_else(|| anyhow!("--{k} needs a value"))?;
-            flags.insert(k.to_string(), v.clone());
+            if next_is_flag {
+                // no value follows: a typo'd flag must not swallow the
+                // next --flag token (or die with a bare missing-value
+                // message), so name the real problem here
+                if let Some(known) = known_flags(&cmd) {
+                    if !known.contains(&k) {
+                        bail!(
+                            "unknown flag --{k} for {cmd}{}",
+                            suggestion_suffix(&cmd, k)
+                        );
+                    }
+                }
+                bail!("--{k} needs a value");
+            }
+            flags.insert(k.to_string(), argv[i + 1].clone());
             i += 2;
+        }
+        // reject unknown/misspelled flags instead of swallowing them
+        if let Some(known) = known_flags(&cmd) {
+            let mut keys: Vec<&String> = flags.keys().collect();
+            keys.sort();
+            for k in keys {
+                if !known.contains(&k.as_str()) {
+                    bail!(
+                        "unknown flag --{k} for {cmd}{}",
+                        suggestion_suffix(&cmd, k)
+                    );
+                }
+            }
         }
         Ok(Args { cmd, flags })
     }
@@ -229,38 +362,87 @@ flags: --kernel --file --p --dtype --preset --cus --elements --emit
        --partition-cap N (cap the memory plan's banking factor;
          estimate/simulate — below the reduction trip the simulator
          charges bank-conflict stalls)
+compile artifacts (the flow's staged pipeline, persisted):
+       --save-artifact out.json (write the mapped-stage artifact:
+         versioned JSON embedding the program + options; reloads to
+         bit-identical downstream results)
+       --from-artifact in.json  (resume a saved parsed/lowered/mapped
+         artifact instead of --kernel/--file)
 dse flags: --p 7,11  --max-cus N  --ddr4  --threads N  --elements N
            --policy local,striped  --mem-plan (explore partition-factor
            caps x sharing)  --top-k N (0 = all)  --pareto-only
            --format text|json|csv
+
+unknown or misspelled flags are rejected with a did-you-mean hint.
 ";
 
+/// Compile options from `--dtype` / `--dataflow`, clamped to the
+/// kernel's nest count like the dse normalization.
+fn compile_opts(lowered: &crate::flow::Lowered, dtype: DataType, groups: usize) -> OlympusOpts {
+    let mut o = OlympusOpts::dataflow(groups.min(lowered.kernel.nests.len()));
+    o.dtype = dtype;
+    o
+}
+
 fn cmd_compile(args: &Args) -> Result<String> {
-    let source = source_from(args)?;
-    let p = degree_for(&source, args, 11)?;
     let dtype = args.dtype_or(DataType::F64)?;
     let groups = args.usize_or("dataflow", 7)?;
-    // one parse for every emit mode: the teil module and the lowered
-    // kernel come from the same read (and unknown kernel names are an
-    // error on the teil path too)
-    let (module, k) = source.compile(p).map_err(|e| anyhow!(e))?;
-    let opts = {
-        let mut o = OlympusOpts::dataflow(groups.min(k.nests.len()));
-        o.dtype = dtype;
-        o
-    };
     let platform = Platform::alveo_u280();
-    let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
+
+    let mapped = if let Some(path) = args.get("from-artifact") {
+        if args.get("kernel").is_some() || args.get("file").is_some() {
+            bail!("--from-artifact replaces --kernel/--file");
+        }
+        if args.get("p").is_some() {
+            bail!("--p is recorded in the artifact");
+        }
+        match Artifact::load(path)? {
+            Artifact::Parsed(parsed) => {
+                let lowered = parsed.lower()?;
+                let opts = compile_opts(&lowered, dtype, groups);
+                lowered.map(&opts, &platform)?
+            }
+            Artifact::Lowered(lowered) => {
+                let opts = compile_opts(&lowered, dtype, groups);
+                lowered.map(&opts, &platform)?
+            }
+            Artifact::Mapped(mapped) => {
+                if args.get("dtype").is_some() || args.get("dataflow").is_some() {
+                    bail!(
+                        "--dtype/--dataflow are recorded in a mapped artifact; \
+                         resume a parsed or lowered artifact to change them"
+                    );
+                }
+                mapped
+            }
+            Artifact::Evaluated(_) => bail!(
+                "evaluated artifacts record results; compile resumes from a \
+                 parsed, lowered, or mapped artifact"
+            ),
+        }
+    } else {
+        let source = source_from(args)?;
+        let p = degree_for(&source, args, 11)?;
+        let lowered = Flow::from_source(source).parse(p)?.lower()?;
+        let opts = compile_opts(&lowered, dtype, groups);
+        lowered.map(&opts, &platform)?
+    };
+
+    if let Some(path) = args.get("save-artifact") {
+        Artifact::Mapped(mapped.clone()).save(path)?;
+    }
+
     let emit = args.get("emit").unwrap_or("c");
     let out = match emit {
-        "c" => {
-            let s = schedule::fixed(&k, groups.min(k.nests.len())).map_err(|e| anyhow!(e))?;
-            crate::codegen::c_emit::emit(&k, &s, dtype.name())
-        }
-        "cfg" => olympus::config::system_cfg(&spec),
-        "wrapper" => olympus::config::cu_wrapper(&spec),
-        "host" => olympus::config::host_program(&spec),
-        "teil" => module.to_string(),
+        "c" => crate::codegen::c_emit::emit(
+            &mapped.spec.kernel,
+            &mapped.spec.schedule,
+            mapped.spec.dtype.name(),
+        ),
+        "cfg" => olympus::config::system_cfg(&mapped.spec),
+        "wrapper" => olympus::config::cu_wrapper(&mapped.spec),
+        "host" => olympus::config::host_program(&mapped.spec),
+        "teil" => mapped.module.to_string(),
         other => bail!("unknown --emit {other} (c|cfg|wrapper|host|teil)"),
     };
     Ok(out)
@@ -273,10 +455,13 @@ fn cmd_estimate(args: &Args) -> Result<String> {
     let cus = args.usize_or("cus", 1)?;
     let mut opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?;
     opts.partition_cap = args.partition_cap()?;
-    let k = source.build(p).map_err(|e| anyhow!(e))?;
     let platform = Platform::alveo_u280();
-    let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
-    let e = hls::estimate(&spec, &platform);
+    let mapped = Flow::from_source(source)
+        .parse(p)?
+        .lower()?
+        .map(&opts, &platform)?;
+    let ev = mapped.estimate();
+    let e = &ev.hls;
     let u = e.utilization(&platform);
     Ok(format!(
         "{} p={p} dtype={} cus={cus}\n\
@@ -304,8 +489,8 @@ fn cmd_estimate(args: &Args) -> Result<String> {
         u[3] * 100.0,
         e.total.dsp,
         u[4] * 100.0,
-        spec.batch_elements,
-        spec.lanes,
+        mapped.spec.batch_elements,
+        mapped.spec.lanes,
     ))
 }
 
@@ -318,18 +503,18 @@ fn cmd_simulate(args: &Args) -> Result<String> {
     let mut opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?
         .with_policy(args.policy()?);
     opts.partition_cap = args.partition_cap()?;
+    let platform = Platform::alveo_u280();
+    let mapped = Flow::from_source(source)
+        .parse(p)?
+        .lower()?
+        .map(&opts, &platform)?;
     // generic numerics oracle: the lowered kernel vs teil::eval on a few
     // seeded elements (no closed form needed — works for any --file);
-    // module and kernel come from one parse so the cross-check is always
-    // of the same program
-    let (module, k) = source.compile(p).map_err(|e| anyhow!(e))?;
-    let oracle = GenericWorkload::new(&source.name(), module, k.clone(), 2024)
-        .check(4)
-        .map_err(|e| anyhow!(e))?;
-    let platform = Platform::alveo_u280();
-    let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
-    let e = hls::estimate(&spec, &platform);
-    let r = sim::simulate(&spec, &e, &platform, n);
+    // the Mapped stage carries module and kernel from one parse, so the
+    // cross-check is always of the same program
+    let oracle = mapped.oracle(2024, 4)?;
+    let ev = mapped.simulate(n);
+    let r = ev.sim().expect("simulate evaluation carries a sim result");
     let stages: Vec<String> = r
         .stage_intervals
         .iter()
@@ -354,7 +539,7 @@ fn cmd_simulate(args: &Args) -> Result<String> {
          oracle : MSE {:.3e}  max|err| {:.3e} (lowered kernel vs \
          teil::eval, {} elements)",
         r.label,
-        source.name(),
+        mapped.provenance.kernel,
         dtype,
         r.gflops_cu,
         r.cu_time_s,
@@ -368,11 +553,11 @@ fn cmd_simulate(args: &Args) -> Result<String> {
         r.energy_j,
         r.bottleneck,
         stages.join(" "),
-        spec.opts.channel_policy.name(),
+        mapped.spec.opts.channel_policy.name(),
         r.switch_crossings,
         r.hbm_fill_cycles,
         channels.join(" "),
-        spec.memory.arrays.len(),
+        mapped.spec.memory.arrays.len(),
         r.mem_banks,
         r.mem_shared_words,
         r.mem_unshared_words,
@@ -392,13 +577,14 @@ fn cmd_run(args: &Args) -> Result<String> {
         Some(dir) => Runtime::new(dir)?,
         None => Runtime::from_default_dir()?,
     };
-    let k = build_kernel("helmholtz", p)?;
     let opts = preset("best", dtype, cus)?;
-    let platform = Platform::alveo_u280();
-    let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
-    let artifact = Driver::artifact_for(&rt, &spec, p)?;
+    let mapped = Flow::from_source(KernelSource::builtin("helmholtz"))
+        .parse(p)?
+        .lower()?
+        .map(&opts, &Platform::alveo_u280())?;
+    let artifact = Driver::artifact_for(&rt, &mapped.spec, p)?;
     let w = HelmholtzWorkload::generate(p, n, 2024);
-    let mut driver = Driver::new(&mut rt, spec, artifact);
+    let mut driver = Driver::new(&mut rt, mapped.spec.clone(), artifact);
     let r = driver.run(&w, 16.min(n))?;
     Ok(format!(
         "artifact {}  elements {}  invocations {}\n\
@@ -418,8 +604,9 @@ fn cmd_run(args: &Args) -> Result<String> {
 
 fn cmd_ladder(args: &Args) -> Result<String> {
     let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
-    let k = build_kernel("helmholtz", 11)?;
-    let platform = Platform::alveo_u280();
+    // one Session: the eight rungs share a single parse + lower
+    let session = Session::new(Platform::alveo_u280());
+    let src = KernelSource::builtin("helmholtz");
     let ladder: Vec<(usize, OlympusOpts)> = vec![
         (0, OlympusOpts::baseline()),
         (1, OlympusOpts::double_buffering()),
@@ -432,13 +619,12 @@ fn cmd_ladder(args: &Args) -> Result<String> {
     ];
     let mut rows = Vec::new();
     for (i, opts) in ladder {
-        let spec = olympus::generate(&k, &opts, &platform).map_err(|e| anyhow!(e))?;
-        let e = hls::estimate(&spec, &platform);
-        let r = sim::simulate(&spec, &e, &platform, n);
+        let ev = session.mapped(&src, 11, &opts)?.simulate(n);
+        let r = ev.sim().expect("simulate evaluation carries a sim result");
         let paper = report::paper::TABLE2[i];
         rows.push(vec![
             opts.label(),
-            format!("{}", e.ops()),
+            format!("{}", ev.hls.ops()),
             report::f(r.freq_mhz),
             report::f(r.gflops_cu),
             report::f(r.gflops_system),
@@ -466,11 +652,11 @@ fn cmd_ladder(args: &Args) -> Result<String> {
 
 fn cmd_sweep(args: &Args) -> Result<String> {
     let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
-    let k7 = build_kernel("helmholtz", 7)?;
-    let k11 = build_kernel("helmholtz", 11)?;
-    let platform = Platform::alveo_u280();
+    let session = Session::new(Platform::alveo_u280());
+    let src = KernelSource::builtin("helmholtz");
+    let budget = session.platform().total_resources();
     let mut rows = Vec::new();
-    for (p, k) in [(11usize, &k11), (7, &k7)] {
+    for p in [11usize, 7] {
         for dtype in [DataType::F64, DataType::Fx64, DataType::Fx32] {
             for cus in [1usize, 2, 3, 4] {
                 let mut opts = if dtype.is_fixed() {
@@ -479,14 +665,15 @@ fn cmd_sweep(args: &Args) -> Result<String> {
                     OlympusOpts::dataflow(7)
                 };
                 opts = opts.with_cus(cus);
-                let Ok(spec) = olympus::generate(k, &opts, &platform) else {
+                let Ok(mapped) = session.mapped(&src, p, &opts) else {
                     continue;
                 };
-                let e = hls::estimate(&spec, &platform);
-                if !e.total.fits_in(&platform.total_resources()) {
+                // one evaluation: the estimate rides along with the sim
+                let ev = mapped.simulate(n);
+                if !ev.hls.total.fits_in(&budget) {
                     continue; // infeasible replication
                 }
-                let r = sim::simulate(&spec, &e, &platform, n);
+                let r = ev.sim().expect("simulate evaluation carries a sim result");
                 rows.push(vec![
                     format!("{} p={p} x{cus}", dtype.display()),
                     report::f(r.freq_mhz),
@@ -514,11 +701,11 @@ fn cmd_explore(args: &Args) -> Result<String> {
         None => 3.6e-12, // the paper's fx32 error
     };
     let max_bits = args.usize_or("max-bits", 64)? as u32;
-    let module = source.module(p).map_err(|e| anyhow!(e))?;
+    let parsed = Flow::from_source(source).parse(p)?;
     // the workload rescales operators to near-orthonormal rows (~1/p)
     let range = Interval::symmetric(1.0 / p.max(1) as f64);
-    let analysis = precision::analyze_ranges(&module, range);
-    let cands = precision::explore(&module, range, budget, max_bits);
+    let analysis = precision::analyze_ranges(&parsed.module, range);
+    let cands = precision::explore(&parsed.module, range, budget, max_bits);
     let mut rows = Vec::new();
     for c in cands.iter().take(10) {
         rows.push(vec![
@@ -589,8 +776,8 @@ fn cmd_dse(args: &Args) -> Result<String> {
         None => None,
     };
 
-    let platform = Platform::alveo_u280();
-    let ex = dse::explore(&space, &platform, n, threads).map_err(|e| anyhow!(e))?;
+    let session = Session::new(Platform::alveo_u280());
+    let ex = dse::explore_in(&session, &space, n, threads).map_err(|e| anyhow!(e))?;
 
     // default: whole frontier with --pareto-only, top 25 otherwise
     let pareto_only = args.flag("pareto-only");
@@ -686,6 +873,58 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("/no/such/prog.cfd"), "{err}");
+    }
+
+    #[test]
+    fn compile_save_and_from_artifact_round_trip() {
+        let path = std::env::temp_dir().join("hbmflow_cli_artifact.json");
+        let f = path.to_str().unwrap();
+        let direct =
+            run(&["compile", "--p", "7", "--emit", "cfg", "--save-artifact", f]).unwrap();
+        let resumed = run(&["compile", "--from-artifact", f, "--emit", "cfg"]).unwrap();
+        assert_eq!(direct, resumed, "artifact resume is bit-identical");
+        let c = run(&["compile", "--from-artifact", f, "--emit", "c"]).unwrap();
+        assert!(c.contains("#pragma HLS"), "{c}");
+        // a mapped artifact pins its recorded configuration
+        assert!(run(&["compile", "--from-artifact", f, "--dtype", "f32"]).is_err());
+        assert!(run(&["compile", "--from-artifact", f, "--p", "11"]).is_err());
+        assert!(run(&["compile", "--from-artifact", f, "--kernel", "gradient"]).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn from_artifact_rejects_missing_and_garbage_files() {
+        assert!(run(&["compile", "--from-artifact", "/no/such.json"]).is_err());
+        let path = std::env::temp_dir().join("hbmflow_cli_garbage.json");
+        std::fs::write(&path, "{\"schema\": 1}").unwrap();
+        let err = run(&["compile", "--from-artifact", path.to_str().unwrap()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unknown_flags_error_with_suggestions() {
+        let err = run(&["compile", "--kernl", "helmholtz"]).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --kernl"), "{err}");
+        assert!(err.contains("did you mean --kernel"), "{err}");
+        let err = run(&["simulate", "--element", "100"]).unwrap_err().to_string();
+        assert!(err.contains("did you mean --elements"), "{err}");
+        // a flag valid for another subcommand is still unknown here
+        let err = run(&["ladder", "--kernel", "helmholtz"]).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --kernel for ladder"), "{err}");
+        // misspelled bare boolean flags are named, trailing or mid-argv
+        // (a typo must never swallow the next --flag token as its value)
+        let err = run(&["dse", "--p", "11", "--ddr"]).unwrap_err().to_string();
+        assert!(err.contains("did you mean --ddr4"), "{err}");
+        let err = run(&["dse", "--ddr", "--p", "11"]).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --ddr"), "{err}");
+        assert!(err.contains("did you mean --ddr4"), "{err}");
+        // a known flag missing its value is not "suggested" back
+        let err = run(&["compile", "--p"]).unwrap_err().to_string();
+        assert!(err.contains("--p needs a value"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
     }
 
     #[test]

@@ -290,16 +290,22 @@ pub fn run_gradient(
 mod tests {
     use super::*;
     use crate::datatype::DataType;
-    use crate::dsl;
-    use crate::ir::{lower, rewrite, teil};
-    use crate::olympus::{generate, OlympusOpts};
+    use crate::flow::Flow;
+    use crate::kernels::KernelSource;
+    use crate::olympus::OlympusOpts;
     use crate::platform::Platform;
 
     fn spec(opts: OlympusOpts, p: usize) -> SystemSpec {
-        let prog = dsl::parse(&dsl::inverse_helmholtz_source(p)).unwrap();
-        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
-        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
-        generate(&k, &opts, &Platform::alveo_u280()).unwrap()
+        // the driver consumes systems produced by the flow pipeline —
+        // the tests build theirs the same way
+        Flow::from_source(KernelSource::builtin("helmholtz"))
+            .parse(p)
+            .unwrap()
+            .lower()
+            .unwrap()
+            .map(&opts, &Platform::alveo_u280())
+            .unwrap()
+            .spec
     }
 
     fn runtime() -> Option<Runtime> {

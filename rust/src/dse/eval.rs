@@ -1,30 +1,20 @@
-//! Parallel candidate evaluation: `olympus::generate` →
-//! `hls::estimate` → `sim::simulate` per design point.
+//! Candidate evaluation — a thin adapter over the flow batch service.
 //!
-//! The evaluator is a scoped-thread worker pool over an atomic work
-//! cursor (the offline registry has no rayon): each worker claims the
-//! next point, runs the full generate/estimate/simulate pipeline against
-//! the shared platform model, and writes its slot. Kernel builds
-//! (parse → rewrite → lower, by far the most expensive step) are
-//! memoized per `(kernel, degree)` in [`build_kernels`] before the pool
-//! starts, so every candidate evaluation is pure arithmetic over shared
-//! immutable state. Results come back in enumeration order regardless of
-//! completion order — exploration output is deterministic.
+//! Each design point becomes a [`FlowRequest`] and the whole candidate
+//! list runs through [`flow::Session::evaluate_batch`]: the session's
+//! shared artifact cache guarantees one parse + one lower per distinct
+//! (source, degree) no matter how many option sets evaluate it, and the
+//! scoped-thread pool (formerly private to this module) returns results
+//! in enumeration order — exploration output stays deterministic.
 //!
-//! A point Olympus rejects (e.g. three CUs on the two DDR4 banks) is an
-//! `Err` outcome carrying the reason, not a missing row: infeasibility
-//! is part of the answer the designer asked for.
+//! A point the generator rejects (e.g. three CUs on the two DDR4 banks)
+//! is an `Err` outcome carrying the reason, not a missing row:
+//! infeasibility is part of the answer the designer asked for.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
-use crate::hls;
-use crate::ir::affine::Kernel;
+use crate::flow::{self, EvalKind, FlowRequest};
 use crate::kernels::KernelSource;
-use crate::olympus;
-use crate::platform::{Platform, Resources};
-use crate::sim::{self, SimResult};
+use crate::platform::Resources;
+use crate::sim::SimResult;
 
 use super::space::DesignPoint;
 
@@ -41,7 +31,7 @@ pub struct Evaluated {
     pub sim: SimResult,
 }
 
-/// One design point plus its evaluation; `Err` carries Olympus's
+/// One design point plus its evaluation; `Err` carries the pipeline's
 /// rejection reason.
 #[derive(Debug, Clone)]
 pub struct EvalOutcome {
@@ -56,93 +46,56 @@ impl EvalOutcome {
     }
 }
 
-/// Worker count when the caller does not specify one.
-pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-}
-
-/// Build each distinct `(kernel, degree)` once from the space's source —
-/// the memoized inputs the worker pool shares.
-pub fn build_kernels(
-    source: &KernelSource,
-    points: &[DesignPoint],
-) -> Result<HashMap<(String, usize), Kernel>, String> {
-    let mut kernels = HashMap::new();
-    for pt in points {
-        let key = (pt.kernel.clone(), pt.p);
-        if let std::collections::hash_map::Entry::Vacant(slot) = kernels.entry(key) {
-            slot.insert(source.build(pt.p)?);
-        }
-    }
-    Ok(kernels)
-}
-
-/// Evaluate every point in parallel; results are in input order.
+/// Evaluate every point through the session's batch service; results
+/// are in input order.
 pub fn evaluate(
+    session: &flow::Session,
+    source: &KernelSource,
     points: Vec<DesignPoint>,
-    kernels: &HashMap<(String, usize), Kernel>,
-    platform: &Platform,
     n_elements: u64,
     threads: Option<usize>,
 ) -> Vec<EvalOutcome> {
-    let workers = threads
-        .unwrap_or_else(default_threads)
-        .clamp(1, points.len().max(1));
-    let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<EvalOutcome>>> =
-        points.iter().map(|_| Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= points.len() {
-                    break;
-                }
-                let pt = &points[i];
-                let kernel = kernels
-                    .get(&(pt.kernel.clone(), pt.p))
-                    .expect("build_kernels covered every (kernel, p)");
-                let outcome = eval_one(pt, kernel, platform, n_elements);
-                *slots[i].lock().unwrap() = Some(outcome);
-            });
-        }
-    });
-
-    slots
+    let reqs: Vec<FlowRequest> = points
+        .iter()
+        .map(|pt| FlowRequest {
+            source: source.clone(),
+            p: pt.p,
+            opts: pt.opts.clone(),
+            eval: EvalKind::Simulate {
+                elements: n_elements,
+            },
+        })
+        .collect();
+    let results = session.evaluate_batch_with(&reqs, threads);
+    let budget = session.platform().total_resources();
+    points
         .into_iter()
-        .map(|slot| {
-            slot.into_inner()
-                .unwrap()
-                .expect("worker pool filled every slot")
+        .zip(results)
+        .map(|(point, fr)| {
+            let result = match fr.result {
+                Ok(ev) => {
+                    let total = ev.hls.total;
+                    let feasible = total.fits_in(&budget);
+                    let fmax_mhz = ev.hls.fmax_mhz;
+                    let max_utilization = total.max_utilization(&budget);
+                    match ev.sim {
+                        Some(sim) => Ok(Evaluated {
+                            feasible,
+                            fmax_mhz,
+                            total,
+                            max_utilization,
+                            sim,
+                        }),
+                        None => {
+                            Err("internal: simulate request returned no sim result".into())
+                        }
+                    }
+                }
+                Err(e) => Err(e.to_string()),
+            };
+            EvalOutcome { point, result }
         })
         .collect()
-}
-
-fn eval_one(
-    pt: &DesignPoint,
-    kernel: &Kernel,
-    platform: &Platform,
-    n_elements: u64,
-) -> EvalOutcome {
-    let result = olympus::generate(kernel, &pt.opts, platform).map(|spec| {
-        let est = hls::estimate(&spec, platform);
-        let budget = platform.total_resources();
-        let sim = sim::simulate(&spec, &est, platform, n_elements);
-        Evaluated {
-            feasible: est.total.fits_in(&budget),
-            fmax_mhz: est.fmax_mhz,
-            total: est.total,
-            max_utilization: est.total.max_utilization(&budget),
-            sim,
-        }
-    });
-    EvalOutcome {
-        point: pt.clone(),
-        result,
-    }
 }
 
 #[cfg(test)]
@@ -150,7 +103,13 @@ mod tests {
     use super::*;
     use crate::datatype::DataType;
     use crate::dse::SearchSpace;
+    use crate::flow::Session;
     use crate::olympus::{BusMode, MemoryKind};
+    use crate::platform::Platform;
+
+    fn session() -> Session {
+        Session::new(Platform::alveo_u280())
+    }
 
     fn tiny_space() -> SearchSpace {
         let mut s = SearchSpace::default_for("helmholtz");
@@ -167,12 +126,11 @@ mod tests {
 
     #[test]
     fn results_are_deterministic_and_in_order() {
-        let platform = Platform::alveo_u280();
         let space = tiny_space();
         let points = space.enumerate();
-        let kernels = build_kernels(&space.source, &points).unwrap();
-        let serial = evaluate(points.clone(), &kernels, &platform, 200_000, Some(1));
-        let parallel = evaluate(points.clone(), &kernels, &platform, 200_000, Some(4));
+        let serial = evaluate(&session(), &space.source, points.clone(), 200_000, Some(1));
+        let parallel =
+            evaluate(&session(), &space.source, points.clone(), 200_000, Some(4));
         assert_eq!(serial.len(), points.len());
         for (a, b) in serial.iter().zip(parallel.iter()) {
             assert_eq!(a.point.label(), b.point.label());
@@ -183,42 +141,48 @@ mod tests {
     }
 
     #[test]
-    fn rejected_points_carry_the_olympus_reason() {
+    fn rejected_points_carry_the_generation_reason() {
         let mut s = tiny_space();
         s.memories = vec![MemoryKind::Ddr4];
         s.cu_counts = vec![3]; // DDR4 has two banks: rejected
         let points = s.enumerate();
-        let kernels = build_kernels(&s.source, &points).unwrap();
-        let platform = Platform::alveo_u280();
-        let out = evaluate(points, &kernels, &platform, 100_000, Some(2));
+        let out = evaluate(&session(), &s.source, points, 100_000, Some(2));
         assert!(!out.is_empty());
         for o in &out {
             assert!(o.result.is_err(), "{}", o.point.label());
             assert!(!o.is_feasible());
+            assert!(
+                o.result.as_ref().unwrap_err().contains("num_cus"),
+                "{:?}",
+                o.result
+            );
         }
     }
 
     #[test]
-    fn kernel_builds_are_memoized_per_degree() {
+    fn kernel_builds_run_once_per_degree_across_the_batch() {
         let mut s = tiny_space();
         s.degrees = vec![7, 11];
+        let session = session();
         let points = s.enumerate();
-        let kernels = build_kernels(&s.source, &points).unwrap();
-        assert_eq!(kernels.len(), 2);
+        let n = points.len();
+        let out = evaluate(&session, &s.source, points, 100_000, Some(4));
+        assert_eq!(out.len(), n);
+        let st = session.stats();
+        assert_eq!(st.parsed_misses, 2, "{st:?}");
+        assert_eq!(st.lowered_misses, 2, "{st:?}");
+        assert_eq!(st.lowered_hits as usize, n - 2, "{st:?}");
     }
 
     #[test]
-    fn unknown_kernel_is_a_build_error() {
+    fn unknown_kernels_error_per_outcome() {
         let s = SearchSpace::default_for("warp-drive");
-        let err = build_kernels(&s.source, &s.enumerate()).unwrap_err();
-        assert!(err.contains("unknown kernel"), "{err}");
-    }
-
-    #[test]
-    fn missing_file_source_is_a_build_error() {
-        let mut s = SearchSpace::for_source(KernelSource::file("/no/such.cfd"));
-        s.degrees = vec![7];
-        let err = build_kernels(&s.source, &s.enumerate()).unwrap_err();
-        assert!(err.contains("/no/such.cfd"), "{err}");
+        let mut points = s.enumerate();
+        points.truncate(2);
+        let out = evaluate(&session(), &s.source, points, 100_000, Some(1));
+        for o in &out {
+            let err = o.result.as_ref().unwrap_err();
+            assert!(err.contains("unknown kernel"), "{err}");
+        }
     }
 }

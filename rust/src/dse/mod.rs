@@ -12,28 +12,35 @@
 //!    The kernel is any `kernels::KernelSource` — a builtin generator,
 //!    a user `.cfd` file (`hbmflow dse --file my.cfd`), or an inline
 //!    program — so exploration is not limited to the published trio;
-//!  * [`eval`] — a parallel evaluator running `olympus::generate` →
-//!    `hls::estimate` → `sim::simulate` per candidate, with memoized
-//!    kernel builds and deterministic result ordering;
+//!  * [`eval`] — a thin adapter turning design points into
+//!    `flow::FlowRequest`s and running them through the shared
+//!    `flow::Session` batch service (map → estimate → simulate per
+//!    candidate, parse/lower memoized in the session's artifact cache,
+//!    deterministic result ordering);
 //!  * [`pareto`] — feasibility filtering against the platform's resource
 //!    budget and Pareto-frontier extraction over
 //!    (GFLOPS, energy, BRAM/URAM/DSP, switch crossings);
 //!  * [`report`] — ranked text / JSON / CSV output.
 //!
 //! Entry points: the `hbmflow dse` CLI subcommand, the
-//! `examples/design_space.rs` thin client, and [`explore`] for
-//! programmatic use. Every future optimization PR should prove its win
-//! against the whole space (is the new point on the frontier?) instead
-//! of a single hand-picked configuration.
+//! `examples/design_space.rs` thin client, and [`explore`] /
+//! [`explore_in`] for programmatic use ([`explore_in`] shares a caller's
+//! `flow::Session`, so a sweep reuses — and its cache counters witness —
+//! one parse + one lower per distinct program). Every future
+//! optimization PR should prove its win against the whole space (is the
+//! new point on the frontier?) instead of a single hand-picked
+//! configuration.
 
 pub mod eval;
 pub mod pareto;
 pub mod report;
 pub mod space;
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use crate::datatype::DataType;
+use crate::flow;
 use crate::platform::Platform;
 
 pub use eval::{EvalOutcome, Evaluated};
@@ -123,15 +130,52 @@ impl Exploration {
 /// dataflow to the kernel's nest count), deduplicate, evaluate in
 /// parallel, and extract the feasible Pareto frontier.
 ///
-/// `threads = None` uses one worker per available core.
+/// `threads = None` uses one worker per available core. Creates a
+/// throwaway `flow::Session`; use [`explore_in`] to share a cache (and
+/// its hit/miss counters) across sweeps.
 pub fn explore(
     space: &SearchSpace,
     platform: &Platform,
     n_elements: u64,
     threads: Option<usize>,
 ) -> Result<Exploration, String> {
+    explore_in(
+        &flow::Session::new(platform.clone()),
+        space,
+        n_elements,
+        threads,
+    )
+}
+
+/// [`explore`] over a caller-owned `flow::Session`: the sweep performs
+/// exactly one parse + one lower per distinct (source, degree) through
+/// the session's artifact cache, no matter how many dtypes, options, or
+/// CU counts the axes multiply out to.
+pub fn explore_in(
+    session: &flow::Session,
+    space: &SearchSpace,
+    n_elements: u64,
+    threads: Option<usize>,
+) -> Result<Exploration, String> {
     let mut points = space.enumerate();
-    let kernels = eval::build_kernels(&space.source, &points)?;
+
+    // snapshot file sources to their current text so every candidate —
+    // and the normalization below — evaluates ONE program even if the
+    // .cfd file is edited mid-sweep (the old evaluator's single
+    // up-front read, preserved)
+    let source = space.source.snapshot()?;
+
+    // one lowered kernel per degree, straight from the session cache —
+    // the evaluator's requests below hit the same entries
+    let mut lowered: HashMap<usize, Arc<flow::Lowered>> = HashMap::new();
+    for pt in &points {
+        if !lowered.contains_key(&pt.p) {
+            let l = session
+                .lowered(&source, pt.p)
+                .map_err(|e| e.to_string())?;
+            lowered.insert(pt.p, l);
+        }
+    }
 
     // normalize: a kernel with fewer nests than the requested dataflow
     // decomposition caps at one group per nest (cli::cmd_compile does
@@ -139,7 +183,7 @@ pub fn explore(
     // access degree is the uncapped plan (both collapse to duplicates
     // the dedup below removes)
     for pt in &mut points {
-        let k = &kernels[&(pt.kernel.clone(), pt.p)];
+        let k = &lowered[&pt.p].kernel;
         if let Some(g) = pt.opts.dataflow {
             pt.opts.dataflow = Some(g.min(k.nests.len()));
         }
@@ -152,7 +196,7 @@ pub fn explore(
     let mut seen = HashSet::new();
     points.retain(|pt| seen.insert(pt.fingerprint()));
 
-    let outcomes = eval::evaluate(points, &kernels, platform, n_elements, threads);
+    let outcomes = eval::evaluate(session, &source, points, n_elements, threads);
 
     let feasible: Vec<usize> = (0..outcomes.len())
         .filter(|&i| outcomes[i].is_feasible())
@@ -177,6 +221,7 @@ pub fn explore(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::KernelSource;
     use crate::olympus::BusMode;
 
     fn small_exploration() -> Exploration {
@@ -280,6 +325,21 @@ mod tests {
         let ex = explore(&s, &Platform::alveo_u280(), 100_000, Some(1)).unwrap();
         assert_eq!(ex.enumerated(), 1, "inert cap collapses onto uncapped");
         assert_eq!(ex.outcomes[0].point.opts.partition_cap, None);
+    }
+
+    #[test]
+    fn unknown_kernel_is_an_exploration_error() {
+        let s = SearchSpace::default_for("warp-drive");
+        let err = explore(&s, &Platform::alveo_u280(), 100_000, Some(1)).unwrap_err();
+        assert!(err.contains("unknown kernel"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_source_is_an_exploration_error() {
+        let mut s = SearchSpace::for_source(KernelSource::file("/no/such.cfd"));
+        s.degrees = vec![7];
+        let err = explore(&s, &Platform::alveo_u280(), 100_000, Some(1)).unwrap_err();
+        assert!(err.contains("/no/such.cfd"), "{err}");
     }
 
     #[test]

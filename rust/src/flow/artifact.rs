@@ -1,0 +1,629 @@
+//! Versioned JSON persistence for the pipeline's staged artifacts.
+//!
+//! Every [`Artifact`] document is self-contained: it embeds the
+//! canonical program source plus the configuration that produced the
+//! stage, and it records the stage's derived summary numbers. Reload
+//! re-derives the in-memory values from the embedded source through the
+//! same deterministic stage transitions, then cross-checks every
+//! recorded section against the recomputation — so a reloaded artifact
+//! is guaranteed to produce bit-identical downstream results, and an
+//! artifact written by an incompatible pipeline build (or hand-edited)
+//! is rejected instead of silently re-interpreted.
+//!
+//! Schema version policy: [`SCHEMA_VERSION`] bumps whenever a stage's
+//! semantics change (new rewrite rules, different banking, a retimed
+//! simulator). Readers reject any other version — there is no silent
+//! migration, because the recorded numbers would no longer reproduce.
+
+use std::path::Path;
+
+use crate::datatype::DataType;
+use crate::hls::Estimate;
+use crate::olympus::{BusMode, ChannelPolicy, MemoryKind, OlympusOpts, SystemSpec};
+use crate::platform::{Platform, Resources};
+use crate::sim::SimResult;
+use crate::util::json::{self, Json};
+
+use super::{
+    parse_text, EvalKind, Evaluated, FlowError, Lowered, Mapped, Parsed, RewriteTrace,
+};
+
+/// Artifact document format version (see the module docs for the bump
+/// policy).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Any pipeline stage, wrapped for persistence.
+#[derive(Debug, Clone)]
+pub enum Artifact {
+    Parsed(Parsed),
+    Lowered(Lowered),
+    Mapped(Mapped),
+    Evaluated(Evaluated),
+}
+
+impl Artifact {
+    /// The stage tag written into the document.
+    pub fn stage(&self) -> &'static str {
+        match self {
+            Artifact::Parsed(_) => "parsed",
+            Artifact::Lowered(_) => "lowered",
+            Artifact::Mapped(_) => "mapped",
+            Artifact::Evaluated(_) => "evaluated",
+        }
+    }
+
+    /// Serialize to the versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let pv = match self {
+            Artifact::Parsed(a) => &a.provenance,
+            Artifact::Lowered(a) => &a.provenance,
+            Artifact::Mapped(a) => &a.provenance,
+            Artifact::Evaluated(a) => &a.provenance,
+        };
+        let mut pairs = vec![
+            ("schema", Json::Num(SCHEMA_VERSION as f64)),
+            ("stage", Json::str(self.stage())),
+            ("kernel", Json::str(pv.kernel.as_str())),
+            ("p", Json::Num(pv.p as f64)),
+            ("fingerprint", Json::str(pv.fingerprint.as_str())),
+            ("source", Json::str(pv.source.as_str())),
+        ];
+        match self {
+            Artifact::Parsed(a) => {
+                pairs.push(("rewrite", rewrite_json(&a.rewrite)));
+            }
+            Artifact::Lowered(a) => {
+                pairs.push(("rewrite", rewrite_json(&a.rewrite)));
+                pairs.push(("lowered", lowered_json(a)));
+            }
+            Artifact::Mapped(a) => {
+                pairs.push(("rewrite", rewrite_json(&a.rewrite)));
+                pairs.push(("opts", opts_to_json(&a.opts)));
+                pairs.push(("platform", Json::str(a.platform.name.as_str())));
+                pairs.push(("system", system_json(&a.spec)));
+            }
+            // evaluated artifacts record results, not the rewrite trace
+            // (it is re-derived and unchecked on load)
+            Artifact::Evaluated(a) => {
+                pairs.push(("opts", opts_to_json(&a.opts)));
+                pairs.push(("platform", Json::str(a.platform_name.as_str())));
+                pairs.push(("eval", kind_json(a.kind)));
+                pairs.push(("hls", hls_json(&a.hls)));
+                pairs.push((
+                    "sim",
+                    match &a.sim {
+                        Some(r) => sim_json(r),
+                        None => Json::Null,
+                    },
+                ));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// Reconstruct a stage from its document: re-derive from the
+    /// embedded source and cross-check every recorded section.
+    /// `origin` names the document in error messages.
+    pub fn from_json(v: &Json, origin: &str) -> Result<Artifact, FlowError> {
+        let schema = v
+            .get("schema")
+            .as_u64()
+            .ok_or_else(|| FlowError::artifact(format!("{origin}: missing schema")))?;
+        if schema != SCHEMA_VERSION {
+            return Err(FlowError::artifact(format!(
+                "{origin}: artifact schema v{schema}, this build reads v{SCHEMA_VERSION} \
+                 (regenerate the artifact with this build)"
+            )));
+        }
+        let stage = req_str(v, "stage", origin)?;
+        if !["parsed", "lowered", "mapped", "evaluated"].contains(&stage) {
+            return Err(FlowError::artifact(format!(
+                "{origin}: unknown stage {stage} (parsed|lowered|mapped|evaluated)"
+            )));
+        }
+        let kernel = req_str(v, "kernel", origin)?.to_string();
+        let p = req_num(v, "p", origin)? as usize;
+        let recorded_fp = req_str(v, "fingerprint", origin)?.to_string();
+        let source = req_str(v, "source", origin)?.to_string();
+
+        let parsed = parse_text(&kernel, origin, p, source)?;
+        if parsed.provenance.fingerprint != recorded_fp {
+            return Err(FlowError::artifact(format!(
+                "{origin}: fingerprint {} does not match the embedded source ({}) — \
+                 artifact edited?",
+                recorded_fp, parsed.provenance.fingerprint
+            )));
+        }
+        if stage != "evaluated" {
+            verify(v, "rewrite", &rewrite_json(&parsed.rewrite), origin)?;
+        }
+        if stage == "parsed" {
+            return Ok(Artifact::Parsed(parsed));
+        }
+
+        let lowered = parsed.lower()?;
+        if stage == "lowered" {
+            verify(v, "lowered", &lowered_json(&lowered), origin)?;
+            return Ok(Artifact::Lowered(lowered));
+        }
+
+        let opts = opts_from_json(v.get("opts"))
+            .map_err(|e| FlowError::artifact(format!("{origin}: opts: {e}")))?;
+        let platform = platform_from_name(req_str(v, "platform", origin)?, origin)?;
+        let mapped = lowered.map(&opts, &platform)?;
+        match stage {
+            "mapped" => {
+                verify(v, "system", &system_json(&mapped.spec), origin)?;
+                Ok(Artifact::Mapped(mapped))
+            }
+            // the guard above admitted only the four known tags
+            _ => {
+                let kind = kind_from_json(v.get("eval"))
+                    .map_err(|e| FlowError::artifact(format!("{origin}: eval: {e}")))?;
+                let ev = mapped.evaluate(kind);
+                verify(v, "hls", &hls_json(&ev.hls), origin)?;
+                let sim = match &ev.sim {
+                    Some(r) => sim_json(r),
+                    None => Json::Null,
+                };
+                verify(v, "sim", &sim, origin)?;
+                Ok(Artifact::Evaluated(ev))
+            }
+        }
+    }
+
+    /// Write the document to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), FlowError> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string()).map_err(|e| {
+            FlowError::artifact(format!("cannot write {}: {e}", path.display()))
+        })
+    }
+
+    /// Read and reconstruct a document from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Artifact, FlowError> {
+        let path = path.as_ref();
+        let origin = format!("artifact {}", path.display());
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| FlowError::artifact(format!("cannot read {}: {e}", path.display())))?;
+        let v = json::parse(&text)
+            .map_err(|e| FlowError::artifact(format!("{origin}: {e}")))?;
+        Artifact::from_json(&v, &origin)
+    }
+}
+
+// ---- section encoders (deterministic: BTreeMap key order) ----
+
+fn rewrite_json(rw: &RewriteTrace) -> Json {
+    Json::obj(vec![
+        ("naive_flops", Json::Num(rw.naive_flops as f64)),
+        ("optimized_flops", Json::Num(rw.optimized_flops as f64)),
+    ])
+}
+
+fn lowered_json(l: &Lowered) -> Json {
+    Json::obj(vec![
+        ("nests", Json::Num(l.kernel.nests.len() as f64)),
+        ("buffers", Json::Num(l.kernel.buffers.len() as f64)),
+        (
+            "flops_per_element",
+            Json::Num(l.kernel.flops_per_element() as f64),
+        ),
+        (
+            "max_read_degree",
+            Json::Num(crate::ir::access::max_read_degree(&l.kernel) as f64),
+        ),
+        (
+            "temp_lifetimes",
+            Json::Num(l.liveness.intervals.iter().flatten().count() as f64),
+        ),
+        (
+            "shareable_pairs",
+            Json::Num(l.liveness.compat.len() as f64),
+        ),
+    ])
+}
+
+fn system_json(spec: &SystemSpec) -> Json {
+    let mem = spec.memory.stats(&spec.kernel);
+    let channels: Vec<Json> = spec
+        .channels
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                (
+                    "read",
+                    Json::Arr(c.read.iter().map(|&x| Json::Num(x as f64)).collect()),
+                ),
+                (
+                    "write",
+                    Json::Arr(c.write.iter().map(|&x| Json::Num(x as f64)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(spec.name.as_str())),
+        ("lanes", Json::Num(spec.lanes as f64)),
+        ("bus_bits", Json::Num(spec.bus_bits as f64)),
+        ("serial_packing", Json::Bool(spec.serial_packing)),
+        ("num_cus", Json::Num(spec.num_cus as f64)),
+        ("batch_elements", Json::Num(spec.batch_elements as f64)),
+        ("double_buffering", Json::Bool(spec.double_buffering)),
+        ("dataflow", Json::Bool(spec.dataflow)),
+        ("schedule_groups", Json::Num(spec.schedule.num_groups() as f64)),
+        ("total_pcs", Json::Num(spec.total_pcs() as f64)),
+        ("mem_banks", Json::Num(mem.banks as f64)),
+        ("mem_shared_words", Json::Num(mem.shared_words as f64)),
+        ("mem_unshared_words", Json::Num(mem.unshared_words as f64)),
+        ("channels", Json::Arr(channels)),
+    ])
+}
+
+fn resources_json(r: &Resources) -> Json {
+    Json::obj(vec![
+        ("lut", Json::Num(r.lut as f64)),
+        ("ff", Json::Num(r.ff as f64)),
+        ("bram", Json::Num(r.bram as f64)),
+        ("uram", Json::Num(r.uram as f64)),
+        ("dsp", Json::Num(r.dsp as f64)),
+    ])
+}
+
+fn hls_json(e: &Estimate) -> Json {
+    Json::obj(vec![
+        ("mults", Json::Num(e.mults as f64)),
+        ("adds", Json::Num(e.adds as f64)),
+        ("ii", Json::Num(e.ii as f64)),
+        ("fmax_mhz", Json::Num(e.fmax_mhz)),
+        ("slr_span", Json::Num(e.slr_span as f64)),
+        ("per_cu", resources_json(&e.per_cu)),
+        ("total", resources_json(&e.total)),
+    ])
+}
+
+fn sim_json(r: &SimResult) -> Json {
+    let stages: Vec<Json> = r
+        .stage_intervals
+        .iter()
+        .map(|(name, cycles)| {
+            Json::obj(vec![
+                ("stage", Json::str(name.as_str())),
+                ("cycles", Json::Num(*cycles as f64)),
+            ])
+        })
+        .collect();
+    let channels: Vec<Json> = r
+        .channel_utilization
+        .iter()
+        .map(|(pc, u)| {
+            Json::obj(vec![
+                ("channel", Json::Num(*pc as f64)),
+                ("utilization", Json::Num(*u)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("label", Json::str(r.label.as_str())),
+        ("total_time_s", Json::Num(r.total_time_s)),
+        ("cu_time_s", Json::Num(r.cu_time_s)),
+        ("transfer_time_s", Json::Num(r.transfer_time_s)),
+        ("gflops_system", Json::Num(r.gflops_system)),
+        ("gflops_cu", Json::Num(r.gflops_cu)),
+        ("freq_mhz", Json::Num(r.freq_mhz)),
+        ("ideal_gflops", Json::Num(r.ideal_gflops)),
+        ("efficiency_vs_ideal", Json::Num(r.efficiency_vs_ideal)),
+        ("avg_power_w", Json::Num(r.avg_power_w)),
+        ("efficiency_gflops_w", Json::Num(r.efficiency_gflops_w)),
+        ("energy_j", Json::Num(r.energy_j)),
+        ("batches", Json::Num(r.batches as f64)),
+        ("batch_elements", Json::Num(r.batch_elements as f64)),
+        ("bottleneck", Json::str(r.bottleneck.as_str())),
+        ("total_flops", Json::Num(r.total_flops as f64)),
+        ("max_channel_utilization", Json::Num(r.max_channel_utilization)),
+        ("switch_crossings", Json::Num(r.switch_crossings as f64)),
+        ("hbm_fill_cycles", Json::Num(r.hbm_fill_cycles as f64)),
+        ("conflict_stalls", Json::Num(r.conflict_stalls as f64)),
+        ("mem_banks", Json::Num(r.mem_banks as f64)),
+        ("mem_shared_words", Json::Num(r.mem_shared_words as f64)),
+        ("mem_unshared_words", Json::Num(r.mem_unshared_words as f64)),
+        ("stage_intervals", Json::Arr(stages)),
+        ("channel_utilization", Json::Arr(channels)),
+    ])
+}
+
+fn kind_json(kind: EvalKind) -> Json {
+    match kind {
+        EvalKind::Estimate => Json::obj(vec![("kind", Json::str("estimate"))]),
+        EvalKind::Simulate { elements } => Json::obj(vec![
+            ("kind", Json::str("simulate")),
+            ("elements", Json::Num(elements as f64)),
+        ]),
+    }
+}
+
+fn kind_from_json(v: &Json) -> Result<EvalKind, String> {
+    match v.get("kind").as_str() {
+        Some("estimate") => Ok(EvalKind::Estimate),
+        Some("simulate") => Ok(EvalKind::Simulate {
+            elements: v
+                .get("elements")
+                .as_u64()
+                .ok_or("simulate kind needs elements")?,
+        }),
+        other => Err(format!("unknown eval kind {other:?}")),
+    }
+}
+
+/// Encode designer options; the exact inverse of [`opts_from_json`].
+pub fn opts_to_json(o: &OlympusOpts) -> Json {
+    let policy = match &o.channel_policy {
+        ChannelPolicy::Pinned(pins) => Json::obj(vec![(
+            "pinned",
+            Json::Arr(
+                pins.iter()
+                    .map(|cu| {
+                        Json::Arr(cu.iter().map(|&c| Json::Num(c as f64)).collect())
+                    })
+                    .collect(),
+            ),
+        )]),
+        p => Json::str(p.name()),
+    };
+    Json::obj(vec![
+        ("double_buffering", Json::Bool(o.double_buffering)),
+        ("bus", Json::str(o.bus.name())),
+        ("memory", Json::str(o.memory.name())),
+        ("dataflow", opt_num(o.dataflow)),
+        ("mem_sharing", Json::Bool(o.mem_sharing)),
+        ("partition_cap", opt_num(o.partition_cap)),
+        ("dtype", Json::str(o.dtype.name())),
+        ("num_cus", Json::Num(o.num_cus as f64)),
+        ("fifo_depth", opt_num(o.fifo_depth)),
+        ("lut_mult_shift", Json::Bool(o.lut_mult_shift)),
+        ("target_freq_mhz", Json::Num(o.target_freq_mhz)),
+        ("channel_policy", policy),
+    ])
+}
+
+/// Decode designer options written by [`opts_to_json`].
+pub fn opts_from_json(v: &Json) -> Result<OlympusOpts, String> {
+    let bus_name = v.get("bus").as_str().ok_or("missing bus")?;
+    let bus = BusMode::parse(bus_name).ok_or_else(|| format!("unknown bus {bus_name}"))?;
+    let mem_name = v.get("memory").as_str().ok_or("missing memory")?;
+    let memory =
+        MemoryKind::parse(mem_name).ok_or_else(|| format!("unknown memory {mem_name}"))?;
+    let dt_name = v.get("dtype").as_str().ok_or("missing dtype")?;
+    let dtype =
+        DataType::parse(dt_name).ok_or_else(|| format!("unknown dtype {dt_name}"))?;
+    let channel_policy = match v.get("channel_policy") {
+        Json::Str(s) => {
+            ChannelPolicy::parse(s).ok_or_else(|| format!("unknown policy {s}"))?
+        }
+        pinned @ Json::Obj(_) => {
+            let pins = pinned
+                .get("pinned")
+                .as_arr()
+                .ok_or("pinned policy needs channel lists")?;
+            let mut cus = Vec::new();
+            for cu in pins {
+                let list = cu.as_arr().ok_or("pinned entry must be an array")?;
+                let mut chans = Vec::new();
+                for c in list {
+                    chans.push(c.as_u64().ok_or("pinned channel must be a number")? as u32);
+                }
+                cus.push(chans);
+            }
+            ChannelPolicy::Pinned(cus)
+        }
+        other => return Err(format!("bad channel_policy {other}")),
+    };
+    Ok(OlympusOpts {
+        double_buffering: req_bool(v, "double_buffering")?,
+        bus,
+        memory,
+        dataflow: opt_usize(v, "dataflow")?,
+        mem_sharing: req_bool(v, "mem_sharing")?,
+        partition_cap: opt_usize(v, "partition_cap")?,
+        dtype,
+        num_cus: v.get("num_cus").as_u64().ok_or("missing num_cus")? as usize,
+        fifo_depth: opt_usize(v, "fifo_depth")?,
+        lut_mult_shift: req_bool(v, "lut_mult_shift")?,
+        target_freq_mhz: v
+            .get("target_freq_mhz")
+            .as_f64()
+            .ok_or("missing target_freq_mhz")?,
+        channel_policy,
+    })
+}
+
+fn platform_from_name(name: &str, origin: &str) -> Result<Platform, FlowError> {
+    match name {
+        "xilinx_u280" => Ok(Platform::alveo_u280()),
+        other => Err(FlowError::artifact(format!(
+            "{origin}: unknown platform {other} (this build models xilinx_u280)"
+        ))),
+    }
+}
+
+// ---- decode / verify helpers ----
+
+fn opt_num(x: Option<usize>) -> Json {
+    match x {
+        Some(n) => Json::Num(n as f64),
+        None => Json::Null,
+    }
+}
+
+fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>, String> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        Json::Num(n) => Ok(Some(*n as usize)),
+        other => Err(format!("bad {key}: {other}")),
+    }
+}
+
+fn req_bool(v: &Json, key: &str) -> Result<bool, String> {
+    match v.get(key) {
+        Json::Bool(b) => Ok(*b),
+        other => Err(format!("bad {key}: {other}")),
+    }
+}
+
+fn req_str<'a>(v: &'a Json, key: &str, origin: &str) -> Result<&'a str, FlowError> {
+    v.get(key)
+        .as_str()
+        .ok_or_else(|| FlowError::artifact(format!("{origin}: missing {key}")))
+}
+
+fn req_num(v: &Json, key: &str, origin: &str) -> Result<f64, FlowError> {
+    v.get(key)
+        .as_f64()
+        .ok_or_else(|| FlowError::artifact(format!("{origin}: missing {key}")))
+}
+
+/// A recorded section must equal its recomputation exactly — the drift
+/// guard behind the schema version policy.
+fn verify(v: &Json, key: &str, recomputed: &Json, origin: &str) -> Result<(), FlowError> {
+    let recorded = v.get(key);
+    if recorded != recomputed {
+        return Err(FlowError::artifact(format!(
+            "{origin}: recorded {key} section disagrees with this build's pipeline — \
+             the artifact came from an incompatible build (schema policy: regenerate)"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::Flow;
+    use crate::kernels::KernelSource;
+
+    fn pinned_opts() -> OlympusOpts {
+        let mut o = OlympusOpts::fixed_point(DataType::Fx32).with_cus(2);
+        o.partition_cap = Some(4);
+        o.channel_policy = ChannelPolicy::Pinned(vec![vec![0, 1], vec![2, 3]]);
+        o
+    }
+
+    #[test]
+    fn opts_roundtrip_through_json() {
+        for o in [
+            OlympusOpts::baseline(),
+            OlympusOpts::dataflow(7),
+            OlympusOpts::mem_sharing(),
+            OlympusOpts::bus_serial().on_ddr4(),
+            pinned_opts(),
+        ] {
+            let j = opts_to_json(&o);
+            let back = opts_from_json(&j).unwrap();
+            assert_eq!(format!("{o:?}"), format!("{back:?}"), "{j}");
+        }
+    }
+
+    #[test]
+    fn parsed_artifact_roundtrips_in_memory() {
+        let parsed = Flow::from_source(KernelSource::builtin("helmholtz"))
+            .parse(7)
+            .unwrap();
+        let j = Artifact::Parsed(parsed.clone()).to_json();
+        let back = Artifact::from_json(&j, "test").unwrap();
+        let Artifact::Parsed(b) = back else {
+            panic!("stage changed");
+        };
+        assert_eq!(b.provenance, parsed.provenance);
+        assert_eq!(b.module, parsed.module);
+    }
+
+    #[test]
+    fn future_schema_versions_are_rejected() {
+        let parsed = Flow::from_source(KernelSource::builtin("gradient"))
+            .parse(8)
+            .unwrap();
+        let text = Artifact::Parsed(parsed).to_json().to_string();
+        let bumped = text.replace(
+            &format!("\"schema\":{SCHEMA_VERSION}"),
+            "\"schema\":99",
+        );
+        assert_ne!(text, bumped, "replacement must hit");
+        let v = json::parse(&bumped).unwrap();
+        let err = Artifact::from_json(&v, "test").unwrap_err();
+        assert!(err.to_string().contains("schema v99"), "{err}");
+    }
+
+    #[test]
+    fn unknown_stages_are_rejected_up_front() {
+        let parsed = Flow::from_source(KernelSource::builtin("gradient"))
+            .parse(8)
+            .unwrap();
+        let text = Artifact::Parsed(parsed).to_json().to_string();
+        let wrong = text.replace("\"stage\":\"parsed\"", "\"stage\":\"estimate\"");
+        assert_ne!(text, wrong, "replacement must hit");
+        let v = json::parse(&wrong).unwrap();
+        let err = Artifact::from_json(&v, "test").unwrap_err();
+        // named immediately — not a misleading missing-opts error later
+        assert!(err.to_string().contains("unknown stage estimate"), "{err}");
+    }
+
+    #[test]
+    fn tampered_fingerprints_are_rejected() {
+        let parsed = Flow::from_source(KernelSource::builtin("gradient"))
+            .parse(8)
+            .unwrap();
+        let fp = parsed.provenance.fingerprint.clone();
+        let text = Artifact::Parsed(parsed).to_json().to_string();
+        let tampered = text.replace(&fp, "0000000000000000");
+        assert_ne!(text, tampered);
+        let v = json::parse(&tampered).unwrap();
+        let err = Artifact::from_json(&v, "test").unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn drifted_sections_are_rejected() {
+        let lowered = Flow::from_source(KernelSource::builtin("helmholtz"))
+            .parse(7)
+            .unwrap()
+            .lower()
+            .unwrap();
+        let text = Artifact::Lowered(lowered).to_json().to_string();
+        // pretend a different build recorded fewer nests
+        let drifted = text.replace("\"nests\":7", "\"nests\":6");
+        assert_ne!(text, drifted, "helmholtz lowers to 7 nests");
+        let v = json::parse(&drifted).unwrap();
+        let err = Artifact::from_json(&v, "test").unwrap_err();
+        assert!(err.to_string().contains("incompatible build"), "{err}");
+    }
+
+    #[test]
+    fn save_and_load_roundtrip_on_disk() {
+        let mapped = Flow::from_source(KernelSource::builtin("helmholtz"))
+            .parse(7)
+            .unwrap()
+            .lower()
+            .unwrap()
+            .map(
+                &OlympusOpts::fixed_point(DataType::Fx32),
+                &Platform::alveo_u280(),
+            )
+            .unwrap();
+        let path = std::env::temp_dir().join("hbmflow_artifact_unit.json");
+        Artifact::Mapped(mapped.clone()).save(&path).unwrap();
+        let back = Artifact::load(&path).unwrap();
+        let Artifact::Mapped(b) = back else {
+            panic!("stage changed");
+        };
+        assert_eq!(b.spec.name, mapped.spec.name);
+        assert_eq!(b.spec.batch_elements, mapped.spec.batch_elements);
+        assert_eq!(format!("{:?}", b.opts), format!("{:?}", mapped.opts));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_files_report_the_path() {
+        let err = Artifact::load("/no/such/artifact.json").unwrap_err();
+        assert!(err.to_string().contains("/no/such/artifact.json"), "{err}");
+    }
+}

@@ -1,0 +1,499 @@
+//! The typed compile pipeline — THE public API of the crate.
+//!
+//! The paper's tool flow is a sequence of well-defined stages (DSL →
+//! lossless tensor rewriting → affine lowering → Olympus system
+//! generation → Mnemosyne memory planning → HLS/sim evaluation). This
+//! module exposes that pipeline as *typed staged artifacts* with
+//! explicit fallible transitions, so every consumer — the CLI, the dse
+//! explorer, the runtime coordinator, the examples — drives one
+//! pipeline definition instead of re-wiring the stages by hand:
+//!
+//! ```text
+//! Flow::from_source(KernelSource)
+//!    │ parse(p)         parse + semantic check + lossless rewrite
+//!    ▼
+//! Parsed               AST + rewritten teil module + rewrite trace
+//!    │ lower()          affine lowering + access/liveness analyses
+//!    ▼
+//! Lowered              affine kernel + access map + liveness
+//!    │ map(opts, plat)  Olympus generation + Mnemosyne memory plan
+//!    ▼
+//! Mapped               SystemSpec (schedule, plan, routed channels)
+//!    │ estimate() / simulate(n)
+//!    ▼
+//! Evaluated            HLS estimate, optionally a SimResult
+//! ```
+//!
+//! Every stage is an owned, serializable value: [`Artifact`] wraps any
+//! stage in a versioned JSON document (`util::json`) that embeds the
+//! canonical program source, so artifacts persist to disk and reload to
+//! values that produce bit-identical downstream results
+//! (`hbmflow compile --save-artifact` / `--from-artifact`). On top of
+//! the stages, [`Session`] is a thread-safe artifact cache keyed by
+//! (source fingerprint, degree, options) that memoizes `Parsed` /
+//! `Lowered` across configurations and `Mapped` across evaluation
+//! kinds, and [`Session::evaluate_batch`] runs many configurations
+//! concurrently over the shared cache.
+//!
+//! ```
+//! use hbmflow::flow::Flow;
+//! use hbmflow::kernels::KernelSource;
+//! use hbmflow::olympus::OlympusOpts;
+//! use hbmflow::platform::Platform;
+//!
+//! let flow = Flow::from_source(KernelSource::builtin("helmholtz"));
+//! let mapped = flow
+//!     .parse(7)?
+//!     .lower()?
+//!     .map(&OlympusOpts::dataflow(7), &Platform::alveo_u280())?;
+//! let ev = mapped.estimate();
+//! assert!(ev.hls.fmax_mhz > 0.0);
+//! # Ok::<(), hbmflow::flow::FlowError>(())
+//! ```
+
+pub mod artifact;
+pub mod session;
+
+pub use artifact::{Artifact, SCHEMA_VERSION};
+pub use session::{FlowRequest, FlowResult, Session, SessionStats};
+
+use std::fmt;
+
+use crate::coordinator::{GenericWorkload, OracleCheck};
+use crate::dsl::{self, Program};
+use crate::hls::{self, Estimate};
+use crate::ir::affine::Kernel;
+use crate::ir::{access, liveness, lower, rewrite, teil};
+use crate::kernels::KernelSource;
+use crate::olympus::{self, OlympusOpts, SystemSpec};
+use crate::platform::Platform;
+use crate::sim::{self, SimResult};
+
+/// Which pipeline stage an error came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlowStage {
+    Parse,
+    Lower,
+    Map,
+    Evaluate,
+    Artifact,
+}
+
+impl FlowStage {
+    pub fn name(self) -> &'static str {
+        match self {
+            FlowStage::Parse => "parse",
+            FlowStage::Lower => "lower",
+            FlowStage::Map => "map",
+            FlowStage::Evaluate => "evaluate",
+            FlowStage::Artifact => "artifact",
+        }
+    }
+}
+
+/// A failed stage transition: the stage that refused plus the reason
+/// reported by the stage implementation (dsl/ir/olympus/mnemosyne).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlowError {
+    pub stage: FlowStage,
+    pub message: String,
+}
+
+impl FlowError {
+    pub(crate) fn parse(m: impl Into<String>) -> FlowError {
+        FlowError {
+            stage: FlowStage::Parse,
+            message: m.into(),
+        }
+    }
+
+    pub(crate) fn lower(m: impl Into<String>) -> FlowError {
+        FlowError {
+            stage: FlowStage::Lower,
+            message: m.into(),
+        }
+    }
+
+    pub(crate) fn map(m: impl Into<String>) -> FlowError {
+        FlowError {
+            stage: FlowStage::Map,
+            message: m.into(),
+        }
+    }
+
+    pub(crate) fn evaluate(m: impl Into<String>) -> FlowError {
+        FlowError {
+            stage: FlowStage::Evaluate,
+            message: m.into(),
+        }
+    }
+
+    pub(crate) fn artifact(m: impl Into<String>) -> FlowError {
+        FlowError {
+            stage: FlowStage::Artifact,
+            message: m.into(),
+        }
+    }
+}
+
+impl fmt::Display for FlowError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.stage.name(), self.message)
+    }
+}
+
+impl std::error::Error for FlowError {}
+
+/// Where an artifact chain came from: the kernel's display name, the
+/// degree it was generated at, the canonical program source, and the
+/// FNV-1a fingerprint of (name, source) that keys the [`Session`] cache
+/// and pins persisted artifacts to their program text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance {
+    pub kernel: String,
+    pub p: usize,
+    /// Hex FNV-1a 64 over `kernel NUL source`.
+    pub fingerprint: String,
+    /// The exact CFDlang text the chain was built from (artifacts embed
+    /// it, so a reload never depends on the original file still
+    /// existing or being unchanged).
+    pub source: String,
+}
+
+/// FNV-1a 64 fingerprint of a named program text, in hex.
+pub fn fingerprint(kernel: &str, source: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(kernel.as_bytes());
+    eat(&[0]);
+    eat(source.as_bytes());
+    format!("{h:016x}")
+}
+
+/// What the lossless rewriter did to the program (paper §3.4.1): the
+/// naive contraction cost versus the factorized mode-product cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RewriteTrace {
+    pub naive_flops: u64,
+    pub optimized_flops: u64,
+}
+
+/// Stage 1: the validated AST plus the rewritten teil module.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub provenance: Provenance,
+    /// Semantically validated CFDlang AST.
+    pub program: Program,
+    /// The rewritten (factorized, GEMM-shaped) teil module the hardware
+    /// flow implements — also the numerics oracle's semantics.
+    pub module: teil::Module,
+    pub rewrite: RewriteTrace,
+}
+
+/// Stage 2: the affine kernel plus its access/liveness analyses.
+#[derive(Debug, Clone)]
+pub struct Lowered {
+    pub provenance: Provenance,
+    pub module: teil::Module,
+    pub rewrite: RewriteTrace,
+    /// Loop nests + buffers (the datapath the hardware implements).
+    pub kernel: Kernel,
+    /// Per-buffer parallel-read demand (drives Mnemosyne banking).
+    pub access: access::AccessMap,
+    /// Temp-buffer lifetimes (drives Mnemosyne sharing).
+    pub liveness: liveness::Liveness,
+}
+
+/// Stage 3: the generated system for one `OlympusOpts` + platform.
+#[derive(Debug, Clone)]
+pub struct Mapped {
+    pub provenance: Provenance,
+    pub module: teil::Module,
+    pub rewrite: RewriteTrace,
+    pub opts: OlympusOpts,
+    pub platform: Platform,
+    /// Kernel, schedule, memory plan, routed channel map, batch sizing.
+    pub spec: SystemSpec,
+}
+
+/// How to evaluate a mapped system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalKind {
+    /// HLS resource + frequency estimate only.
+    Estimate,
+    /// Estimate plus the cycle-approximate system simulation over
+    /// `elements` spectral elements.
+    Simulate { elements: u64 },
+}
+
+/// Stage 4: measured answers for one configuration.
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    pub provenance: Provenance,
+    pub opts: OlympusOpts,
+    pub platform_name: String,
+    pub kind: EvalKind,
+    pub hls: Estimate,
+    /// Present for [`EvalKind::Simulate`] requests.
+    pub sim: Option<SimResult>,
+}
+
+/// Entry point: a program source about to enter the pipeline.
+///
+/// ```
+/// use hbmflow::flow::Flow;
+/// use hbmflow::kernels::KernelSource;
+///
+/// // any front-door source: builtin, .cfd file, or inline text
+/// let src = "var input a : [4]\nvar input b : [4]\n\
+///            var output c : [4]\nc = a + b\n";
+/// let parsed = Flow::from_source(KernelSource::inline("axpy", src)).parse(0)?;
+/// assert_eq!(parsed.provenance.kernel, "axpy");
+/// let lowered = parsed.lower()?;
+/// assert_eq!(lowered.kernel.nests.len(), 1);
+/// # Ok::<(), hbmflow::flow::FlowError>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct Flow {
+    source: KernelSource,
+}
+
+impl Flow {
+    pub fn from_source(source: KernelSource) -> Flow {
+        Flow { source }
+    }
+
+    pub fn source(&self) -> &KernelSource {
+        &self.source
+    }
+
+    /// Stage transition: resolve the source text at degree `p`, parse,
+    /// semantically validate, and run the lossless rewriter.
+    pub fn parse(&self, p: usize) -> Result<Parsed, FlowError> {
+        let text = self.source.source(p).map_err(FlowError::parse)?;
+        parse_text(&self.source.name(), &self.source.origin(), p, text)
+    }
+}
+
+/// Parse + rewrite a resolved program text (shared by [`Flow::parse`],
+/// the [`Session`] cache, and artifact reload, so all three produce the
+/// same `Parsed` value for the same text).
+pub(crate) fn parse_text(
+    kernel: &str,
+    origin: &str,
+    p: usize,
+    source: String,
+) -> Result<Parsed, FlowError> {
+    let program =
+        dsl::parse(&source).map_err(|e| FlowError::parse(format!("{origin}: {e}")))?;
+    let naive = teil::from_ast(&program)
+        .map_err(|e| FlowError::parse(format!("{origin}: {e}")))?;
+    let naive_flops = naive.flops();
+    let module = rewrite::optimize(naive);
+    let rewrite = RewriteTrace {
+        naive_flops,
+        optimized_flops: module.flops(),
+    };
+    Ok(Parsed {
+        provenance: Provenance {
+            kernel: kernel.to_string(),
+            p,
+            fingerprint: fingerprint(kernel, &source),
+            source,
+        },
+        program,
+        module,
+        rewrite,
+    })
+}
+
+impl Parsed {
+    /// Stage transition: lower the rewritten module to the affine
+    /// kernel and run the access/liveness analyses the memory planner
+    /// consumes.
+    pub fn lower(&self) -> Result<Lowered, FlowError> {
+        let kernel = lower::lower_kernel(&self.module, &self.provenance.kernel)
+            .map_err(|e| FlowError::lower(format!("{}: {e}", self.provenance.kernel)))?;
+        let access = access::analyze(&kernel);
+        let liveness = liveness::analyze(&kernel);
+        Ok(Lowered {
+            provenance: self.provenance.clone(),
+            module: self.module.clone(),
+            rewrite: self.rewrite,
+            kernel,
+            access,
+            liveness,
+        })
+    }
+}
+
+impl Lowered {
+    /// Stage transition: generate the system architecture (compute
+    /// units, lanes, schedule, memory plan, routed channels, batch
+    /// sizing) for one option set on one platform.
+    pub fn map(&self, opts: &OlympusOpts, platform: &Platform) -> Result<Mapped, FlowError> {
+        let spec =
+            olympus::generate(&self.kernel, opts, platform).map_err(FlowError::map)?;
+        Ok(Mapped {
+            provenance: self.provenance.clone(),
+            module: self.module.clone(),
+            rewrite: self.rewrite,
+            opts: opts.clone(),
+            platform: platform.clone(),
+            spec,
+        })
+    }
+}
+
+impl Mapped {
+    /// Stage transition: estimate, and for [`EvalKind::Simulate`] also
+    /// simulate, the generated system. Infallible — a `Mapped` value is
+    /// already a validated system.
+    pub fn evaluate(&self, kind: EvalKind) -> Evaluated {
+        let hls = hls::estimate(&self.spec, &self.platform);
+        let sim = match kind {
+            EvalKind::Estimate => None,
+            EvalKind::Simulate { elements } => {
+                Some(sim::simulate(&self.spec, &hls, &self.platform, elements))
+            }
+        };
+        Evaluated {
+            provenance: self.provenance.clone(),
+            opts: self.opts.clone(),
+            platform_name: self.platform.name.clone(),
+            kind,
+            hls,
+            sim,
+        }
+    }
+
+    /// HLS resource + frequency estimate only.
+    pub fn estimate(&self) -> Evaluated {
+        self.evaluate(EvalKind::Estimate)
+    }
+
+    /// Estimate plus the cycle-approximate system simulation.
+    pub fn simulate(&self, elements: u64) -> Evaluated {
+        self.evaluate(EvalKind::Simulate { elements })
+    }
+
+    /// The generic numerics oracle: the lowered kernel interpreted on
+    /// seeded inputs versus `teil::eval` of the rewritten module.
+    pub fn oracle(&self, seed: u64, elements: usize) -> Result<OracleCheck, FlowError> {
+        GenericWorkload::new(
+            &self.provenance.kernel,
+            self.module.clone(),
+            self.spec.kernel.clone(),
+            seed,
+        )
+        .check(elements)
+        .map_err(FlowError::evaluate)
+    }
+}
+
+impl Evaluated {
+    /// The simulation result, when this evaluation ran one.
+    pub fn sim(&self) -> Option<&SimResult> {
+        self.sim.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_chain_for_a_builtin() {
+        let flow = Flow::from_source(KernelSource::builtin("helmholtz"));
+        let parsed = flow.parse(7).unwrap();
+        assert_eq!(parsed.provenance.kernel, "helmholtz");
+        assert_eq!(parsed.provenance.p, 7);
+        assert!(parsed.rewrite.optimized_flops < parsed.rewrite.naive_flops);
+        let lowered = parsed.lower().unwrap();
+        assert!(!lowered.kernel.nests.is_empty());
+        assert_eq!(lowered.access.read_degree.len(), lowered.kernel.buffers.len());
+        let mapped = lowered
+            .map(&OlympusOpts::dataflow(7), &Platform::alveo_u280())
+            .unwrap();
+        assert_eq!(mapped.spec.schedule.num_groups(), 7);
+        let ev = mapped.simulate(100_000);
+        assert!(ev.sim().is_some());
+        assert!(ev.sim().unwrap().gflops_system > 0.0);
+        assert!(ev.hls.fmax_mhz > 0.0);
+    }
+
+    #[test]
+    fn estimate_kind_skips_the_simulation() {
+        let mapped = Flow::from_source(KernelSource::builtin("gradient"))
+            .parse(8)
+            .unwrap()
+            .lower()
+            .unwrap()
+            .map(&OlympusOpts::baseline(), &Platform::alveo_u280())
+            .unwrap();
+        let ev = mapped.estimate();
+        assert_eq!(ev.kind, EvalKind::Estimate);
+        assert!(ev.sim().is_none());
+        assert!(ev.hls.ops() > 0);
+    }
+
+    #[test]
+    fn parse_errors_name_the_stage_and_origin() {
+        let bad = KernelSource::inline("bad", "var input a : [2]\na = = a\n");
+        let err = Flow::from_source(bad).parse(0).unwrap_err();
+        assert_eq!(err.stage, FlowStage::Parse);
+        assert!(err.to_string().starts_with("parse:"), "{err}");
+        assert!(err.to_string().contains("inline bad"), "{err}");
+    }
+
+    #[test]
+    fn map_errors_carry_the_olympus_reason() {
+        let lowered = Flow::from_source(KernelSource::builtin("helmholtz"))
+            .parse(7)
+            .unwrap()
+            .lower()
+            .unwrap();
+        let err = lowered
+            .map(
+                &OlympusOpts::double_buffering().with_cus(17),
+                &Platform::alveo_u280(),
+            )
+            .unwrap_err();
+        assert_eq!(err.stage, FlowStage::Map);
+        assert!(err.to_string().contains("num_cus"), "{err}");
+    }
+
+    #[test]
+    fn fingerprints_separate_name_text_and_degree() {
+        let a = fingerprint("k", "x = y\n");
+        assert_eq!(a, fingerprint("k", "x = y\n"));
+        assert_ne!(a, fingerprint("k2", "x = y\n"));
+        assert_ne!(a, fingerprint("k", "x = z\n"));
+        // builtins fold p into the generated text, so degrees differ too
+        let h7 = Flow::from_source(KernelSource::builtin("helmholtz"))
+            .parse(7)
+            .unwrap();
+        let h11 = Flow::from_source(KernelSource::builtin("helmholtz"))
+            .parse(11)
+            .unwrap();
+        assert_ne!(h7.provenance.fingerprint, h11.provenance.fingerprint);
+    }
+
+    #[test]
+    fn oracle_is_exact_for_f64_lowering() {
+        let mapped = Flow::from_source(KernelSource::builtin("helmholtz"))
+            .parse(7)
+            .unwrap()
+            .lower()
+            .unwrap()
+            .map(&OlympusOpts::baseline(), &Platform::alveo_u280())
+            .unwrap();
+        let o = mapped.oracle(2024, 2).unwrap();
+        assert_eq!(o.mse, 0.0, "exact lowering: {}", o.mse);
+    }
+}

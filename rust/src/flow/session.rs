@@ -1,0 +1,390 @@
+//! The shared artifact cache and batch evaluation service.
+//!
+//! A [`Session`] owns a platform model and memoizes pipeline stages
+//! across configurations: `Parsed` and `Lowered` are keyed by the
+//! source fingerprint (one parse + one lower per distinct program text,
+//! no matter how many option sets evaluate it), `Mapped` is keyed by
+//! (fingerprint, options) and shared across evaluation kinds. The cache
+//! is a plain mutex: parse/lower run *under* the lock, so concurrent
+//! requests for the same program wait for the first computation instead
+//! of duplicating it — the once-per-key guarantee
+//! [`Session::stats`]-based regression tests pin. Mapping (Olympus
+//! generation) runs outside the lock; a rare race there re-generates a
+//! spec and keeps the first insert.
+//!
+//! [`Session::evaluate_batch`] is the paper-flow counterpart of a
+//! request batch in a serving system: many (source, degree, options,
+//! evaluation) requests run concurrently on a scoped-thread pool over
+//! the shared cache, with results in request order. It absorbs the
+//! worker pool that used to be private to `dse::eval`.
+//!
+//! ```
+//! use hbmflow::flow::{EvalKind, FlowRequest, Session};
+//! use hbmflow::kernels::KernelSource;
+//! use hbmflow::olympus::OlympusOpts;
+//! use hbmflow::platform::Platform;
+//!
+//! let session = Session::new(Platform::alveo_u280());
+//! let src = KernelSource::builtin("helmholtz");
+//! let reqs: Vec<FlowRequest> = [1, 2]
+//!     .iter()
+//!     .map(|&cus| FlowRequest {
+//!         source: src.clone(),
+//!         p: 7,
+//!         opts: OlympusOpts::dataflow(7).with_cus(cus),
+//!         eval: EvalKind::Estimate,
+//!     })
+//!     .collect();
+//! let results = session.evaluate_batch(&reqs);
+//! assert!(results.iter().all(|r| r.result.is_ok()));
+//! // both configurations shared one parse + one lower
+//! assert_eq!(session.stats().parsed_misses, 1);
+//! assert_eq!(session.stats().lowered_misses, 1);
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::kernels::KernelSource;
+use crate::olympus::OlympusOpts;
+use crate::platform::Platform;
+
+use super::{fingerprint, parse_text, EvalKind, Evaluated, FlowError, Lowered, Mapped, Parsed};
+
+/// One batch-evaluation request: a program at a degree, an option set,
+/// and how to evaluate the generated system.
+#[derive(Debug, Clone)]
+pub struct FlowRequest {
+    pub source: KernelSource,
+    pub p: usize,
+    pub opts: OlympusOpts,
+    pub eval: EvalKind,
+}
+
+/// One batch-evaluation answer, in request order. `Err` carries the
+/// stage that refused (parse error, infeasible channel allocation, …) —
+/// infeasibility is part of the answer, not a missing row.
+#[derive(Debug, Clone)]
+pub struct FlowResult {
+    pub request: FlowRequest,
+    pub result: Result<Evaluated, FlowError>,
+}
+
+/// Cache traffic counters (monotonic over the session's lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub parsed_misses: u64,
+    pub parsed_hits: u64,
+    pub lowered_misses: u64,
+    pub lowered_hits: u64,
+    pub mapped_misses: u64,
+    pub mapped_hits: u64,
+}
+
+/// (fingerprint, degree) — one entry per distinct program text.
+type SourceKey = (String, usize);
+/// (fingerprint, degree, canonical options debug string).
+type MapKey = (String, usize, String);
+
+#[derive(Default)]
+struct State {
+    parsed: HashMap<SourceKey, Arc<Parsed>>,
+    lowered: HashMap<SourceKey, Arc<Lowered>>,
+    mapped: HashMap<MapKey, Arc<Mapped>>,
+    stats: SessionStats,
+}
+
+/// Thread-safe staged-artifact cache over one platform model.
+pub struct Session {
+    platform: Platform,
+    state: Mutex<State>,
+}
+
+impl Session {
+    pub fn new(platform: Platform) -> Session {
+        Session {
+            platform,
+            state: Mutex::new(State::default()),
+        }
+    }
+
+    /// The platform every `Mapped`/`Evaluated` artifact targets.
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// Snapshot of the cache counters.
+    pub fn stats(&self) -> SessionStats {
+        self.state.lock().unwrap().stats
+    }
+
+    /// Resolve the source text and its cache key (re-reads file sources
+    /// so an on-disk edit mid-session becomes a new cache entry instead
+    /// of a stale hit).
+    fn source_key(
+        &self,
+        source: &KernelSource,
+        p: usize,
+    ) -> Result<(SourceKey, String), FlowError> {
+        let text = source.source(p).map_err(FlowError::parse)?;
+        let fp = fingerprint(&source.name(), &text);
+        Ok(((fp, p), text))
+    }
+
+    fn parsed_locked(
+        st: &mut State,
+        source: &KernelSource,
+        p: usize,
+        key: SourceKey,
+        text: String,
+    ) -> Result<Arc<Parsed>, FlowError> {
+        if let Some(a) = st.parsed.get(&key) {
+            st.stats.parsed_hits += 1;
+            return Ok(a.clone());
+        }
+        st.stats.parsed_misses += 1;
+        let parsed = Arc::new(parse_text(&source.name(), &source.origin(), p, text)?);
+        st.parsed.insert(key, parsed.clone());
+        Ok(parsed)
+    }
+
+    /// The memoized `Parsed` stage for a source at degree `p`.
+    pub fn parsed(&self, source: &KernelSource, p: usize) -> Result<Arc<Parsed>, FlowError> {
+        let (key, text) = self.source_key(source, p)?;
+        let mut st = self.state.lock().unwrap();
+        Self::parsed_locked(&mut st, source, p, key, text)
+    }
+
+    /// The memoized `Lowered` stage for a source at degree `p`.
+    pub fn lowered(&self, source: &KernelSource, p: usize) -> Result<Arc<Lowered>, FlowError> {
+        let (key, text) = self.source_key(source, p)?;
+        let mut st = self.state.lock().unwrap();
+        if let Some(l) = st.lowered.get(&key) {
+            st.stats.lowered_hits += 1;
+            return Ok(l.clone());
+        }
+        let parsed = Self::parsed_locked(&mut st, source, p, key.clone(), text)?;
+        st.stats.lowered_misses += 1;
+        let lowered = Arc::new(parsed.lower()?);
+        st.lowered.insert(key, lowered.clone());
+        Ok(lowered)
+    }
+
+    /// The memoized `Mapped` stage for (source, degree, options) on the
+    /// session's platform — shared across evaluation kinds.
+    pub fn mapped(
+        &self,
+        source: &KernelSource,
+        p: usize,
+        opts: &OlympusOpts,
+    ) -> Result<Arc<Mapped>, FlowError> {
+        let lowered = self.lowered(source, p)?;
+        let key: MapKey = (
+            lowered.provenance.fingerprint.clone(),
+            p,
+            format!("{opts:?}"),
+        );
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(m) = st.mapped.get(&key) {
+                st.stats.mapped_hits += 1;
+                return Ok(m.clone());
+            }
+            st.stats.mapped_misses += 1;
+        }
+        // generate outside the lock: mapping is per-configuration work,
+        // the part a batch wants parallel
+        let mapped = Arc::new(lowered.map(opts, &self.platform)?);
+        let mut st = self.state.lock().unwrap();
+        let m = match st.mapped.get(&key) {
+            Some(existing) => existing.clone(),
+            None => {
+                st.mapped.insert(key, mapped.clone());
+                mapped
+            }
+        };
+        Ok(m)
+    }
+
+    /// Run one request end to end over the cache.
+    pub fn evaluate(&self, req: &FlowRequest) -> FlowResult {
+        let result = self
+            .mapped(&req.source, req.p, &req.opts)
+            .map(|m| m.evaluate(req.eval));
+        FlowResult {
+            request: req.clone(),
+            result,
+        }
+    }
+
+    /// Evaluate many requests concurrently over the shared cache with
+    /// one worker per available core; results are in request order.
+    pub fn evaluate_batch(&self, reqs: &[FlowRequest]) -> Vec<FlowResult> {
+        self.evaluate_batch_with(reqs, None)
+    }
+
+    /// [`Session::evaluate_batch`] with an explicit worker count
+    /// (`None` = one per available core). The scoped-thread pool claims
+    /// requests off an atomic cursor; a single worker degenerates to a
+    /// plain sequential loop.
+    pub fn evaluate_batch_with(
+        &self,
+        reqs: &[FlowRequest],
+        threads: Option<usize>,
+    ) -> Vec<FlowResult> {
+        let workers = threads
+            .unwrap_or_else(default_threads)
+            .clamp(1, reqs.len().max(1));
+        if workers <= 1 {
+            return reqs.iter().map(|r| self.evaluate(r)).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<FlowResult>>> =
+            reqs.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= reqs.len() {
+                        break;
+                    }
+                    *slots[i].lock().unwrap() = Some(self.evaluate(&reqs[i]));
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap()
+                    .expect("worker pool filled every slot")
+            })
+            .collect()
+    }
+}
+
+/// Worker count when the caller does not specify one.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatype::DataType;
+
+    fn session() -> Session {
+        Session::new(Platform::alveo_u280())
+    }
+
+    #[test]
+    fn parsed_and_lowered_are_cached_per_degree() {
+        let s = session();
+        let src = KernelSource::builtin("helmholtz");
+        let a = s.lowered(&src, 7).unwrap();
+        let b = s.lowered(&src, 7).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same Arc from the cache");
+        s.lowered(&src, 11).unwrap();
+        let st = s.stats();
+        assert_eq!(st.parsed_misses, 2);
+        assert_eq!(st.lowered_misses, 2);
+        assert_eq!(st.lowered_hits, 1);
+    }
+
+    #[test]
+    fn mapped_is_shared_across_evaluation_kinds() {
+        let s = session();
+        let src = KernelSource::builtin("helmholtz");
+        let opts = OlympusOpts::dataflow(7);
+        let est = s.evaluate(&FlowRequest {
+            source: src.clone(),
+            p: 7,
+            opts: opts.clone(),
+            eval: EvalKind::Estimate,
+        });
+        let sim = s.evaluate(&FlowRequest {
+            source: src.clone(),
+            p: 7,
+            opts,
+            eval: EvalKind::Simulate { elements: 100_000 },
+        });
+        assert!(est.result.is_ok() && sim.result.is_ok());
+        let st = s.stats();
+        assert_eq!(st.mapped_misses, 1, "{st:?}");
+        assert_eq!(st.mapped_hits, 1, "{st:?}");
+        assert_eq!(st.lowered_misses, 1, "{st:?}");
+    }
+
+    #[test]
+    fn distinct_options_map_separately() {
+        let s = session();
+        let src = KernelSource::builtin("helmholtz");
+        s.mapped(&src, 7, &OlympusOpts::baseline()).unwrap();
+        s.mapped(&src, 7, &OlympusOpts::dataflow(7)).unwrap();
+        s.mapped(&src, 7, &OlympusOpts::baseline()).unwrap();
+        let st = s.stats();
+        assert_eq!(st.mapped_misses, 2);
+        assert_eq!(st.mapped_hits, 1);
+    }
+
+    #[test]
+    fn inline_edits_are_new_cache_entries() {
+        let s = session();
+        let a = KernelSource::inline(
+            "k",
+            "var input a : [3]\nvar input b : [3]\nvar output c : [3]\nc = a + b\n",
+        );
+        let b = KernelSource::inline(
+            "k",
+            "var input a : [3]\nvar input b : [3]\nvar output c : [3]\nc = a - b\n",
+        );
+        s.parsed(&a, 0).unwrap();
+        s.parsed(&b, 0).unwrap();
+        assert_eq!(s.stats().parsed_misses, 2, "texts differ, keys differ");
+    }
+
+    #[test]
+    fn batch_results_come_back_in_request_order() {
+        let s = session();
+        let src = KernelSource::builtin("helmholtz");
+        let reqs: Vec<FlowRequest> = [1usize, 2, 3, 17]
+            .iter()
+            .map(|&cus| FlowRequest {
+                source: src.clone(),
+                p: 7,
+                opts: OlympusOpts::double_buffering().with_cus(cus),
+                eval: EvalKind::Estimate,
+            })
+            .collect();
+        let out = s.evaluate_batch_with(&reqs, Some(3));
+        assert_eq!(out.len(), 4);
+        for (r, want) in out.iter().zip([1usize, 2, 3, 17]) {
+            assert_eq!(r.request.opts.num_cus, want);
+        }
+        // 17 CUs with double buffering exceeds the 16-channel-pair limit
+        assert!(out[3].result.is_err());
+        assert!(out[..3].iter().all(|r| r.result.is_ok()));
+        let st = s.stats();
+        assert_eq!(st.parsed_misses, 1);
+        assert_eq!(st.lowered_misses, 1);
+    }
+
+    #[test]
+    fn errors_carry_dtype_independent_reasons() {
+        let s = session();
+        let bad = KernelSource::builtin("warp-drive");
+        let err = s
+            .evaluate(&FlowRequest {
+                source: bad,
+                p: 7,
+                opts: OlympusOpts::fixed_point(DataType::Fx32),
+                eval: EvalKind::Estimate,
+            })
+            .result
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown kernel"), "{err}");
+    }
+}

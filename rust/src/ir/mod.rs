@@ -12,7 +12,8 @@
 //!                                     affine::Kernel (loop nests + buffers)
 //!                                        │ liveness / access / schedule (§3.4.3)
 //!                                        ▼
-//!                  codegen::c_emit / olympus::generate
+//!                  codegen::c_emit / the Olympus generator
+//!                  (both reached through the `flow` staged pipeline)
 //! ```
 
 pub mod access;

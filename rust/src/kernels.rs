@@ -77,7 +77,7 @@ impl KernelSource {
     }
 
     /// Where the program text lives, for error prefixes.
-    fn origin(&self) -> String {
+    pub fn origin(&self) -> String {
         match self {
             KernelSource::Builtin(n) => format!("builtin {n}"),
             KernelSource::File(p) => p.display().to_string(),
@@ -146,6 +146,24 @@ impl KernelSource {
     /// Full front-end: parse → rewrite → lower to an affine kernel.
     pub fn build(&self, p: usize) -> Result<Kernel, String> {
         Ok(self.compile(p)?.1)
+    }
+
+    /// Pin a file source to its current on-disk text (an `Inline`
+    /// source under the same display name — and, because the flow
+    /// fingerprint hashes (name, text), the same cache identity).
+    /// Long-running consumers like a dse sweep snapshot up front so a
+    /// mid-run edit to the `.cfd` file cannot mix two different
+    /// programs in one result set. Builtin and inline sources are
+    /// already immutable and clone through.
+    pub fn snapshot(&self) -> Result<KernelSource, String> {
+        match self {
+            KernelSource::File(_) => Ok(KernelSource::Inline {
+                name: self.name(),
+                // file extents are fixed; the degree argument is unused
+                source: self.source(0)?,
+            }),
+            other => Ok(other.clone()),
+        }
     }
 
     /// Degrees the dse explores by default: the paper's p ∈ {7, 11} for
@@ -249,6 +267,29 @@ mod tests {
     fn missing_file_reports_the_path() {
         let err = KernelSource::file("/no/such/dir/x.cfd").build(0).unwrap_err();
         assert!(err.contains("/no/such/dir/x.cfd"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_pins_file_sources_to_their_text() {
+        let path = std::env::temp_dir().join("hbmflow_snapshot_test.cfd");
+        std::fs::write(
+            &path,
+            "var input a : [3]\nvar input b : [3]\nvar output c : [3]\nc = a + b\n",
+        )
+        .unwrap();
+        let file = KernelSource::file(&path);
+        let snap = file.snapshot().unwrap();
+        assert_eq!(snap.name(), file.name());
+        // an on-disk edit after the snapshot does not reach it
+        std::fs::write(&path, "var input a : [3]\nvar output c : [3]\nc = a\n").unwrap();
+        assert!(snap.source(0).unwrap().contains("a + b"));
+        // immutable sources clone through
+        assert_eq!(
+            KernelSource::builtin("gradient").snapshot().unwrap(),
+            KernelSource::builtin("gradient")
+        );
+        assert!(KernelSource::file("/no/such.cfd").snapshot().is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

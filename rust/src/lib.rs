@@ -4,22 +4,28 @@
 //!
 //! See DESIGN.md for the system inventory and experiment index,
 //! README.md for the quickstart, and docs/CFDLANG.md for the language
-//! reference; see the module docs for per-subsystem detail. The `dse`
-//! module explores the whole option space the pipeline below walks one
-//! configuration of, and the `kernels` front door
-//! (`kernels::KernelSource`) feeds *any* CFDlang program — builtin,
-//! `.cfd` file, or inline — through the same stages. The top-level
-//! pipeline:
+//! reference; see the module docs for per-subsystem detail. The public
+//! API is the `flow` module: a typed staged pipeline
+//! (`Parsed → Lowered → Mapped → Evaluated`) with persistable artifacts
+//! and a thread-safe caching `Session` for batch evaluation. The
+//! `kernels` front door (`kernels::KernelSource`) feeds *any* CFDlang
+//! program — builtin, `.cfd` file, or inline — through the same stages,
+//! and `dse` explores the whole option space the pipeline walks one
+//! configuration of:
 //!
-//! ```no_run
+//! ```
 //! use hbmflow::prelude::*;
+//! use hbmflow::olympus::OlympusOpts;
+//! use hbmflow::platform::Platform;
 //!
-//! let src = hbmflow::dsl::inverse_helmholtz_source(11);
-//! let program = hbmflow::dsl::parse(&src).unwrap();
-//! let module = hbmflow::ir::teil::from_ast(&program).unwrap();
-//! let module = hbmflow::ir::rewrite::optimize(module);
-//! let kernel = hbmflow::ir::lower::lower_kernel(&module, "helmholtz").unwrap();
-//! let schedule = hbmflow::ir::schedule::fixed(&kernel, 7).unwrap();
+//! let flow = Flow::from_source(KernelSource::builtin("helmholtz"));
+//! let ev = flow
+//!     .parse(7)?                                            // DSL -> teil (+rewrite)
+//!     .lower()?                                             // -> affine kernel
+//!     .map(&OlympusOpts::dataflow(7), &Platform::alveo_u280())? // -> SystemSpec
+//!     .simulate(100_000);                                   // -> estimate + sim
+//! assert!(ev.sim().unwrap().gflops_system > 0.0);
+//! # Ok::<(), hbmflow::flow::FlowError>(())
 //! ```
 
 pub mod baselines;
@@ -29,6 +35,7 @@ pub mod coordinator;
 pub mod datatype;
 pub mod dse;
 pub mod dsl;
+pub mod flow;
 pub mod hbm;
 pub mod hls;
 pub mod ir;
@@ -45,6 +52,7 @@ pub mod util;
 /// Convenience re-exports for examples and tests.
 pub mod prelude {
     pub use crate::dsl::{parse, Program};
+    pub use crate::flow::{EvalKind, Flow, FlowRequest, Session};
     pub use crate::ir::affine::Kernel;
     pub use crate::ir::schedule::Schedule;
     pub use crate::kernels::KernelSource;

@@ -44,6 +44,16 @@ impl BusMode {
             BusMode::Wide256Parallel => "256b-parallel",
         }
     }
+
+    /// Inverse of [`BusMode::name`] (flow artifact round-trips).
+    pub fn parse(s: &str) -> Option<BusMode> {
+        match s {
+            "64b" => Some(BusMode::Narrow64),
+            "256b-serial" => Some(BusMode::Wide256Serial),
+            "256b-parallel" => Some(BusMode::Wide256Parallel),
+            _ => None,
+        }
+    }
 }
 
 /// Global-memory technology backing the CU channels (paper §2.3:
@@ -62,6 +72,15 @@ impl MemoryKind {
         match self {
             MemoryKind::Hbm => "hbm",
             MemoryKind::Ddr4 => "ddr4",
+        }
+    }
+
+    /// Inverse of [`MemoryKind::name`] (flow artifact round-trips).
+    pub fn parse(s: &str) -> Option<MemoryKind> {
+        match s {
+            "hbm" => Some(MemoryKind::Hbm),
+            "ddr4" => Some(MemoryKind::Ddr4),
+            _ => None,
         }
     }
 }

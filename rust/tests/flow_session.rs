@@ -1,0 +1,109 @@
+//! Integration: the flow Session's batch evaluation service and shared
+//! artifact cache — batch results are pinned to sequential per-config
+//! evaluation, and a full dse sweep performs exactly one parse + one
+//! lower per distinct (kernel, degree) regardless of how many dtypes,
+//! option sets, and CU counts multiply the space.
+
+use hbmflow::dse::{self, SearchSpace};
+use hbmflow::flow::{EvalKind, FlowRequest, Session};
+use hbmflow::olympus::BusMode;
+use hbmflow::platform::Platform;
+
+/// A moderate multi-axis space: 2 degrees × 4 dtypes × 2 CU counts ×
+/// 3 dataflow settings × sharing on/off (structurally pruned).
+fn space() -> SearchSpace {
+    let mut s = SearchSpace::default_for("helmholtz");
+    s.cu_counts = vec![1, 2];
+    s.dataflow = vec![None, Some(1), Some(7)];
+    s.double_buffering = vec![true];
+    s.bus_modes = vec![BusMode::Wide256Parallel];
+    s.fifo_depths = vec![None];
+    s
+}
+
+#[test]
+fn evaluate_batch_matches_sequential_evaluation_bit_for_bit() {
+    let sp = space();
+    let points = sp.enumerate();
+    assert!(points.len() >= 30, "space too small: {}", points.len());
+    let reqs: Vec<FlowRequest> = points
+        .iter()
+        .map(|pt| FlowRequest {
+            source: sp.source.clone(),
+            p: pt.p,
+            opts: pt.opts.clone(),
+            eval: EvalKind::Simulate { elements: 200_000 },
+        })
+        .collect();
+
+    let batch_session = Session::new(Platform::alveo_u280());
+    let batch = batch_session.evaluate_batch_with(&reqs, Some(4));
+
+    let seq_session = Session::new(Platform::alveo_u280());
+    let sequential: Vec<_> = reqs.iter().map(|r| seq_session.evaluate(r)).collect();
+
+    assert_eq!(batch.len(), sequential.len());
+    for (a, b) in batch.iter().zip(&sequential) {
+        match (&a.result, &b.result) {
+            (Ok(x), Ok(y)) => {
+                assert_eq!(x.hls.total, y.hls.total);
+                assert_eq!(x.hls.fmax_mhz.to_bits(), y.hls.fmax_mhz.to_bits());
+                let (sx, sy) = (x.sim().unwrap(), y.sim().unwrap());
+                assert_eq!(sx.gflops_system.to_bits(), sy.gflops_system.to_bits());
+                assert_eq!(sx.gflops_cu.to_bits(), sy.gflops_cu.to_bits());
+                assert_eq!(sx.energy_j.to_bits(), sy.energy_j.to_bits());
+                assert_eq!(sx.conflict_stalls, sy.conflict_stalls);
+                assert_eq!(sx.switch_crossings, sy.switch_crossings);
+            }
+            (Err(x), Err(y)) => assert_eq!(x, y),
+            _ => panic!("batch and sequential disagree on feasibility"),
+        }
+    }
+
+    // both sessions parsed + lowered exactly once per degree (7 and 11)
+    for s in [&batch_session, &seq_session] {
+        let st = s.stats();
+        assert_eq!(st.parsed_misses, 2, "{st:?}");
+        assert_eq!(st.lowered_misses, 2, "{st:?}");
+        assert_eq!(st.lowered_hits as usize, reqs.len() - 2, "{st:?}");
+    }
+}
+
+#[test]
+fn dse_sweep_parses_and_lowers_once_per_degree() {
+    let session = Session::new(Platform::alveo_u280());
+    let ex = dse::explore_in(&session, &space(), 200_000, Some(4)).unwrap();
+    assert!(ex.enumerated() >= 30);
+    assert!(ex.feasible_count() > 0);
+
+    let st = session.stats();
+    assert_eq!(st.parsed_misses, 2, "one parse per (kernel, p): {st:?}");
+    assert_eq!(st.lowered_misses, 2, "one lower per (kernel, p): {st:?}");
+    // every candidate evaluation hit the lowered cache instead of
+    // rebuilding the kernel
+    assert!(
+        st.lowered_hits as usize >= ex.enumerated(),
+        "candidates served from cache: {st:?}"
+    );
+}
+
+#[test]
+fn explore_in_equals_explore_with_a_fresh_session() {
+    let sp = space();
+    let session = Session::new(Platform::alveo_u280());
+    let a = dse::explore_in(&session, &sp, 200_000, Some(2)).unwrap();
+    let b = dse::explore(&sp, &Platform::alveo_u280(), 200_000, Some(2)).unwrap();
+    assert_eq!(a.enumerated(), b.enumerated());
+    assert_eq!(a.frontier, b.frontier);
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.point.label(), y.point.label());
+        match (&x.result, &y.result) {
+            (Ok(ex), Ok(ey)) => assert_eq!(
+                ex.sim.gflops_system.to_bits(),
+                ey.sim.gflops_system.to_bits()
+            ),
+            (Err(ex), Err(ey)) => assert_eq!(ex, ey),
+            _ => panic!("sessions disagree on {}", x.point.label()),
+        }
+    }
+}
