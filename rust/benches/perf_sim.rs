@@ -1,0 +1,315 @@
+//! §Perf harness for the simulator itself: the PR-6 BENCH trajectory.
+//!
+//! Three sections, all recorded in `BENCH_6.json` at the repo root:
+//!
+//!  1. raw timeline schedulers — sequential vs parallel event timeline
+//!     vs the closed-form analytic bracket on a synthetic million-batch
+//!     workload (bit-identity and bracketing asserted in-line);
+//!  2. per-point simulation cost over a kernel × CU-count × element
+//!     grid — the event simulator (sequential baseline) against
+//!     `sim::analytic`, with the bracket/gap contract asserted at every
+//!     point;
+//!  3. a dse sweep on a warm session — `Fidelity::Exact` against the
+//!     default adaptive screen, the speedup the CLI's default
+//!     `hbmflow dse` path actually delivers.
+//!
+//! Deterministic CI mode: `HBMFLOW_BENCH_ITERS=3 cargo bench --bench
+//! perf_sim` (every `Bench` is constructed through `Bench::from_env`).
+//! Output path: `HBMFLOW_BENCH_OUT` if set, else `../BENCH_6.json`
+//! relative to the crate root. Every `BenchResult` is round-tripped
+//! through `BenchResult::from_json(to_json())` before it is written, so
+//! a serialization that drops a field aborts the run.
+
+use std::time::Duration;
+
+use hbmflow::dse::{self, Fidelity, SearchSpace};
+use hbmflow::flow::{Flow, Session};
+use hbmflow::hls;
+use hbmflow::kernels::KernelSource;
+use hbmflow::olympus::{BusMode, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::report;
+use hbmflow::sim::{self, analytic, event};
+use hbmflow::util::bench::{fmt_dur, section, Bench, BenchResult};
+use hbmflow::util::json::Json;
+
+const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json");
+const KERNEL_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/kernels");
+
+/// Short per-bench budget so the default (time-budget) mode finishes
+/// the whole grid in seconds; `HBMFLOW_BENCH_ITERS` overrides it with
+/// the fixed-iteration mode and ignores the budget entirely.
+fn bench(name: String) -> Bench {
+    Bench::from_env(name).budget(Duration::from_millis(80))
+}
+
+/// Round-trip guard: a result that cannot be decoded from its own
+/// serialization must never reach the JSON file.
+fn checked_json(r: &BenchResult) -> Json {
+    let doc = r.to_json();
+    let back = BenchResult::from_json(&doc)
+        .unwrap_or_else(|e| panic!("bench result {:?} failed round-trip: {e}", r.name));
+    assert_eq!(&back, r, "round-trip altered {:?}", r.name);
+    doc
+}
+
+fn ns(d: Duration) -> f64 {
+    d.as_nanos() as f64
+}
+
+/// Median-of-medians ratio helper (guards the zero-duration case the
+/// analytic path can hit on a fast machine).
+fn ratio(num: Duration, den: Duration) -> f64 {
+    ns(num) / ns(den).max(1.0)
+}
+
+fn raw_timeline_section() -> Json {
+    section("§Perf sim — raw timeline schedulers (1M batches, 8 CUs)");
+    let cfg = event::TimelineConfig {
+        n_batches: 1_000_000,
+        n_cus: 8,
+        t_in: 1.0e-6,
+        t_batch: 6.0e-6,
+        t_out: 1.0e-6,
+        double_buffering: true,
+    };
+    let seq_tl = event::run_timeline_sequential(cfg);
+    let par_tl = event::run_timeline_parallel(cfg, None);
+    assert_eq!(
+        seq_tl.total_s.to_bits(),
+        par_tl.total_s.to_bits(),
+        "parallel timeline must be bit-identical"
+    );
+    let b = analytic::bounds(&cfg);
+    assert!(b.brackets(seq_tl.total_s), "analytic bracket failed: {b:?}");
+
+    let seq = bench("timeline/sequential 1M×8".into())
+        .run(|| event::run_timeline_sequential(cfg));
+    let par = bench("timeline/parallel   1M×8".into())
+        .run(|| event::run_timeline_parallel(cfg, None));
+    let ana = bench("timeline/analytic   1M×8".into()).run(|| analytic::bounds(&cfg));
+    for r in [&seq, &par, &ana] {
+        println!("{}", r.report());
+    }
+    println!(
+        "parallel speedup {:.2}x   analytic speedup {:.0}x   rel_gap {:.2e}",
+        ratio(seq.median, par.median),
+        ratio(seq.median, ana.median),
+        b.rel_gap()
+    );
+
+    Json::obj(vec![
+        ("n_batches", Json::num(cfg.n_batches as f64)),
+        ("cus", Json::num(cfg.n_cus as f64)),
+        ("rel_gap", Json::num(b.rel_gap())),
+        ("sequential", checked_json(&seq)),
+        ("parallel", checked_json(&par)),
+        ("analytic", checked_json(&ana)),
+        ("parallel_speedup", Json::num(ratio(seq.median, par.median))),
+        ("analytic_speedup", Json::num(ratio(seq.median, ana.median))),
+    ])
+}
+
+fn grid_section() -> (Json, Vec<f64>) {
+    section("§Perf sim — per-point cost, kernel × CUs × elements grid");
+    let platform = Platform::alveo_u280();
+    let kernels: Vec<(String, KernelSource, usize)> = vec![
+        ("helmholtz p11".into(), KernelSource::builtin("helmholtz"), 11),
+        (
+            "interpolation p11".into(),
+            KernelSource::builtin("interpolation"),
+            11,
+        ),
+        (
+            "advect".into(),
+            KernelSource::file(format!("{KERNEL_DIR}/advect.cfd")),
+            0,
+        ),
+        (
+            "stiffness".into(),
+            KernelSource::file(format!("{KERNEL_DIR}/stiffness.cfd")),
+            0,
+        ),
+    ];
+    let mut points = Vec::new();
+    let mut speedups = Vec::new();
+    let mut rows = Vec::new();
+    for (label, src, p) in &kernels {
+        let lowered = Flow::from_source(src.clone())
+            .parse(*p)
+            .and_then(|pa| pa.lower())
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        let groups = lowered.kernel.nests.len().clamp(1, 7);
+        for cus in [1usize, 4, 8] {
+            let opts = OlympusOpts::dataflow(groups).with_cus(cus);
+            let mapped = match lowered.map(&opts, &platform) {
+                Ok(m) => m,
+                // some (kernel, CU) corners exceed the channel budget;
+                // the grid records what the platform can host
+                Err(e) => {
+                    println!("skip {label} × {cus} CUs: {e}");
+                    continue;
+                }
+            };
+            let est = hls::estimate(&mapped.spec, &platform);
+            for elements in [500_000u64, 2_000_000, 8_000_000] {
+                let ev = sim::simulate_with_timeline(
+                    &mapped.spec,
+                    &est,
+                    &platform,
+                    elements,
+                    event::TimelineMode::Sequential,
+                );
+                let an = analytic::simulate_analytic(&mapped.spec, &est, &platform, elements);
+                let b = an.analytic.expect("analytic result carries its bracket");
+                assert!(
+                    b.brackets(ev.total_time_s),
+                    "{label} × {cus} CUs × {elements}: bracket failed ({b:?} vs {})",
+                    ev.total_time_s
+                );
+                let contract = (cus as f64 + 1.0) / ev.batches.max(1) as f64 + 1e-6;
+                assert!(
+                    b.rel_gap() <= contract,
+                    "{label} × {cus} CUs × {elements}: gap {} > contract {contract}",
+                    b.rel_gap()
+                );
+
+                let name = format!("{label} × {cus}cu × {}k", elements / 1000);
+                let seq = bench(format!("event {name}")).run(|| {
+                    sim::simulate_with_timeline(
+                        &mapped.spec,
+                        &est,
+                        &platform,
+                        elements,
+                        event::TimelineMode::Sequential,
+                    )
+                });
+                let ana = bench(format!("analytic {name}")).run(|| {
+                    analytic::simulate_analytic(&mapped.spec, &est, &platform, elements)
+                });
+                let sp = ratio(seq.median, ana.median);
+                speedups.push(sp);
+                rows.push(vec![
+                    name.clone(),
+                    format!("{}", ev.batches),
+                    fmt_dur(seq.median),
+                    fmt_dur(ana.median),
+                    format!("{sp:.1}x"),
+                    format!("{:.2e}", b.rel_gap()),
+                ]);
+                points.push(Json::obj(vec![
+                    ("kernel", Json::str(label.as_str())),
+                    ("cus", Json::num(cus as f64)),
+                    ("elements", Json::num(elements as f64)),
+                    ("n_batches", Json::num(ev.batches as f64)),
+                    ("rel_gap", Json::num(b.rel_gap())),
+                    ("event_seq", checked_json(&seq)),
+                    ("analytic", checked_json(&ana)),
+                    ("analytic_speedup", Json::num(sp)),
+                ]));
+            }
+        }
+    }
+    println!(
+        "{}",
+        report::table(
+            &["point", "batches", "event med", "analytic med", "speedup", "rel_gap"],
+            &rows
+        )
+    );
+    (Json::Arr(points), speedups)
+}
+
+fn dse_section() -> Json {
+    section("§Perf sim — dse sweep, adaptive screen vs exact fidelity");
+    let mut space = SearchSpace::default_for("helmholtz");
+    space.degrees = vec![11];
+    space.cu_counts = vec![1, 2, 3];
+    space.dataflow = vec![Some(7)];
+    space.double_buffering = vec![true];
+    space.bus_modes = vec![BusMode::Wide256Parallel];
+    space.fifo_depths = vec![None];
+    let n_points = space.enumerate().len();
+    let elements = 8_000_000u64;
+
+    // warm session: parse/lower/map/estimate artifacts are shared by
+    // both fidelities, so the measured difference below is the sim +
+    // frontier work — the phase this PR makes fast
+    let session = Session::new(Platform::alveo_u280());
+    let warm = dse::explore_in_with(&session, &space, elements, Some(1), Fidelity::Exact)
+        .expect("warm sweep");
+    let adaptive = dse::explore_in(&session, &space, elements, Some(1)).expect("adaptive");
+    assert_eq!(
+        warm.frontier, adaptive.frontier,
+        "adaptive screen must reproduce the exact frontier"
+    );
+
+    let exact_b = bench(format!("dse exact    ({n_points} pts)")).run(|| {
+        dse::explore_in_with(&session, &space, elements, Some(1), Fidelity::Exact).unwrap()
+    });
+    let adapt_b = bench(format!("dse adaptive ({n_points} pts)")).run(|| {
+        dse::explore_in(&session, &space, elements, Some(1)).unwrap()
+    });
+    for r in [&exact_b, &adapt_b] {
+        println!("{}", r.report());
+    }
+    let sp = ratio(exact_b.median, adapt_b.median);
+    println!(
+        "adaptive sweep speedup {sp:.2}x over exact ({} vs {} per point)",
+        fmt_dur(exact_b.median / n_points.max(1) as u32),
+        fmt_dur(adapt_b.median / n_points.max(1) as u32),
+    );
+
+    Json::obj(vec![
+        ("kernel", Json::str("helmholtz")),
+        ("space_points", Json::num(n_points as f64)),
+        ("elements", Json::num(elements as f64)),
+        ("exact", checked_json(&exact_b)),
+        ("adaptive", checked_json(&adapt_b)),
+        ("adaptive_speedup", Json::num(sp)),
+    ])
+}
+
+fn main() {
+    let fixed_iters = std::env::var("HBMFLOW_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&k| k > 0);
+
+    let raw = raw_timeline_section();
+    let (points, speedups) = grid_section();
+    let dse = dse_section();
+
+    let mut sorted = speedups.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let median_speedup = if sorted.is_empty() {
+        0.0
+    } else {
+        sorted[sorted.len() / 2]
+    };
+
+    let doc = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("bench", Json::str("perf_sim")),
+        ("pr", Json::num(6.0)),
+        (
+            "fixed_iters",
+            fixed_iters.map_or(Json::Null, |k| Json::num(k as f64)),
+        ),
+        ("timeline_raw", raw),
+        ("points", points),
+        ("dse", dse),
+        (
+            "summary",
+            Json::obj(vec![(
+                "median_analytic_speedup",
+                Json::num(median_speedup),
+            )]),
+        ),
+    ]);
+
+    let out = std::env::var("HBMFLOW_BENCH_OUT").unwrap_or_else(|_| DEFAULT_OUT.into());
+    std::fs::write(&out, format!("{doc}\n"))
+        .unwrap_or_else(|e| panic!("writing {out}: {e}"));
+    println!("\nwrote {out} (median per-point analytic speedup {median_speedup:.1}x)");
+}

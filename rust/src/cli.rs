@@ -14,7 +14,7 @@
 //! hbmflow ladder   [--elements N]       # the Fig. 15 ladder
 //! hbmflow dse      [--kernel .. | --file ..] [--p 7,11] [--dtype ..]
 //!                  [--max-cus N] [--ddr4] [--mem-plan] [--top-k N]
-//!                  [--pareto-only] [--format text|json|csv]
+//!                  [--pareto-only] [--exact] [--format text|json|csv]
 //! ```
 //!
 //! Flags are `--key value` pairs validated against a per-subcommand
@@ -42,7 +42,7 @@ use crate::report;
 use crate::runtime::Runtime;
 
 /// Flags that may appear bare (no value); all other flags require one.
-const BOOL_FLAGS: &[&str] = &["pareto-only", "ddr4", "mem-plan"];
+const BOOL_FLAGS: &[&str] = &["pareto-only", "ddr4", "mem-plan", "exact"];
 
 /// Flags shared by `simulate` and its `sim` alias.
 const SIM_FLAGS: &[&str] = &[
@@ -99,6 +99,7 @@ const FLAG_REGISTRY: &[(&str, &[&str])] = &[
             "threads",
             "elements",
             "policy",
+            "exact",
         ],
     ),
 ];
@@ -371,6 +372,8 @@ compile artifacts (the flow's staged pipeline, persisted):
 dse flags: --p 7,11  --max-cus N  --ddr4  --threads N  --elements N
            --policy local,striped  --mem-plan (explore partition-factor
            caps x sharing)  --top-k N (0 = all)  --pareto-only
+           --exact (full event sim for every candidate; default is the
+           adaptive analytic screen — same frontier, faster)
            --format text|json|csv
 
 unknown or misspelled flags are rejected with a did-you-mean hint.
@@ -776,8 +779,17 @@ fn cmd_dse(args: &Args) -> Result<String> {
         None => None,
     };
 
+    // default: adaptive fidelity (analytic screen + exact event sim for
+    // the survivors — same frontier); --exact forces full event
+    // simulation for every candidate
+    let fidelity = if args.flag("exact") {
+        dse::Fidelity::Exact
+    } else {
+        dse::Fidelity::Adaptive
+    };
     let session = Session::new(Platform::alveo_u280());
-    let ex = dse::explore_in(&session, &space, n, threads).map_err(|e| anyhow!(e))?;
+    let ex = dse::explore_in_with(&session, &space, n, threads, fidelity)
+        .map_err(|e| anyhow!(e))?;
 
     // default: whole frontier with --pareto-only, top 25 otherwise
     let pareto_only = args.flag("pareto-only");

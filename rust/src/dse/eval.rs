@@ -46,8 +46,8 @@ impl EvalOutcome {
     }
 }
 
-/// Evaluate every point through the session's batch service; results
-/// are in input order.
+/// Evaluate every point through the session's batch service with the
+/// full event-timeline simulator; results are in input order.
 pub fn evaluate(
     session: &flow::Session,
     source: &KernelSource,
@@ -55,15 +55,46 @@ pub fn evaluate(
     n_elements: u64,
     threads: Option<usize>,
 ) -> Vec<EvalOutcome> {
+    evaluate_kind(session, source, points, n_elements, threads, false)
+}
+
+/// Evaluate every point with the closed-form `sim::analytic` fast path
+/// (conservative makespan, bracket on the `sim.analytic` field) —
+/// dse's screening pass.
+pub fn evaluate_analytic(
+    session: &flow::Session,
+    source: &KernelSource,
+    points: Vec<DesignPoint>,
+    n_elements: u64,
+    threads: Option<usize>,
+) -> Vec<EvalOutcome> {
+    evaluate_kind(session, source, points, n_elements, threads, true)
+}
+
+fn evaluate_kind(
+    session: &flow::Session,
+    source: &KernelSource,
+    points: Vec<DesignPoint>,
+    n_elements: u64,
+    threads: Option<usize>,
+    analytic: bool,
+) -> Vec<EvalOutcome> {
+    let eval = if analytic {
+        EvalKind::SimulateAnalytic {
+            elements: n_elements,
+        }
+    } else {
+        EvalKind::Simulate {
+            elements: n_elements,
+        }
+    };
     let reqs: Vec<FlowRequest> = points
         .iter()
         .map(|pt| FlowRequest {
             source: source.clone(),
             p: pt.p,
             opts: pt.opts.clone(),
-            eval: EvalKind::Simulate {
-                elements: n_elements,
-            },
+            eval,
         })
         .collect();
     let results = session.evaluate_batch_with(&reqs, threads);

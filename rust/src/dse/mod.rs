@@ -16,7 +16,12 @@
 //!    `flow::FlowRequest`s and running them through the shared
 //!    `flow::Session` batch service (map → estimate → simulate per
 //!    candidate, parse/lower memoized in the session's artifact cache,
-//!    deterministic result ordering);
+//!    deterministic result ordering). By default the sweep is
+//!    [`Fidelity::Adaptive`]: a closed-form `sim::analytic` screening
+//!    pass prunes provably dominated candidates, and only the
+//!    survivors pay for the full event timeline — same frontier,
+//!    fraction of the simulation cost (`benches/perf_sim.rs` measures
+//!    the ratio into `BENCH_6.json`);
 //!  * [`pareto`] — feasibility filtering against the platform's resource
 //!    budget and Pareto-frontier extraction over
 //!    (GFLOPS, energy, BRAM/URAM/DSP, switch crossings);
@@ -147,15 +152,47 @@ pub fn explore(
     )
 }
 
+/// Simulation fidelity of a sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Fidelity {
+    /// Two-pass adaptive evaluation (the default): a closed-form
+    /// `sim::analytic` screening pass over every candidate, then the
+    /// full event simulator only for the candidates the screen cannot
+    /// *prove* dominated. Pruning compares a candidate's optimistic
+    /// objective vector (analytic lower bound) against rivals'
+    /// conservative vectors (upper bound), so the reported frontier is
+    /// identical to [`Fidelity::Exact`] — dominance chains of true
+    /// makespans terminate at a surviving candidate (see
+    /// DESIGN.md §2.7). Pruned candidates keep their conservative
+    /// analytic results (marked by `sim.analytic`); frontier members
+    /// always carry exact event-sim numbers.
+    #[default]
+    Adaptive,
+    /// Full event simulation for every candidate.
+    Exact,
+}
+
 /// [`explore`] over a caller-owned `flow::Session`: the sweep performs
 /// exactly one parse + one lower per distinct (source, degree) through
 /// the session's artifact cache, no matter how many dtypes, options, or
-/// CU counts the axes multiply out to.
+/// CU counts the axes multiply out to. Uses [`Fidelity::Adaptive`];
+/// see [`explore_in_with`] to force exact event simulation everywhere.
 pub fn explore_in(
     session: &flow::Session,
     space: &SearchSpace,
     n_elements: u64,
     threads: Option<usize>,
+) -> Result<Exploration, String> {
+    explore_in_with(session, space, n_elements, threads, Fidelity::Adaptive)
+}
+
+/// [`explore_in`] with an explicit simulation fidelity.
+pub fn explore_in_with(
+    session: &flow::Session,
+    space: &SearchSpace,
+    n_elements: u64,
+    threads: Option<usize>,
+    fidelity: Fidelity,
 ) -> Result<Exploration, String> {
     let mut points = space.enumerate();
 
@@ -196,7 +233,12 @@ pub fn explore_in(
     let mut seen = HashSet::new();
     points.retain(|pt| seen.insert(pt.fingerprint()));
 
-    let outcomes = eval::evaluate(session, &source, points, n_elements, threads);
+    let outcomes = match fidelity {
+        Fidelity::Exact => eval::evaluate(session, &source, points, n_elements, threads),
+        Fidelity::Adaptive => {
+            adaptive_evaluate(session, &source, points, n_elements, threads)
+        }
+    };
 
     let feasible: Vec<usize> = (0..outcomes.len())
         .filter(|&i| outcomes[i].is_feasible())
@@ -216,6 +258,80 @@ pub fn explore_in(
         outcomes,
         frontier,
     })
+}
+
+/// The adaptive two-pass evaluation behind [`Fidelity::Adaptive`].
+///
+/// Pass 1 screens every candidate with the O(1) `sim::analytic` bounds.
+/// A feasible candidate is *provably dominated* when some other
+/// feasible candidate's conservative objective vector (throughput and
+/// energy at its analytic **upper** bound) dominates the candidate's
+/// optimistic vector (at its **lower** bound) — then the true vectors
+/// dominate too, for any makespans inside the brackets. Pass 2 re-runs
+/// only the unpruned survivors through the full event simulator and
+/// splices the exact results back in. Loose brackets (few batches per
+/// CU) simply prove less, pushing more candidates into pass 2 — never
+/// a wrong frontier. The reported frontier is computed over survivors'
+/// exact vectors and equals the all-exact frontier: every pruned
+/// candidate's dominator chain terminates at a survivor, and stored
+/// conservative values can neither dominate an exact frontier member
+/// nor escape domination themselves (`tests/dse.rs` pins both
+/// invariants over all stored outcomes).
+fn adaptive_evaluate(
+    session: &flow::Session,
+    source: &crate::kernels::KernelSource,
+    points: Vec<DesignPoint>,
+    n_elements: u64,
+    threads: Option<usize>,
+) -> Vec<EvalOutcome> {
+    let mut outcomes =
+        eval::evaluate_analytic(session, source, points, n_elements, threads);
+
+    let feasible: Vec<usize> = (0..outcomes.len())
+        .filter(|&i| outcomes[i].is_feasible())
+        .collect();
+    // optimistic / conservative objective vectors from the brackets; a
+    // result without a bracket (defensively) screens as unprunable
+    let vectors: Vec<Option<(Vec<f64>, Vec<f64>)>> = feasible
+        .iter()
+        .map(|&i| {
+            let e = outcomes[i].result.as_ref().unwrap();
+            e.sim.analytic.map(|b| {
+                (
+                    pareto::objectives_with_time(e, b.lower_s),
+                    pareto::objectives_with_time(e, b.upper_s),
+                )
+            })
+        })
+        .collect();
+    let survivors: Vec<usize> = feasible
+        .iter()
+        .enumerate()
+        .filter(|&(fi, _)| {
+            let Some((opt, _)) = &vectors[fi] else {
+                return true;
+            };
+            !vectors.iter().enumerate().any(|(fj, v)| {
+                fj != fi
+                    && v.as_ref()
+                        .is_some_and(|(_, cons)| pareto::dominates(cons, opt))
+            })
+        })
+        .map(|(_, &i)| i)
+        .collect();
+
+    // pass 2: exact event simulation for the survivors only (their
+    // Mapped artifacts and HLS estimates come straight from the
+    // session cache — only the timeline is recomputed)
+    let pts: Vec<DesignPoint> = survivors
+        .iter()
+        .map(|&i| outcomes[i].point.clone())
+        .collect();
+    let exact = eval::evaluate(session, source, pts, n_elements, threads);
+    for (&i, o) in survivors.iter().zip(exact) {
+        outcomes[i] = o;
+    }
+    outcomes
 }
 
 #[cfg(test)]

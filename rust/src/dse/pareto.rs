@@ -66,6 +66,27 @@ pub fn objectives(e: &Evaluated) -> Vec<f64> {
     ]
 }
 
+/// [`objectives`] evaluated at a *hypothetical* makespan `total_s`
+/// instead of the simulated one. Only throughput and energy depend on
+/// time; resources and switch crossings are exact in every simulation
+/// mode. The adaptive explorer calls this with an analytic bound's
+/// lower/upper endpoints to form a candidate's optimistic/conservative
+/// vectors: a candidate whose *optimistic* vector is dominated by
+/// another's *conservative* vector is dominated for any true makespans
+/// inside the brackets, so it can be pruned without running the event
+/// simulator.
+pub fn objectives_with_time(e: &Evaluated, total_s: f64) -> Vec<f64> {
+    let t = total_s.max(1e-12);
+    vec![
+        e.sim.total_flops as f64 / t / 1e9,
+        -(e.sim.avg_power_w * t),
+        -(e.total.bram as f64),
+        -(e.total.uram as f64),
+        -(e.total.dsp as f64),
+        -(e.sim.switch_crossings as f64),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -30,7 +30,7 @@ use super::{
 
 /// Artifact document format version (see the module docs for the bump
 /// policy).
-pub const SCHEMA_VERSION: u64 = 1;
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Any pipeline stage, wrapped for persistence.
 #[derive(Debug, Clone)]
@@ -329,6 +329,17 @@ fn sim_json(r: &SimResult) -> Json {
         ("mem_unshared_words", Json::Num(r.mem_unshared_words as f64)),
         ("stage_intervals", Json::Arr(stages)),
         ("channel_utilization", Json::Arr(channels)),
+        // schema v2: closed-form bracket for analytic-mode results
+        (
+            "analytic",
+            match r.analytic {
+                Some(b) => Json::obj(vec![
+                    ("lower_s", Json::Num(b.lower_s)),
+                    ("upper_s", Json::Num(b.upper_s)),
+                ]),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -337,6 +348,10 @@ fn kind_json(kind: EvalKind) -> Json {
         EvalKind::Estimate => Json::obj(vec![("kind", Json::str("estimate"))]),
         EvalKind::Simulate { elements } => Json::obj(vec![
             ("kind", Json::str("simulate")),
+            ("elements", Json::Num(elements as f64)),
+        ]),
+        EvalKind::SimulateAnalytic { elements } => Json::obj(vec![
+            ("kind", Json::str("simulate_analytic")),
             ("elements", Json::Num(elements as f64)),
         ]),
     }
@@ -350,6 +365,12 @@ fn kind_from_json(v: &Json) -> Result<EvalKind, String> {
                 .get("elements")
                 .as_u64()
                 .ok_or("simulate kind needs elements")?,
+        }),
+        Some("simulate_analytic") => Ok(EvalKind::SimulateAnalytic {
+            elements: v
+                .get("elements")
+                .as_u64()
+                .ok_or("simulate_analytic kind needs elements")?,
         }),
         other => Err(format!("unknown eval kind {other:?}")),
     }

@@ -219,6 +219,12 @@ pub struct Mapped {
     pub platform: Platform,
     /// Kernel, schedule, memory plan, routed channel map, batch sizing.
     pub spec: SystemSpec,
+    /// The HLS estimate is a pure function of (spec, platform); computed
+    /// once on first evaluation and reused across evaluation kinds —
+    /// dse's adaptive two-pass (analytic screen, then exact sim for the
+    /// survivors) re-evaluates the same `Mapped` and must not pay for a
+    /// second estimate.
+    estimate_cache: std::sync::OnceLock<Estimate>,
 }
 
 /// How to evaluate a mapped system.
@@ -229,6 +235,11 @@ pub enum EvalKind {
     /// Estimate plus the cycle-approximate system simulation over
     /// `elements` spectral elements.
     Simulate { elements: u64 },
+    /// Estimate plus the closed-form fast-path simulation
+    /// (`sim::analytic`) over `elements` spectral elements: the
+    /// result's makespan is a conservative upper bound and its
+    /// `analytic` field carries the bracket.
+    SimulateAnalytic { elements: u64 },
 }
 
 /// Stage 4: measured answers for one configuration.
@@ -239,7 +250,8 @@ pub struct Evaluated {
     pub platform_name: String,
     pub kind: EvalKind,
     pub hls: Estimate,
-    /// Present for [`EvalKind::Simulate`] requests.
+    /// Present for [`EvalKind::Simulate`] and
+    /// [`EvalKind::SimulateAnalytic`] requests.
     pub sim: Option<SimResult>,
 }
 
@@ -346,21 +358,32 @@ impl Lowered {
             opts: opts.clone(),
             platform: platform.clone(),
             spec,
+            estimate_cache: std::sync::OnceLock::new(),
         })
     }
 }
 
 impl Mapped {
-    /// Stage transition: estimate, and for [`EvalKind::Simulate`] also
-    /// simulate, the generated system. Infallible — a `Mapped` value is
-    /// already a validated system.
+    /// The memoized HLS estimate (computed on first use; see
+    /// `estimate_cache`).
+    fn hls_estimate(&self) -> &Estimate {
+        self.estimate_cache
+            .get_or_init(|| hls::estimate(&self.spec, &self.platform))
+    }
+
+    /// Stage transition: estimate, and for the simulating
+    /// [`EvalKind`]s also simulate, the generated system. Infallible —
+    /// a `Mapped` value is already a validated system.
     pub fn evaluate(&self, kind: EvalKind) -> Evaluated {
-        let hls = hls::estimate(&self.spec, &self.platform);
+        let hls = self.hls_estimate().clone();
         let sim = match kind {
             EvalKind::Estimate => None,
             EvalKind::Simulate { elements } => {
                 Some(sim::simulate(&self.spec, &hls, &self.platform, elements))
             }
+            EvalKind::SimulateAnalytic { elements } => Some(
+                sim::analytic::simulate_analytic(&self.spec, &hls, &self.platform, elements),
+            ),
         };
         Evaluated {
             provenance: self.provenance.clone(),
@@ -380,6 +403,11 @@ impl Mapped {
     /// Estimate plus the cycle-approximate system simulation.
     pub fn simulate(&self, elements: u64) -> Evaluated {
         self.evaluate(EvalKind::Simulate { elements })
+    }
+
+    /// Estimate plus the closed-form fast-path simulation.
+    pub fn simulate_analytic(&self, elements: u64) -> Evaluated {
+        self.evaluate(EvalKind::SimulateAnalytic { elements })
     }
 
     /// The generic numerics oracle: the lowered kernel interpreted on

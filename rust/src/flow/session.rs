@@ -18,6 +18,15 @@
 //! the shared cache, with results in request order. It absorbs the
 //! worker pool that used to be private to `dse::eval`.
 //!
+//! Evaluation kinds compose with the cache: `EvalKind::Estimate`,
+//! `EvalKind::Simulate` (the full event timeline), and
+//! `EvalKind::SimulateAnalytic` (the closed-form `sim::analytic` fast
+//! path) all share the same `Mapped` entry, and the `Mapped` value
+//! memoizes its HLS estimate — so dse's adaptive two-pass sweep
+//! (analytic screen over every candidate, exact event sim only for the
+//! survivors) pays for generation and estimation exactly once per
+//! candidate no matter how many passes re-request it.
+//!
 //! ```
 //! use hbmflow::flow::{EvalKind, FlowRequest, Session};
 //! use hbmflow::kernels::KernelSource;

@@ -1,0 +1,217 @@
+//! Closed-form makespan bounds — the simulator's fast path.
+//!
+//! The event timeline in [`event`](super::event) costs O(`n_batches`)
+//! per design point; at sweep scale (PR 5 made compilation cached and
+//! cheap) it is the cost center. This module bounds the same makespan
+//! in O(1) from the identical [`TimelineConfig`] inputs — the per-stage
+//! intervals, `hbm::traffic` penalties, and bank-conflict stalls all
+//! enter through `t_batch` exactly as they do for the event simulator,
+//! so the two modes disagree **only** on how precisely they resolve the
+//! batch-level transfer/compute interleaving.
+//!
+//! ## Bound derivation
+//!
+//! Write `n = n_batches`, `c = n_cus`, and `chain = t_in + t_batch +
+//! t_out`. Rounds are `r = ceil(n / c)`.
+//!
+//! **Lower bound** (any schedule): every resource must serve its load
+//! and the first batch traverses the full chain, so
+//! `L = max(n·t_in, n·t_out, r·t_batch, chain)`; without double
+//! buffering each CU fully drains one batch before the next input may
+//! start, giving the additional term `r·chain`.
+//!
+//! **Upper bound, double buffering**: let `λ = max(t_in, t_out,
+//! t_batch/c)`. Induction over the scheduler's recurrences shows
+//! `in_done[b] ≤ (b+1)λ`, `comp_done[b] ≤ (b+1)λ + cλ`, and
+//! `out_done[b] ≤ (b+1)λ + (c+1)λ`, hence `U = (n + c + 1)·λ`.
+//!
+//! **Upper bound, single buffer**: let `λ₁ = max(t_in, t_out,
+//! chain/c)`. The same induction gives `in_done[b] ≤ (b+1)λ₁`,
+//! `comp_done[b] ≤ (b+1)λ₁ + t_batch`, `out_done[b] ≤ (b+1)λ₁ +
+//! t_batch + t_out`, hence `U = n·λ₁ + t_batch + t_out`.
+//!
+//! **Gap contract**: in every case `L ≥ n·λ` (respectively `n·λ₁`), so
+//!
+//! ```text
+//! rel_gap = U/L − 1  ≤  (c + 1) / n_batches
+//! ```
+//!
+//! — the tolerance `dse` pruning relies on, pinned per point by
+//! `tests/sim_differential.rs`. Long timelines (hundreds of batches)
+//! have sub-percent bounds; tiny ones (a kernel whose batch swallows
+//! the workload in a handful of batches) are loose but still honor the
+//! contract, and `dse` falls back to the event simulator exactly when
+//! the bounds cannot prove a candidate dominated.
+//!
+//! Both bounds carry a ±1e-9 relative guard so they also bracket the
+//! event simulator's *floating-point* result (its chained additions
+//! accumulate at most ~`n` ulps of drift against the closed forms).
+
+use super::event::TimelineConfig;
+use super::SimResult;
+use crate::hls::Estimate;
+use crate::olympus::SystemSpec;
+use crate::platform::Platform;
+
+/// Relative guard absorbing the event simulator's float accumulation
+/// (≤ ~n ulps ≈ 2e-10 at a million batches) on either bound.
+const EPS: f64 = 1e-9;
+
+/// Closed-form bracket on the event timeline's makespan (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnalyticBounds {
+    pub lower_s: f64,
+    pub upper_s: f64,
+}
+
+impl AnalyticBounds {
+    /// Relative width of the bracket, `upper/lower − 1`. Bounded by
+    /// `(n_cus + 1) / n_batches` per the module-level derivation.
+    pub fn rel_gap(&self) -> f64 {
+        if self.lower_s <= 0.0 {
+            if self.upper_s > 0.0 {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        } else {
+            self.upper_s / self.lower_s - 1.0
+        }
+    }
+
+    /// Whether a measured makespan falls inside the bracket.
+    pub fn brackets(&self, total_s: f64) -> bool {
+        self.lower_s <= total_s && total_s <= self.upper_s
+    }
+}
+
+/// Bound the makespan of a batch timeline in closed form.
+pub fn bounds(cfg: &TimelineConfig) -> AnalyticBounds {
+    assert!(cfg.n_cus >= 1);
+    if cfg.n_batches == 0 {
+        return AnalyticBounds { lower_s: 0.0, upper_s: 0.0 };
+    }
+    let n = cfg.n_batches as f64;
+    let c = cfg.n_cus as f64;
+    let rounds = cfg.n_batches.div_ceil(cfg.n_cus as u64) as f64;
+    let chain = cfg.t_in + cfg.t_batch + cfg.t_out;
+
+    // resource busy times + first-batch chain latency
+    let mut lower = (n * cfg.t_in)
+        .max(n * cfg.t_out)
+        .max(rounds * cfg.t_batch)
+        .max(chain);
+    let upper = if cfg.double_buffering {
+        let lambda = cfg.t_in.max(cfg.t_out).max(cfg.t_batch / c);
+        (n + c + 1.0) * lambda
+    } else {
+        // single slot: each CU drains a full chain per batch
+        lower = lower.max(rounds * chain);
+        let lambda = cfg.t_in.max(cfg.t_out).max(chain / c);
+        n * lambda + cfg.t_batch + cfg.t_out
+    };
+    AnalyticBounds {
+        lower_s: lower * (1.0 - EPS),
+        upper_s: upper * (1.0 + EPS),
+    }
+}
+
+/// Simulate a workload in closed form: same inputs and derived metrics
+/// as [`sim::simulate`](super::simulate), but the makespan is the
+/// **conservative upper bound** (an analytic result never flatters a
+/// design — `dse` pruning depends on that orientation) and the
+/// [`SimResult::analytic`] field carries the full bracket.
+pub fn simulate_analytic(
+    spec: &SystemSpec,
+    est: &Estimate,
+    platform: &Platform,
+    n_elements: u64,
+) -> SimResult {
+    let (si, cfg) = super::batch_workload(spec, est, platform, n_elements, 1);
+    let b = bounds(&cfg);
+    let n = cfg.n_batches as f64;
+    // busy times have exact closed forms (the event sim accumulates the
+    // identical quantities term by term)
+    let cu_busy_s =
+        cfg.n_batches.div_ceil(cfg.n_cus as u64) as f64 * cfg.t_batch;
+    let pcie_busy_s = (n * cfg.t_in).max(n * cfg.t_out);
+    let tl = super::event::Timeline {
+        total_s: b.upper_s,
+        cu_busy_s,
+        pcie_busy_s,
+        pcie_bound: pcie_busy_s > cu_busy_s,
+    };
+    let mut r: SimResult = super::finish_sim(spec, est, platform, n_elements, &si, tl);
+    r.analytic = Some(b);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: u64, cus: usize, db: bool, t_in: f64, t_b: f64, t_out: f64) -> TimelineConfig {
+        TimelineConfig {
+            n_batches: n,
+            n_cus: cus,
+            t_in,
+            t_batch: t_b,
+            t_out,
+            double_buffering: db,
+        }
+    }
+
+    #[test]
+    fn bounds_bracket_the_event_timeline_on_random_workloads() {
+        crate::util::prop::check("analytic brackets event", 128, |rng| {
+            let c = cfg(
+                rng.range_u64(1, 600),
+                rng.range_usize(1, 10),
+                rng.bool(),
+                rng.range_f64(0.0, 2.0),
+                rng.range_f64(0.0, 2.0),
+                rng.range_f64(0.0, 2.0),
+            );
+            let t = super::super::event::run_timeline_sequential(c);
+            let b = bounds(&c);
+            crate::util::prop::assert_prop(
+                b.brackets(t.total_s),
+                format!("{b:?} misses {} on {c:?}", t.total_s),
+            )?;
+            // the pinned gap contract
+            let contract = (c.n_cus as f64 + 1.0) / c.n_batches as f64;
+            crate::util::prop::assert_prop(
+                b.rel_gap() <= contract + 1e-6,
+                format!("gap {} > contract {contract} on {c:?}", b.rel_gap()),
+            )
+        });
+    }
+
+    #[test]
+    fn serial_chain_bounds_are_exact() {
+        // 1 CU, no double buffering: the event makespan is exactly
+        // n·chain — both bounds collapse onto it (modulo the eps guard)
+        let c = cfg(10, 1, false, 1.0, 2.0, 0.5);
+        let b = bounds(&c);
+        assert!((b.lower_s - 35.0).abs() < 1e-6, "{b:?}");
+        assert!(b.upper_s >= 35.0 && b.upper_s < 37.6, "{b:?}");
+        assert!(b.brackets(35.0));
+    }
+
+    #[test]
+    fn empty_workload_bounds_are_zero() {
+        let b = bounds(&cfg(0, 3, true, 1.0, 1.0, 1.0));
+        assert_eq!(b.lower_s, 0.0);
+        assert_eq!(b.upper_s, 0.0);
+        assert_eq!(b.rel_gap(), 0.0);
+        assert!(b.brackets(0.0));
+    }
+
+    #[test]
+    fn gap_shrinks_with_batch_count() {
+        let g = |n| bounds(&cfg(n, 4, true, 0.5, 2.0, 0.25)).rel_gap();
+        assert!(g(1_000) < g(100));
+        assert!(g(100) < g(10));
+        assert!(g(1_000) < 0.01, "{}", g(1_000));
+    }
+}

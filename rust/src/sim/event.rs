@@ -27,6 +27,39 @@
 //! compares against compute). Property tests pin the lower bounds
 //! (no resource beats its busy time; chain latency) and monotonicity in
 //! batch count.
+//!
+//! ## Sequential and parallel advancement
+//!
+//! Two interchangeable schedulers advance the same recurrences:
+//!
+//!  * [`TimelineMode::Sequential`] — the reference single-threaded list
+//!    scheduler, one pass over batches in global order with O(`n_cus`)
+//!    state (per-CU ping/pong history rings replace the per-batch
+//!    completion arrays, so a million-batch timeline allocates nothing
+//!    proportional to `n_batches`).
+//!  * [`TimelineMode::Parallel`] — the model's only cross-CU coupling is
+//!    the two per-direction PCIe FIFOs, so each *round* of `n_cus`
+//!    batches splits into three phases: (A) the coordinator drains the
+//!    input-direction queue in global batch order, (B) every CU advances
+//!    its own compute timeline independently on a worker pool (scoped
+//!    threads, the same discipline as `Session::evaluate_batch`), (C)
+//!    the coordinator drains the output-direction queue in global batch
+//!    order. Phases are separated by barriers; completion times cross
+//!    threads as raw `f64` bit patterns in relaxed atomics (the barriers
+//!    provide the happens-before edges, the atomics are only transport).
+//!
+//! Both schedulers execute the **identical sequence of float operations
+//! in the identical data-dependency order**, so their results are
+//! bit-identical — pinned by the property tests below and by the
+//! `SimResult` field-for-field comparison in `tests/sim_differential.rs`.
+//! The per-round compute phase is two flops per CU, so the parallel
+//! path only amortizes its barrier cost on long many-CU timelines;
+//! [`run_timeline`] picks it automatically past
+//! [`PARALLEL_MIN_BATCHES`]. For sweep-scale throughput the closed-form
+//! bounds in [`sim::analytic`](super::analytic) are the bigger lever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
 
 /// Timeline inputs (all times in seconds).
 #[derive(Debug, Clone, Copy)]
@@ -52,27 +85,67 @@ pub struct Timeline {
     pub pcie_bound: bool,
 }
 
-/// Run the discrete-event timeline.
+/// How [`run_timeline_with`] advances the CU timelines. Every mode
+/// produces bit-identical [`Timeline`]s; the choice is purely a
+/// wall-clock matter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TimelineMode {
+    /// Pick [`Sequential`](TimelineMode::Sequential) or
+    /// [`Parallel`](TimelineMode::Parallel) from the workload shape
+    /// (parallel needs `n_cus >= 2` and at least
+    /// [`PARALLEL_MIN_BATCHES`] batches to amortize barrier cost).
+    #[default]
+    Auto,
+    /// The reference single-threaded list scheduler.
+    Sequential,
+    /// Per-CU advancement on scoped worker threads, per-direction
+    /// transfer queues merged deterministically by a coordinator.
+    Parallel,
+}
+
+/// Below this many batches the per-round barrier cost of the parallel
+/// scheduler outweighs its two-flops-per-CU compute phase, so
+/// [`TimelineMode::Auto`] stays sequential.
+pub const PARALLEL_MIN_BATCHES: u64 = 65_536;
+
+/// Run the discrete-event timeline ([`TimelineMode::Auto`]).
 pub fn run_timeline(cfg: TimelineConfig) -> Timeline {
+    run_timeline_with(cfg, TimelineMode::Auto)
+}
+
+/// Run the discrete-event timeline with an explicit scheduler choice.
+pub fn run_timeline_with(cfg: TimelineConfig, mode: TimelineMode) -> Timeline {
+    match mode {
+        TimelineMode::Sequential => run_timeline_sequential(cfg),
+        TimelineMode::Parallel => run_timeline_parallel(cfg, None),
+        TimelineMode::Auto => {
+            if cfg.n_cus >= 2 && cfg.n_batches >= PARALLEL_MIN_BATCHES {
+                run_timeline_parallel(cfg, None)
+            } else {
+                run_timeline_sequential(cfg)
+            }
+        }
+    }
+}
+
+/// The reference sequential list scheduler.
+pub fn run_timeline_sequential(cfg: TimelineConfig) -> Timeline {
     assert!(cfg.n_cus >= 1);
     let n = cfg.n_batches as usize;
-    // Per-batch completion times; batches are dealt round-robin to CUs.
-    let mut comp_done: Vec<f64> = vec![0.0; n];
-    let mut out_done: Vec<f64> = vec![0.0; n];
-    let mut in_done: Vec<f64> = vec![0.0; n];
+    // per-CU buffer slots: ping/pong when double buffering
+    let slots = if cfg.double_buffering { 2usize } else { 1 };
 
     // full-duplex PCIe: independent in/out directions, each FIFO
     let mut in_link_free = 0.0f64;
     let mut out_link_free = 0.0f64;
     let mut cu_free = vec![0.0f64; cfg.n_cus];
     let mut cu_busy = vec![0.0f64; cfg.n_cus];
-    // per-CU buffer slots: ping/pong when double buffering
-    let slots = if cfg.double_buffering { 2usize } else { 1 };
-
-    let mut per_cu_batches: Vec<Vec<usize>> = vec![Vec::new(); cfg.n_cus];
-    for b in 0..n {
-        per_cu_batches[b % cfg.n_cus].push(b);
-    }
+    // Per-CU ping/pong history rings: a slot-free test only ever reaches
+    // back `slots <= 2` per-CU batches, so two cells per CU replace the
+    // per-batch completion arrays. Cell `j % 2` holds per-CU batch j;
+    // it is read (as batch j - slots) before being overwritten.
+    let mut comp_hist = vec![[0.0f64; 2]; cfg.n_cus];
+    let mut out_hist = vec![[0.0f64; 2]; cfg.n_cus];
 
     // host enqueues input transfers in global batch order
     for b in 0..n {
@@ -81,33 +154,142 @@ pub fn run_timeline(cfg: TimelineConfig) -> Timeline {
         // the CU's buffer slot must be free: with ping/pong the inputs
         // of per-CU batch j reuse the slot of batch j - slots
         let slot_free = if j >= slots {
-            let prev = per_cu_batches[cu][j - slots];
             if cfg.double_buffering {
                 // input channel reusable once that batch's compute read it
-                comp_done[prev]
+                comp_hist[cu][(j - slots) % 2]
             } else {
                 // single buffer: must be fully drained first
-                out_done[prev]
+                out_hist[cu][(j - slots) % 2]
             }
         } else {
             0.0
         };
         let in_start = in_link_free.max(slot_free);
-        in_done[b] = in_start + cfg.t_in;
-        in_link_free = in_done[b];
+        let in_done = in_start + cfg.t_in;
+        in_link_free = in_done;
 
-        let comp_start = cu_free[cu].max(in_done[b]);
-        comp_done[b] = comp_start + cfg.t_batch;
-        cu_free[cu] = comp_done[b];
+        let comp_start = cu_free[cu].max(in_done);
+        let comp_done = comp_start + cfg.t_batch;
+        cu_free[cu] = comp_done;
         cu_busy[cu] += cfg.t_batch;
+        comp_hist[cu][j % 2] = comp_done;
 
-        // output transfer on the return direction
-        let out_start = out_link_free.max(comp_done[b]);
-        out_done[b] = out_start + cfg.t_out;
-        out_link_free = out_done[b];
+        // output transfer on the return direction; out_done is
+        // nondecreasing in b (each waits on the previous), so the final
+        // out_link_free is the makespan
+        let out_start = out_link_free.max(comp_done);
+        let out_done = out_start + cfg.t_out;
+        out_link_free = out_done;
+        out_hist[cu][j % 2] = out_done;
     }
 
-    let total_s = out_done.iter().copied().fold(0.0, f64::max);
+    finish(cfg, out_link_free, &cu_busy)
+}
+
+/// The parallel scheduler: per-CU compute advancement on `workers`
+/// scoped threads (default: available parallelism, clamped to
+/// `[1, n_cus]`), per-direction transfer queues merged by the
+/// coordinator. Bit-identical to [`run_timeline_sequential`].
+pub fn run_timeline_parallel(cfg: TimelineConfig, workers: Option<usize>) -> Timeline {
+    assert!(cfg.n_cus >= 1);
+    let n = cfg.n_batches as usize;
+    if n == 0 {
+        return finish(cfg, 0.0, &[0.0]);
+    }
+    let w = workers
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map_or(1, |p| p.get())
+        })
+        .clamp(1, cfg.n_cus);
+    let slots = if cfg.double_buffering { 2usize } else { 1 };
+    let rounds = n.div_ceil(cfg.n_cus);
+
+    // Cross-thread mailboxes, one cell per CU: completion times as raw
+    // f64 bit patterns. The two barriers per round order every store
+    // before its readers' loads, so Relaxed is transport, not sync.
+    let in_done: Vec<AtomicU64> = (0..cfg.n_cus).map(|_| AtomicU64::new(0)).collect();
+    let comp_done: Vec<AtomicU64> = (0..cfg.n_cus).map(|_| AtomicU64::new(0)).collect();
+    // coordinator + workers meet twice per round: A→B and B→C
+    let barrier = Barrier::new(w + 1);
+    // per-worker result slots, same discipline as Session::evaluate_batch
+    let busy_out: Vec<Mutex<Vec<f64>>> = (0..w).map(|_| Mutex::new(Vec::new())).collect();
+    let chunk = cfg.n_cus.div_ceil(w);
+
+    let mut out_link_free = 0.0f64;
+    std::thread::scope(|scope| {
+        for wi in 0..w {
+            let (c0, c1) = (wi * chunk, ((wi + 1) * chunk).min(cfg.n_cus));
+            let (barrier, in_done, comp_done, busy_slot) =
+                (&barrier, &in_done, &comp_done, &busy_out[wi]);
+            scope.spawn(move || {
+                let cus = c0..c1; // may be empty; still meets every barrier
+                let mut cu_free = vec![0.0f64; cus.len()];
+                let mut cu_busy = vec![0.0f64; cus.len()];
+                for r in 0..rounds {
+                    barrier.wait(); // phase A done: in_done[cu] valid
+                    let lo = r * cfg.n_cus;
+                    for cu in cus.clone() {
+                        if lo + cu >= n {
+                            break; // partial last round
+                        }
+                        let ind = f64::from_bits(in_done[cu].load(Ordering::Relaxed));
+                        let comp = cu_free[cu - c0].max(ind) + cfg.t_batch;
+                        cu_free[cu - c0] = comp;
+                        cu_busy[cu - c0] += cfg.t_batch;
+                        comp_done[cu].store(comp.to_bits(), Ordering::Relaxed);
+                    }
+                    barrier.wait(); // phase B done: comp_done[cu] valid
+                }
+                *busy_slot.lock().unwrap() = cu_busy;
+            });
+        }
+
+        // coordinator: both transfer directions, in global batch order
+        let mut in_link_free = 0.0f64;
+        let mut comp_hist = vec![[0.0f64; 2]; cfg.n_cus];
+        let mut out_hist = vec![[0.0f64; 2]; cfg.n_cus];
+        for r in 0..rounds {
+            let lo = r * cfg.n_cus;
+            let in_round = cfg.n_cus.min(n - lo); // CUs with a batch this round
+            for cu in 0..in_round {
+                // phase A: input-direction FIFO (batch b = lo + cu,
+                // per-CU sequence number j = r — identical recurrence
+                // to the sequential scheduler)
+                let slot_free = if r >= slots {
+                    if cfg.double_buffering {
+                        comp_hist[cu][(r - slots) % 2]
+                    } else {
+                        out_hist[cu][(r - slots) % 2]
+                    }
+                } else {
+                    0.0
+                };
+                let t = in_link_free.max(slot_free) + cfg.t_in;
+                in_link_free = t;
+                in_done[cu].store(t.to_bits(), Ordering::Relaxed);
+            }
+            barrier.wait(); // release phase B
+            barrier.wait(); // phase B done
+            for cu in 0..in_round {
+                // phase C: output-direction FIFO
+                let comp = f64::from_bits(comp_done[cu].load(Ordering::Relaxed));
+                comp_hist[cu][r % 2] = comp;
+                let out = out_link_free.max(comp) + cfg.t_out;
+                out_link_free = out;
+                out_hist[cu][r % 2] = out;
+            }
+        }
+    });
+
+    let cu_busy: Vec<f64> = busy_out
+        .iter()
+        .flat_map(|s| s.lock().unwrap().clone())
+        .collect();
+    finish(cfg, out_link_free, &cu_busy)
+}
+
+/// Assemble the [`Timeline`] from the makespan and per-CU busy times.
+fn finish(cfg: TimelineConfig, total_s: f64, cu_busy: &[f64]) -> Timeline {
     let cu_busy_s = cu_busy.iter().copied().fold(0.0, f64::max);
     let in_busy = cfg.n_batches as f64 * cfg.t_in;
     let out_busy = cfg.n_batches as f64 * cfg.t_out;
@@ -223,5 +405,50 @@ mod tests {
         let t = run_timeline(cfg(0, 2, true, 1.0, 1.0, 1.0));
         assert_eq!(t.total_s, 0.0);
         assert_eq!(t.cu_busy_s, 0.0);
+        for mode in [TimelineMode::Sequential, TimelineMode::Parallel] {
+            assert_eq!(run_timeline_with(cfg(0, 2, true, 1.0, 1.0, 1.0), mode), t);
+        }
+    }
+
+    /// Field-for-field bit identity of the two schedulers over random
+    /// workload shapes — the tentpole invariant of the parallel queue.
+    #[test]
+    fn parallel_timeline_is_bit_identical_to_sequential() {
+        prop::check("parallel == sequential (bitwise)", 96, |rng| {
+            let c = cfg(
+                rng.range_u64(0, 500),
+                rng.range_usize(1, 12),
+                rng.bool(),
+                rng.range_f64(0.0, 2.0),
+                rng.range_f64(0.0, 2.0),
+                rng.range_f64(0.0, 2.0),
+            );
+            let seq = run_timeline_sequential(c);
+            // exercise several pool widths, including degenerate 1
+            for workers in [1usize, 2, 3, 8] {
+                let par = run_timeline_parallel(c, Some(workers));
+                prop::assert_prop(
+                    par.total_s.to_bits() == seq.total_s.to_bits()
+                        && par.cu_busy_s.to_bits() == seq.cu_busy_s.to_bits()
+                        && par.pcie_busy_s.to_bits() == seq.pcie_busy_s.to_bits()
+                        && par.pcie_bound == seq.pcie_bound,
+                    format!("{workers} workers: {par:?} != {seq:?} on {c:?}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// The auto gate routes large many-CU workloads to the parallel
+    /// scheduler; the result is the same either way (it must be — the
+    /// schedulers are bit-identical).
+    #[test]
+    fn auto_mode_matches_both_schedulers_across_the_gate() {
+        for n in [PARALLEL_MIN_BATCHES - 1, PARALLEL_MIN_BATCHES + 1] {
+            let c = cfg(n, 4, true, 1e-5, 4e-5, 0.5e-5);
+            let auto = run_timeline_with(c, TimelineMode::Auto);
+            assert_eq!(auto, run_timeline_sequential(c));
+            assert_eq!(auto, run_timeline_parallel(c, Some(2)));
+        }
     }
 }

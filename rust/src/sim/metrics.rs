@@ -54,6 +54,10 @@ pub struct SimResult {
     pub mem_shared_words: usize,
     /// Memory-plan summary: words before lifetime sharing.
     pub mem_unshared_words: usize,
+    /// Closed-form makespan bounds when this result came from
+    /// `sim::analytic` (its `total_time_s` is then the conservative
+    /// upper bound); `None` for full event-timeline results.
+    pub analytic: Option<super::analytic::AnalyticBounds>,
 }
 
 impl SimResult {
@@ -106,6 +110,7 @@ impl SimResult {
             mem_banks: mem.banks,
             mem_shared_words: mem.shared_words,
             mem_unshared_words: mem.unshared_words,
+            analytic: None,
         }
     }
 }

@@ -35,6 +35,7 @@
 //! pipeline fill overheads Vitis reports as a few extra percent; fitted
 //! once against the paper's Dataflow-1 row, applied uniformly).
 
+pub mod analytic;
 pub mod event;
 pub mod metrics;
 
@@ -238,6 +239,20 @@ pub fn simulate(
     simulate_multi_fpga(spec, est, platform, n_elements, 1)
 }
 
+/// [`simulate`] with an explicit event-timeline scheduler choice
+/// (sequential vs parallel — bit-identical results either way; the
+/// regression pins in `tests/sim_differential.rs` run both). For the
+/// closed-form fast path see [`analytic::simulate_analytic`].
+pub fn simulate_with_timeline(
+    spec: &SystemSpec,
+    est: &Estimate,
+    platform: &Platform,
+    n_elements: u64,
+    mode: event::TimelineMode,
+) -> SimResult {
+    simulate_multi_fpga_with(spec, est, platform, n_elements, 1, mode)
+}
+
 /// The paper's §5 what-if: "if the host were interfaced with multiple
 /// FPGAs and were able to send data in parallel to all of them,
 /// replicating the compute units onto separate FPGAs would achieve
@@ -250,6 +265,42 @@ pub fn simulate_multi_fpga(
     n_elements: u64,
     n_fpgas: u64,
 ) -> SimResult {
+    simulate_multi_fpga_with(
+        spec,
+        est,
+        platform,
+        n_elements,
+        n_fpgas,
+        event::TimelineMode::Auto,
+    )
+}
+
+/// [`simulate_multi_fpga`] with an explicit timeline scheduler choice.
+pub fn simulate_multi_fpga_with(
+    spec: &SystemSpec,
+    est: &Estimate,
+    platform: &Platform,
+    n_elements: u64,
+    n_fpgas: u64,
+    mode: event::TimelineMode,
+) -> SimResult {
+    let (si, cfg) = batch_workload(spec, est, platform, n_elements, n_fpgas);
+    let tl = event::run_timeline_with(cfg, mode);
+    // makespan = the busiest card's timeline; all cards process the full
+    // workload together
+    finish_sim(spec, est, platform, n_elements, &si, tl)
+}
+
+/// Shared front half of the event and analytic simulators: per-element
+/// stage intervals plus the batch-timeline inputs (batch compute time,
+/// per-direction transfer times, per-card batch count).
+pub(crate) fn batch_workload(
+    spec: &SystemSpec,
+    est: &Estimate,
+    platform: &Platform,
+    n_elements: u64,
+    n_fpgas: u64,
+) -> (StageIntervals, event::TimelineConfig) {
     assert!(n_fpgas >= 1);
     let si = stages(spec, est);
     let freq_hz = est.fmax_mhz * 1e6;
@@ -263,17 +314,28 @@ pub fn simulate_multi_fpga(
     let t_out = (spec.output_bytes_per_element() * e) as f64
         / platform.pcie_eff_bytes_per_sec;
 
-    let tl = event::run_timeline(event::TimelineConfig {
+    let cfg = event::TimelineConfig {
         n_batches,
         n_cus: spec.num_cus,
         t_in,
         t_batch,
         t_out,
         double_buffering: spec.double_buffering,
-    });
+    };
+    (si, cfg)
+}
 
-    // makespan = the busiest card's timeline; all cards process the full
-    // workload together
+/// Shared back half: assemble the [`SimResult`] from a timeline (event
+/// or analytic) plus the workload-independent power and interconnect
+/// reports.
+pub(crate) fn finish_sim(
+    spec: &SystemSpec,
+    est: &Estimate,
+    _platform: &Platform,
+    n_elements: u64,
+    si: &StageIntervals,
+    tl: event::Timeline,
+) -> SimResult {
     let total_flops = n_elements * spec.flops_per_element();
     let power = PowerModel::default();
     let avg_power_w = power.average_power_w(
@@ -281,12 +343,12 @@ pub fn simulate_multi_fpga(
         est.fmax_mhz,
         spec.total_pcs() as u32,
     );
-    let hbm_report = hbm::traffic::report(spec, element_interval(spec, &si));
+    let hbm_report = hbm::traffic::report(spec, element_interval(spec, si));
 
     metrics::SimResult::new(
         spec,
         est,
-        &si,
+        si,
         total_flops,
         tl,
         avg_power_w,

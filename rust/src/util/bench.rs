@@ -4,10 +4,32 @@
 //! iterations until a time budget is reached and reports min/median/mean.
 //! Used by the `rust/benches/*` targets (harness = false) and the §Perf
 //! pass in EXPERIMENTS.md.
+//!
+//! Two sampling modes:
+//!
+//!  * **time budget** (default) — warm up for `warmup`, then sample
+//!    until `budget` elapses (capped at `max_samples`); right for
+//!    interactive perf work, but the sample count depends on machine
+//!    speed.
+//!  * **fixed iterations** — exactly one warmup call plus `k` samples,
+//!    no clocks consulted for control flow: the run does the same work
+//!    on every machine, which is what a CI perf-smoke step needs.
+//!    Selected per-bench with [`Bench::fixed_iters`] or globally via
+//!    the `HBMFLOW_BENCH_ITERS` environment variable through
+//!    [`Bench::from_env`] (the `benches/*` binaries construct through
+//!    it, so `HBMFLOW_BENCH_ITERS=3 cargo bench` is deterministic).
+//!
+//! Results serialize to `util::json` documents ([`BenchResult::to_json`]
+//! / [`BenchResult::from_json`]): the decoder requires **every** field,
+//! so a serialization change that drops one fails the round-trip unit
+//! test below (and the `perf_sim` bench round-trips each result before
+//! writing `BENCH_*.json`, failing the CI step the same way).
 
 use std::time::{Duration, Instant};
 
-#[derive(Debug, Clone)]
+use super::json::Json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BenchResult {
     pub name: String,
     pub samples: usize,
@@ -27,6 +49,40 @@ impl BenchResult {
             self.samples
         )
     }
+
+    /// Serialize to a JSON object. Durations are integral nanoseconds
+    /// (exact in an f64 for any run shorter than ~104 days).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("samples", Json::num(self.samples as f64)),
+            ("min_ns", Json::num(self.min.as_nanos() as f64)),
+            ("median_ns", Json::num(self.median.as_nanos() as f64)),
+            ("mean_ns", Json::num(self.mean.as_nanos() as f64)),
+        ])
+    }
+
+    /// Decode a [`to_json`](BenchResult::to_json) document. Every field
+    /// is required — a missing or mistyped one is an error, never a
+    /// default (the schema guard the CI perf-smoke step relies on).
+    pub fn from_json(v: &Json) -> Result<BenchResult, String> {
+        let field = |k: &str| -> Result<u64, String> {
+            v.get(k)
+                .as_u64()
+                .ok_or_else(|| format!("bench result: missing or non-integer {k:?}"))
+        };
+        Ok(BenchResult {
+            name: v
+                .get("name")
+                .as_str()
+                .ok_or("bench result: missing name")?
+                .to_string(),
+            samples: field("samples")? as usize,
+            min: Duration::from_nanos(field("min_ns")?),
+            median: Duration::from_nanos(field("median_ns")?),
+            mean: Duration::from_nanos(field("mean_ns")?),
+        })
+    }
 }
 
 pub fn fmt_dur(d: Duration) -> String {
@@ -42,11 +98,21 @@ pub fn fmt_dur(d: Duration) -> String {
     }
 }
 
+/// How [`Bench::run`] decides when to stop sampling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Sampling {
+    /// Sample until the time budget elapses (machine-dependent count).
+    TimeBudget,
+    /// Exactly this many samples after one warmup call (deterministic).
+    Fixed(usize),
+}
+
 pub struct Bench {
     name: String,
     warmup: Duration,
     budget: Duration,
     max_samples: usize,
+    sampling: Sampling,
 }
 
 impl Bench {
@@ -56,6 +122,21 @@ impl Bench {
             warmup: Duration::from_millis(50),
             budget: Duration::from_millis(500),
             max_samples: 1000,
+            sampling: Sampling::TimeBudget,
+        }
+    }
+
+    /// [`Bench::new`], honoring `HBMFLOW_BENCH_ITERS=k`: when the
+    /// variable is set to a positive integer the bench runs in the
+    /// deterministic fixed-iteration mode with `k` samples.
+    pub fn from_env(name: impl Into<String>) -> Self {
+        let b = Bench::new(name);
+        match std::env::var("HBMFLOW_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(k) if k > 0 => b.fixed_iters(k),
+            _ => b,
         }
     }
 
@@ -69,37 +150,66 @@ impl Bench {
         self
     }
 
+    /// Switch to the deterministic fixed-iteration mode: one warmup
+    /// call, then exactly `iters.max(1)` timed samples.
+    pub fn fixed_iters(mut self, iters: usize) -> Self {
+        self.sampling = Sampling::Fixed(iters.max(1));
+        self
+    }
+
     /// Time `f` repeatedly; `f`'s return value is black-boxed.
     pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchResult {
-        // Warmup.
-        let start = Instant::now();
-        while start.elapsed() < self.warmup {
-            std::hint::black_box(f());
-        }
-        // Sample.
         let mut samples = Vec::new();
-        let start = Instant::now();
-        while start.elapsed() < self.budget && samples.len() < self.max_samples {
-            let t0 = Instant::now();
-            std::hint::black_box(f());
-            samples.push(t0.elapsed());
-        }
-        if samples.is_empty() {
-            let t0 = Instant::now();
-            std::hint::black_box(f());
-            samples.push(t0.elapsed());
+        match self.sampling {
+            Sampling::Fixed(k) => {
+                std::hint::black_box(f()); // one warmup call
+                for _ in 0..k {
+                    let t0 = Instant::now();
+                    std::hint::black_box(f());
+                    samples.push(t0.elapsed());
+                }
+            }
+            Sampling::TimeBudget => {
+                let start = Instant::now();
+                while start.elapsed() < self.warmup {
+                    std::hint::black_box(f());
+                }
+                let start = Instant::now();
+                while start.elapsed() < self.budget && samples.len() < self.max_samples {
+                    let t0 = Instant::now();
+                    std::hint::black_box(f());
+                    samples.push(t0.elapsed());
+                }
+                if samples.is_empty() {
+                    let t0 = Instant::now();
+                    std::hint::black_box(f());
+                    samples.push(t0.elapsed());
+                }
+            }
         }
         samples.sort();
         let min = samples[0];
-        let median = samples[samples.len() / 2];
         let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
         BenchResult {
             name: self.name.clone(),
             samples: samples.len(),
             min,
-            median,
+            median: median_of_sorted(&samples),
             mean,
         }
+    }
+}
+
+/// Median of an ascending-sorted, non-empty sample list: the middle
+/// element for odd counts, the mean of the two middle elements for even
+/// counts (the usual definition — the old `samples[len / 2]` picked the
+/// upper of the two and biased even-count medians high).
+fn median_of_sorted(samples: &[Duration]) -> Duration {
+    let n = samples.len();
+    if n % 2 == 1 {
+        samples[n / 2]
+    } else {
+        (samples[n / 2 - 1] + samples[n / 2]) / 2
     }
 }
 
@@ -121,6 +231,57 @@ mod tests {
         assert!(r.samples >= 1);
         assert!(r.min <= r.median);
         assert!(!r.report().is_empty());
+    }
+
+    #[test]
+    fn fixed_iteration_mode_takes_exactly_k_samples() {
+        for k in [1usize, 3, 8] {
+            let r = Bench::new("fixed").fixed_iters(k).run(|| 1 + 1);
+            assert_eq!(r.samples, k);
+        }
+        // degenerate request still samples once
+        assert_eq!(Bench::new("z").fixed_iters(0).run(|| ()).samples, 1);
+    }
+
+    #[test]
+    fn median_is_well_defined_for_even_counts() {
+        let d = |ms: u64| Duration::from_millis(ms);
+        assert_eq!(median_of_sorted(&[d(10)]), d(10));
+        assert_eq!(median_of_sorted(&[d(10), d(20)]), d(15));
+        assert_eq!(median_of_sorted(&[d(10), d(20), d(30)]), d(20));
+        assert_eq!(median_of_sorted(&[d(10), d(20), d(30), d(100)]), d(25));
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_field() {
+        let r = BenchResult {
+            name: "sim/event seq".into(),
+            samples: 42,
+            min: Duration::from_nanos(1_234),
+            median: Duration::from_nanos(5_678),
+            mean: Duration::from_nanos(6_000),
+        };
+        let back = BenchResult::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn decoder_rejects_documents_with_dropped_fields() {
+        let r = Bench::new("x").fixed_iters(2).run(|| 1 + 1);
+        let full = r.to_json();
+        assert!(BenchResult::from_json(&full).is_ok());
+        // drop each required field in turn: decode must fail, so a
+        // serializer change that loses a field cannot pass CI silently
+        let obj = full.as_obj().unwrap();
+        for key in obj.keys() {
+            let mut pruned = obj.clone();
+            pruned.remove(key);
+            let doc = Json::Obj(pruned);
+            assert!(
+                BenchResult::from_json(&doc).is_err(),
+                "decoding succeeded without {key:?}"
+            );
+        }
     }
 
     #[test]

@@ -80,11 +80,18 @@ fn dse_sweep_parses_and_lowers_once_per_degree() {
     assert_eq!(st.parsed_misses, 2, "one parse per (kernel, p): {st:?}");
     assert_eq!(st.lowered_misses, 2, "one lower per (kernel, p): {st:?}");
     // every candidate evaluation hit the lowered cache instead of
-    // rebuilding the kernel
+    // rebuilding the kernel (the adaptive sweep's screening pass covers
+    // all candidates; its exact pass re-requests only the survivors,
+    // each a further cache hit)
     assert!(
-        st.lowered_hits as usize >= ex.enumerated(),
+        st.lowered_hits as usize >= ex.enumerated() - 2,
         "candidates served from cache: {st:?}"
     );
+    // the exact pass reuses the screening pass's Mapped artifacts:
+    // misses only in the screen (a rare generation race may double-count
+    // a key, hence >=), and every survivor re-request is a hit
+    assert!(st.mapped_misses as usize >= ex.enumerated(), "{st:?}");
+    assert!(st.mapped_hits >= 1, "survivors re-served from cache: {st:?}");
 }
 
 #[test]

@@ -1,0 +1,349 @@
+//! The PR-6 differential test layer: the three simulator paths —
+//! sequential event timeline, parallel event timeline, closed-form
+//! analytic bounds — checked against each other across the whole
+//! kernel library.
+//!
+//!  * analytic vs event: the bracket `lower <= makespan <= upper` and
+//!    the gap contract `rel_gap <= (cus + 1) / n_batches` hold at every
+//!    grid point (all six `examples/kernels/*.cfd` plus the three
+//!    builtins × CU counts × seeded element counts), and every
+//!    timeline-independent `SimResult` field agrees exactly;
+//!  * parallel vs sequential: the full `SimResult` is bit-identical,
+//!    field for field;
+//!  * regression pins: the Fig. 17 multi-CU shape and the Table 3
+//!    Mem-Sharing deltas are unchanged by the parallel timeline.
+
+use hbmflow::cli::build_kernel;
+use hbmflow::datatype::DataType;
+use hbmflow::flow::{Flow, Mapped};
+use hbmflow::hls;
+use hbmflow::kernels::KernelSource;
+use hbmflow::olympus::{self, OlympusOpts};
+use hbmflow::platform::Platform;
+use hbmflow::report::paper;
+use hbmflow::sim::{self, event::TimelineMode, SimResult};
+use hbmflow::util::prng::Prng;
+
+const KERNEL_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/kernels");
+
+/// The full front-door surface: three builtins (gradient has fixed
+/// extents; its degree argument is nominal) plus every shipped `.cfd`
+/// kernel (fixed extents, degree 0).
+fn library() -> Vec<(String, KernelSource, usize)> {
+    let mut v = vec![
+        ("helmholtz".to_string(), KernelSource::builtin("helmholtz"), 11),
+        (
+            "interpolation".to_string(),
+            KernelSource::builtin("interpolation"),
+            11,
+        ),
+        ("gradient".to_string(), KernelSource::builtin("gradient"), 8),
+    ];
+    for f in [
+        "advect",
+        "fused_helmholtz_grad",
+        "interp2d",
+        "mass_apply",
+        "smoother",
+        "stiffness",
+    ] {
+        v.push((
+            f.to_string(),
+            KernelSource::file(format!("{KERNEL_DIR}/{f}.cfd")),
+            0,
+        ));
+    }
+    v
+}
+
+/// Map one library entry at a CU count (dataflow groups clamped to the
+/// kernel's nest count). `None` when the platform's channel budget
+/// cannot host the corner — the grid records what is mappable.
+fn map(src: &KernelSource, p: usize, cus: usize) -> Option<Mapped> {
+    let lowered = Flow::from_source(src.clone())
+        .parse(p)
+        .and_then(|pa| pa.lower())
+        .unwrap_or_else(|e| panic!("{src:?}: {e}"));
+    let groups = lowered.kernel.nests.len().clamp(1, 7);
+    lowered
+        .map(&OlympusOpts::dataflow(groups).with_cus(cus), &Platform::alveo_u280())
+        .ok()
+}
+
+fn rel_close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1e-300)
+}
+
+/// Field-for-field bit identity (f64 via `to_bits`); the exhaustive
+/// form of the satellite "parallel timeline is bit-identical" claim.
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    let f = |x: f64, y: f64, name: &str| {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name} differs ({x} vs {y})");
+    };
+    assert_eq!(a.label, b.label, "{ctx}");
+    f(a.total_time_s, b.total_time_s, "total_time_s");
+    f(a.cu_time_s, b.cu_time_s, "cu_time_s");
+    f(a.transfer_time_s, b.transfer_time_s, "transfer_time_s");
+    f(a.gflops_system, b.gflops_system, "gflops_system");
+    f(a.gflops_cu, b.gflops_cu, "gflops_cu");
+    f(a.freq_mhz, b.freq_mhz, "freq_mhz");
+    f(a.ideal_gflops, b.ideal_gflops, "ideal_gflops");
+    f(a.efficiency_vs_ideal, b.efficiency_vs_ideal, "efficiency_vs_ideal");
+    f(a.avg_power_w, b.avg_power_w, "avg_power_w");
+    f(a.efficiency_gflops_w, b.efficiency_gflops_w, "efficiency_gflops_w");
+    f(a.energy_j, b.energy_j, "energy_j");
+    f(
+        a.max_channel_utilization,
+        b.max_channel_utilization,
+        "max_channel_utilization",
+    );
+    assert_eq!(a.batches, b.batches, "{ctx}: batches");
+    assert_eq!(a.batch_elements, b.batch_elements, "{ctx}: batch_elements");
+    assert_eq!(a.stage_intervals, b.stage_intervals, "{ctx}: stage_intervals");
+    assert_eq!(a.bottleneck, b.bottleneck, "{ctx}: bottleneck");
+    assert_eq!(a.total_flops, b.total_flops, "{ctx}: total_flops");
+    assert_eq!(
+        a.channel_utilization.len(),
+        b.channel_utilization.len(),
+        "{ctx}: channel_utilization length"
+    );
+    for ((ca, ua), (cb, ub)) in a.channel_utilization.iter().zip(&b.channel_utilization) {
+        assert_eq!(ca, cb, "{ctx}: channel order");
+        f(*ua, *ub, "channel utilization");
+    }
+    assert_eq!(a.switch_crossings, b.switch_crossings, "{ctx}: switch_crossings");
+    assert_eq!(a.hbm_fill_cycles, b.hbm_fill_cycles, "{ctx}: hbm_fill_cycles");
+    assert_eq!(a.conflict_stalls, b.conflict_stalls, "{ctx}: conflict_stalls");
+    assert_eq!(a.mem_banks, b.mem_banks, "{ctx}: mem_banks");
+    assert_eq!(a.mem_shared_words, b.mem_shared_words, "{ctx}: mem_shared_words");
+    assert_eq!(
+        a.mem_unshared_words, b.mem_unshared_words,
+        "{ctx}: mem_unshared_words"
+    );
+    assert_eq!(a.analytic, b.analytic, "{ctx}: analytic");
+}
+
+// ---------------------------------------------------------------------
+// Satellite 1: analytic vs event differential over the kernel library.
+// ---------------------------------------------------------------------
+
+#[test]
+fn analytic_bounds_bracket_event_sim_across_the_kernel_library() {
+    let platform = Platform::alveo_u280();
+    let mut rng = Prng::new(0x5EED_0006);
+    let mut max_gap_12 = 0.0f64; // over points with >= 12 batches
+    let mut max_gap_100 = 0.0f64; // over points with >= 100 batches
+    let mut points = 0usize;
+
+    for (label, src, p) in library() {
+        for cus in [1usize, 4, 8] {
+            let Some(m) = map(&src, p, cus) else { continue };
+            let est = hls::estimate(&m.spec, &platform);
+            // one pinned workload plus two seeded draws per system
+            let elems = [
+                2_000_000u64,
+                rng.range_u64(1_000_000, 6_000_000),
+                rng.range_u64(1_000_000, 6_000_000),
+            ];
+            for n in elems {
+                let ev = sim::simulate_with_timeline(
+                    &m.spec,
+                    &est,
+                    &platform,
+                    n,
+                    TimelineMode::Sequential,
+                );
+                let an = sim::analytic::simulate_analytic(&m.spec, &est, &platform, n);
+                let b = an.analytic.expect("analytic result must carry its bracket");
+                let ctx = format!("{label} × {cus}cu × {n}");
+
+                // the bracket and its advertised tightness
+                assert!(
+                    b.brackets(ev.total_time_s),
+                    "{ctx}: bracket {b:?} misses event makespan {}",
+                    ev.total_time_s
+                );
+                let contract = (cus as f64 + 1.0) / ev.batches.max(1) as f64 + 1e-6;
+                assert!(
+                    b.rel_gap() <= contract,
+                    "{ctx}: rel_gap {} exceeds contract {contract}",
+                    b.rel_gap()
+                );
+                // the conservative orientation dse pruning depends on
+                assert_eq!(an.total_time_s.to_bits(), b.upper_s.to_bits(), "{ctx}");
+
+                // every timeline-independent field agrees exactly...
+                assert_eq!(an.batches, ev.batches, "{ctx}: batches");
+                assert_eq!(an.batch_elements, ev.batch_elements, "{ctx}");
+                assert_eq!(an.stage_intervals, ev.stage_intervals, "{ctx}");
+                assert_eq!(an.conflict_stalls, ev.conflict_stalls, "{ctx}");
+                assert_eq!(an.switch_crossings, ev.switch_crossings, "{ctx}");
+                assert_eq!(an.hbm_fill_cycles, ev.hbm_fill_cycles, "{ctx}");
+                assert_eq!(an.mem_banks, ev.mem_banks, "{ctx}");
+                assert_eq!(an.mem_shared_words, ev.mem_shared_words, "{ctx}");
+                assert_eq!(an.freq_mhz.to_bits(), ev.freq_mhz.to_bits(), "{ctx}");
+                assert_eq!(an.total_flops, ev.total_flops, "{ctx}");
+                assert_eq!(an.avg_power_w.to_bits(), ev.avg_power_w.to_bits(), "{ctx}");
+                for ((ca, ua), (cb, ub)) in
+                    an.channel_utilization.iter().zip(&ev.channel_utilization)
+                {
+                    assert_eq!(ca, cb, "{ctx}: channel order");
+                    assert_eq!(ua.to_bits(), ub.to_bits(), "{ctx}: channel utilization");
+                }
+                // ...and the busy times share a closed form (event
+                // accumulates t_batch by repeated addition, so compare
+                // up to float associativity, not bitwise)
+                assert!(
+                    rel_close(an.cu_time_s, ev.cu_time_s),
+                    "{ctx}: cu_time {} vs {}",
+                    an.cu_time_s,
+                    ev.cu_time_s
+                );
+                assert!(
+                    rel_close(an.transfer_time_s, ev.transfer_time_s),
+                    "{ctx}: transfer_time {} vs {}",
+                    an.transfer_time_s,
+                    ev.transfer_time_s
+                );
+
+                if ev.batches >= 12 {
+                    max_gap_12 = max_gap_12.max(b.rel_gap());
+                }
+                if ev.batches >= 100 {
+                    max_gap_100 = max_gap_100.max(b.rel_gap());
+                }
+                points += 1;
+            }
+        }
+    }
+
+    // the grid must actually have run (mapping failures don't erase it)
+    assert!(points >= 45, "only {points} grid points were mappable");
+    // pin the observed maxima by batch regime (the contract above is
+    // the only claim for tiny-batch points — a kernel whose batch
+    // swallows the workload, e.g. mass_apply at high CU counts, is
+    // legitimately loose): with <= 8 CUs the contract caps >=12-batch
+    // points at 9/12 and >=100-batch points well under 10%
+    assert!(
+        max_gap_12 <= 0.7501,
+        "max rel_gap at >=12 batches drifted to {max_gap_12}"
+    );
+    assert!(
+        max_gap_100 <= 0.10,
+        "max rel_gap at >=100 batches drifted to {max_gap_100}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Satellite 2: the parallel timeline is bit-identical at SimResult
+// level (the event.rs property test covers the Timeline level; this is
+// the user-visible surface).
+// ---------------------------------------------------------------------
+
+#[test]
+fn parallel_timeline_simresult_is_bit_identical_to_sequential() {
+    let platform = Platform::alveo_u280();
+    let mut rng = Prng::new(0xB17_1DE27);
+    let mut compared = 0usize;
+    for (label, src, p) in library() {
+        // parallelism only engages with >= 2 CUs; 8 stresses partitioning
+        for cus in [4usize, 8] {
+            let Some(m) = map(&src, p, cus) else { continue };
+            let est = hls::estimate(&m.spec, &platform);
+            for n in [500_000u64, rng.range_u64(250_000, 6_000_000)] {
+                let seq = sim::simulate_with_timeline(
+                    &m.spec,
+                    &est,
+                    &platform,
+                    n,
+                    TimelineMode::Sequential,
+                );
+                let par = sim::simulate_with_timeline(
+                    &m.spec,
+                    &est,
+                    &platform,
+                    n,
+                    TimelineMode::Parallel,
+                );
+                assert_bit_identical(&seq, &par, &format!("{label} × {cus}cu × {n}"));
+                compared += 1;
+            }
+        }
+    }
+    assert!(compared >= 10, "only {compared} systems compared");
+}
+
+// ---------------------------------------------------------------------
+// Satellite 3: regression pins — the paper-shape results the parallel
+// timeline must not move.
+// ---------------------------------------------------------------------
+
+fn fig17_run(cus: usize, mode: TimelineMode) -> SimResult {
+    let kernel = build_kernel("helmholtz", 11).unwrap();
+    let platform = Platform::alveo_u280();
+    let mut opts = OlympusOpts::fixed_point(DataType::Fx32);
+    if cus > 1 {
+        opts = opts.with_cus(cus);
+    }
+    let spec = olympus::generate(&kernel, &opts, &platform).unwrap();
+    let est = hls::estimate(&spec, &platform);
+    sim::simulate_with_timeline(&spec, &est, &platform, paper::N_ELEMENTS, mode)
+}
+
+#[test]
+fn fig17_multi_cu_pins_hold_under_both_timelines() {
+    // before/after: the scheduler change cannot move the numbers at all
+    let one_seq = fig17_run(1, TimelineMode::Sequential);
+    let one_par = fig17_run(1, TimelineMode::Parallel);
+    let three_seq = fig17_run(3, TimelineMode::Sequential);
+    let three_par = fig17_run(3, TimelineMode::Parallel);
+    assert_bit_identical(&one_seq, &one_par, "fig17 1 CU");
+    assert_bit_identical(&three_seq, &three_par, "fig17 3 CUs");
+
+    // and the paper shape itself (paper_shapes::e5) holds under both
+    for (one, three) in [(&one_seq, &three_seq), (&one_par, &three_par)] {
+        assert!(
+            three.gflops_cu > 1.3 * one.gflops_cu,
+            "kernel must scale: {} vs {}",
+            three.gflops_cu,
+            one.gflops_cu
+        );
+        assert!(
+            three.gflops_system < one.gflops_system * 1.1,
+            "system must not: {} vs {}",
+            three.gflops_system,
+            one.gflops_system
+        );
+        assert_eq!(three.bottleneck, "pcie");
+    }
+}
+
+#[test]
+fn table3_mem_sharing_deltas_unchanged_by_parallel_timeline() {
+    // Table 3's Mem-Sharing row is a resource result; driving the
+    // evaluation through either timeline must report identical totals
+    // and preserve the paper's URAM delta (240 -> 124, -48.3%).
+    let kernel = build_kernel("helmholtz", 11).unwrap();
+    let platform = Platform::alveo_u280();
+    let totals = |opts: &OlympusOpts, mode: TimelineMode| {
+        let spec = olympus::generate(&kernel, opts, &platform).unwrap();
+        let est = hls::estimate(&spec, &platform);
+        // force the full pipeline through the chosen scheduler; the
+        // estimate used downstream is the one the sim consumed
+        let _ = sim::simulate_with_timeline(&spec, &est, &platform, paper::N_ELEMENTS, mode);
+        est.total
+    };
+
+    let no_seq = totals(&OlympusOpts::dataflow(1), TimelineMode::Sequential);
+    let no_par = totals(&OlympusOpts::dataflow(1), TimelineMode::Parallel);
+    let yes_seq = totals(&OlympusOpts::mem_sharing(), TimelineMode::Sequential);
+    let yes_par = totals(&OlympusOpts::mem_sharing(), TimelineMode::Parallel);
+    assert_eq!(no_seq, no_par, "timeline choice leaked into resources");
+    assert_eq!(yes_seq, yes_par, "timeline choice leaked into resources");
+
+    let uram_delta = yes_seq.uram as f64 / no_seq.uram as f64 - 1.0;
+    assert!(
+        (uram_delta - (-0.483)).abs() < 0.06,
+        "URAM delta {uram_delta:.3} drifted from the paper's -48.3%"
+    );
+}
