@@ -1,6 +1,6 @@
-//! §Perf harness for the simulator itself: the PR-6 BENCH trajectory.
+//! §Perf harness for the simulator itself: the PR-7 BENCH trajectory.
 //!
-//! Three sections, all recorded in `BENCH_6.json` at the repo root:
+//! Four sections, all recorded in `BENCH_7.json` at the repo root:
 //!
 //!  1. raw timeline schedulers — sequential vs parallel event timeline
 //!     vs the closed-form analytic bracket on a synthetic million-batch
@@ -11,11 +11,15 @@
 //!     point;
 //!  3. a dse sweep on a warm session — `Fidelity::Exact` against the
 //!     default adaptive screen, the speedup the CLI's default
-//!     `hbmflow dse` path actually delivers.
+//!     `hbmflow dse` path actually delivers;
+//!  4. the budget-aware streaming search (`--strategy stream`) on the
+//!     same warm session — sweep throughput (points/sec) and the
+//!     memory-boundedness witness (peak resident points vs candidates
+//!     considered).
 //!
 //! Deterministic CI mode: `HBMFLOW_BENCH_ITERS=3 cargo bench --bench
 //! perf_sim` (every `Bench` is constructed through `Bench::from_env`).
-//! Output path: `HBMFLOW_BENCH_OUT` if set, else `../BENCH_6.json`
+//! Output path: `HBMFLOW_BENCH_OUT` if set, else `../BENCH_7.json`
 //! relative to the crate root. Every `BenchResult` is round-tripped
 //! through `BenchResult::from_json(to_json())` before it is written, so
 //! a serialization that drops a field aborts the run.
@@ -33,7 +37,7 @@ use hbmflow::sim::{self, analytic, event};
 use hbmflow::util::bench::{fmt_dur, section, Bench, BenchResult};
 use hbmflow::util::json::Json;
 
-const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json");
+const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_7.json");
 const KERNEL_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/kernels");
 
 /// Short per-bench budget so the default (time-budget) mode finishes
@@ -270,6 +274,55 @@ fn dse_section() -> Json {
     ])
 }
 
+fn search_section() -> Json {
+    section("§Perf sim — budget-aware streaming search (dse --strategy stream)");
+    let mut space = SearchSpace::default_for("helmholtz");
+    space.degrees = vec![11];
+    space.cu_counts = vec![1, 2, 3];
+    space.dataflow = vec![Some(2), Some(7)];
+    space.double_buffering = vec![true];
+    space.bus_modes = vec![BusMode::Wide256Parallel];
+    space.fifo_depths = vec![None];
+    let elements = 8_000_000u64;
+
+    // warm session, like dse_section: the measured work is the stream
+    // (analytic screen + surviving sims + incremental frontier), not
+    // parse/lower/map
+    let session = Session::new(Platform::alveo_u280());
+    let cfg = dse::SearchConfig {
+        batch: 8,
+        threads: Some(1),
+        ..dse::SearchConfig::default()
+    };
+    let warm = dse::search_in(&session, &space, elements, &cfg).expect("stream sweep");
+    let stats = warm.stats.expect("search results carry stats");
+    assert!(stats.complete, "the stream must drain the space");
+
+    let stream_b = bench(format!("dse stream   ({} pts)", stats.considered))
+        .run(|| dse::search_in(&session, &space, elements, &cfg).unwrap());
+    println!("{}", stream_b.report());
+    let points_per_sec = stats.considered as f64 / (ns(stream_b.median) / 1e9).max(1e-12);
+    println!(
+        "stream sweep: {} considered, {} pruned, peak resident {} \
+         (frontier peak {}), {points_per_sec:.0} points/s",
+        stats.considered, stats.pruned, stats.peak_resident, stats.frontier_peak
+    );
+
+    Json::obj(vec![
+        ("kernel", Json::str("helmholtz")),
+        ("strategy", Json::str("stream")),
+        ("batch", Json::num(cfg.batch as f64)),
+        ("elements", Json::num(elements as f64)),
+        ("considered", Json::num(stats.considered as f64)),
+        ("pruned", Json::num(stats.pruned as f64)),
+        ("frontier", Json::num(warm.frontier.len() as f64)),
+        ("peak_resident_points", Json::num(stats.peak_resident as f64)),
+        ("frontier_peak", Json::num(stats.frontier_peak as f64)),
+        ("stream", checked_json(&stream_b)),
+        ("points_per_sec", Json::num(points_per_sec)),
+    ])
+}
+
 fn main() {
     let fixed_iters = std::env::var("HBMFLOW_BENCH_ITERS")
         .ok()
@@ -279,6 +332,7 @@ fn main() {
     let raw = raw_timeline_section();
     let (points, speedups) = grid_section();
     let dse = dse_section();
+    let search = search_section();
 
     let mut sorted = speedups.clone();
     sorted.sort_by(|a, b| a.total_cmp(b));
@@ -291,7 +345,7 @@ fn main() {
     let doc = Json::obj(vec![
         ("schema", Json::num(1.0)),
         ("bench", Json::str("perf_sim")),
-        ("pr", Json::num(6.0)),
+        ("pr", Json::num(7.0)),
         (
             "fixed_iters",
             fixed_iters.map_or(Json::Null, |k| Json::num(k as f64)),
@@ -299,6 +353,7 @@ fn main() {
         ("timeline_raw", raw),
         ("points", points),
         ("dse", dse),
+        ("search", search),
         (
             "summary",
             Json::obj(vec![(

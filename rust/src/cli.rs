@@ -100,6 +100,12 @@ const FLAG_REGISTRY: &[(&str, &[&str])] = &[
             "elements",
             "policy",
             "exact",
+            "strategy",
+            "budget",
+            "seed",
+            "batch",
+            "resume",
+            "stop-after",
         ],
     ),
 ];
@@ -375,6 +381,18 @@ dse flags: --p 7,11  --max-cus N  --ddr4  --threads N  --elements N
            --exact (full event sim for every candidate; default is the
            adaptive analytic screen — same frontier, faster)
            --format text|json|csv
+           --strategy stream|random|lhs|hillclimb (budget-aware
+             streaming search: never materializes the cross product,
+             O(frontier + batch) resident memory; stream reproduces the
+             eager frontier bit-for-bit)
+           --budget N (candidates to consider; sampling default 256)
+           --seed N (sampling PRNG seed; same seed = same report)
+           --batch N (evaluate/checkpoint granularity, default 64)
+           --resume ck.json (checkpoint file: written after every
+             batch, restored on restart; refuses checkpoints from a
+             different space/platform/workload/seed)
+           --stop-after N (pause after N batches; rerun with the same
+             --resume file to continue where it stopped)
 
 unknown or misspelled flags are rejected with a did-you-mean hint.
 ";
@@ -788,8 +806,43 @@ fn cmd_dse(args: &Args) -> Result<String> {
         dse::Fidelity::Adaptive
     };
     let session = Session::new(Platform::alveo_u280());
-    let ex = dse::explore_in_with(&session, &space, n, threads, fidelity)
-        .map_err(|e| anyhow!(e))?;
+    let ex = if let Some(name) = args.get("strategy") {
+        let strategy = dse::Strategy::parse(name).ok_or_else(|| {
+            anyhow!("unknown --strategy {name} (stream|random|lhs|hillclimb)")
+        })?;
+        let budget = match args.get("budget") {
+            Some(v) => {
+                Some(v.parse::<usize>().with_context(|| format!("--budget {v}"))?)
+            }
+            None => None,
+        };
+        let stop_after = match args.get("stop-after") {
+            Some(v) => Some(
+                v.parse::<usize>()
+                    .with_context(|| format!("--stop-after {v}"))?,
+            ),
+            None => None,
+        };
+        let cfg = dse::SearchConfig {
+            strategy,
+            seed: args.u64_or("seed", 0)?,
+            budget,
+            batch: args.usize_or("batch", 64)?,
+            threads,
+            prune: !args.flag("exact"),
+            checkpoint: args.get("resume").map(std::path::PathBuf::from),
+            stop_after,
+        };
+        dse::search_in(&session, &space, n, &cfg).map_err(|e| anyhow!(e))?
+    } else {
+        for f in ["budget", "seed", "batch", "resume", "stop-after"] {
+            if args.get(f).is_some() {
+                bail!("--{f} requires --strategy stream|random|lhs|hillclimb");
+            }
+        }
+        dse::explore_in_with(&session, &space, n, threads, fidelity)
+            .map_err(|e| anyhow!(e))?
+    };
 
     // default: whole frontier with --pareto-only, top 25 otherwise
     let pareto_only = args.flag("pareto-only");
@@ -1052,6 +1105,36 @@ mod tests {
         assert!(s.contains("Pareto frontier"), "{s}");
         assert!(s.contains("Fixed Point 32"), "{s}");
         assert!(s.contains("candidates enumerated"), "{s}");
+    }
+
+    #[test]
+    fn dse_strategy_runs_a_budgeted_sweep() {
+        let s = run(&[
+            "dse", "--p", "11", "--dtype", "fx32", "--max-cus", "1",
+            "--elements", "100000", "--threads", "2", "--strategy", "lhs",
+            "--budget", "8", "--seed", "7",
+        ])
+        .unwrap();
+        assert!(s.contains("candidates considered"), "{s}");
+        assert!(s.contains("Pareto frontier"), "{s}");
+        assert!(run(&["dse", "--strategy", "bogus"]).is_err());
+    }
+
+    #[test]
+    fn dse_search_flags_require_a_strategy() {
+        let err = run(&["dse", "--budget", "8"]).unwrap_err();
+        assert!(err.to_string().contains("--strategy"), "{err}");
+        let err = run(&["dse", "--seed", "3"]).unwrap_err();
+        assert!(err.to_string().contains("--strategy"), "{err}");
+    }
+
+    #[test]
+    fn dse_hillclimb_refuses_resume() {
+        let err = run(&[
+            "dse", "--strategy", "hillclimb", "--resume", "/tmp/ck_none.json",
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("not resumable"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Versioned sweep checkpoints — the resumability half of the search
+//! engine (DESIGN.md §2.8).
+//!
+//! A checkpoint is one JSON document holding everything a killed sweep
+//! needs to continue: the stream cursor, the [`SweepStats`] counters,
+//! and the current frontier members *with their full evaluations*
+//! (options via the artifact codec, resources and simulation numbers
+//! via the same encoders `flow::Artifact` uses — Rust float formatting
+//! is shortest-round-trip, so the restored vectors are bit-identical
+//! to the originals and frontier equivalence survives the hop through
+//! text).
+//!
+//! The `space_key` field binds a checkpoint to the sweep that wrote it:
+//! a fingerprint over the kernel source, every axis list, the degree
+//! normalization facts, the platform, the workload size, and the
+//! sampling parameters. Resuming with *anything* changed — a narrowed
+//! axis, a different seed, another platform — is refused instead of
+//! silently merging incompatible evaluations.
+//!
+//! Writes go to `<path>.tmp` then rename over the target, so a sweep
+//! killed mid-write leaves the previous complete checkpoint intact.
+
+use std::path::Path;
+
+use crate::flow::{
+    self,
+    artifact::{
+        opts_from_json, opts_to_json, resources_from_json, resources_json,
+        sim_from_json, sim_json,
+    },
+};
+use crate::platform::Platform;
+use crate::util::json::{self, Json};
+
+use super::eval::{EvalOutcome, Evaluated};
+use super::search::{SearchConfig, SweepStats};
+use super::space::{DegreeMap, DesignPoint, SearchSpace};
+
+/// Bump when the checkpoint layout changes; old files are refused with
+/// a clear message instead of being misread.
+pub const CHECKPOINT_SCHEMA: u64 = 1;
+
+const KIND: &str = "dse-checkpoint";
+
+/// A restored checkpoint: resume the stream at `cursor` with this
+/// frontier (entries keyed by the candidate's stream sequence number,
+/// in first-admission order) and these counters.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub cursor: usize,
+    pub stats: SweepStats,
+    pub frontier: Vec<(usize, DesignPoint, Evaluated)>,
+}
+
+/// Fingerprint of everything that determines the candidate sequence
+/// and its evaluations. Two sweeps share a checkpoint iff their keys
+/// match.
+pub fn space_key(
+    space: &SearchSpace,
+    info: &DegreeMap,
+    platform: &Platform,
+    n_elements: u64,
+    cfg: &SearchConfig,
+) -> String {
+    let mut degrees: Vec<(usize, usize, usize)> = info
+        .iter()
+        .map(|(&p, i)| (p, i.nests, i.max_read_degree))
+        .collect();
+    degrees.sort_unstable();
+    let text = format!(
+        "kernel={} degrees={:?} dtypes={:?} memories={:?} buses={:?} \
+         db={:?} dataflow={:?} sharing={:?} fifos={:?} caps={:?} \
+         policies={:?} cus={:?} info={:?} platform={} elements={} \
+         strategy={} seed={} budget={:?} batch={}",
+        space.kernel,
+        space.degrees,
+        space.dtypes,
+        space.memories,
+        space.bus_modes,
+        space.double_buffering,
+        space.dataflow,
+        space.mem_sharing,
+        space.fifo_depths,
+        space.partition_caps,
+        space.channel_policies,
+        space.cu_counts,
+        degrees,
+        platform.name,
+        n_elements,
+        cfg.strategy.name(),
+        cfg.seed,
+        cfg.budget,
+        cfg.batch,
+    );
+    flow::fingerprint(&space.kernel, &text)
+}
+
+/// Atomically write the sweep state. `entries` are the live frontier
+/// members (sequence number + outcome) in first-admission order;
+/// rejected/infeasible outcomes never reach a frontier, so every entry
+/// carries a full evaluation.
+pub fn save(
+    path: &Path,
+    key: &str,
+    cursor: usize,
+    stats: &SweepStats,
+    entries: &[(usize, &EvalOutcome)],
+) -> Result<(), String> {
+    let frontier: Vec<Json> = entries
+        .iter()
+        .filter_map(|(seq, o)| {
+            let ev = o.result.as_ref().ok()?;
+            Some(Json::obj(vec![
+                ("seq", Json::num(*seq as f64)),
+                ("kernel", Json::str(o.point.kernel.clone())),
+                ("p", Json::num(o.point.p as f64)),
+                ("opts", opts_to_json(&o.point.opts)),
+                ("feasible", Json::Bool(ev.feasible)),
+                ("fmax_mhz", Json::num(ev.fmax_mhz)),
+                ("max_utilization", Json::num(ev.max_utilization)),
+                ("total", resources_json(&ev.total)),
+                ("sim", sim_json(&ev.sim)),
+            ]))
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::num(CHECKPOINT_SCHEMA as f64)),
+        ("kind", Json::str(KIND)),
+        ("space_key", Json::str(key)),
+        ("cursor", Json::num(cursor as f64)),
+        ("stats", stats.to_json()),
+        ("frontier", Json::Arr(frontier)),
+    ]);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, format!("{doc}\n"))
+        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+/// Load and validate a checkpoint. `expect_key` must match the stored
+/// `space_key` — see [`space_key`] for what that covers.
+pub fn load(path: &Path, expect_key: &str) -> Result<Checkpoint, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    let doc = json::parse(&text)
+        .map_err(|e| format!("{}: not valid JSON: {e}", path.display()))?;
+    if doc.get("kind").as_str() != Some(KIND) {
+        return Err(format!("{}: not a dse checkpoint", path.display()));
+    }
+    match doc.get("schema").as_u64() {
+        Some(CHECKPOINT_SCHEMA) => {}
+        Some(n) => {
+            return Err(format!(
+                "{}: checkpoint schema v{n}, this build reads v{CHECKPOINT_SCHEMA}",
+                path.display()
+            ));
+        }
+        None => return Err(format!("{}: missing schema", path.display())),
+    }
+    match doc.get("space_key").as_str() {
+        Some(k) if k == expect_key => {}
+        _ => {
+            return Err(format!(
+                "{}: written by a different sweep (space, platform, workload, \
+                 or sampling parameters changed) — delete it or rerun the \
+                 original configuration",
+                path.display()
+            ));
+        }
+    }
+    let cursor = doc
+        .get("cursor")
+        .as_u64()
+        .ok_or_else(|| format!("{}: missing cursor", path.display()))?
+        as usize;
+    let stats = SweepStats::from_json(doc.get("stats"))
+        .map_err(|e| format!("{}: bad stats: {e}", path.display()))?;
+    let raw = doc
+        .get("frontier")
+        .as_arr()
+        .ok_or_else(|| format!("{}: missing frontier", path.display()))?;
+    let mut frontier = Vec::with_capacity(raw.len());
+    for (i, entry) in raw.iter().enumerate() {
+        let ctx = |e: String| format!("{}: frontier[{i}]: {e}", path.display());
+        let seq = entry
+            .get("seq")
+            .as_u64()
+            .ok_or_else(|| ctx("missing seq".into()))? as usize;
+        let kernel = entry
+            .get("kernel")
+            .as_str()
+            .ok_or_else(|| ctx("missing kernel".into()))?
+            .to_string();
+        let p = entry
+            .get("p")
+            .as_u64()
+            .ok_or_else(|| ctx("missing p".into()))? as usize;
+        let opts = opts_from_json(entry.get("opts")).map_err(ctx)?;
+        let total = resources_from_json(entry.get("total")).map_err(ctx)?;
+        let sim = sim_from_json(entry.get("sim")).map_err(ctx)?;
+        let fmax_mhz = entry
+            .get("fmax_mhz")
+            .as_f64()
+            .ok_or_else(|| ctx("missing fmax_mhz".into()))?;
+        let max_utilization = entry
+            .get("max_utilization")
+            .as_f64()
+            .ok_or_else(|| ctx("missing max_utilization".into()))?;
+        let feasible = matches!(entry.get("feasible"), Json::Bool(true));
+        frontier.push((
+            seq,
+            DesignPoint { kernel, p, opts },
+            Evaluated {
+                feasible,
+                fmax_mhz,
+                total,
+                max_utilization,
+                sim,
+            },
+        ));
+    }
+    Ok(Checkpoint {
+        cursor,
+        stats,
+        frontier,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::Session;
+    use crate::kernels::KernelSource;
+
+    fn evaluated_outcome() -> EvalOutcome {
+        let session = Session::new(Platform::alveo_u280());
+        let source = KernelSource::builtin("helmholtz");
+        let space = SearchSpace::default_for("helmholtz");
+        let pt = space.candidates(&DegreeMap::new()).next().unwrap();
+        let mut outs = crate::dse::eval::evaluate(
+            &session,
+            &source,
+            vec![pt],
+            50_000,
+            Some(1),
+        );
+        let o = outs.remove(0);
+        assert!(o.result.is_ok(), "{:?}", o.result);
+        o
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bit_exactly() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("hbmflow_ck_roundtrip.json");
+        let o = evaluated_outcome();
+        let stats = SweepStats {
+            considered: 9,
+            feasible: 4,
+            pruned: 2,
+            exact_sims: 2,
+            resumed_from: Some(3),
+            ..SweepStats::default()
+        };
+        save(&path, "k123", 9, &stats, &[(5, &o)]).unwrap();
+        let ck = load(&path, "k123").unwrap();
+        assert_eq!(ck.cursor, 9);
+        assert_eq!(ck.stats, stats);
+        assert_eq!(ck.frontier.len(), 1);
+        let (seq, pt, ev) = &ck.frontier[0];
+        assert_eq!(*seq, 5);
+        assert_eq!(pt.fingerprint(), o.point.fingerprint());
+        let orig = o.result.as_ref().unwrap();
+        // Debug formatting covers every field of every float — equality
+        // here is bit-exactness of the whole evaluation
+        assert_eq!(format!("{ev:?}"), format!("{orig:?}"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mismatched_key_and_schema_are_refused() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("hbmflow_ck_mismatch.json");
+        let o = evaluated_outcome();
+        save(&path, "the-key", 1, &SweepStats::default(), &[(0, &o)]).unwrap();
+        let err = load(&path, "other-key").unwrap_err();
+        assert!(err.contains("different sweep"), "{err}");
+        // corrupt the schema number and the load names both versions
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"schema\":1", "\"schema\":99"))
+            .unwrap();
+        let err = load(&path, "the-key").unwrap_err();
+        assert!(err.contains("schema v99"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn space_key_tracks_axes_and_sampling_parameters() {
+        let platform = Platform::alveo_u280();
+        let mut space = SearchSpace::default_for("helmholtz");
+        let info = DegreeMap::new();
+        let cfg = SearchConfig::default();
+        let base = space_key(&space, &info, &platform, 1000, &cfg);
+        assert_eq!(
+            base,
+            space_key(&space, &info, &platform, 1000, &cfg),
+            "deterministic"
+        );
+        let seeded = SearchConfig {
+            seed: 1,
+            ..SearchConfig::default()
+        };
+        assert_ne!(base, space_key(&space, &info, &platform, 1000, &seeded));
+        assert_ne!(base, space_key(&space, &info, &platform, 2000, &cfg));
+        space.degrees = vec![7];
+        assert_ne!(base, space_key(&space, &info, &platform, 1000, &cfg));
+    }
+}

@@ -21,7 +21,14 @@
 //!    pass prunes provably dominated candidates, and only the
 //!    survivors pay for the full event timeline — same frontier,
 //!    fraction of the simulation cost (`benches/perf_sim.rs` measures
-//!    the ratio into `BENCH_6.json`);
+//!    the ratio into `BENCH_7.json`);
+//!  * [`search`] — the budget-aware engine (DESIGN.md §2.8): lazily
+//!    streamed candidates ([`SearchSpace::candidates`] — the cross
+//!    product is never materialized), pluggable strategies
+//!    (exhaustive stream / random / Latin-hypercube / hill-climb), an
+//!    incremental frontier keeping memory O(frontier + batch), and
+//!    versioned [`checkpoint`]s that let a killed sweep resume where
+//!    it stopped without re-evaluating anything;
 //!  * [`pareto`] — feasibility filtering against the platform's resource
 //!    budget and Pareto-frontier extraction over
 //!    (GFLOPS, energy, BRAM/URAM/DSP, switch crossings);
@@ -36,21 +43,21 @@
 //! new point on the frontier?) instead of a single hand-picked
 //! configuration.
 
+pub mod checkpoint;
 pub mod eval;
 pub mod pareto;
 pub mod report;
+pub mod search;
 pub mod space;
-
-use std::collections::{HashMap, HashSet};
-use std::sync::Arc;
 
 use crate::datatype::DataType;
 use crate::flow;
 use crate::platform::Platform;
 
 pub use eval::{EvalOutcome, Evaluated};
-pub use pareto::{dominates, pareto_indices};
-pub use space::{DesignPoint, SearchSpace};
+pub use pareto::{dominates, pareto_indices, Frontier};
+pub use search::{search, search_in, SearchConfig, Strategy, SweepStats};
+pub use space::{DegreeInfo, DegreeMap, DesignPoint, SearchSpace};
 
 /// The result of exploring one [`SearchSpace`]: every outcome (in
 /// deterministic enumeration order) plus the indices of the feasible
@@ -62,20 +69,37 @@ pub struct Exploration {
     pub outcomes: Vec<EvalOutcome>,
     /// Indices into `outcomes` of the non-dominated feasible candidates.
     pub frontier: Vec<usize>,
+    /// Present when the result came from the budget-aware
+    /// [`search`] engine: `outcomes` then holds only the frontier
+    /// members (the sweep is memory-bounded), and the counters here
+    /// describe everything the sweep considered.
+    pub stats: Option<SweepStats>,
 }
 
 impl Exploration {
+    /// Candidates the sweep considered. For the eager explorer this is
+    /// `outcomes.len()`; a budget-aware search keeps only the frontier
+    /// resident, so the count comes from its [`SweepStats`].
     pub fn enumerated(&self) -> usize {
-        self.outcomes.len()
+        match &self.stats {
+            Some(st) => st.considered,
+            None => self.outcomes.len(),
+        }
     }
 
     pub fn feasible_count(&self) -> usize {
-        self.outcomes.iter().filter(|o| o.is_feasible()).count()
+        match &self.stats {
+            Some(st) => st.feasible,
+            None => self.outcomes.iter().filter(|o| o.is_feasible()).count(),
+        }
     }
 
     /// Candidates Olympus refused to generate (channel/CU limits).
     pub fn rejected_count(&self) -> usize {
-        self.outcomes.iter().filter(|o| o.result.is_err()).count()
+        match &self.stats {
+            Some(st) => st.rejected,
+            None => self.outcomes.iter().filter(|o| o.result.is_err()).count(),
+        }
     }
 
     pub fn is_on_frontier(&self, idx: usize) -> bool {
@@ -194,8 +218,6 @@ pub fn explore_in_with(
     threads: Option<usize>,
     fidelity: Fidelity,
 ) -> Result<Exploration, String> {
-    let mut points = space.enumerate();
-
     // snapshot file sources to their current text so every candidate —
     // and the normalization below — evaluates ONE program even if the
     // .cfd file is edited mid-sweep (the old evaluator's single
@@ -203,35 +225,14 @@ pub fn explore_in_with(
     let source = space.source.snapshot()?;
 
     // one lowered kernel per degree, straight from the session cache —
-    // the evaluator's requests below hit the same entries
-    let mut lowered: HashMap<usize, Arc<flow::Lowered>> = HashMap::new();
-    for pt in &points {
-        if !lowered.contains_key(&pt.p) {
-            let l = session
-                .lowered(&source, pt.p)
-                .map_err(|e| e.to_string())?;
-            lowered.insert(pt.p, l);
-        }
-    }
-
-    // normalize: a kernel with fewer nests than the requested dataflow
-    // decomposition caps at one group per nest (cli::cmd_compile does
-    // the same clamp), and a partition cap at or above the kernel's max
-    // access degree is the uncapped plan (both collapse to duplicates
-    // the dedup below removes)
-    for pt in &mut points {
-        let k = &lowered[&pt.p].kernel;
-        if let Some(g) = pt.opts.dataflow {
-            pt.opts.dataflow = Some(g.min(k.nests.len()));
-        }
-        if let Some(c) = pt.opts.partition_cap {
-            if c >= crate::ir::access::max_read_degree(k) {
-                pt.opts.partition_cap = None;
-            }
-        }
-    }
-    let mut seen = HashSet::new();
-    points.retain(|pt| seen.insert(pt.fingerprint()));
+    // the evaluator's requests below hit the same entries. The nest
+    // count and max access degree feed the streaming iterator's
+    // normalization: dataflow decompositions clamp to one group per
+    // nest (cli::cmd_compile does the same clamp) and partition caps
+    // at or above the kernel's max access degree collapse onto the
+    // uncapped plan.
+    let info = degree_map(session, &source, &space.degrees)?;
+    let points: Vec<DesignPoint> = space.candidates(&info).collect();
 
     let outcomes = match fidelity {
         Fidelity::Exact => eval::evaluate(session, &source, points, n_elements, threads),
@@ -257,7 +258,32 @@ pub fn explore_in_with(
         n_elements,
         outcomes,
         frontier,
+        stats: None,
     })
+}
+
+/// One lowered kernel per distinct degree (cache-warm via the session)
+/// summarized into the [`DegreeMap`] the streaming iterator needs.
+pub(crate) fn degree_map(
+    session: &flow::Session,
+    source: &crate::kernels::KernelSource,
+    degrees: &[usize],
+) -> Result<DegreeMap, String> {
+    let mut info = DegreeMap::new();
+    for &p in degrees {
+        if info.contains_key(&p) {
+            continue;
+        }
+        let l = session.lowered(source, p).map_err(|e| e.to_string())?;
+        info.insert(
+            p,
+            DegreeInfo {
+                nests: l.kernel.nests.len(),
+                max_read_degree: crate::ir::access::max_read_degree(&l.kernel),
+            },
+        );
+    }
+    Ok(info)
 }
 
 /// The adaptive two-pass evaluation behind [`Fidelity::Adaptive`].

@@ -87,6 +87,65 @@ pub fn objectives_with_time(e: &Evaluated, total_s: f64) -> Vec<f64> {
     ]
 }
 
+/// Incrementally-maintained Pareto frontier over keyed objective
+/// vectors — the memory-bounded replacement for collecting every
+/// outcome and calling [`pareto_indices`] at the end. `offer` either
+/// rejects a dominated candidate or admits it and evicts the members it
+/// dominates; ties survive, exactly like the batch scan, so offering a
+/// sequence point-by-point yields the same surviving set (by key) as
+/// one [`pareto_indices`] call over the whole sequence, in first-offer
+/// order.
+#[derive(Debug, Clone, Default)]
+pub struct Frontier {
+    entries: Vec<(usize, Vec<f64>)>,
+    peak: usize,
+}
+
+impl Frontier {
+    pub fn new() -> Frontier {
+        Frontier::default()
+    }
+
+    /// Offer a candidate; returns `true` when it joins the frontier.
+    /// A candidate dominated by (or merely tied with part of) the
+    /// current frontier is handled exactly as the batch scan would:
+    /// dominated ⇒ rejected, otherwise admitted and every member it
+    /// dominates is evicted.
+    pub fn offer(&mut self, key: usize, v: Vec<f64>) -> bool {
+        if self.entries.iter().any(|(_, q)| dominates(q, &v)) {
+            return false;
+        }
+        self.entries.retain(|(_, q)| !dominates(&v, q));
+        self.entries.push((key, v));
+        self.peak = self.peak.max(self.entries.len());
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Keys of the surviving members, in first-offer order.
+    pub fn keys(&self) -> Vec<usize> {
+        self.entries.iter().map(|(k, _)| *k).collect()
+    }
+
+    /// Surviving members as (key, objective vector) pairs.
+    pub fn entries(&self) -> &[(usize, Vec<f64>)] {
+        &self.entries
+    }
+
+    /// Largest member count ever held — the frontier's own contribution
+    /// to a sweep's peak resident set.
+    pub fn peak_len(&self) -> usize {
+        self.peak
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +185,39 @@ mod tests {
     fn single_objective_keeps_only_the_max() {
         let pts = vec![vec![1.0], vec![3.0], vec![2.0], vec![3.0]];
         assert_eq!(pareto_indices(&pts), vec![1, 3], "tied maxima both kept");
+    }
+
+    #[test]
+    fn incremental_frontier_matches_the_batch_scan() {
+        // every insertion order detail is pinned against pareto_indices
+        // over the same sequence: identical surviving keys
+        let mut pts = Vec::new();
+        for i in 0..6 {
+            for j in 0..6 {
+                pts.push(vec![i as f64, j as f64, -(((i * j) % 5) as f64)]);
+            }
+        }
+        let mut f = Frontier::new();
+        for (k, v) in pts.iter().enumerate() {
+            f.offer(k, v.clone());
+        }
+        let batch = pareto_indices(&pts);
+        let mut inc = f.keys();
+        inc.sort_unstable();
+        assert_eq!(inc, batch);
+        assert!(f.peak_len() >= f.len());
+        assert!(f.peak_len() <= pts.len());
+    }
+
+    #[test]
+    fn incremental_frontier_keeps_ties_and_evicts_dominated() {
+        let mut f = Frontier::new();
+        assert!(f.offer(0, vec![1.0, 1.0]));
+        assert!(f.offer(1, vec![1.0, 1.0]), "exact tie survives");
+        assert!(!f.offer(2, vec![0.5, 0.5]), "dominated rejected");
+        assert!(f.offer(3, vec![2.0, 2.0]), "dominator evicts both ties");
+        assert_eq!(f.keys(), vec![3]);
+        assert_eq!(f.peak_len(), 2);
     }
 
     #[test]

@@ -85,15 +85,38 @@ pub fn text(ex: &Exploration, top_k: usize, pareto_only: bool) -> String {
 }
 
 fn summary(ex: &Exploration) -> String {
-    format!(
-        "{} candidates enumerated ({} feasible, {} over budget, {} rejected \
-         by olympus); Pareto frontier: {} designs",
-        ex.enumerated(),
-        ex.feasible_count(),
-        ex.enumerated() - ex.feasible_count() - ex.rejected_count(),
-        ex.rejected_count(),
-        ex.frontier.len(),
-    )
+    match &ex.stats {
+        // a budget-aware sweep: report what the stream considered and
+        // what the analytic screen saved, not just what is resident
+        Some(s) => {
+            let mut line = format!(
+                "{} candidates considered ({} feasible, {} over budget, {} \
+                 rejected by olympus); {} pruned analytically, {} exact \
+                 sims, peak resident {}; Pareto frontier: {} designs",
+                s.considered,
+                s.feasible,
+                s.over_budget,
+                s.rejected,
+                s.pruned,
+                s.exact_sims,
+                s.peak_resident,
+                ex.frontier.len(),
+            );
+            if !s.complete {
+                line.push_str(" (sweep paused — resume to finish)");
+            }
+            line
+        }
+        None => format!(
+            "{} candidates enumerated ({} feasible, {} over budget, {} rejected \
+             by olympus); Pareto frontier: {} designs",
+            ex.enumerated(),
+            ex.feasible_count(),
+            ex.enumerated() - ex.feasible_count() - ex.rejected_count(),
+            ex.rejected_count(),
+            ex.frontier.len(),
+        ),
+    }
 }
 
 /// Frontier status of the paper's published design points (Figs. 15–17).
@@ -142,7 +165,7 @@ pub fn json(ex: &Exploration) -> String {
         .enumerate()
         .map(|(i, o)| candidate_json(ex, i, o))
         .collect();
-    Json::obj(vec![
+    let mut pairs = vec![
         ("kernel", Json::str(ex.kernel.clone())),
         ("elements", Json::num(ex.n_elements as f64)),
         ("enumerated", Json::num(ex.enumerated() as f64)),
@@ -150,8 +173,11 @@ pub fn json(ex: &Exploration) -> String {
         ("rejected", Json::num(ex.rejected_count() as f64)),
         ("frontier_size", Json::num(ex.frontier.len() as f64)),
         ("candidates", Json::Arr(candidates)),
-    ])
-    .to_string()
+    ];
+    if let Some(s) = &ex.stats {
+        pairs.push(("search", s.to_json()));
+    }
+    Json::obj(pairs).to_string()
 }
 
 fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
@@ -344,6 +370,36 @@ mod tests {
         assert_eq!(cands.len(), ex.enumerated());
         assert_eq!(cands[0].get("dtype").as_str(), Some("f64"));
         assert!(cands[0].get("gflops_system").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn search_results_report_sweep_counters() {
+        let mut s = SearchSpace::default_for("helmholtz");
+        s.degrees = vec![11];
+        s.dtypes = vec![DataType::Fx32];
+        s.cu_counts = vec![1];
+        s.dataflow = vec![Some(7)];
+        s.double_buffering = vec![true];
+        s.bus_modes = vec![BusMode::Wide256Parallel];
+        s.mem_sharing = vec![false];
+        s.fifo_depths = vec![None];
+        let cfg = crate::dse::SearchConfig {
+            threads: Some(2),
+            ..crate::dse::SearchConfig::default()
+        };
+        let ex = crate::dse::search(&s, &Platform::alveo_u280(), 200_000, &cfg)
+            .unwrap();
+        let t = text(&ex, 0, false);
+        assert!(t.contains("candidates considered"), "{t}");
+        assert!(t.contains("exact sims"), "{t}");
+        assert!(!t.contains("paused"), "completed sweep: {t}");
+        let j = json::parse(&json(&ex)).expect("valid JSON");
+        let search = j.get("search");
+        assert_eq!(search.get("complete"), &json::Json::Bool(true));
+        assert!(search.get("considered").as_u64().unwrap() >= 1);
+        // CSV rows cover exactly the resident (frontier) outcomes
+        let c = csv(&ex);
+        assert_eq!(c.lines().count(), 1 + ex.outcomes.len());
     }
 
     #[test]

@@ -1,0 +1,833 @@
+//! Budget-aware, resumable search over a [`SearchSpace`] (DESIGN.md
+//! §2.8).
+//!
+//! The eager explorer ([`crate::dse::explore`]) materializes and
+//! evaluates the whole cross product — fine for the paper's ~2k-point
+//! helmholtz space, hopeless for a realistic multi-kernel sweep. This
+//! engine replaces it with a streaming pipeline:
+//!
+//!  * candidates come from a pluggable [`Strategy`] — the lazy
+//!    exhaustive stream ([`SearchSpace::candidates`]), seeded uniform
+//!    sampling, Latin-hypercube sampling, or a hill-climb refinement
+//!    seeded from an LHS frontier;
+//!  * every batch goes through the PR 6 analytic screen first: a
+//!    candidate whose *optimistic* objective vector (analytic lower
+//!    bound) is dominated by a batch rival's *conservative* vector
+//!    (upper bound) — or by a frontier member's exact vector — is
+//!    provably dominated for any true makespans inside the brackets
+//!    and never reaches the event simulator;
+//!  * the Pareto frontier is maintained incrementally
+//!    ([`super::pareto::Frontier`]); only frontier members stay
+//!    resident, so peak memory is O(batch + frontier) regardless of
+//!    how many points the sweep considers;
+//!  * after every batch the sweep state (cursor, counters, frontier
+//!    members with their full evaluations) is persisted as a versioned
+//!    checkpoint ([`super::checkpoint`]); a killed sweep resumes where
+//!    it stopped by *replaying* the deterministic candidate sequence
+//!    without re-evaluating anything before the cursor.
+//!
+//! Frontier equivalence: with [`Strategy::Stream`] and pruning on, the
+//! final frontier is bit-identical to the eager
+//! [`crate::dse::Fidelity::Exact`] frontier. Pruning only ever removes
+//! truly dominated candidates (the bracket argument above; domination
+//! chains terminate at an exactly-evaluated survivor), the incremental
+//! frontier equals the batch pairwise scan, and frontier members always
+//! carry full event-simulation numbers from the same code path — so
+//! even the float bits agree. `tests/dse_search.rs` pins all of it.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+use crate::flow;
+use crate::kernels::KernelSource;
+use crate::platform::Platform;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+use super::checkpoint::{self, Checkpoint};
+use super::eval::{self, EvalOutcome};
+use super::pareto::{self, Frontier};
+use super::space::{coherent, DegreeMap, DesignPoint, SearchSpace};
+use super::Exploration;
+
+/// Sample count when a sampling strategy is given no `--budget`.
+pub const DEFAULT_SAMPLE_BUDGET: usize = 256;
+
+/// How the sweep walks the space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Strategy {
+    /// Exhaustive, in enumeration order, lazily streamed. With pruning
+    /// on this reproduces the eager exact frontier bit-for-bit.
+    #[default]
+    Stream,
+    /// Seeded uniform sampling over the axis lists (duplicate and
+    /// incoherent draws are discarded, so fewer than `budget` points
+    /// may come back from a small space).
+    Random,
+    /// Latin-hypercube sampling: every axis is stratified across the
+    /// sample count, so `budget` points cover each axis evenly instead
+    /// of clumping the way independent uniform draws do.
+    Lhs,
+    /// LHS seeding with half the budget, then greedy refinement: each
+    /// round mutates one axis of every current frontier member and
+    /// evaluates the unseen neighbors until the budget is spent.
+    HillClimb,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "stream" => Some(Strategy::Stream),
+            "random" => Some(Strategy::Random),
+            "lhs" => Some(Strategy::Lhs),
+            "hillclimb" | "hill-climb" => Some(Strategy::HillClimb),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Stream => "stream",
+            Strategy::Random => "random",
+            Strategy::Lhs => "lhs",
+            Strategy::HillClimb => "hillclimb",
+        }
+    }
+}
+
+/// Everything that parameterizes a sweep besides the space itself.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub strategy: Strategy,
+    /// PRNG seed for the sampling strategies; the same seed reproduces
+    /// the same candidate sequence exactly (and therefore the same
+    /// report), independent of thread count.
+    pub seed: u64,
+    /// Budget semantics per strategy: `Stream` caps the candidates
+    /// considered (`None` = the whole space); `Random`/`Lhs` is the
+    /// sample count (`None` = [`DEFAULT_SAMPLE_BUDGET`]); `HillClimb`
+    /// is the total evaluation budget, half spent on LHS seeding.
+    pub budget: Option<usize>,
+    /// Candidates evaluated (and checkpointed) per batch.
+    pub batch: usize,
+    /// Worker threads per batch (`None` = one per core). Results are
+    /// deterministic regardless.
+    pub threads: Option<usize>,
+    /// Analytic screen on (the default). Off = every candidate pays
+    /// for full event simulation (the CLI's `--exact`).
+    pub prune: bool,
+    /// Checkpoint file: loaded (if present) before the sweep and
+    /// rewritten atomically after every batch.
+    pub checkpoint: Option<PathBuf>,
+    /// Stop after this many batches *this invocation* (the kill switch
+    /// resumability tests — and patient users — script against).
+    pub stop_after: Option<usize>,
+}
+
+impl Default for SearchConfig {
+    fn default() -> SearchConfig {
+        SearchConfig {
+            strategy: Strategy::Stream,
+            seed: 0,
+            budget: None,
+            batch: 64,
+            threads: None,
+            prune: true,
+            checkpoint: None,
+            stop_after: None,
+        }
+    }
+}
+
+/// Counters describing everything a sweep considered (the resident
+/// `outcomes` hold only frontier members).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    /// Candidates taken off the stream (evaluated at least analytically).
+    pub considered: usize,
+    pub feasible: usize,
+    pub over_budget: usize,
+    /// Candidates Olympus refused to generate.
+    pub rejected: usize,
+    /// Feasible candidates the analytic screen proved dominated — they
+    /// never reached the event simulator.
+    pub pruned: usize,
+    /// Full event simulations actually run.
+    pub exact_sims: usize,
+    /// Max simultaneously-resident evaluated points (batch + exact
+    /// survivors + retained frontier) — the memory-boundedness witness.
+    pub peak_resident: usize,
+    /// Max frontier size ever held.
+    pub frontier_peak: usize,
+    /// Cursor this invocation resumed from, if it restored a checkpoint.
+    pub resumed_from: Option<usize>,
+    /// The stream was exhausted (or the budget spent); a `false` here
+    /// means the sweep stopped early and can be resumed.
+    pub complete: bool,
+}
+
+impl SweepStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("considered", Json::num(self.considered as f64)),
+            ("feasible", Json::num(self.feasible as f64)),
+            ("over_budget", Json::num(self.over_budget as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("pruned", Json::num(self.pruned as f64)),
+            ("exact_sims", Json::num(self.exact_sims as f64)),
+            ("peak_resident", Json::num(self.peak_resident as f64)),
+            ("frontier_peak", Json::num(self.frontier_peak as f64)),
+            (
+                "resumed_from",
+                match self.resumed_from {
+                    Some(c) => Json::num(c as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("complete", Json::Bool(self.complete)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SweepStats, String> {
+        let n = |key: &str| {
+            v.get(key)
+                .as_u64()
+                .map(|x| x as usize)
+                .ok_or_else(|| format!("bad {key}"))
+        };
+        Ok(SweepStats {
+            considered: n("considered")?,
+            feasible: n("feasible")?,
+            over_budget: n("over_budget")?,
+            rejected: n("rejected")?,
+            pruned: n("pruned")?,
+            exact_sims: n("exact_sims")?,
+            peak_resident: n("peak_resident")?,
+            frontier_peak: n("frontier_peak")?,
+            resumed_from: match v.get("resumed_from") {
+                Json::Null => None,
+                x => Some(x.as_u64().ok_or("bad resumed_from")? as usize),
+            },
+            complete: matches!(v.get("complete"), Json::Bool(true)),
+        })
+    }
+}
+
+/// [`search_in`] over a throwaway session.
+pub fn search(
+    space: &SearchSpace,
+    platform: &Platform,
+    n_elements: u64,
+    cfg: &SearchConfig,
+) -> Result<Exploration, String> {
+    search_in(&flow::Session::new(platform.clone()), space, n_elements, cfg)
+}
+
+/// Run a budget-aware sweep over a caller-owned session. The returned
+/// [`Exploration`] holds only the frontier members as outcomes (in
+/// first-admission order) plus the sweep counters in `stats`.
+pub fn search_in(
+    session: &flow::Session,
+    space: &SearchSpace,
+    n_elements: u64,
+    cfg: &SearchConfig,
+) -> Result<Exploration, String> {
+    if cfg.batch == 0 {
+        return Err("batch size must be at least 1".into());
+    }
+    if cfg.strategy == Strategy::HillClimb && cfg.checkpoint.is_some() {
+        return Err("hill-climb sweeps are not resumable (refinement depends \
+                    on evaluated results); drop --resume or use \
+                    stream/random/lhs"
+            .into());
+    }
+    let source = space.source.snapshot()?;
+    let info = super::degree_map(session, &source, &space.degrees)?;
+    let key = checkpoint::space_key(space, &info, session.platform(), n_elements, cfg);
+
+    let mut sweep = Sweep {
+        session,
+        source: &source,
+        n_elements,
+        cfg,
+        key,
+        frontier: Frontier::new(),
+        kept: HashMap::new(),
+        stats: SweepStats::default(),
+        cursor: 0,
+    };
+
+    if let Some(path) = &cfg.checkpoint {
+        if path.exists() {
+            let ck = checkpoint::load(path, &sweep.key)?;
+            sweep.restore(ck);
+            if sweep.stats.complete {
+                return Ok(sweep.finish(space));
+            }
+        }
+    }
+
+    match cfg.strategy {
+        Strategy::Stream => {
+            let mut stream: Box<dyn Iterator<Item = DesignPoint> + '_> =
+                match cfg.budget {
+                    Some(b) => Box::new(space.candidates(&info).take(b)),
+                    None => Box::new(space.candidates(&info)),
+                };
+            sweep.run_stream(&mut stream)?;
+        }
+        Strategy::Random => {
+            let budget = cfg.budget.unwrap_or(DEFAULT_SAMPLE_BUDGET);
+            let pts = random_sample(space, &info, budget, cfg.seed);
+            sweep.run_stream(&mut pts.into_iter())?;
+        }
+        Strategy::Lhs => {
+            let budget = cfg.budget.unwrap_or(DEFAULT_SAMPLE_BUDGET);
+            let pts = lhs_sample(space, &info, budget, cfg.seed);
+            sweep.run_stream(&mut pts.into_iter())?;
+        }
+        Strategy::HillClimb => sweep.run_hillclimb(space, &info)?,
+    }
+    Ok(sweep.finish(space))
+}
+
+/// One in-flight sweep: the incremental frontier, the retained outcomes
+/// (frontier members only), and the stream cursor.
+struct Sweep<'a> {
+    session: &'a flow::Session,
+    source: &'a KernelSource,
+    n_elements: u64,
+    cfg: &'a SearchConfig,
+    key: String,
+    frontier: Frontier,
+    kept: HashMap<usize, EvalOutcome>,
+    stats: SweepStats,
+    cursor: usize,
+}
+
+impl Sweep<'_> {
+    fn restore(&mut self, ck: Checkpoint) {
+        for (seq, point, ev) in ck.frontier {
+            let v = pareto::objectives(&ev);
+            if self.frontier.offer(seq, v) {
+                self.kept.insert(
+                    seq,
+                    EvalOutcome {
+                        point,
+                        result: Ok(ev),
+                    },
+                );
+            }
+        }
+        self.stats = ck.stats;
+        self.stats.resumed_from = Some(ck.cursor);
+        self.cursor = ck.cursor;
+    }
+
+    /// Drive a deterministic candidate stream through batched
+    /// screen-evaluate-offer rounds, checkpointing after each.
+    fn run_stream(
+        &mut self,
+        stream: &mut dyn Iterator<Item = DesignPoint>,
+    ) -> Result<(), String> {
+        // resume-by-replay: candidates before the cursor were already
+        // evaluated by the previous invocation — skip, never re-evaluate
+        for _ in 0..self.cursor {
+            if stream.next().is_none() {
+                break;
+            }
+        }
+        let mut batches = 0usize;
+        loop {
+            if self.cfg.stop_after.is_some_and(|lim| batches >= lim) {
+                break;
+            }
+            let batch: Vec<DesignPoint> =
+                stream.by_ref().take(self.cfg.batch).collect();
+            if batch.is_empty() {
+                self.stats.complete = true;
+            } else {
+                self.process_batch(batch);
+                batches += 1;
+            }
+            self.save()?;
+            if self.stats.complete {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    fn run_hillclimb(
+        &mut self,
+        space: &SearchSpace,
+        info: &DegreeMap,
+    ) -> Result<(), String> {
+        let budget = self.cfg.budget.unwrap_or(DEFAULT_SAMPLE_BUDGET).max(1);
+        let seeds = lhs_sample(space, info, (budget / 2).max(1), self.cfg.seed);
+        let mut seen: HashSet<String> =
+            seeds.iter().map(|pt| pt.fingerprint()).collect();
+        for chunk in seeds.chunks(self.cfg.batch) {
+            self.process_batch(chunk.to_vec());
+        }
+        // refinement: one single-axis mutation per frontier member per
+        // round; unseen coherent neighbors are evaluated as a batch
+        let mut rng = Prng::new(self.cfg.seed ^ 0x9e37_79b9_7f4a_7c15);
+        while self.stats.considered < budget {
+            let room = (budget - self.stats.considered).min(self.cfg.batch);
+            let members: Vec<DesignPoint> = self
+                .frontier
+                .keys()
+                .iter()
+                .map(|k| self.kept[k].point.clone())
+                .collect();
+            let mut neighbors = Vec::new();
+            for m in &members {
+                if neighbors.len() >= room {
+                    break;
+                }
+                if let Some(nb) = mutate(space, info, m, &mut rng) {
+                    if seen.insert(nb.fingerprint()) {
+                        neighbors.push(nb);
+                    }
+                }
+            }
+            if neighbors.is_empty() {
+                break;
+            }
+            self.process_batch(neighbors);
+        }
+        self.stats.complete = true;
+        Ok(())
+    }
+
+    fn process_batch(&mut self, points: Vec<DesignPoint>) {
+        let base = self.cursor;
+        let n = points.len();
+        self.stats.considered += n;
+        self.cursor += n;
+        let (outcomes, exact_mask, survivors) = if self.cfg.prune {
+            self.screened(points)
+        } else {
+            let outs = eval::evaluate(
+                self.session,
+                self.source,
+                points,
+                self.n_elements,
+                self.cfg.threads,
+            );
+            self.stats.exact_sims += outs.len();
+            let mask = vec![true; outs.len()];
+            let survivors = outs.len();
+            (outs, mask, survivors)
+        };
+        for (bi, o) in outcomes.iter().enumerate() {
+            if o.result.is_err() {
+                self.stats.rejected += 1;
+                continue;
+            }
+            if !o.is_feasible() {
+                self.stats.over_budget += 1;
+                continue;
+            }
+            self.stats.feasible += 1;
+            // pruned candidates carry conservative analytic numbers —
+            // they are provably dominated and never join the frontier
+            if !exact_mask[bi] {
+                continue;
+            }
+            let v = pareto::objectives(o.result.as_ref().unwrap());
+            if self.frontier.offer(base + bi, v) {
+                self.kept.insert(base + bi, o.clone());
+            }
+        }
+        let keys: HashSet<usize> = self.frontier.keys().into_iter().collect();
+        self.kept.retain(|k, _| keys.contains(k));
+        self.stats.frontier_peak =
+            self.stats.frontier_peak.max(self.frontier.peak_len());
+        self.stats.peak_resident = self
+            .stats
+            .peak_resident
+            .max(n + survivors + self.kept.len());
+    }
+
+    /// The analytic screen over one batch: evaluate everything with
+    /// the closed-form bounds, prove what can be proven dominated
+    /// (against batch rivals' conservative vectors *and* the current
+    /// frontier's exact vectors), then run the event simulator only
+    /// for the survivors.
+    fn screened(
+        &mut self,
+        points: Vec<DesignPoint>,
+    ) -> (Vec<EvalOutcome>, Vec<bool>, usize) {
+        let mut outs = eval::evaluate_analytic(
+            self.session,
+            self.source,
+            points,
+            self.n_elements,
+            self.cfg.threads,
+        );
+        let feas: Vec<usize> =
+            (0..outs.len()).filter(|&i| outs[i].is_feasible()).collect();
+        let vectors: Vec<Option<(Vec<f64>, Vec<f64>)>> = feas
+            .iter()
+            .map(|&i| {
+                let e = outs[i].result.as_ref().unwrap();
+                e.sim.analytic.map(|b| {
+                    (
+                        pareto::objectives_with_time(e, b.lower_s),
+                        pareto::objectives_with_time(e, b.upper_s),
+                    )
+                })
+            })
+            .collect();
+        let mut exact_mask = vec![false; outs.len()];
+        let mut surv = Vec::new();
+        for (fi, &i) in feas.iter().enumerate() {
+            let dominated = match &vectors[fi] {
+                // a result without a bracket screens as unprunable
+                None => false,
+                Some((opt, _)) => {
+                    vectors.iter().enumerate().any(|(fj, v)| {
+                        fj != fi
+                            && v.as_ref().is_some_and(|(_, cons)| {
+                                pareto::dominates(cons, opt)
+                            })
+                    }) || self
+                        .frontier
+                        .entries()
+                        .iter()
+                        .any(|(_, exact)| pareto::dominates(exact, opt))
+                }
+            };
+            if dominated {
+                self.stats.pruned += 1;
+            } else {
+                surv.push(i);
+                exact_mask[i] = true;
+            }
+        }
+        let pts: Vec<DesignPoint> =
+            surv.iter().map(|&i| outs[i].point.clone()).collect();
+        let exact = eval::evaluate(
+            self.session,
+            self.source,
+            pts,
+            self.n_elements,
+            self.cfg.threads,
+        );
+        self.stats.exact_sims += exact.len();
+        let n_surv = surv.len();
+        for (&i, o) in surv.iter().zip(exact) {
+            outs[i] = o;
+        }
+        (outs, exact_mask, n_surv)
+    }
+
+    fn save(&self) -> Result<(), String> {
+        let Some(path) = &self.cfg.checkpoint else {
+            return Ok(());
+        };
+        let entries: Vec<(usize, &EvalOutcome)> = self
+            .frontier
+            .keys()
+            .into_iter()
+            .map(|k| (k, &self.kept[&k]))
+            .collect();
+        checkpoint::save(path, &self.key, self.cursor, &self.stats, &entries)
+    }
+
+    fn finish(self, space: &SearchSpace) -> Exploration {
+        let keys = self.frontier.keys();
+        let mut kept = self.kept;
+        let outcomes: Vec<EvalOutcome> = keys
+            .iter()
+            .map(|k| kept.remove(k).expect("frontier member retained"))
+            .collect();
+        let frontier = (0..outcomes.len()).collect();
+        Exploration {
+            kernel: space.kernel.clone(),
+            n_elements: self.n_elements,
+            outcomes,
+            frontier,
+            stats: Some(self.stats),
+        }
+    }
+}
+
+// ---- samplers ----
+
+/// Axis indices in enumeration nesting order; see
+/// [`SearchSpace::axis_lens`].
+type AxisIdx = [usize; 11];
+
+fn build_point(
+    space: &SearchSpace,
+    info: &DegreeMap,
+    idx: &AxisIdx,
+) -> Option<DesignPoint> {
+    let dataflow = space.dataflow[idx[5]];
+    let sharing = space.mem_sharing[idx[6]];
+    let fifo = space.fifo_depths[idx[7]];
+    if !coherent(dataflow, sharing, fifo) {
+        return None;
+    }
+    let mut pt = space.point(
+        space.degrees[idx[0]],
+        space.dtypes[idx[1]],
+        space.memories[idx[2]],
+        space.bus_modes[idx[3]],
+        space.double_buffering[idx[4]],
+        dataflow,
+        sharing,
+        space.partition_caps[idx[8]],
+        fifo,
+        space.channel_policies[idx[9]].clone(),
+        space.cu_counts[idx[10]],
+    );
+    normalize(info, &mut pt);
+    Some(pt)
+}
+
+/// The explorer's normalization, applied to a sampled point.
+fn normalize(info: &DegreeMap, pt: &mut DesignPoint) {
+    if let Some(i) = info.get(&pt.p) {
+        if let Some(g) = pt.opts.dataflow {
+            pt.opts.dataflow = Some(g.min(i.nests));
+        }
+        if let Some(c) = pt.opts.partition_cap {
+            if c >= i.max_read_degree {
+                pt.opts.partition_cap = None;
+            }
+        }
+    }
+}
+
+/// Seeded uniform sampling: one index draw per axis per attempt, in
+/// nesting order, so the sequence is a pure function of the seed.
+/// Incoherent combinations and normalization duplicates are discarded;
+/// the attempt cap keeps tiny spaces from spinning forever.
+fn random_sample(
+    space: &SearchSpace,
+    info: &DegreeMap,
+    budget: usize,
+    seed: u64,
+) -> Vec<DesignPoint> {
+    let lens = space.axis_lens();
+    if lens.contains(&0) {
+        return Vec::new();
+    }
+    let mut rng = Prng::new(seed);
+    let mut out = Vec::new();
+    let mut seen = HashSet::new();
+    let max_attempts = budget.saturating_mul(64) + 256;
+    let mut attempts = 0usize;
+    while out.len() < budget && attempts < max_attempts {
+        attempts += 1;
+        let mut idx = [0usize; 11];
+        for (slot, &l) in idx.iter_mut().zip(lens.iter()) {
+            *slot = rng.range_usize(0, l - 1);
+        }
+        if let Some(pt) = build_point(space, info, &idx) {
+            if seen.insert(pt.fingerprint()) {
+                out.push(pt);
+            }
+        }
+    }
+    out
+}
+
+/// Latin-hypercube sampling: each axis gets an independent seeded
+/// permutation of the `n` strata, so every axis value appears in a
+/// near-equal share of the samples. Incoherent and duplicate points
+/// drop out, so at most — not exactly — `n` points come back.
+fn lhs_sample(
+    space: &SearchSpace,
+    info: &DegreeMap,
+    n: usize,
+    seed: u64,
+) -> Vec<DesignPoint> {
+    let lens = space.axis_lens();
+    if n == 0 || lens.contains(&0) {
+        return Vec::new();
+    }
+    let mut rng = Prng::new(seed);
+    let perms: Vec<Vec<usize>> = lens
+        .iter()
+        .map(|_| {
+            let mut p: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = rng.range_usize(0, i);
+                p.swap(i, j);
+            }
+            p
+        })
+        .collect();
+    let mut out = Vec::new();
+    let mut seen = HashSet::new();
+    for s in 0..n {
+        let mut idx = [0usize; 11];
+        for (a, slot) in idx.iter_mut().enumerate() {
+            *slot = perms[a][s] * lens[a] / n;
+        }
+        if let Some(pt) = build_point(space, info, &idx) {
+            if seen.insert(pt.fingerprint()) {
+                out.push(pt);
+            }
+        }
+    }
+    out
+}
+
+/// One hill-climb move: re-draw a single axis of a frontier member
+/// from its axis list. Returns `None` for incoherent results.
+fn mutate(
+    space: &SearchSpace,
+    info: &DegreeMap,
+    m: &DesignPoint,
+    rng: &mut Prng,
+) -> Option<DesignPoint> {
+    let o = &m.opts;
+    // undo the multi-CU FIFO override so the coherence filter judges
+    // the axis value, not the methodology's forced depth
+    let raw_fifo = if o.num_cus > 1 && o.fifo_depth == Some(64) {
+        None
+    } else {
+        o.fifo_depth
+    };
+    let mut p = m.p;
+    let mut dtype = o.dtype;
+    let mut memory = o.memory;
+    let mut bus = o.bus;
+    let mut db = o.double_buffering;
+    let mut dataflow = o.dataflow;
+    let mut sharing = o.mem_sharing;
+    let mut fifo = raw_fifo;
+    let mut cap = o.partition_cap;
+    let mut policy = o.channel_policy.clone();
+    let mut cus = o.num_cus;
+    match rng.range_usize(0, 10) {
+        0 => p = *rng.choose(&space.degrees),
+        1 => dtype = *rng.choose(&space.dtypes),
+        2 => memory = *rng.choose(&space.memories),
+        3 => bus = *rng.choose(&space.bus_modes),
+        4 => db = *rng.choose(&space.double_buffering),
+        5 => dataflow = *rng.choose(&space.dataflow),
+        6 => sharing = *rng.choose(&space.mem_sharing),
+        7 => fifo = *rng.choose(&space.fifo_depths),
+        8 => cap = *rng.choose(&space.partition_caps),
+        9 => policy = rng.choose(&space.channel_policies).clone(),
+        _ => cus = *rng.choose(&space.cu_counts),
+    }
+    if !coherent(dataflow, sharing, fifo) {
+        return None;
+    }
+    let mut pt = space.point(
+        p, dtype, memory, bus, db, dataflow, sharing, cap, fifo, policy, cus,
+    );
+    normalize(info, &mut pt);
+    Some(pt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatype::DataType;
+    use crate::olympus::BusMode;
+    use crate::platform::Platform;
+
+    fn tiny_space() -> SearchSpace {
+        let mut s = SearchSpace::default_for("helmholtz");
+        s.degrees = vec![11];
+        s.dtypes = vec![DataType::F64, DataType::Fx32];
+        s.cu_counts = vec![1];
+        s.dataflow = vec![Some(2), Some(7)];
+        s.double_buffering = vec![true];
+        s.bus_modes = vec![BusMode::Wide256Parallel];
+        s.mem_sharing = vec![false];
+        s.fifo_depths = vec![None];
+        s
+    }
+
+    fn info_for(s: &SearchSpace) -> DegreeMap {
+        let session = flow::Session::new(Platform::alveo_u280());
+        let source = s.source.snapshot().unwrap();
+        super::super::degree_map(&session, &source, &s.degrees).unwrap()
+    }
+
+    #[test]
+    fn samplers_are_seed_deterministic_and_in_space() {
+        let s = tiny_space();
+        let info = info_for(&s);
+        let full: HashSet<String> =
+            s.candidates(&info).map(|pt| pt.fingerprint()).collect();
+        for sampler in [random_sample, lhs_sample] {
+            let a = sampler(&s, &info, 3, 42);
+            let b = sampler(&s, &info, 3, 42);
+            let fa: Vec<String> = a.iter().map(|pt| pt.fingerprint()).collect();
+            let fb: Vec<String> = b.iter().map(|pt| pt.fingerprint()).collect();
+            assert_eq!(fa, fb, "same seed, same sequence");
+            assert!(!a.is_empty());
+            assert!(fa.iter().all(|f| full.contains(f)), "samples ⊆ space");
+            let uniq: HashSet<&String> = fa.iter().collect();
+            assert_eq!(uniq.len(), fa.len(), "no duplicates");
+        }
+        let c = random_sample(&s, &info, 3, 43);
+        let d = random_sample(&s, &info, 3, 42);
+        let fc: Vec<String> = c.iter().map(|pt| pt.fingerprint()).collect();
+        let fd: Vec<String> = d.iter().map(|pt| pt.fingerprint()).collect();
+        assert_ne!(fc, fd, "different seeds explore differently");
+    }
+
+    #[test]
+    fn lhs_covers_axes_more_evenly_than_a_degenerate_draw() {
+        // with budget = axis length, LHS hits every dtype exactly once
+        let mut s = tiny_space();
+        s.dataflow = vec![Some(7)];
+        let info = info_for(&s);
+        let pts = lhs_sample(&s, &info, 2, 7);
+        let dtypes: HashSet<&str> =
+            pts.iter().map(|pt| pt.opts.dtype.name()).collect();
+        assert_eq!(dtypes.len(), 2, "both strata covered: {pts:?}");
+    }
+
+    #[test]
+    fn hillclimb_mutations_stay_inside_the_space() {
+        let s = tiny_space();
+        let info = info_for(&s);
+        let full: HashSet<String> =
+            s.candidates(&info).map(|pt| pt.fingerprint()).collect();
+        let member = s.candidates(&info).next().unwrap();
+        let mut rng = Prng::new(9);
+        let mut produced = 0;
+        for _ in 0..64 {
+            if let Some(nb) = mutate(&s, &info, &member, &mut rng) {
+                assert!(
+                    full.contains(&nb.fingerprint()),
+                    "{}",
+                    nb.fingerprint()
+                );
+                produced += 1;
+            }
+        }
+        assert!(produced > 0, "some coherent neighbors exist");
+    }
+
+    #[test]
+    fn zero_batch_and_hillclimb_resume_are_errors() {
+        let s = tiny_space();
+        let platform = Platform::alveo_u280();
+        let cfg = SearchConfig {
+            batch: 0,
+            ..SearchConfig::default()
+        };
+        assert!(search(&s, &platform, 1000, &cfg).unwrap_err().contains("batch"));
+        let cfg = SearchConfig {
+            strategy: Strategy::HillClimb,
+            checkpoint: Some(std::env::temp_dir().join("never_written.json")),
+            ..SearchConfig::default()
+        };
+        let err = search(&s, &platform, 1000, &cfg).unwrap_err();
+        assert!(err.contains("not resumable"), "{err}");
+    }
+}

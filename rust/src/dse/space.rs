@@ -13,9 +13,26 @@
 //! three CUs on the two DDR4 banks — is enumerated and left to the
 //! evaluator, so infeasibility is *reported*, not silently skipped.
 
+use std::collections::HashMap;
+
 use crate::datatype::DataType;
 use crate::kernels::KernelSource;
 use crate::olympus::{BusMode, ChannelPolicy, MemoryKind, OlympusOpts};
+
+/// Per-degree kernel facts the streaming iterator needs to normalize
+/// candidates exactly like the eager explorer does: dataflow clamps to
+/// the nest count, and partition caps at or above the max unrolled
+/// access degree collapse onto the uncapped plan.
+#[derive(Debug, Clone, Copy)]
+pub struct DegreeInfo {
+    pub nests: usize,
+    pub max_read_degree: usize,
+}
+
+/// Degree → [`DegreeInfo`], built once per sweep from the lowered
+/// kernels (one `Session::lowered` call per distinct degree). A missing
+/// entry means "no normalization for that degree".
+pub type DegreeMap = HashMap<usize, DegreeInfo>;
 
 /// One concrete candidate: `kernel` at degree `p` generated with `opts`.
 #[derive(Debug, Clone)]
@@ -161,7 +178,7 @@ impl SearchSpace {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn point(
+    pub(crate) fn point(
         &self,
         p: usize,
         dtype: DataType,
@@ -201,11 +218,200 @@ impl SearchSpace {
             opts,
         }
     }
+
+    /// Stream the *normalized, deduplicated* candidate sequence — the
+    /// exact sequence [`crate::dse::explore`] evaluates — without ever
+    /// materializing the cross product. Peak state is the O(1) odometer
+    /// over the axis indices; each yielded point is canonical for its
+    /// normalization class (dataflow clamped to the nest count from
+    /// `info`, inert partition caps collapsed, the multi-CU FIFO
+    /// override folded in), so no `HashSet` of fingerprints is needed.
+    ///
+    /// `info` must describe every degree in `self.degrees` for the
+    /// clamping to match the eager path; a missing entry disables
+    /// normalization for that degree.
+    pub fn candidates<'a>(&'a self, info: &'a DegreeMap) -> Candidates<'a> {
+        let done = self.axis_lens().contains(&0);
+        Candidates {
+            space: self,
+            info,
+            idx: [0; 11],
+            done,
+        }
+    }
+
+    /// Axis lengths in enumeration nesting order (outermost first).
+    pub(crate) fn axis_lens(&self) -> [usize; 11] {
+        [
+            self.degrees.len(),
+            self.dtypes.len(),
+            self.memories.len(),
+            self.bus_modes.len(),
+            self.double_buffering.len(),
+            self.dataflow.len(),
+            self.mem_sharing.len(),
+            self.fifo_depths.len(),
+            self.partition_caps.len(),
+            self.channel_policies.len(),
+            self.cu_counts.len(),
+        ]
+    }
+}
+
+/// Streaming iterator over a [`SearchSpace`] — see
+/// [`SearchSpace::candidates`]. State is one mixed-radix odometer; the
+/// dedup that the eager path does with a fingerprint set is replaced by
+/// an O(axis-width) *canonicality* test per combination: a combination
+/// is emitted iff it is the first one, in enumeration order, that maps
+/// to its normalized design point.
+pub struct Candidates<'a> {
+    space: &'a SearchSpace,
+    info: &'a DegreeMap,
+    /// Current axis indices, nesting order (degrees outermost … CUs
+    /// innermost) — matches `SearchSpace::enumerate` exactly.
+    idx: [usize; 11],
+    done: bool,
+}
+
+impl Candidates<'_> {
+    fn advance(&mut self) {
+        let lens = self.space.axis_lens();
+        for ax in (0..self.idx.len()).rev() {
+            self.idx[ax] += 1;
+            if self.idx[ax] < lens[ax] {
+                return;
+            }
+            self.idx[ax] = 0;
+        }
+        self.done = true;
+    }
+
+    /// Build the current combination's normalized point if the
+    /// combination is coherent *and* canonical for its class.
+    fn current(&self) -> Option<DesignPoint> {
+        let s = self.space;
+        let [ip, idt, imem, ibus, idb, idf, ish, ifi, icap, ipol, icu] = self.idx;
+        let p = s.degrees[ip];
+        let dtype = s.dtypes[idt];
+        let memory = s.memories[imem];
+        let bus = s.bus_modes[ibus];
+        let db = s.double_buffering[idb];
+        let dataflow = s.dataflow[idf];
+        let sharing = s.mem_sharing[ish];
+        let fifo = s.fifo_depths[ifi];
+        let cap = s.partition_caps[icap];
+        let policy = &s.channel_policies[ipol];
+        let cus = s.cu_counts[icu];
+
+        if !coherent(dataflow, sharing, fifo) {
+            return None;
+        }
+
+        // Pass-through axes: canonical iff this index is the first
+        // occurrence of the exact value in its axis list (duplicate
+        // axis entries collapse onto the first).
+        if s.degrees[..ip].contains(&p)
+            || s.dtypes[..idt].contains(&dtype)
+            || s.memories[..imem].contains(&memory)
+            || s.bus_modes[..ibus].contains(&bus)
+            || s.double_buffering[..idb].contains(&db)
+            || s.mem_sharing[..ish].contains(&sharing)
+            || s.channel_policies[..ipol].contains(policy)
+            || s.cu_counts[..icu].contains(&cus)
+        {
+            return None;
+        }
+
+        let info = self.info.get(&p);
+        let clamp = |g: Option<usize>| match (g, info) {
+            (Some(g), Some(i)) => Some(g.min(i.nests)),
+            _ => g,
+        };
+        let norm_cap = |c: Option<usize>| match (c, info) {
+            (Some(c), Some(i)) if c >= i.max_read_degree => None,
+            _ => c,
+        };
+        // the multi-CU methodology forces `fifo_depth = Some(64)`; the
+        // raw FIFO axis value overrides it when explicitly set
+        let eff = |f: Option<usize>| if cus > 1 { f.or(Some(64)) } else { f };
+
+        // Partition cap never enters `coherent`, so it is canonical
+        // independently: first index with the same *normalized* cap.
+        if s.partition_caps[..icap]
+            .iter()
+            .any(|&c| norm_cap(c) == norm_cap(cap))
+        {
+            return None;
+        }
+
+        // Dataflow and FIFO collapse jointly (clamping + the multi-CU
+        // override) and the coherence filter couples them, so the
+        // canonical member of the class is the lexicographically-first
+        // *coherent* (dataflow, fifo) index pair with the same
+        // (clamped dataflow, effective fifo). Scanning raw value
+        // equality alone would miss classes whose componentwise-least
+        // member is coherence-rejected while a later pair still maps
+        // into the class (e.g. a 1-nest kernel: raw `(Some(2),
+        // Some(64))` clamps to `(Some(1), Some(64))`, whose direct raw
+        // spelling is incoherent).
+        let target = (clamp(dataflow), eff(fifo));
+        let mut first_pair = None;
+        'scan: for (jd, &d) in s.dataflow.iter().enumerate() {
+            if clamp(d) != target.0 {
+                continue;
+            }
+            for (jf, &f) in s.fifo_depths.iter().enumerate() {
+                if eff(f) == target.1 && coherent(d, sharing, f) {
+                    first_pair = Some((jd, jf));
+                    break 'scan;
+                }
+            }
+        }
+        if first_pair != Some((idf, ifi)) {
+            return None;
+        }
+
+        let mut pt = s.point(
+            p,
+            dtype,
+            memory,
+            bus,
+            db,
+            dataflow,
+            sharing,
+            cap,
+            fifo,
+            policy.clone(),
+            cus,
+        );
+        pt.opts.dataflow = clamp(pt.opts.dataflow);
+        pt.opts.partition_cap = norm_cap(pt.opts.partition_cap);
+        Some(pt)
+    }
+}
+
+impl Iterator for Candidates<'_> {
+    type Item = DesignPoint;
+
+    fn next(&mut self) -> Option<DesignPoint> {
+        while !self.done {
+            let pt = self.current();
+            self.advance();
+            if pt.is_some() {
+                return pt;
+            }
+        }
+        None
+    }
 }
 
 /// Structural pruning: drop axis combinations that cannot change the
 /// generated system.
-fn coherent(dataflow: Option<usize>, sharing: bool, fifo: Option<usize>) -> bool {
+pub(crate) fn coherent(
+    dataflow: Option<usize>,
+    sharing: bool,
+    fifo: Option<usize>,
+) -> bool {
     // stream FIFOs only exist *between* compute groups: flat kernels and
     // 1-group dataflows have none, so the sizing axis is inert there
     if fifo.is_some() && !dataflow.is_some_and(|g| g > 1) {
@@ -318,6 +524,75 @@ mod tests {
         let points = space.enumerate();
         assert!(!points.is_empty());
         assert!(points.iter().all(|pt| pt.kernel == "mode0" && pt.p == 4));
+    }
+
+    /// The eager path the explorer performs: enumerate → normalize
+    /// (clamp dataflow, collapse inert caps) → dedup by fingerprint.
+    fn eager_normalized(space: &SearchSpace, info: &DegreeMap) -> Vec<String> {
+        let mut pts = space.enumerate();
+        for pt in &mut pts {
+            if let Some(i) = info.get(&pt.p) {
+                if let Some(g) = pt.opts.dataflow {
+                    pt.opts.dataflow = Some(g.min(i.nests));
+                }
+                if let Some(c) = pt.opts.partition_cap {
+                    if c >= i.max_read_degree {
+                        pt.opts.partition_cap = None;
+                    }
+                }
+            }
+        }
+        let mut seen = HashSet::new();
+        pts.retain(|pt| seen.insert(pt.fingerprint()));
+        pts.iter().map(|pt| pt.fingerprint()).collect()
+    }
+
+    #[test]
+    fn streaming_matches_eager_enumeration_on_the_default_space() {
+        let mut space = SearchSpace::default_for("helmholtz");
+        space.partition_caps = vec![None, Some(2), Some(99)];
+        space.channel_policies =
+            vec![ChannelPolicy::LocalFirst, ChannelPolicy::Striped];
+        let mut info = DegreeMap::new();
+        info.insert(7, DegreeInfo { nests: 7, max_read_degree: 8 });
+        info.insert(11, DegreeInfo { nests: 7, max_read_degree: 12 });
+        let eager = eager_normalized(&space, &info);
+        let streamed: Vec<String> =
+            space.candidates(&info).map(|pt| pt.fingerprint()).collect();
+        assert_eq!(streamed, eager, "same points, same order");
+    }
+
+    #[test]
+    fn streaming_without_degree_info_matches_raw_dedup() {
+        let space = SearchSpace::default_for("helmholtz");
+        let info = DegreeMap::new();
+        let eager = eager_normalized(&space, &info);
+        let streamed: Vec<String> =
+            space.candidates(&info).map(|pt| pt.fingerprint()).collect();
+        assert_eq!(streamed, eager);
+    }
+
+    #[test]
+    fn streaming_rescues_classes_whose_least_member_is_incoherent() {
+        // a 1-nest kernel: raw (dataflow Some(2), fifo Some(64)) is
+        // coherent and clamps onto (Some(1), Some(64)) — whose direct
+        // raw spelling the coherence filter rejects. The eager path
+        // still emits the class; the stream must too.
+        let mut space = SearchSpace::default_for("helmholtz");
+        space.degrees = vec![4];
+        space.dataflow = vec![None, Some(1), Some(2)];
+        let mut info = DegreeMap::new();
+        info.insert(4, DegreeInfo { nests: 1, max_read_degree: 4 });
+        let eager = eager_normalized(&space, &info);
+        let streamed: Vec<DesignPoint> = space.candidates(&info).collect();
+        let fps: Vec<String> = streamed.iter().map(|pt| pt.fingerprint()).collect();
+        assert_eq!(fps, eager);
+        assert!(
+            streamed.iter().any(|pt| pt.opts.num_cus == 1
+                && pt.opts.dataflow == Some(1)
+                && pt.opts.fifo_depth == Some(64)),
+            "rescued class present"
+        );
     }
 
     #[test]

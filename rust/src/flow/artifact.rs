@@ -260,7 +260,7 @@ fn system_json(spec: &SystemSpec) -> Json {
     ])
 }
 
-fn resources_json(r: &Resources) -> Json {
+pub(crate) fn resources_json(r: &Resources) -> Json {
     Json::obj(vec![
         ("lut", Json::Num(r.lut as f64)),
         ("ff", Json::Num(r.ff as f64)),
@@ -282,7 +282,7 @@ fn hls_json(e: &Estimate) -> Json {
     ])
 }
 
-fn sim_json(r: &SimResult) -> Json {
+pub(crate) fn sim_json(r: &SimResult) -> Json {
     let stages: Vec<Json> = r
         .stage_intervals
         .iter()
@@ -341,6 +341,94 @@ fn sim_json(r: &SimResult) -> Json {
             },
         ),
     ])
+}
+
+/// Decode a [`resources_json`] section directly — no re-derivation.
+pub(crate) fn resources_from_json(v: &Json) -> Result<Resources, String> {
+    let n = |key: &str| v.get(key).as_u64().ok_or_else(|| format!("bad {key}"));
+    Ok(Resources {
+        lut: n("lut")?,
+        ff: n("ff")?,
+        bram: n("bram")?,
+        uram: n("uram")?,
+        dsp: n("dsp")?,
+    })
+}
+
+/// Decode a [`sim_json`] section directly, *without* re-deriving it
+/// from the embedded source the way [`Artifact::from_json`] does.
+///
+/// The dse sweep checkpoints use this: a resumed sweep must restore
+/// thousands of per-point results without re-running the simulator
+/// (that would defeat resuming). Rust's `f64` Display is
+/// shortest-round-trip, so every float comes back bit-identical and
+/// the restored frontier equals the uninterrupted one exactly.
+pub(crate) fn sim_from_json(v: &Json) -> Result<SimResult, String> {
+    let num = |key: &str| v.get(key).as_f64().ok_or_else(|| format!("bad {key}"));
+    let int = |key: &str| v.get(key).as_u64().ok_or_else(|| format!("bad {key}"));
+    let txt = |key: &str| {
+        v.get(key)
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| format!("bad {key}"))
+    };
+    let mut stage_intervals = Vec::new();
+    for e in v
+        .get("stage_intervals")
+        .as_arr()
+        .ok_or("bad stage_intervals")?
+    {
+        stage_intervals.push((
+            e.get("stage").as_str().ok_or("bad stage")?.to_string(),
+            e.get("cycles").as_u64().ok_or("bad cycles")?,
+        ));
+    }
+    let mut channel_utilization = Vec::new();
+    for e in v
+        .get("channel_utilization")
+        .as_arr()
+        .ok_or("bad channel_utilization")?
+    {
+        channel_utilization.push((
+            e.get("channel").as_u64().ok_or("bad channel")? as u32,
+            e.get("utilization").as_f64().ok_or("bad utilization")?,
+        ));
+    }
+    let analytic = match v.get("analytic") {
+        Json::Null => None,
+        b => Some(crate::sim::analytic::AnalyticBounds {
+            lower_s: b.get("lower_s").as_f64().ok_or("bad analytic.lower_s")?,
+            upper_s: b.get("upper_s").as_f64().ok_or("bad analytic.upper_s")?,
+        }),
+    };
+    Ok(SimResult {
+        label: txt("label")?,
+        total_time_s: num("total_time_s")?,
+        cu_time_s: num("cu_time_s")?,
+        transfer_time_s: num("transfer_time_s")?,
+        gflops_system: num("gflops_system")?,
+        gflops_cu: num("gflops_cu")?,
+        freq_mhz: num("freq_mhz")?,
+        ideal_gflops: num("ideal_gflops")?,
+        efficiency_vs_ideal: num("efficiency_vs_ideal")?,
+        avg_power_w: num("avg_power_w")?,
+        efficiency_gflops_w: num("efficiency_gflops_w")?,
+        energy_j: num("energy_j")?,
+        batches: int("batches")?,
+        batch_elements: int("batch_elements")? as usize,
+        stage_intervals,
+        bottleneck: txt("bottleneck")?,
+        total_flops: int("total_flops")?,
+        channel_utilization,
+        max_channel_utilization: num("max_channel_utilization")?,
+        switch_crossings: int("switch_crossings")?,
+        hbm_fill_cycles: int("hbm_fill_cycles")?,
+        conflict_stalls: int("conflict_stalls")?,
+        mem_banks: int("mem_banks")? as usize,
+        mem_shared_words: int("mem_shared_words")? as usize,
+        mem_unshared_words: int("mem_unshared_words")? as usize,
+        analytic,
+    })
 }
 
 fn kind_json(kind: EvalKind) -> Json {
@@ -640,6 +728,34 @@ mod tests {
         assert_eq!(b.spec.batch_elements, mapped.spec.batch_elements);
         assert_eq!(format!("{:?}", b.opts), format!("{:?}", mapped.opts));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sim_and_resources_sections_decode_directly_and_bit_exactly() {
+        let mapped = Flow::from_source(KernelSource::builtin("helmholtz"))
+            .parse(7)
+            .unwrap()
+            .lower()
+            .unwrap()
+            .map(&OlympusOpts::dataflow(7), &Platform::alveo_u280())
+            .unwrap();
+        // both simulation kinds: the event timeline (analytic: None)
+        // and the closed-form path (analytic bracket present)
+        for kind in [
+            EvalKind::Simulate { elements: 100_000 },
+            EvalKind::SimulateAnalytic { elements: 100_000 },
+        ] {
+            let ev = mapped.evaluate(kind);
+            let sim = ev.sim.as_ref().unwrap();
+            // through *text*, the way checkpoints store it
+            let text = sim_json(sim).to_string();
+            let back = sim_from_json(&json::parse(&text).unwrap()).unwrap();
+            // f64 Display/Debug is shortest-round-trip: equal Debug
+            // strings mean bit-identical values
+            assert_eq!(format!("{sim:?}"), format!("{back:?}"));
+            let r = resources_from_json(&resources_json(&ev.hls.total)).unwrap();
+            assert_eq!(r, ev.hls.total);
+        }
     }
 
     #[test]

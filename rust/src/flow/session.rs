@@ -89,6 +89,10 @@ pub struct SessionStats {
     pub lowered_hits: u64,
     pub mapped_misses: u64,
     pub mapped_hits: u64,
+    /// End-to-end [`Session::evaluate`] calls (every batch slot counts
+    /// one). Resumable sweeps use this to prove no point is ever
+    /// evaluated twice across a kill/resume boundary.
+    pub eval_calls: u64,
 }
 
 /// (fingerprint, degree) — one entry per distinct program text.
@@ -218,6 +222,7 @@ impl Session {
 
     /// Run one request end to end over the cache.
     pub fn evaluate(&self, req: &FlowRequest) -> FlowResult {
+        self.state.lock().unwrap().stats.eval_calls += 1;
         let result = self
             .mapped(&req.source, req.p, &req.opts)
             .map(|m| m.evaluate(req.eval));

@@ -1,0 +1,404 @@
+//! Frontier-equivalence harness for the budget-aware search engine
+//! (`hbmflow dse --strategy …`, DESIGN.md §2.8).
+//!
+//! The claims under test, in order of importance:
+//!
+//!  1. **Frontier equivalence** — the streaming strategy with the
+//!     analytic prune produces a Pareto frontier *bit-identical* to the
+//!     eager exhaustive explorer at `Fidelity::Exact`, on randomized
+//!     small spaces and on the (narrowed-degree) default helmholtz
+//!     axes.
+//!  2. **Memory boundedness** — a stream sweep never materializes the
+//!     cross product: peak resident evaluations stay O(batch +
+//!     frontier) while hundreds of candidates are considered.
+//!  3. **Resumability** — a sweep killed at a checkpoint boundary and
+//!     resumed in a fresh session reproduces the uninterrupted frontier
+//!     exactly, and `Session::stats().eval_calls` proves no point is
+//!     evaluated twice across the kill/resume boundary.
+//!  4. **Determinism** — the same seed yields byte-identical reports
+//!     across repeated runs and across worker-thread counts.
+//!  5. **Honest sampling** — random/LHS/hill-climb results are
+//!     feasible, mutually non-dominated, within budget, drawn from the
+//!     space, and bit-identical to the exhaustive evaluation of the
+//!     same points.
+//!
+//! "Bit-identical" throughout means Debug-formatting equality of the
+//! full evaluation (Rust formats f64 shortest-round-trip, so equal
+//! strings mean equal bits in every float).
+
+use std::collections::{HashMap, HashSet};
+
+use hbmflow::datatype::DataType;
+use hbmflow::dse::{
+    self, explore_in_with, search_in, Fidelity, SearchConfig, SearchSpace,
+    Strategy,
+};
+use hbmflow::flow::Session;
+use hbmflow::olympus::BusMode;
+use hbmflow::platform::Platform;
+use hbmflow::util::prng::Prng;
+
+const ELEMENTS: u64 = 20_000;
+
+fn fresh_session() -> Session {
+    Session::new(Platform::alveo_u280())
+}
+
+/// Frontier as sorted (fingerprint, exact Debug of the evaluation)
+/// pairs — equality is bit-identity of every number in every member.
+fn frontier_bits(ex: &dse::Exploration) -> Vec<(String, String)> {
+    let mut rows: Vec<(String, String)> = ex
+        .frontier
+        .iter()
+        .map(|&i| {
+            let o = &ex.outcomes[i];
+            (o.point.fingerprint(), format!("{:?}", o.result))
+        })
+        .collect();
+    rows.sort();
+    rows
+}
+
+/// Random non-empty subsequence of `all` (order preserved).
+fn pick<T: Clone>(rng: &mut Prng, all: &[T]) -> Vec<T> {
+    let mut out: Vec<T> = all
+        .iter()
+        .filter(|_| rng.range_usize(0, 1) == 1)
+        .cloned()
+        .collect();
+    if out.is_empty() {
+        out.push(all[rng.range_usize(0, all.len() - 1)].clone());
+    }
+    out
+}
+
+/// A randomized small helmholtz space, capped so the eager exact
+/// reference stays affordable in debug builds.
+fn random_space(rng: &mut Prng) -> SearchSpace {
+    let mut s = SearchSpace::default_for("helmholtz");
+    s.degrees = vec![[7usize, 11][rng.range_usize(0, 1)]];
+    s.dtypes = pick(rng, &[DataType::F64, DataType::Fx32]);
+    s.cu_counts = pick(rng, &[1, 2]);
+    s.dataflow = pick(rng, &[None, Some(1), Some(2), Some(7)]);
+    s.double_buffering = pick(rng, &[false, true]);
+    s.bus_modes = pick(rng, &[BusMode::Narrow64, BusMode::Wide256Parallel]);
+    s.mem_sharing = pick(rng, &[false, true]);
+    s.fifo_depths = pick(rng, &[None, Some(64)]);
+    s.partition_caps = pick(rng, &[None, Some(4)]);
+    // cap the raw size by collapsing the longest axis until affordable
+    while s.enumerate().len() > 48 {
+        let lens = [
+            s.dtypes.len(),
+            s.cu_counts.len(),
+            s.dataflow.len(),
+            s.double_buffering.len(),
+            s.bus_modes.len(),
+            s.mem_sharing.len(),
+            s.fifo_depths.len(),
+            s.partition_caps.len(),
+        ];
+        let ax = (0..lens.len()).max_by_key(|&i| lens[i]).unwrap();
+        match ax {
+            0 => s.dtypes.truncate(1),
+            1 => s.cu_counts.truncate(1),
+            2 => s.dataflow.truncate(1),
+            3 => s.double_buffering.truncate(1),
+            4 => s.bus_modes.truncate(1),
+            5 => s.mem_sharing.truncate(1),
+            6 => s.fifo_depths.truncate(1),
+            _ => s.partition_caps.truncate(1),
+        }
+    }
+    s
+}
+
+/// The fixed 24-point space the resumability/determinism tests sweep
+/// (6 batches of 4): all points structurally coherent, one CU.
+fn fixed_space() -> SearchSpace {
+    let mut s = SearchSpace::default_for("helmholtz");
+    s.degrees = vec![11];
+    s.dtypes = vec![DataType::F64, DataType::Fx32];
+    s.cu_counts = vec![1];
+    s.dataflow = vec![None, Some(2), Some(7)];
+    s.double_buffering = vec![false, true];
+    s.bus_modes = vec![BusMode::Narrow64, BusMode::Wide256Parallel];
+    s.mem_sharing = vec![false];
+    s.fifo_depths = vec![None];
+    s
+}
+
+#[test]
+fn stream_frontier_is_bit_identical_to_exact_eager_on_random_spaces() {
+    let mut rng = Prng::new(0xD5E7);
+    for round in 0..4 {
+        let space = random_space(&mut rng);
+        let exact = explore_in_with(
+            &fresh_session(),
+            &space,
+            ELEMENTS,
+            Some(2),
+            Fidelity::Exact,
+        )
+        .unwrap();
+        // small batch so multi-batch pruning against the incremental
+        // frontier is actually exercised
+        let cfg = SearchConfig {
+            batch: 5,
+            threads: Some(2),
+            ..SearchConfig::default()
+        };
+        let swept = search_in(&fresh_session(), &space, ELEMENTS, &cfg).unwrap();
+        let st = swept.stats.expect("search results carry stats");
+        assert!(st.complete, "round {round}");
+        assert_eq!(
+            st.considered,
+            exact.outcomes.len(),
+            "round {round}: stream considers exactly the eager sequence"
+        );
+        assert_eq!(
+            frontier_bits(&swept),
+            frontier_bits(&exact),
+            "round {round}: frontier bit-identical"
+        );
+        assert!(st.exact_sims <= st.considered, "round {round}");
+    }
+}
+
+#[test]
+fn default_axes_stream_is_memory_bounded_and_matches_exact() {
+    // The full default helmholtz option axes; degrees/dtypes narrowed
+    // so the eager exact reference stays affordable in debug builds.
+    // Streaming ≡ eager over the COMPLETE default space (both degrees,
+    // all four dtypes) is pinned at the enumeration level in
+    // src/dse/space.rs without paying for simulations.
+    let mut space = SearchSpace::default_for("helmholtz");
+    space.degrees = vec![7];
+    space.dtypes = vec![DataType::F64, DataType::Fx32];
+    let exact =
+        explore_in_with(&fresh_session(), &space, ELEMENTS, None, Fidelity::Exact)
+            .unwrap();
+    let cfg = SearchConfig {
+        batch: 32,
+        ..SearchConfig::default()
+    };
+    let swept = search_in(&fresh_session(), &space, ELEMENTS, &cfg).unwrap();
+    let st = swept.stats.unwrap();
+    assert_eq!(st.considered, exact.outcomes.len());
+    assert!(st.considered > 150, "a real multi-batch space: {}", st.considered);
+    assert_eq!(frontier_bits(&swept), frontier_bits(&exact));
+    // the cross product is never materialized: resident evaluations
+    // stay O(batch + frontier) however many candidates go by
+    assert!(
+        st.peak_resident <= 2 * cfg.batch + st.frontier_peak,
+        "peak {} vs batch {} + frontier peak {}",
+        st.peak_resident,
+        cfg.batch,
+        st.frontier_peak
+    );
+    assert!(
+        st.peak_resident < st.considered / 2,
+        "peak {} for {} considered",
+        st.peak_resident,
+        st.considered
+    );
+    assert_eq!(
+        swept.outcomes.len(),
+        swept.frontier.len(),
+        "only frontier members stay resident"
+    );
+    assert!(st.pruned > 0, "the analytic screen did prove something");
+}
+
+#[test]
+fn sampling_strategies_are_honest_subsets_of_the_space() {
+    let space = fixed_space();
+    let exact = explore_in_with(
+        &fresh_session(),
+        &space,
+        ELEMENTS,
+        Some(2),
+        Fidelity::Exact,
+    )
+    .unwrap();
+    let exact_bits: HashMap<String, String> = exact
+        .outcomes
+        .iter()
+        .map(|o| (o.point.fingerprint(), format!("{:?}", o.result)))
+        .collect();
+    for strategy in [Strategy::Random, Strategy::Lhs] {
+        let cfg = SearchConfig {
+            strategy,
+            budget: Some(12),
+            seed: 5,
+            batch: 4,
+            threads: Some(2),
+            ..SearchConfig::default()
+        };
+        let ex = search_in(&fresh_session(), &space, ELEMENTS, &cfg).unwrap();
+        let st = ex.stats.unwrap();
+        assert!(st.complete, "{strategy:?}");
+        assert!(
+            st.considered > 0 && st.considered <= 12,
+            "{strategy:?}: {} considered",
+            st.considered
+        );
+        assert!(!ex.frontier.is_empty(), "{strategy:?}");
+        // every frontier member: drawn from the space, feasible, and
+        // bit-identical to the exhaustive evaluation of the same point
+        for &i in &ex.frontier {
+            let o = &ex.outcomes[i];
+            let fp = o.point.fingerprint();
+            assert!(o.is_feasible(), "{strategy:?}: {fp}");
+            let reference = exact_bits
+                .get(&fp)
+                .unwrap_or_else(|| panic!("{strategy:?}: {fp} not in space"));
+            assert_eq!(&format!("{:?}", o.result), reference, "{strategy:?}");
+        }
+        // mutually non-dominated
+        for &a in &ex.frontier {
+            for &b in &ex.frontier {
+                if a != b {
+                    let va = dse::pareto::objectives(
+                        ex.outcomes[a].result.as_ref().unwrap(),
+                    );
+                    let vb = dse::pareto::objectives(
+                        ex.outcomes[b].result.as_ref().unwrap(),
+                    );
+                    assert!(!dse::dominates(&va, &vb), "{strategy:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hillclimb_respects_budget_and_returns_non_dominated_feasible_points() {
+    let space = fixed_space();
+    let cfg = SearchConfig {
+        strategy: Strategy::HillClimb,
+        budget: Some(14),
+        seed: 3,
+        batch: 4,
+        threads: Some(2),
+        ..SearchConfig::default()
+    };
+    let ex = search_in(&fresh_session(), &space, ELEMENTS, &cfg).unwrap();
+    let st = ex.stats.unwrap();
+    assert!(st.complete);
+    assert!(
+        st.considered > 0 && st.considered <= 14,
+        "{} considered",
+        st.considered
+    );
+    assert!(!ex.frontier.is_empty());
+    for &i in &ex.frontier {
+        assert!(ex.outcomes[i].is_feasible());
+    }
+    for &a in &ex.frontier {
+        for &b in &ex.frontier {
+            if a != b {
+                let va =
+                    dse::pareto::objectives(ex.outcomes[a].result.as_ref().unwrap());
+                let vb =
+                    dse::pareto::objectives(ex.outcomes[b].result.as_ref().unwrap());
+                assert!(!dse::dominates(&va, &vb));
+            }
+        }
+    }
+}
+
+#[test]
+fn killed_sweep_resumes_to_the_uninterrupted_frontier_without_reevaluation() {
+    let space = fixed_space(); // 24 points = 6 batches of 4
+    let ck = std::env::temp_dir().join("hbmflow_dse_search_resume_ck.json");
+    std::fs::remove_file(&ck).ok();
+    let base = SearchConfig {
+        batch: 4,
+        threads: Some(2),
+        ..SearchConfig::default()
+    };
+
+    // the uninterrupted reference, in its own session
+    let sess_full = fresh_session();
+    let full = search_in(&sess_full, &space, ELEMENTS, &base).unwrap();
+    let e_full = sess_full.stats().eval_calls;
+    assert!(full.stats.unwrap().complete);
+
+    // killed at a checkpoint boundary after two batches
+    let sess1 = fresh_session();
+    let cfg_kill = SearchConfig {
+        checkpoint: Some(ck.clone()),
+        stop_after: Some(2),
+        ..base.clone()
+    };
+    let paused = search_in(&sess1, &space, ELEMENTS, &cfg_kill).unwrap();
+    let st1 = paused.stats.unwrap();
+    assert!(!st1.complete, "paused mid-sweep");
+    assert_eq!(st1.considered, 8, "two batches of four");
+    let e1 = sess1.stats().eval_calls;
+
+    // resumed in a FRESH session — nothing cached, only the checkpoint
+    let sess2 = fresh_session();
+    let cfg_resume = SearchConfig {
+        checkpoint: Some(ck.clone()),
+        ..base.clone()
+    };
+    let resumed = search_in(&sess2, &space, ELEMENTS, &cfg_resume).unwrap();
+    let st2 = resumed.stats.unwrap();
+    assert!(st2.complete);
+    assert_eq!(st2.resumed_from, Some(8), "restart at the stored cursor");
+    assert_eq!(st2.considered, full.stats.unwrap().considered);
+    let e2 = sess2.stats().eval_calls;
+
+    // identical frontier (bit for bit) and identical CSV report
+    assert_eq!(frontier_bits(&resumed), frontier_bits(&full));
+    assert_eq!(dse::report::csv(&resumed), dse::report::csv(&full));
+    // no point is ever evaluated twice across the kill/resume boundary:
+    // the two legs together spend exactly the uninterrupted call count
+    assert_eq!(e1 + e2, e_full, "every evaluation happened exactly once");
+
+    // a sweep with different sampling parameters refuses the checkpoint
+    let cfg_other = SearchConfig {
+        checkpoint: Some(ck.clone()),
+        strategy: Strategy::Random,
+        seed: 99,
+        ..base.clone()
+    };
+    let err = search_in(&fresh_session(), &space, ELEMENTS, &cfg_other)
+        .unwrap_err();
+    assert!(err.contains("different sweep"), "{err}");
+
+    // resuming a COMPLETE sweep re-evaluates nothing at all
+    let sess3 = fresh_session();
+    let again = search_in(&sess3, &space, ELEMENTS, &cfg_resume).unwrap();
+    assert_eq!(sess3.stats().eval_calls, 0, "finished sweep: pure reload");
+    assert_eq!(frontier_bits(&again), frontier_bits(&full));
+    std::fs::remove_file(&ck).ok();
+}
+
+#[test]
+fn seeded_reports_are_identical_across_runs_and_thread_counts() {
+    let space = fixed_space();
+    let run = |threads: usize| {
+        let cfg = SearchConfig {
+            strategy: Strategy::Random,
+            budget: Some(10),
+            seed: 11,
+            batch: 3,
+            threads: Some(threads),
+            ..SearchConfig::default()
+        };
+        let ex = search_in(&fresh_session(), &space, ELEMENTS, &cfg).unwrap();
+        (dse::report::csv(&ex), dse::report::json(&ex))
+    };
+    let (csv1, json1) = run(1);
+    let (csv1b, json1b) = run(1);
+    let (csv4, json4) = run(4);
+    assert_eq!(csv1, csv1b, "repeatable");
+    assert_eq!(json1, json1b, "repeatable");
+    assert_eq!(csv1, csv4, "thread count never changes the report");
+    assert_eq!(json1, json4, "thread count never changes the report");
+    // sanity: the sweep really sampled something
+    let unique: HashSet<&str> = csv1.lines().skip(1).collect();
+    assert!(!unique.is_empty());
+}
