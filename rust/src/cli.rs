@@ -4,8 +4,11 @@
 //! ```text
 //! hbmflow compile  [--kernel helmholtz|interpolation|gradient | --file prog.cfd]
 //!                  [--p 11] [--dataflow N] [--dtype f64|f32|fx64|fx32]
-//!                  [--emit c|cfg|wrapper|host|teil]
+//!                  [--emit c|cfg|wrapper|host|teil|vitis]
 //!                  [--save-artifact out.json] [--from-artifact in.json]
+//! hbmflow emit-vitis [--kernel .. | --file prog.cfd] [--p 11] [--dtype ..]
+//!                  [--preset .. | --dataflow N] [--cus N]
+//!                  [--policy local|striped] [--partition-cap N] --out DIR
 //! hbmflow estimate [--kernel .. | --file ..] [--p ..] [--preset ..] [--cus N]
 //! hbmflow simulate [--kernel .. | --file ..] [--p ..] [--preset ..] [--cus N]
 //!                  [--elements N]            # alias: sim
@@ -44,6 +47,10 @@ use crate::runtime::Runtime;
 /// Flags that may appear bare (no value); all other flags require one.
 const BOOL_FLAGS: &[&str] = &["pareto-only", "ddr4", "mem-plan", "exact"];
 
+/// Valid `--emit` modes for `compile` — the single source of truth for
+/// the dispatch below and the unknown-mode error message.
+const EMIT_MODES: &[&str] = &["c", "cfg", "wrapper", "host", "teil", "vitis"];
+
 /// Flags shared by `simulate` and its `sim` alias.
 const SIM_FLAGS: &[&str] = &[
     "kernel",
@@ -71,6 +78,21 @@ const FLAG_REGISTRY: &[(&str, &[&str])] = &[
             "emit",
             "save-artifact",
             "from-artifact",
+        ],
+    ),
+    (
+        "emit-vitis",
+        &[
+            "kernel",
+            "file",
+            "p",
+            "dtype",
+            "dataflow",
+            "preset",
+            "cus",
+            "policy",
+            "partition-cap",
+            "out",
         ],
     ),
     (
@@ -331,6 +353,7 @@ pub fn main_with_args(argv: &[String]) -> Result<String> {
     let args = Args::parse(argv)?;
     match args.cmd.as_str() {
         "compile" => cmd_compile(&args),
+        "emit-vitis" => cmd_emit_vitis(&args),
         "estimate" => cmd_estimate(&args),
         "simulate" | "sim" => cmd_simulate(&args),
         "run" => cmd_run(&args),
@@ -348,6 +371,9 @@ hbmflow — DSL-to-HBM-architecture flow (Soldavini et al. 2022 repro)
 
 commands:
   compile   emit C99 / system.cfg / CU wrapper / host steps / teil IR
+            (--emit vitis bundles the full Vitis package to stdout)
+  emit-vitis  write the complete Vitis package — CU C++, host.cpp,
+            link.cfg, Makefile, versioned manifest — under --out DIR
   estimate  HLS resource + frequency estimate for a configuration
   simulate  cycle-approximate system simulation (GFLOPS, power) plus the
             teil::eval numerics oracle (alias: sim)
@@ -358,13 +384,14 @@ commands:
   dse       parallel design-space exploration with Pareto-frontier
             extraction over (GFLOPS, energy, BRAM/URAM/DSP)
 
-kernel sources (compile / estimate / simulate / explore / dse):
+kernel sources (compile / emit-vitis / estimate / simulate / explore / dse):
   --kernel helmholtz|interpolation|gradient   builtin generators
   --file prog.cfd                             any CFDlang program
   (mutually exclusive; see docs/CFDLANG.md and examples/kernels/*.cfd)
 
 flags: --kernel --file --p --dtype --preset --cus --elements --emit
        --artifacts --mse-budget --max-bits
+       --out DIR (emit-vitis: output directory, required)
        --policy local|striped (channel allocation)
        --partition-cap N (cap the memory plan's banking factor;
          estimate/simulate — below the reduction trip the simulator
@@ -464,9 +491,43 @@ fn cmd_compile(args: &Args) -> Result<String> {
         "wrapper" => olympus::config::cu_wrapper(&mapped.spec),
         "host" => olympus::config::host_program(&mapped.spec),
         "teil" => mapped.module.to_string(),
-        other => bail!("unknown --emit {other} (c|cfg|wrapper|host|teil)"),
+        "vitis" => mapped.vitis_package().bundle(),
+        other => bail!("unknown --emit {other} (valid: {})", EMIT_MODES.join("|")),
     };
     Ok(out)
+}
+
+/// `emit-vitis`: materialize the complete Vitis package — CU C++,
+/// host.cpp, link.cfg, Makefile, and the versioned manifest — for one
+/// mapped system under `--out DIR` (DESIGN.md §2.9).
+fn cmd_emit_vitis(args: &Args) -> Result<String> {
+    let source = source_from(args)?;
+    let p = degree_for(&source, args, 11)?;
+    let dtype = args.dtype_or(DataType::F64)?;
+    let cus = args.usize_or("cus", 1)?;
+    let groups = args.usize_or("dataflow", 7)?;
+    let out = args.get("out").ok_or_else(|| anyhow!("emit-vitis requires --out DIR"))?;
+    let platform = Platform::alveo_u280();
+    let lowered = Flow::from_source(source).parse(p)?.lower()?;
+    let mut opts = match args.get("preset") {
+        Some(name) => preset(name, dtype, cus)?,
+        None => compile_opts(&lowered, dtype, groups).with_cus(cus.max(1)),
+    };
+    opts = opts.with_policy(args.policy()?);
+    opts.partition_cap = args.partition_cap()?;
+    let mapped = lowered.map(&opts, &platform)?;
+    let pkg = mapped.vitis_package();
+    let paths = mapped.emit_vitis(out)?;
+    let mut text = format!(
+        "{} -> {out}: {} files, fingerprint {}\n",
+        mapped.spec.name,
+        paths.len(),
+        pkg.fingerprint()
+    );
+    for p in &paths {
+        text.push_str(&format!("  {}\n", p.display()));
+    }
+    Ok(text)
 }
 
 fn cmd_estimate(args: &Args) -> Result<String> {
@@ -888,12 +949,54 @@ mod tests {
     fn compile_unknown_kernel_is_an_error_in_every_emit_mode() {
         // regression: --emit teil used to fall through to the gradient
         // source for any unrecognized --kernel name
-        for emit in ["c", "cfg", "wrapper", "host", "teil"] {
+        for &emit in EMIT_MODES {
             let err = run(&["compile", "--kernel", "bogus", "--emit", emit])
                 .unwrap_err()
                 .to_string();
             assert!(err.contains("unknown kernel"), "--emit {emit}: {err}");
         }
+    }
+
+    #[test]
+    fn compile_emit_vitis_bundles_the_package() {
+        let s = run(&["compile", "--p", "7", "--emit", "vitis"]).unwrap();
+        assert!(s.contains("==== src/helmholtz.cpp ===="), "{s}");
+        assert!(s.contains("==== link.cfg ===="), "{s}");
+        assert!(s.contains("XCL_MEM_TOPOLOGY"), "{s}");
+    }
+
+    #[test]
+    fn unknown_emit_mode_lists_the_valid_set() {
+        let err = run(&["compile", "--emit", "bogus"]).unwrap_err().to_string();
+        assert!(err.contains("unknown --emit bogus"), "{err}");
+        for &mode in EMIT_MODES {
+            assert!(err.contains(mode), "{mode} missing from: {err}");
+        }
+        // and every listed mode actually works
+        for &mode in EMIT_MODES {
+            assert!(run(&["compile", "--p", "7", "--emit", mode]).is_ok(), "{mode}");
+        }
+    }
+
+    #[test]
+    fn emit_vitis_writes_the_package_tree() {
+        let dir = std::env::temp_dir().join("hbmflow_cli_vitis");
+        std::fs::remove_dir_all(&dir).ok();
+        let d = dir.to_str().unwrap();
+        let s = run(&["emit-vitis", "--p", "7", "--cus", "2", "--out", d]).unwrap();
+        assert!(s.contains("5 files"), "{s}");
+        for f in ["src/helmholtz.cpp", "src/host.cpp", "link.cfg", "Makefile", "package.json"] {
+            assert!(dir.join(f).is_file(), "{f} not written");
+        }
+        let cfg = std::fs::read_to_string(dir.join("link.cfg")).unwrap();
+        assert!(cfg.contains("nk=helmholtz:2:helmholtz_1.helmholtz_2"), "{cfg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn emit_vitis_requires_out() {
+        let err = run(&["emit-vitis", "--p", "7"]).unwrap_err().to_string();
+        assert!(err.contains("--out"), "{err}");
     }
 
     #[test]

@@ -5,5 +5,11 @@
 //! on the innermost pipelined loop, the reduction unrolled. In this
 //! reproduction the C output is an auditable artifact (and golden-tested)
 //! — the executable datapath is the AOT-compiled HLO (see DESIGN.md).
+//!
+//! `vitis` wraps the `c_emit` groups into a complete, self-consistent
+//! Vitis package per `SystemSpec` — CU C++ with `m_axi` interfaces,
+//! `XCL_MEM_TOPOLOGY` host code, `sp=` link cfg, Makefile, and a
+//! versioned manifest (DESIGN.md §2.9).
 
 pub mod c_emit;
+pub mod vitis;

@@ -1,0 +1,895 @@
+//! Vitis package emission (paper §V: the generated system is handed to
+//! Vitis as HLS C++, host code, and a connectivity configuration that
+//! binds each CU AXI port to its HBM pseudo-channel).
+//!
+//! One [`SystemSpec`] becomes one self-consistent package of five files:
+//!
+//! | path                | content                                        |
+//! |---------------------|------------------------------------------------|
+//! | `src/{kernel}.cpp`  | HLS C++ CU: `c_emit` groups + `m_axi` top level |
+//! | `src/host.cpp`      | XRT host with `XCL_MEM_TOPOLOGY` placement     |
+//! | `link.cfg`          | `v++ --config`: `nk=` / `sp=` / `slr=` lines   |
+//! | `Makefile`          | `v++ -c` / `-l` / host build recipe            |
+//! | `package.json`      | manifest: schema, fingerprint, connectivity    |
+//!
+//! Every cross-file fact (CU instance names, AXI port names, channel
+//! numbers) is derived from the same sources — `config::cu_instance` /
+//! `read_port` / `write_port` and `SystemSpec::channels` — so the files
+//! cannot disagree. Emission is byte-deterministic: all iteration is
+//! over `Vec`s and the manifest serializes through `util::json`'s
+//! `BTreeMap`. The parsers at the bottom ([`parse_connectivity`],
+//! [`cfg_channel_assignment`], [`parse_host_topology`]) power the
+//! property tests that prove the package agrees with the routed
+//! `hbm::ChannelMap` the simulator was driven from.
+//!
+//! Ping/pong port semantics: each of a CU's read channels carries the
+//! *full* input frame of alternate batches (paper §3.6.1 double
+//! buffering), so every read port is a complete input pointer and the
+//! host passes a `phase` scalar to select the pair — mirroring
+//! `config::host_batch_steps`' `read[phase % len]`.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::codegen::c_emit;
+use crate::datatype::DataType;
+use crate::mnemosyne::{BankingScheme, MemoryPlan};
+use crate::olympus::config;
+use crate::olympus::{CuChannels, MemoryKind, SystemSpec};
+use crate::platform::Platform;
+use crate::util::json::Json;
+
+/// Version of the emitted package layout. Bump when file names, cfg
+/// grammar, or manifest keys change shape; recorded in `package.json`
+/// and in the `vitis` section of saved flow artifacts.
+pub const EMIT_SCHEMA_VERSION: u64 = 1;
+
+/// A fully rendered Vitis package: relative path → file text, in fixed
+/// emission order (payload files first, `package.json` last).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VitisPackage {
+    files: Vec<(String, String)>,
+}
+
+impl VitisPackage {
+    /// The files in emission order.
+    pub fn files(&self) -> &[(String, String)] {
+        &self.files
+    }
+
+    /// Text of one file by relative path.
+    pub fn file(&self, path: &str) -> Option<&str> {
+        self.files
+            .iter()
+            .find(|(p, _)| p == path)
+            .map(|(_, t)| t.as_str())
+    }
+
+    /// FNV-1a fingerprint of the payload files (everything except the
+    /// manifest, which records this value and so cannot hash itself).
+    pub fn fingerprint(&self) -> String {
+        let payload = self
+            .files
+            .iter()
+            .filter(|(p, _)| p != "package.json")
+            .map(|(p, t)| (p.as_str(), t.as_str()));
+        format!("{:016x}", fnv64(payload))
+    }
+
+    /// All files concatenated with `// ==== path ====` separators — the
+    /// `--emit vitis` stdout form.
+    pub fn bundle(&self) -> String {
+        let mut out = String::new();
+        for (path, text) in &self.files {
+            let _ = writeln!(out, "// ==== {path} ====");
+            out.push_str(text);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the package under `dir`, creating subdirectories as
+    /// needed. Returns the written paths in emission order.
+    pub fn write_to(&self, dir: &Path) -> Result<Vec<PathBuf>, String> {
+        let mut written = Vec::new();
+        for (rel, text) in &self.files {
+            let path = dir.join(rel);
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("create {}: {e}", parent.display()))?;
+            }
+            std::fs::write(&path, text)
+                .map_err(|e| format!("write {}: {e}", path.display()))?;
+            written.push(path);
+        }
+        Ok(written)
+    }
+}
+
+/// Emit the complete package for a generated system.
+pub fn emit(spec: &SystemSpec, platform: &Platform) -> VitisPackage {
+    let mut files = vec![
+        (format!("src/{}.cpp", spec.kernel.name), kernel_cpp(spec)),
+        ("src/host.cpp".to_string(), host_cpp(spec)),
+        ("link.cfg".to_string(), link_cfg(spec, platform)),
+        ("Makefile".to_string(), makefile(spec, platform)),
+    ];
+    let fp = format!("{:016x}", fnv64(files.iter().map(|(p, t)| (p.as_str(), t.as_str()))));
+    let manifest = manifest_json(spec, platform, &files, &fp);
+    files.push(("package.json".to_string(), format!("{manifest}\n")));
+    VitisPackage { files }
+}
+
+/// Same constants as `flow::fingerprint`, over (path NUL text NUL).
+fn fnv64<'a>(files: impl Iterator<Item = (&'a str, &'a str)>) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (path, text) in files {
+        for &b in path
+            .as_bytes()
+            .iter()
+            .chain(std::iter::once(&0u8))
+            .chain(text.as_bytes())
+            .chain(std::iter::once(&0u8))
+        {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// Memory tag used in `sp=` lines and host topology comments.
+fn memory_tag(kind: MemoryKind) -> &'static str {
+    match kind {
+        MemoryKind::Hbm => "HBM",
+        MemoryKind::Ddr4 => "DDR",
+    }
+}
+
+/// Host-side element type: fixed-point formats travel as raw integers
+/// (paper §3.6.4 — double↔fixed conversion happens in host code).
+fn host_type(dtype: DataType) -> &'static str {
+    match dtype {
+        DataType::F64 => "double",
+        DataType::F32 => "float",
+        DataType::Fx64 => "uint64_t",
+        DataType::Fx32 => "uint32_t",
+    }
+}
+
+/// `e * frame + off` with the `+ 0` elided.
+fn axi_index(frame: usize, off: usize) -> String {
+    if off == 0 {
+        format!("e * {frame}")
+    } else {
+        format!("e * {frame} + {off}")
+    }
+}
+
+/// Array-partition pragma for a kernel buffer, from the memory plan's
+/// banking decision (first instance hosting the buffer; instances of
+/// one buffer never differ in scheme across groups).
+fn partition_pragma(plan: &MemoryPlan, buf: usize, name: &str) -> Option<String> {
+    let inst = plan.arrays.iter().find(|a| a.residents.contains(&buf))?;
+    match inst.scheme {
+        BankingScheme::Complete => Some(format!(
+            "#pragma HLS array_partition variable={name} complete dim=1"
+        )),
+        BankingScheme::Cyclic if inst.factor > 1 => Some(format!(
+            "#pragma HLS array_partition variable={name} cyclic factor={} dim=1",
+            inst.factor
+        )),
+        _ => None,
+    }
+}
+
+/// HLS C++ for one compute unit: the `c_emit` group functions plus an
+/// `extern "C"` top level with `m_axi` ports per routed channel.
+fn kernel_cpp(spec: &SystemSpec) -> String {
+    let k = &spec.kernel;
+    let s = &spec.schedule;
+    let ty = c_emit::c_type(spec.dtype.name());
+    let nread = spec.channels[0].read.len();
+    let nwrite = spec.channels[0].write.len();
+    let phased = nread > 1 || nwrite > 1;
+    let in_frame = k.input_words();
+    let out_frame = k.output_words();
+    let width = spec.bus_bits;
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "// {} — Vitis HLS compute unit (emit-schema v{EMIT_SCHEMA_VERSION})",
+        spec.name
+    );
+    let _ = writeln!(
+        out,
+        "// generated by hbmflow — regenerate with `hbmflow emit-vitis`, do not edit"
+    );
+    if phased {
+        let _ = writeln!(out, "// Every read port carries a full input frame; the host's `phase`");
+        let _ = writeln!(out, "// argument selects the ping/pong buffer pair for this batch.");
+    }
+    let _ = writeln!(out);
+    out.push_str(&c_emit::emit(k, s, spec.dtype.name()));
+
+    let _ = writeln!(out, "static void copy_words(const {ty}* src, {ty}* dst, int n) {{");
+    let _ = writeln!(out, "  for (int i = 0; i < n; i += 1) {{");
+    let _ = writeln!(out, "#pragma HLS pipeline II=1");
+    let _ = writeln!(out, "    dst[i] = src[i];");
+    let _ = writeln!(out, "  }}");
+    let _ = writeln!(out, "}}");
+    let _ = writeln!(out);
+
+    let mut params: Vec<String> = Vec::new();
+    for j in 0..nread {
+        params.push(format!("const {ty}* {}", config::read_port(j)));
+    }
+    for j in 0..nwrite {
+        params.push(format!("{ty}* {}", config::write_port(j)));
+    }
+    params.push("int n_elements".to_string());
+    if phased {
+        params.push("int phase".to_string());
+    }
+    let _ = writeln!(out, "extern \"C\" void {}({}) {{", k.name, params.join(", "));
+    for j in 0..nread {
+        let p = config::read_port(j);
+        let b = format!("gmem_read{j}");
+        let _ = writeln!(
+            out,
+            "#pragma HLS INTERFACE m_axi port={p} offset=slave bundle={b} max_widen_bitwidth={width}"
+        );
+    }
+    for j in 0..nwrite {
+        let p = config::write_port(j);
+        let b = format!("gmem_write{j}");
+        let _ = writeln!(
+            out,
+            "#pragma HLS INTERFACE m_axi port={p} offset=slave bundle={b} max_widen_bitwidth={width}"
+        );
+    }
+    let _ = writeln!(out, "#pragma HLS INTERFACE s_axilite port=n_elements bundle=control");
+    if phased {
+        let _ = writeln!(out, "#pragma HLS INTERFACE s_axilite port=phase bundle=control");
+    }
+    let _ = writeln!(out, "#pragma HLS INTERFACE s_axilite port=return bundle=control");
+
+    let _ = writeln!(out, "  const {ty}* rd = {};", config::read_port(0));
+    let _ = writeln!(out, "  {ty}* wr = {};", config::write_port(0));
+    for j in 1..nread {
+        let _ = writeln!(out, "  if (phase % {nread} == {j}) {{");
+        let _ = writeln!(out, "    rd = {};", config::read_port(j));
+        let _ = writeln!(out, "  }}");
+    }
+    for j in 1..nwrite {
+        let _ = writeln!(out, "  if (phase % {nwrite} == {j}) {{");
+        let _ = writeln!(out, "    wr = {};", config::write_port(j));
+        let _ = writeln!(out, "  }}");
+    }
+    let _ = writeln!(out, "  for (int e = 0; e < n_elements; e += 1) {{");
+    if spec.dataflow {
+        let _ = writeln!(out, "#pragma HLS dataflow");
+    }
+    for (b, buf) in k.buffers.iter().enumerate() {
+        let _ = writeln!(out, "    {ty} {}[{}];", buf.name, buf.words());
+        if let Some(p) = partition_pragma(&spec.memory, b, &buf.name) {
+            let _ = writeln!(out, "{p}");
+        }
+    }
+    let mut off = 0usize;
+    for (_, buf) in k.inputs() {
+        let idx = axi_index(in_frame, off);
+        let _ = writeln!(out, "    copy_words(rd + {idx}, {}, {});", buf.name, buf.words());
+        off += buf.words();
+    }
+    for (gi, g) in s.groups.iter().enumerate() {
+        let args: Vec<&str> = c_emit::group_params(k, s, gi)
+            .into_iter()
+            .map(|(b, _)| k.buffers[b].name.as_str())
+            .collect();
+        let _ = writeln!(out, "    {}({});", g.name, args.join(", "));
+    }
+    let mut off = 0usize;
+    for (_, buf) in k.outputs() {
+        let idx = axi_index(out_frame, off);
+        let _ = writeln!(out, "    copy_words({}, wr + {idx}, {});", buf.name, buf.words());
+        off += buf.words();
+    }
+    let _ = writeln!(out, "  }}");
+    let _ = writeln!(out, "}}");
+    out
+}
+
+/// XRT host program: one `cl_mem_ext_ptr_t`-placed buffer per routed
+/// CU port, with the topology flag taken from the channel map. Each
+/// flag line ends in a structured `// cu.port -> TAG[pc]` comment that
+/// [`parse_host_topology`] reads back for the differential tests.
+fn host_cpp(spec: &SystemSpec) -> String {
+    let k = &spec.kernel.name;
+    let hty = host_type(spec.dtype);
+    let tag = memory_tag(spec.opts.memory);
+    let bytes = spec.dtype.bytes();
+    let nread = spec.channels[0].read.len();
+    let nwrite = spec.channels[0].write.len();
+    let phased = nread > 1 || nwrite > 1;
+
+    let mut out = String::new();
+    let _ = writeln!(out, "// {} — XRT host (emit-schema v{EMIT_SCHEMA_VERSION})", spec.name);
+    let _ = writeln!(
+        out,
+        "// generated by hbmflow — regenerate with `hbmflow emit-vitis`, do not edit"
+    );
+    if spec.dtype.is_fixed() {
+        let _ = writeln!(
+            out,
+            "// {hty} carries raw ap_fixed bits; double<->fixed conversion is host-side"
+        );
+    }
+    let _ = writeln!(out, "#define CL_HPP_TARGET_OPENCL_VERSION 120");
+    let _ = writeln!(out, "#define CL_HPP_MINIMUM_OPENCL_VERSION 120");
+    let _ = writeln!(out, "#define CL_HPP_CL_1_2_DEFAULT_BUILD");
+    let _ = writeln!(out, "#include <CL/cl2.hpp>");
+    let _ = writeln!(out, "#include <CL/cl_ext_xilinx.h>");
+    let _ = writeln!(out, "#include <cstdint>");
+    let _ = writeln!(out, "#include <cstdlib>");
+    let _ = writeln!(out, "#include <fstream>");
+    let _ = writeln!(out, "#include <iostream>");
+    let _ = writeln!(out, "#include <vector>");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "static const int N_ELEMENTS = {};", spec.batch_elements);
+    let _ = writeln!(out, "static const int IN_FRAME_WORDS = {};", spec.kernel.input_words());
+    let _ = writeln!(out, "static const int OUT_FRAME_WORDS = {};", spec.kernel.output_words());
+    let _ = writeln!(out, "static const long IN_WORDS = (long)N_ELEMENTS * IN_FRAME_WORDS;");
+    let _ = writeln!(out, "static const long OUT_WORDS = (long)N_ELEMENTS * OUT_FRAME_WORDS;");
+    let _ = writeln!(out, "static const long IN_BYTES = IN_WORDS * {bytes};");
+    let _ = writeln!(out, "static const long OUT_BYTES = OUT_WORDS * {bytes};");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "static std::vector<unsigned char> read_binary(const char* path) {{");
+    let _ = writeln!(out, "  std::ifstream f(path, std::ios::binary | std::ios::ate);");
+    let _ = writeln!(out, "  if (!f) {{");
+    let _ = writeln!(out, "    std::cerr << \"cannot open \" << path << \"\\n\";");
+    let _ = writeln!(out, "    std::exit(1);");
+    let _ = writeln!(out, "  }}");
+    let _ = writeln!(out, "  std::streamsize n = f.tellg();");
+    let _ = writeln!(out, "  f.seekg(0);");
+    let _ = writeln!(out, "  std::vector<unsigned char> buf(n);");
+    let _ = writeln!(out, "  f.read(reinterpret_cast<char*>(buf.data()), n);");
+    let _ = writeln!(out, "  return buf;");
+    let _ = writeln!(out, "}}");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "int main(int argc, char** argv) {{");
+    let _ = writeln!(out, "  if (argc != 2) {{");
+    let _ = writeln!(out, "    std::cerr << \"usage: \" << argv[0] << \" <xclbin>\\n\";");
+    let _ = writeln!(out, "    return 1;");
+    let _ = writeln!(out, "  }}");
+    let _ = writeln!(out, "  cl_int err = CL_SUCCESS;");
+    let _ = writeln!(out, "  std::vector<cl::Platform> platforms;");
+    let _ = writeln!(out, "  cl::Platform::get(&platforms);");
+    let _ = writeln!(out, "  cl::Platform xil;");
+    let _ = writeln!(out, "  for (size_t i = 0; i < platforms.size(); i += 1) {{");
+    let _ = writeln!(out, "    std::string name = platforms[i].getInfo<CL_PLATFORM_NAME>();");
+    let _ = writeln!(out, "    if (name.find(\"Xilinx\") != std::string::npos) {{");
+    let _ = writeln!(out, "      xil = platforms[i];");
+    let _ = writeln!(out, "    }}");
+    let _ = writeln!(out, "  }}");
+    let _ = writeln!(out, "  std::vector<cl::Device> devices;");
+    let _ = writeln!(out, "  xil.getDevices(CL_DEVICE_TYPE_ACCELERATOR, &devices);");
+    let _ = writeln!(out, "  cl::Device device = devices.at(0);");
+    let _ = writeln!(out, "  cl::Context context(device, nullptr, nullptr, nullptr, &err);");
+    let _ = writeln!(
+        out,
+        "  cl::CommandQueue queue(context, device, CL_QUEUE_OUT_OF_ORDER_EXEC_MODE_ENABLE, &err);"
+    );
+    let _ = writeln!(out, "  std::vector<unsigned char> bin = read_binary(argv[1]);");
+    let _ = writeln!(out, "  cl::Program::Binaries bins{{{{bin.data(), bin.size()}}}};");
+    let _ = writeln!(out, "  cl::Program program(context, {{device}}, bins, nullptr, &err);");
+
+    // one placed buffer per routed port of every CU
+    for (i, ch) in spec.channels.iter().enumerate() {
+        let inst = config::cu_instance(k, i);
+        let _ = writeln!(out);
+        let _ = writeln!(out, "  // ---- {inst} ----");
+        let _ = writeln!(out, "  cl::Kernel k_{inst}(program, \"{k}:{{{inst}}}\", &err);");
+        for (j, pc) in ch.read.iter().enumerate() {
+            let port = config::read_port(j);
+            let var = format!("{inst}_read{j}");
+            let _ = writeln!(out, "  std::vector<{hty}> host_{var}(IN_WORDS);");
+            let _ = writeln!(out, "  cl_mem_ext_ptr_t ext_{var};");
+            let _ = writeln!(out, "  ext_{var}.obj = host_{var}.data();");
+            let _ = writeln!(out, "  ext_{var}.param = nullptr;");
+            let _ = writeln!(
+                out,
+                "  ext_{var}.flags = {pc} | XCL_MEM_TOPOLOGY; // {inst}.{port} -> {tag}[{pc}]"
+            );
+            let _ = writeln!(out, "  cl::Buffer buf_{var}(");
+            let _ = writeln!(
+                out,
+                "      context, CL_MEM_USE_HOST_PTR | CL_MEM_READ_ONLY | CL_MEM_EXT_PTR_XILINX,"
+            );
+            let _ = writeln!(out, "      IN_BYTES, &ext_{var}, &err);");
+        }
+        for (j, pc) in ch.write.iter().enumerate() {
+            let port = config::write_port(j);
+            let var = format!("{inst}_write{j}");
+            let _ = writeln!(out, "  std::vector<{hty}> host_{var}(OUT_WORDS);");
+            let _ = writeln!(out, "  cl_mem_ext_ptr_t ext_{var};");
+            let _ = writeln!(out, "  ext_{var}.obj = host_{var}.data();");
+            let _ = writeln!(out, "  ext_{var}.param = nullptr;");
+            let _ = writeln!(
+                out,
+                "  ext_{var}.flags = {pc} | XCL_MEM_TOPOLOGY; // {inst}.{port} -> {tag}[{pc}]"
+            );
+            let _ = writeln!(out, "  cl::Buffer buf_{var}(");
+            let _ = writeln!(
+                out,
+                "      context, CL_MEM_USE_HOST_PTR | CL_MEM_WRITE_ONLY | CL_MEM_EXT_PTR_XILINX,"
+            );
+            let _ = writeln!(out, "      OUT_BYTES, &ext_{var}, &err);");
+        }
+    }
+
+    // launch: set args in port order, migrate in, run, migrate out
+    for (i, ch) in spec.channels.iter().enumerate() {
+        let inst = config::cu_instance(k, i);
+        let _ = writeln!(out);
+        let _ = writeln!(out, "  int arg_{inst} = 0;");
+        for j in 0..ch.read.len() {
+            let _ = writeln!(out, "  k_{inst}.setArg(arg_{inst}++, buf_{inst}_read{j});");
+        }
+        for j in 0..ch.write.len() {
+            let _ = writeln!(out, "  k_{inst}.setArg(arg_{inst}++, buf_{inst}_write{j});");
+        }
+        let _ = writeln!(out, "  k_{inst}.setArg(arg_{inst}++, (int)N_ELEMENTS);");
+        if phased {
+            let _ = writeln!(out, "  k_{inst}.setArg(arg_{inst}++, (int)0); // phase");
+        }
+        let reads: Vec<String> = (0..ch.read.len())
+            .map(|j| format!("buf_{inst}_read{j}"))
+            .collect();
+        let writes: Vec<String> = (0..ch.write.len())
+            .map(|j| format!("buf_{inst}_write{j}"))
+            .collect();
+        let _ = writeln!(out, "  queue.enqueueMigrateMemObjects({{{}}}, 0);", reads.join(", "));
+        let _ = writeln!(out, "  queue.enqueueTask(k_{inst});");
+        let _ = writeln!(
+            out,
+            "  queue.enqueueMigrateMemObjects({{{}}}, CL_MIGRATE_MEM_OBJECT_HOST);",
+            writes.join(", ")
+        );
+    }
+    let _ = writeln!(out);
+    let _ = writeln!(out, "  queue.finish();");
+    let _ = writeln!(
+        out,
+        "  std::cout << \"{}: \" << N_ELEMENTS << \" elements per CU done\\n\";",
+        spec.name
+    );
+    let _ = writeln!(out, "  return 0;");
+    let _ = writeln!(out, "}}");
+    out
+}
+
+/// `v++ --config` link file: CU replication, port→channel bindings,
+/// and SLR pinning, all derived from the same spec fields the host and
+/// kernel emitters use.
+fn link_cfg(spec: &SystemSpec, platform: &Platform) -> String {
+    let tag = memory_tag(spec.opts.memory);
+    let insts: Vec<String> = (0..spec.num_cus)
+        .map(|i| config::cu_instance(&spec.kernel.name, i))
+        .collect();
+    let mut out = String::new();
+    let _ = writeln!(out, "# hbmflow Vitis link configuration — {} (do not edit)", spec.name);
+    let _ = writeln!(
+        out,
+        "# emit-schema: v{EMIT_SCHEMA_VERSION} — regenerate with `hbmflow emit-vitis`"
+    );
+    let _ = writeln!(out, "platform={}", platform.name);
+    let _ = writeln!(out, "kernel_frequency={}", spec.opts.target_freq_mhz as u64);
+    let _ = writeln!(out);
+    let _ = writeln!(out, "[connectivity]");
+    let _ = writeln!(out, "nk={}:{}:{}", spec.kernel.name, spec.num_cus, insts.join("."));
+    for (i, ch) in spec.channels.iter().enumerate() {
+        for (j, pc) in ch.read.iter().enumerate() {
+            let _ = writeln!(out, "sp={}.{}:{tag}[{pc}]", insts[i], config::read_port(j));
+        }
+        for (j, pc) in ch.write.iter().enumerate() {
+            let _ = writeln!(out, "sp={}.{}:{tag}[{pc}]", insts[i], config::write_port(j));
+        }
+    }
+    // HBM-attached CUs belong in SLR0 (paper Challenge 5)
+    for inst in &insts {
+        let _ = writeln!(out, "slr={inst}:SLR0");
+    }
+    out
+}
+
+/// Build recipe: `v++ -c` per kernel, `v++ -l` against `link.cfg`, and
+/// the host link line. CI checks the text, not the build — running it
+/// needs a Vitis installation.
+fn makefile(spec: &SystemSpec, platform: &Platform) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# Makefile for {} — generated by hbmflow (emit-schema v{EMIT_SCHEMA_VERSION})",
+        spec.name
+    );
+    let _ = writeln!(out, "# Requires a Vitis installation and a platform .xpfm.");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "PLATFORM ?= {}", platform.name);
+    let _ = writeln!(out, "TARGET ?= hw");
+    let _ = writeln!(out, "FREQ_MHZ ?= {}", spec.opts.target_freq_mhz as u64);
+    let _ = writeln!(out, "KERNEL := {}", spec.kernel.name);
+    let _ = writeln!(out);
+    let _ = writeln!(out, "XO := xclbin/$(KERNEL).$(TARGET).xo");
+    let _ = writeln!(out, "XCLBIN := xclbin/$(KERNEL).$(TARGET).xclbin");
+    let _ = writeln!(out);
+    let _ = writeln!(out, ".PHONY: all host clean");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "all: $(XCLBIN) host");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "$(XO): src/$(KERNEL).cpp");
+    let _ = writeln!(out, "\tmkdir -p xclbin");
+    let _ = writeln!(
+        out,
+        "\tv++ -c -t $(TARGET) --platform $(PLATFORM) --kernel_frequency $(FREQ_MHZ) \\"
+    );
+    let _ = writeln!(out, "\t\t-k $(KERNEL) -o $@ $<");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "$(XCLBIN): $(XO) link.cfg");
+    let _ = writeln!(
+        out,
+        "\tv++ -l -t $(TARGET) --platform $(PLATFORM) --config link.cfg -o $@ $<"
+    );
+    let _ = writeln!(out);
+    let _ = writeln!(out, "host: src/host.cpp");
+    let _ = writeln!(out, "\t$(CXX) -std=c++14 -O2 -o $@ $< -lOpenCL -pthread");
+    let _ = writeln!(out);
+    let _ = writeln!(out, "clean:");
+    let _ = writeln!(out, "\trm -rf xclbin host _x *.log");
+    out
+}
+
+/// The `package.json` manifest document (sorted keys via `Json::Obj`).
+fn manifest_json(
+    spec: &SystemSpec,
+    platform: &Platform,
+    payload: &[(String, String)],
+    fingerprint: &str,
+) -> Json {
+    let connectivity: Vec<Json> = spec
+        .channels
+        .iter()
+        .enumerate()
+        .map(|(i, ch)| {
+            let pcs = |v: &[u32]| Json::Arr(v.iter().map(|&pc| Json::Num(pc as f64)).collect());
+            Json::obj(vec![
+                ("cu", Json::str(config::cu_instance(&spec.kernel.name, i))),
+                ("read", pcs(&ch.read)),
+                ("write", pcs(&ch.write)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("batch_elements", Json::Num(spec.batch_elements as f64)),
+        ("bus_bits", Json::Num(spec.bus_bits as f64)),
+        ("channel_policy", Json::str(spec.opts.channel_policy.name())),
+        ("connectivity", Json::Arr(connectivity)),
+        ("dataflow_groups", Json::Num(spec.schedule.num_groups() as f64)),
+        ("double_buffering", Json::Bool(spec.double_buffering)),
+        ("dtype", Json::str(spec.dtype.name())),
+        ("emit_schema", Json::Num(EMIT_SCHEMA_VERSION as f64)),
+        ("files", Json::Arr(payload.iter().map(|(p, _)| Json::str(p.as_str())).collect())),
+        ("fingerprint", Json::str(fingerprint)),
+        ("frequency_mhz", Json::Num(spec.opts.target_freq_mhz)),
+        ("generator", Json::str("hbmflow")),
+        ("kernel", Json::str(spec.kernel.name.as_str())),
+        ("lanes", Json::Num(spec.lanes as f64)),
+        ("memory", Json::str(spec.opts.memory.name())),
+        ("num_cus", Json::Num(spec.num_cus as f64)),
+        ("platform", Json::str(platform.name.as_str())),
+        ("system", Json::str(spec.name.as_str())),
+    ])
+}
+
+/// One `sp=` binding (or one host topology flag): a CU instance port
+/// bound to a memory channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpBinding {
+    pub cu: String,
+    pub port: String,
+    /// Memory tag from the cfg (`HBM` / `DDR`).
+    pub memory: String,
+    pub channel: u32,
+}
+
+/// Parsed `[connectivity]` facts of a link cfg.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConnectivityCfg {
+    pub kernel: String,
+    /// CU instance names from the `nk=` line, in declaration order.
+    pub instances: Vec<String>,
+    /// `sp=` bindings in file order.
+    pub sp: Vec<SpBinding>,
+}
+
+/// Parse the `nk=` / `sp=` lines of an emitted `link.cfg` back into
+/// structured form — the inverse the differential tests diff against
+/// the `hbm::ChannelMap`.
+pub fn parse_connectivity(cfg: &str) -> Result<ConnectivityCfg, String> {
+    let mut kernel: Option<String> = None;
+    let mut instances: Vec<String> = Vec::new();
+    let mut sp: Vec<SpBinding> = Vec::new();
+    for raw in cfg.lines() {
+        let line = raw.trim();
+        if let Some(rest) = line.strip_prefix("nk=") {
+            let mut it = rest.split(':');
+            let name = match it.next() {
+                Some(n) if !n.is_empty() => n,
+                _ => return Err(format!("nk= missing kernel name: {line}")),
+            };
+            let count: usize = it
+                .next()
+                .ok_or_else(|| format!("nk= missing CU count: {line}"))?
+                .parse()
+                .map_err(|_| format!("nk= count is not a number: {line}"))?;
+            let insts: Vec<String> = match it.next() {
+                Some(list) => list.split('.').map(str::to_string).collect(),
+                None => (0..count).map(|i| config::cu_instance(name, i)).collect(),
+            };
+            if insts.len() != count {
+                return Err(format!(
+                    "nk= declares {count} CUs but names {}: {line}",
+                    insts.len()
+                ));
+            }
+            kernel = Some(name.to_string());
+            instances = insts;
+        } else if let Some(rest) = line.strip_prefix("sp=") {
+            let (lhs, rhs) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("sp= missing ':': {line}"))?;
+            let (cu, port) = lhs
+                .rsplit_once('.')
+                .ok_or_else(|| format!("sp= missing port: {line}"))?;
+            let (mem, chan) = rhs
+                .split_once('[')
+                .ok_or_else(|| format!("sp= missing channel: {line}"))?;
+            let chan = chan.strip_suffix(']').ok_or_else(|| format!("sp= missing ']': {line}"))?;
+            let channel: u32 = chan
+                .parse()
+                .map_err(|_| format!("sp= channel is not a number: {line}"))?;
+            sp.push(SpBinding {
+                cu: cu.to_string(),
+                port: port.to_string(),
+                memory: mem.to_string(),
+                channel,
+            });
+        }
+    }
+    let kernel = kernel.ok_or_else(|| "no nk= line in cfg".to_string())?;
+    Ok(ConnectivityCfg { kernel, instances, sp })
+}
+
+/// Recover the per-CU channel assignment from a parsed cfg: the exact
+/// structure `SystemSpec::channels` holds, so a differential test can
+/// assert the emitted package and the simulated model agree.
+pub fn cfg_channel_assignment(cfg: &ConnectivityCfg) -> Result<Vec<CuChannels>, String> {
+    let mut out = Vec::new();
+    for inst in &cfg.instances {
+        let mut read: Vec<(usize, u32)> = Vec::new();
+        let mut write: Vec<(usize, u32)> = Vec::new();
+        for b in cfg.sp.iter().filter(|b| &b.cu == inst) {
+            if let Some(j) = b.port.strip_prefix("m_axi_read") {
+                let j: usize = j.parse().map_err(|_| format!("bad read port index: {}", b.port))?;
+                read.push((j, b.channel));
+            } else if let Some(j) = b.port.strip_prefix("m_axi_write") {
+                let j: usize = j.parse().map_err(|_| format!("bad write port index: {}", b.port))?;
+                write.push((j, b.channel));
+            } else {
+                return Err(format!("unknown port name {} on {inst}", b.port));
+            }
+        }
+        if read.is_empty() || write.is_empty() {
+            return Err(format!("CU {inst} lacks sp= bindings"));
+        }
+        read.sort_unstable();
+        write.sort_unstable();
+        out.push(CuChannels {
+            read: read.into_iter().map(|(_, pc)| pc).collect(),
+            write: write.into_iter().map(|(_, pc)| pc).collect(),
+        });
+    }
+    Ok(out)
+}
+
+/// Extract the buffer placements from an emitted `host.cpp` via the
+/// structured `// cu.port -> TAG[pc]` flag comments, cross-checking the
+/// numeric flag against the comment. Returns bindings in emission order
+/// (per CU: reads, then writes) — the same order `link.cfg` uses, so
+/// one-to-one agreement is a plain equality.
+pub fn parse_host_topology(host: &str) -> Result<Vec<SpBinding>, String> {
+    let mut out = Vec::new();
+    for line in host.lines() {
+        let Some((head, tail)) = line.split_once("| XCL_MEM_TOPOLOGY; // ") else {
+            continue;
+        };
+        let (cu_port, mem_chan) = tail
+            .split_once(" -> ")
+            .ok_or_else(|| format!("bad topology comment: {line}"))?;
+        let (cu, port) = cu_port
+            .rsplit_once('.')
+            .ok_or_else(|| format!("bad topology comment: {line}"))?;
+        let (mem, chan) = mem_chan
+            .split_once('[')
+            .ok_or_else(|| format!("bad topology comment: {line}"))?;
+        let chan = chan.strip_suffix(']').ok_or_else(|| format!("bad topology comment: {line}"))?;
+        let channel: u32 = chan.parse().map_err(|_| format!("bad topology channel: {line}"))?;
+        let flag: u32 = head
+            .rsplit_once('=')
+            .map(|(_, v)| v.trim())
+            .ok_or_else(|| format!("bad topology flags: {line}"))?
+            .parse()
+            .map_err(|_| format!("bad topology flags: {line}"))?;
+        if flag != channel {
+            return Err(format!(
+                "flag {flag} disagrees with comment channel {channel}: {line}"
+            ));
+        }
+        out.push(SpBinding {
+            cu: cu.to_string(),
+            port: port.to_string(),
+            memory: mem.to_string(),
+            channel,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+    use crate::olympus::{generate, OlympusOpts};
+    use crate::util::json;
+
+    fn spec(opts: OlympusOpts) -> SystemSpec {
+        let prog = dsl::parse(&dsl::inverse_helmholtz_source(7)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "helmholtz").unwrap();
+        generate(&k, &opts, &Platform::alveo_u280()).unwrap()
+    }
+
+    fn pkg(opts: OlympusOpts) -> (SystemSpec, VitisPackage) {
+        let s = spec(opts);
+        let p = emit(&s, &Platform::alveo_u280());
+        (s, p)
+    }
+
+    #[test]
+    fn package_has_five_files_in_fixed_order() {
+        let (_, p) = pkg(OlympusOpts::dataflow(7));
+        let paths: Vec<&str> = p.files().iter().map(|(p, _)| p.as_str()).collect();
+        assert_eq!(
+            paths,
+            ["src/helmholtz.cpp", "src/host.cpp", "link.cfg", "Makefile", "package.json"]
+        );
+    }
+
+    #[test]
+    fn emission_is_deterministic() {
+        let (s, p1) = pkg(OlympusOpts::dataflow(7).with_cus(2));
+        let p2 = emit(&s, &Platform::alveo_u280());
+        assert_eq!(p1, p2);
+        assert_eq!(p1.fingerprint(), p2.fingerprint());
+    }
+
+    #[test]
+    fn cfg_round_trips_to_the_channel_map() {
+        for opts in [
+            OlympusOpts::baseline(),
+            OlympusOpts::dataflow(7),
+            OlympusOpts::dataflow(7).with_cus(2),
+            OlympusOpts::double_buffering().with_cus(8),
+        ] {
+            let (s, p) = pkg(opts);
+            let cfg = parse_connectivity(p.file("link.cfg").unwrap()).unwrap();
+            assert_eq!(cfg.kernel, "helmholtz");
+            assert_eq!(cfg_channel_assignment(&cfg).unwrap(), s.channels);
+        }
+    }
+
+    #[test]
+    fn host_topology_matches_cfg_one_to_one() {
+        let (_, p) = pkg(OlympusOpts::dataflow(7).with_cus(2));
+        let cfg = parse_connectivity(p.file("link.cfg").unwrap()).unwrap();
+        let host = parse_host_topology(p.file("src/host.cpp").unwrap()).unwrap();
+        assert_eq!(host, cfg.sp);
+    }
+
+    #[test]
+    fn sp_ports_exist_in_the_kernel_cpp() {
+        let (_, p) = pkg(OlympusOpts::dataflow(7));
+        let cpp = p.file("src/helmholtz.cpp").unwrap();
+        let cfg = parse_connectivity(p.file("link.cfg").unwrap()).unwrap();
+        for b in &cfg.sp {
+            assert!(cpp.contains(&b.port), "port {} missing from C++", b.port);
+        }
+        assert_eq!(cfg.instances, ["helmholtz_1"]);
+    }
+
+    #[test]
+    fn partition_pragmas_follow_the_memory_plan() {
+        let (s, p) = pkg(OlympusOpts::dataflow(7));
+        let cpp = p.file("src/helmholtz.cpp").unwrap();
+        assert!(cpp.contains("#pragma HLS array_partition"));
+        let banked = s
+            .memory
+            .arrays
+            .iter()
+            .any(|a| a.factor > 1 || a.scheme == BankingScheme::Complete);
+        assert!(banked, "dataflow plan should bank at least one array");
+    }
+
+    #[test]
+    fn phase_argument_appears_only_with_pingpong_channels() {
+        let (_, flat) = pkg(OlympusOpts::baseline());
+        assert!(!flat.file("src/helmholtz.cpp").unwrap().contains("int phase"));
+        let (_, db) = pkg(OlympusOpts::dataflow(7));
+        assert!(db.file("src/helmholtz.cpp").unwrap().contains("int phase"));
+        assert!(db.file("src/host.cpp").unwrap().contains("// phase"));
+    }
+
+    #[test]
+    fn manifest_records_fingerprint_and_schema() {
+        let (s, p) = pkg(OlympusOpts::fixed_point(crate::datatype::DataType::Fx32));
+        let doc = json::parse(p.file("package.json").unwrap()).unwrap();
+        assert_eq!(doc.get("fingerprint").unwrap().as_str(), Some(p.fingerprint().as_str()));
+        assert_eq!(doc.get("emit_schema").unwrap().as_u64(), Some(EMIT_SCHEMA_VERSION));
+        assert_eq!(doc.get("dtype").unwrap().as_str(), Some("fx32"));
+        assert_eq!(doc.get("num_cus").unwrap().as_u64(), Some(s.num_cus as u64));
+        assert_eq!(doc.get("platform").unwrap().as_str(), Some("xilinx_u280"));
+    }
+
+    #[test]
+    fn fixed_point_host_buffers_carry_raw_bits() {
+        let (_, p) = pkg(OlympusOpts::fixed_point(crate::datatype::DataType::Fx32));
+        let host = p.file("src/host.cpp").unwrap();
+        assert!(host.contains("std::vector<uint32_t>"));
+        let cpp = p.file("src/helmholtz.cpp").unwrap();
+        assert!(cpp.contains("ap_fixed<32, 8>"));
+    }
+
+    #[test]
+    fn ddr4_systems_use_the_ddr_tag() {
+        let (_, p) = pkg(OlympusOpts::baseline().on_ddr4());
+        assert!(p.file("link.cfg").unwrap().contains(":DDR["));
+        assert!(p.file("src/host.cpp").unwrap().contains("-> DDR["));
+    }
+
+    #[test]
+    fn malformed_cfgs_are_rejected() {
+        assert!(parse_connectivity("sp=only.port:HBM[0]").is_err());
+        assert!(parse_connectivity("nk=k:two").is_err());
+        assert!(parse_connectivity("nk=k:2:a").is_err());
+        let cfg = parse_connectivity("nk=k:1\nsp=k_1.weird:HBM[0]").unwrap();
+        assert!(cfg_channel_assignment(&cfg).is_err());
+        let bad = "x.flags = 3 | XCL_MEM_TOPOLOGY; // k_1.m_axi_read0 -> HBM[4]";
+        assert!(parse_host_topology(bad).is_err());
+    }
+
+    #[test]
+    fn write_to_materializes_the_tree() {
+        let (_, p) = pkg(OlympusOpts::baseline());
+        let dir = std::env::temp_dir().join("hbmflow_vitis_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let written = p.write_to(&dir).unwrap();
+        assert_eq!(written.len(), 5);
+        for path in &written {
+            assert!(path.exists(), "{} missing", path.display());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -29,8 +29,8 @@ use super::{
 };
 
 /// Artifact document format version (see the module docs for the bump
-/// policy).
-pub const SCHEMA_VERSION: u64 = 2;
+/// policy). v3 added the `vitis` section on mapped artifacts.
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// Any pipeline stage, wrapped for persistence.
 #[derive(Debug, Clone)]
@@ -81,6 +81,7 @@ impl Artifact {
                 pairs.push(("opts", opts_to_json(&a.opts)));
                 pairs.push(("platform", Json::str(a.platform.name.as_str())));
                 pairs.push(("system", system_json(&a.spec)));
+                pairs.push(("vitis", vitis_json(a)));
             }
             // evaluated artifacts record results, not the rewrite trace
             // (it is re-derived and unchecked on load)
@@ -154,6 +155,7 @@ impl Artifact {
         match stage {
             "mapped" => {
                 verify(v, "system", &system_json(&mapped.spec), origin)?;
+                verify(v, "vitis", &vitis_json(&mapped), origin)?;
                 Ok(Artifact::Mapped(mapped))
             }
             // the guard above admitted only the four known tags
@@ -257,6 +259,20 @@ fn system_json(spec: &SystemSpec) -> Json {
         ("mem_shared_words", Json::Num(mem.shared_words as f64)),
         ("mem_unshared_words", Json::Num(mem.unshared_words as f64)),
         ("channels", Json::Arr(channels)),
+    ])
+}
+
+/// Schema v3: the Vitis emission contract of a mapped system — emit
+/// schema, package file list, and payload fingerprint. Verified on
+/// load (like every section), so a reloaded artifact is guaranteed to
+/// re-emit its package bit-exactly.
+fn vitis_json(a: &Mapped) -> Json {
+    let pkg = a.vitis_package();
+    let files: Vec<Json> = pkg.files().iter().map(|(p, _)| Json::str(p.as_str())).collect();
+    Json::obj(vec![
+        ("emit_schema", Json::Num(crate::codegen::vitis::EMIT_SCHEMA_VERSION as f64)),
+        ("files", Json::Arr(files)),
+        ("fingerprint", Json::str(pkg.fingerprint())),
     ])
 }
 

@@ -410,6 +410,24 @@ impl Mapped {
         self.evaluate(EvalKind::SimulateAnalytic { elements })
     }
 
+    /// The Vitis package for this system (see `codegen::vitis`):
+    /// kernel C++, host, link cfg, Makefile, and manifest, rendered
+    /// in memory. Byte-deterministic for a given system.
+    pub fn vitis_package(&self) -> crate::codegen::vitis::VitisPackage {
+        crate::codegen::vitis::emit(&self.spec, &self.platform)
+    }
+
+    /// Stage exit: write the Vitis package under `dir`, creating the
+    /// `src/` subdirectory as needed. Returns the written paths.
+    pub fn emit_vitis(
+        &self,
+        dir: impl AsRef<std::path::Path>,
+    ) -> Result<Vec<std::path::PathBuf>, FlowError> {
+        self.vitis_package()
+            .write_to(dir.as_ref())
+            .map_err(FlowError::artifact)
+    }
+
     /// The generic numerics oracle: the lowered kernel interpreted on
     /// seeded inputs versus `teil::eval` of the rewritten module.
     pub fn oracle(&self, seed: u64, elements: usize) -> Result<OracleCheck, FlowError> {

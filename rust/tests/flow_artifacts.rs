@@ -155,3 +155,37 @@ fn artifacts_embed_the_source_so_the_file_can_vanish() {
     assert!(ev.sim().unwrap().gflops_system > 0.0);
     std::fs::remove_file(&art).ok();
 }
+
+#[test]
+fn mapped_artifacts_pin_the_vitis_package() {
+    let platform = Platform::alveo_u280();
+    let lowered = Flow::from_source(KernelSource::builtin("helmholtz"))
+        .parse(7)
+        .unwrap()
+        .lower()
+        .unwrap();
+    let opts = OlympusOpts::dataflow(7.min(lowered.kernel.nests.len()));
+    let mapped = lowered.map(&opts, &platform).unwrap();
+    let direct = mapped.vitis_package();
+
+    let json = Artifact::Mapped(mapped.clone()).to_json().to_string();
+    assert!(json.contains("\"vitis\""), "mapped artifacts carry a vitis section");
+    assert!(json.contains(&direct.fingerprint()), "fingerprint recorded: {json}");
+
+    let path = std::env::temp_dir().join("hbmflow_artifact_vitis.json");
+    Artifact::Mapped(mapped).save(&path).unwrap();
+    let Artifact::Mapped(back) = Artifact::load(&path).unwrap() else {
+        panic!("stage changed on reload");
+    };
+    // the reloaded artifact re-emits the package byte-for-byte
+    assert_eq!(direct.bundle(), back.vitis_package().bundle());
+
+    // a tampered fingerprint is an incompatible build, not silent drift
+    let text = std::fs::read_to_string(&path).unwrap();
+    let tampered = text.replace(&direct.fingerprint(), "0000000000000000");
+    assert_ne!(text, tampered, "fingerprint appears in the document");
+    std::fs::write(&path, tampered).unwrap();
+    let err = Artifact::load(&path).unwrap_err().to_string();
+    assert!(err.contains("incompatible build"), "{err}");
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,110 @@
+//! Golden-file pin of the Vitis emission back-end: every shipped
+//! kernel — the three builtins plus the six `examples/kernels/*.cfd`
+//! programs — at two pinned system points, five files each,
+//! byte-compared against `tests/golden/vitis/`.
+//!
+//! Bless workflow: a missing golden file is written on first run (so
+//! the suite bootstraps itself on a fresh checkout); `HBMFLOW_BLESS=1`
+//! rewrites all of them after an intentional emitter change. CI reruns
+//! the bless pass and fails on `git diff` drift.
+
+use std::path::{Path, PathBuf};
+
+use hbmflow::datatype::DataType;
+use hbmflow::flow::Flow;
+use hbmflow::kernels::KernelSource;
+use hbmflow::olympus::{ChannelPolicy, OlympusOpts};
+use hbmflow::platform::Platform;
+
+fn kernel_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/kernels")
+}
+
+fn golden_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/vitis")
+}
+
+/// The three builtins plus every shipped `.cfd` kernel (the same
+/// closure `flow_artifacts` walks).
+fn sources() -> Vec<KernelSource> {
+    let mut v: Vec<KernelSource> = ["helmholtz", "interpolation", "gradient"]
+        .iter()
+        .map(|n| KernelSource::builtin(n))
+        .collect();
+    let mut files: Vec<PathBuf> = std::fs::read_dir(kernel_dir())
+        .expect("examples/kernels exists")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "cfd"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 6, "kernel library shrank: {files:?}");
+    v.extend(files.into_iter().map(KernelSource::file));
+    v
+}
+
+/// The two pinned system points per kernel: the single-CU f64
+/// dataflow design and a 2-CU fixed-point striped variant, dataflow
+/// clamped to the kernel's nest count like the CLI does.
+fn points(nests: usize) -> Vec<(&'static str, OlympusOpts)> {
+    let mut local = OlympusOpts::dataflow(7.min(nests));
+    local.dtype = DataType::F64;
+    let mut striped = OlympusOpts::fixed_point(DataType::Fx32)
+        .with_cus(2)
+        .with_policy(ChannelPolicy::Striped);
+    striped.dataflow = striped.dataflow.map(|g| g.min(nests));
+    vec![("cu1_f64_local", local), ("cu2_fx32_striped", striped)]
+}
+
+/// Byte-compare one emitted file against its golden twin; bless on
+/// request or when the golden file does not exist yet.
+fn check(golden: &Path, text: &str, blessed: &mut usize) {
+    let bless = std::env::var_os("HBMFLOW_BLESS").is_some();
+    if bless || !golden.exists() {
+        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
+        std::fs::write(golden, text).unwrap();
+        *blessed += 1;
+        return;
+    }
+    let want = std::fs::read_to_string(golden).unwrap();
+    assert_eq!(
+        want,
+        text,
+        "golden drift at {} — rerun with HBMFLOW_BLESS=1 to re-pin",
+        golden.display()
+    );
+}
+
+#[test]
+fn vitis_packages_match_the_golden_tree() {
+    let platform = Platform::alveo_u280();
+    let root = golden_root();
+    let mut blessed = 0usize;
+    let mut checked = 0usize;
+    for source in sources() {
+        let p = if source.parameterized() {
+            7
+        } else {
+            source.nominal_degree()
+        };
+        let lowered = Flow::from_source(source.clone())
+            .parse(p)
+            .unwrap()
+            .lower()
+            .unwrap();
+        for (point, opts) in points(lowered.kernel.nests.len()) {
+            let mapped = lowered.map(&opts, &platform).unwrap();
+            let pkg = mapped.vitis_package();
+            assert_eq!(pkg.files().len(), 5, "{} {point}", source.name());
+            for (path, text) in pkg.files() {
+                let golden = root.join(source.name()).join(point).join(path);
+                check(&golden, text, &mut blessed);
+                checked += 1;
+            }
+        }
+    }
+    // 9 kernels x 2 points x 5 files — the full pinned closure
+    assert_eq!(checked, 9 * 2 * 5, "golden closure shrank");
+    if blessed > 0 {
+        eprintln!("blessed {blessed}/{checked} golden files under {}", root.display());
+    }
+}

@@ -1,0 +1,151 @@
+//! Property tests for the Vitis emission back-end: cross-file
+//! consistency — C++ port names, `link.cfg` `sp=` lines, host
+//! `XCL_MEM_TOPOLOGY` flags, and the routed channel map must all agree
+//! — plus byte-determinism, for every shipped kernel at two system
+//! points.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use hbmflow::codegen::vitis;
+use hbmflow::datatype::DataType;
+use hbmflow::flow::{Flow, Mapped};
+use hbmflow::kernels::KernelSource;
+use hbmflow::olympus::{ChannelPolicy, MemoryKind, OlympusOpts};
+use hbmflow::platform::Platform;
+
+fn kernel_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/kernels")
+}
+
+/// The three builtins plus every shipped `.cfd` kernel.
+fn sources() -> Vec<KernelSource> {
+    let mut v: Vec<KernelSource> = ["helmholtz", "interpolation", "gradient"]
+        .iter()
+        .map(|n| KernelSource::builtin(n))
+        .collect();
+    let mut files: Vec<PathBuf> = std::fs::read_dir(kernel_dir())
+        .expect("examples/kernels exists")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "cfd"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 6, "kernel library shrank: {files:?}");
+    v.extend(files.into_iter().map(KernelSource::file));
+    v
+}
+
+/// The same two system points the golden suite pins.
+fn points(nests: usize) -> Vec<OlympusOpts> {
+    let mut local = OlympusOpts::dataflow(7.min(nests));
+    local.dtype = DataType::F64;
+    let mut striped = OlympusOpts::fixed_point(DataType::Fx32)
+        .with_cus(2)
+        .with_policy(ChannelPolicy::Striped);
+    striped.dataflow = striped.dataflow.map(|g| g.min(nests));
+    vec![local, striped]
+}
+
+/// Every shipped kernel mapped at both points (18 systems).
+fn mapped_points() -> Vec<Mapped> {
+    let platform = Platform::alveo_u280();
+    let mut v = Vec::new();
+    for source in sources() {
+        let p = if source.parameterized() {
+            7
+        } else {
+            source.nominal_degree()
+        };
+        let lowered = Flow::from_source(source.clone())
+            .parse(p)
+            .unwrap()
+            .lower()
+            .unwrap();
+        for opts in points(lowered.kernel.nests.len()) {
+            v.push(lowered.map(&opts, &platform).unwrap());
+        }
+    }
+    assert_eq!(v.len(), 18, "system-point closure shrank");
+    v
+}
+
+#[test]
+fn vitis_sp_ports_exist_in_the_cpp_and_channels_in_the_routed_map() {
+    for m in mapped_points() {
+        let pkg = m.vitis_package();
+        let cfg = vitis::parse_connectivity(pkg.file("link.cfg").unwrap()).unwrap();
+        let cpp = pkg.file(&format!("src/{}.cpp", m.spec.kernel.name)).unwrap();
+        assert_eq!(cfg.kernel, m.spec.kernel.name);
+        assert_eq!(cfg.instances.len(), m.spec.num_cus, "{}", m.spec.name);
+        let want: usize = m.spec.channels.iter().map(|c| c.read.len() + c.write.len()).sum();
+        assert_eq!(cfg.sp.len(), want, "{}", m.spec.name);
+        let tag = match m.spec.opts.memory {
+            MemoryKind::Hbm => "HBM",
+            MemoryKind::Ddr4 => "DDR",
+        };
+        let mut pcs = BTreeSet::new();
+        for cu in &m.spec.hbm_map.cus {
+            for r in cu.read.iter().chain(cu.write.iter()) {
+                pcs.insert(r.channel);
+            }
+        }
+        for b in &cfg.sp {
+            assert!(cpp.contains(&format!("port={}", b.port)), "{}: {}", m.spec.name, b.port);
+            assert_eq!(b.memory, tag, "{}", m.spec.name);
+            assert!(pcs.contains(&b.channel), "{} pc {}", m.spec.name, b.channel);
+        }
+    }
+}
+
+#[test]
+fn vitis_host_topology_agrees_with_the_link_cfg_one_to_one() {
+    for m in mapped_points() {
+        let pkg = m.vitis_package();
+        let cfg = vitis::parse_connectivity(pkg.file("link.cfg").unwrap()).unwrap();
+        let host = vitis::parse_host_topology(pkg.file("src/host.cpp").unwrap()).unwrap();
+        assert_eq!(host, cfg.sp, "{}: host flags must mirror the cfg", m.spec.name);
+    }
+}
+
+#[test]
+fn vitis_cfg_parses_back_to_the_channel_assignment() {
+    for m in mapped_points() {
+        let pkg = m.vitis_package();
+        let cfg = vitis::parse_connectivity(pkg.file("link.cfg").unwrap()).unwrap();
+        let chans = vitis::cfg_channel_assignment(&cfg).unwrap();
+        assert_eq!(chans, m.spec.channels, "{}", m.spec.name);
+        // and the flat assignment is exactly the routed map's projection
+        for (cu, routes) in chans.iter().zip(m.spec.hbm_map.cus.iter()) {
+            let r: Vec<u32> = routes.read.iter().map(|x| x.channel).collect();
+            let w: Vec<u32> = routes.write.iter().map(|x| x.channel).collect();
+            assert_eq!(cu.read, r, "{}", m.spec.name);
+            assert_eq!(cu.write, w, "{}", m.spec.name);
+        }
+    }
+}
+
+/// One full bundle built from scratch (parse → lower → map → emit).
+fn bundle_for(point: usize) -> String {
+    let platform = Platform::alveo_u280();
+    let lowered = Flow::from_source(KernelSource::builtin("helmholtz"))
+        .parse(7)
+        .unwrap()
+        .lower()
+        .unwrap();
+    let opts = points(lowered.kernel.nests.len()).swap_remove(point);
+    lowered.map(&opts, &platform).unwrap().vitis_package().bundle()
+}
+
+#[test]
+fn vitis_emission_is_byte_deterministic_across_runs_and_threads() {
+    for point in 0..2 {
+        let first = bundle_for(point);
+        assert_eq!(first, bundle_for(point), "re-run drifted");
+        let handles: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(move || bundle_for(point)))
+            .collect();
+        for h in handles {
+            assert_eq!(first, h.join().unwrap(), "thread drifted");
+        }
+    }
+}
