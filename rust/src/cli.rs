@@ -18,6 +18,10 @@
 //! hbmflow dse      [--kernel .. | --file ..] [--p 7,11] [--dtype ..]
 //!                  [--max-cus N] [--ddr4] [--mem-plan] [--top-k N]
 //!                  [--pareto-only] [--exact] [--format text|json|csv]
+//! hbmflow compose  K1 K2 ... [--p 7] [--dtype ..] [--preset ..] [--cus N]
+//!                  [--policy ..] [--elements N] [--layouts]
+//!                  # K: builtin name or .cfd path; positional, in
+//!                  # pipeline order
 //! ```
 //!
 //! Flags are `--key value` pairs validated against a per-subcommand
@@ -45,7 +49,7 @@ use crate::report;
 use crate::runtime::Runtime;
 
 /// Flags that may appear bare (no value); all other flags require one.
-const BOOL_FLAGS: &[&str] = &["pareto-only", "ddr4", "mem-plan", "exact"];
+const BOOL_FLAGS: &[&str] = &["pareto-only", "ddr4", "mem-plan", "exact", "layouts"];
 
 /// Valid `--emit` modes for `compile` — the single source of truth for
 /// the dispatch below and the unknown-mode error message.
@@ -129,6 +133,10 @@ const FLAG_REGISTRY: &[(&str, &[&str])] = &[
             "resume",
             "stop-after",
         ],
+    ),
+    (
+        "compose",
+        &["p", "dtype", "preset", "cus", "policy", "elements", "layouts"],
     ),
 ];
 
@@ -280,10 +288,16 @@ impl Args {
     }
 
     /// `--policy local|striped` (single value; defaults to local-first).
+    /// An unknown name lists the full accepted set, same contract as the
+    /// `EMIT_MODES` error.
     pub fn policy(&self) -> Result<ChannelPolicy> {
         match self.get("policy") {
-            Some(v) => ChannelPolicy::parse(v)
-                .ok_or_else(|| anyhow!("unknown --policy {v} (local|striped)")),
+            Some(v) => ChannelPolicy::parse(v).ok_or_else(|| {
+                anyhow!(
+                    "unknown --policy {v} (valid: {})",
+                    ChannelPolicy::PARSE_NAMES.join("|")
+                )
+            }),
             None => Ok(ChannelPolicy::LocalFirst),
         }
     }
@@ -350,6 +364,21 @@ pub fn preset(name: &str, dtype: DataType, cus: usize) -> Result<OlympusOpts> {
 
 /// Entry point for the binary.
 pub fn main_with_args(argv: &[String]) -> Result<String> {
+    // `compose` takes positional kernel operands (builtin names or .cfd
+    // paths, in pipeline order) ahead of its flags; peel them off before
+    // the flag parser, which rejects bare tokens.
+    if argv.first().map(String::as_str) == Some("compose") {
+        let operands: Vec<&str> = argv[1..]
+            .iter()
+            .take_while(|a| !a.starts_with("--"))
+            .map(String::as_str)
+            .collect();
+        let rest: Vec<String> = std::iter::once("compose".to_string())
+            .chain(argv[1 + operands.len()..].iter().cloned())
+            .collect();
+        let args = Args::parse(&rest)?;
+        return cmd_compose(&operands, &args);
+    }
     let args = Args::parse(argv)?;
     match args.cmd.as_str() {
         "compile" => cmd_compile(&args),
@@ -383,6 +412,12 @@ commands:
   explore   fixed-point format exploration under an error budget
   dse       parallel design-space exploration with Pareto-frontier
             extraction over (GFLOPS, energy, BRAM/URAM/DSP)
+  compose   place several kernels on one device as a FIFO-chained
+            pipeline: channels partitioned, intermediates on-chip;
+            positional operands in pipeline order (builtin names or
+            .cfd paths), e.g.
+              hbmflow compose interpolation gradient helmholtz
+            --layouts also prices every fuse/time-multiplex layout
 
 kernel sources (compile / emit-vitis / estimate / simulate / explore / dse):
   --kernel helmholtz|interpolation|gradient   builtin generators
@@ -847,8 +882,12 @@ fn cmd_dse(args: &Args) -> Result<String> {
         space.channel_policies = list
             .split(',')
             .map(|s| {
-                ChannelPolicy::parse(s.trim())
-                    .ok_or_else(|| anyhow!("unknown --policy {s} (local|striped)"))
+                ChannelPolicy::parse(s.trim()).ok_or_else(|| {
+                    anyhow!(
+                        "unknown --policy {s} (valid: {})",
+                        ChannelPolicy::PARSE_NAMES.join("|")
+                    )
+                })
             })
             .collect::<Result<Vec<_>>>()?;
     }
@@ -914,6 +953,144 @@ fn cmd_dse(args: &Args) -> Result<String> {
         "csv" => Ok(dse::report::csv(&ex)),
         other => bail!("unknown --format {other} (text|json|csv)"),
     }
+}
+
+/// `hbmflow compose K1 K2 ... [flags]`: fuse several kernels on one
+/// device as a FIFO-chained pipeline (DESIGN.md §2.10). Operands are
+/// positional, in pipeline order: builtin names or `.cfd` paths.
+fn cmd_compose(operands: &[&str], args: &Args) -> Result<String> {
+    if operands.is_empty() {
+        bail!(
+            "compose needs kernel operands in pipeline order (builtin \
+             names or .cfd paths), e.g. `hbmflow compose interpolation \
+             gradient helmholtz`"
+        );
+    }
+    let platform = Platform::alveo_u280();
+    let dtype = args.dtype_or(DataType::F64)?;
+    let cus = args.usize_or("cus", 1)?;
+    let mut opts = preset(args.get("preset").unwrap_or("baseline"), dtype, cus)?;
+    opts.channel_policy = args.policy()?;
+    let elements = args.u64_or("elements", 100_000)?;
+
+    let mut lowered = Vec::new();
+    for op in operands {
+        let source = if op.ends_with(".cfd") {
+            KernelSource::file(*op)
+        } else {
+            KernelSource::builtin(op)
+        };
+        // --p parameterizes the builtins that take a degree; fixed-extent
+        // members (files, gradient) keep their nominal degree
+        let p = if source.parameterized() {
+            args.usize_or("p", 7)?
+        } else {
+            source.nominal_degree()
+        };
+        lowered.push(Flow::from_source(source).parse(p)?.lower()?);
+    }
+    let composed = crate::flow::compose(&lowered, &opts, &platform)?;
+    let r = composed.simulate(elements);
+
+    let sys = &composed.system;
+    let mut out = String::new();
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "composed system {}", sys.name);
+    let _ = writeln!(
+        out,
+        "  stages {}   pseudo-channels {}/{}   common batch {} elements",
+        sys.stages.len(),
+        sys.total_pcs(),
+        platform.hbm.pseudo_channels,
+        sys.batch_elements,
+    );
+    for (i, (name, t)) in r.stage_names.iter().zip(&r.stage_t_batch_s).enumerate() {
+        let _ = writeln!(
+            out,
+            "  stage {i}: {name}  cus {}  t_batch {:.3} us",
+            sys.stages[i].num_cus,
+            t * 1e6,
+        );
+    }
+    for l in &sys.links {
+        let _ = writeln!(
+            out,
+            "  link {}->{}: fifo {} x {} B ({} B on-chip, no HBM round trip)",
+            l.producer,
+            l.consumer,
+            l.fifo.depth_words,
+            l.fifo.word_bytes,
+            l.fifo.bytes(),
+        );
+    }
+    let _ = writeln!(
+        out,
+        "  resources: {} LUT, {} BRAM, {} URAM, {} DSP (fits {})",
+        sys.resources.lut,
+        sys.resources.bram,
+        sys.resources.uram,
+        sys.resources.dsp,
+        platform.name,
+    );
+    let _ = writeln!(
+        out,
+        "  {} elements @ {:.1} MHz: fifo-routed {:.3} ms vs \
+         time-multiplexed {:.3} ms (speedup {:.2}x)",
+        r.n_elements,
+        r.freq_mhz,
+        r.total_s * 1e3,
+        r.time_multiplexed_s * 1e3,
+        r.speedup_vs_time_multiplexed,
+    );
+    let _ = writeln!(
+        out,
+        "  analytic bracket [{:.3}, {:.3}] ms   bottleneck {}   {:.2} GFLOPS",
+        r.analytic.lower_s * 1e3,
+        r.analytic.upper_s * 1e3,
+        r.bottleneck,
+        r.gflops_system,
+    );
+
+    if args.flag("layouts") {
+        let members: Vec<(&crate::ir::affine::Kernel, OlympusOpts)> = lowered
+            .iter()
+            .map(|l| (&l.kernel, opts.clone()))
+            .collect();
+        let ex = dse::explore_layouts(&members, &platform, elements);
+        let _ = writeln!(out, "\nlayouts ({} fuse masks):", ex.layouts.len());
+        for (i, l) in ex.layouts.iter().enumerate() {
+            let segs: Vec<String> = l
+                .segments
+                .iter()
+                .map(|&(lo, hi)| {
+                    r.stage_names[lo..=hi].join("+")
+                })
+                .collect();
+            let tag = if ex.frontier.contains(&i) { "  *" } else { "" };
+            match (l.total_s, &l.rejected) {
+                (Some(t), _) => {
+                    let _ = writeln!(
+                        out,
+                        "  [{}] {:.3} ms  bram {}  dsp {}{tag}",
+                        segs.join(" | "),
+                        t * 1e3,
+                        l.resources.bram,
+                        l.resources.dsp,
+                    );
+                }
+                (None, reason) => {
+                    let _ = writeln!(
+                        out,
+                        "  [{}] infeasible: {}",
+                        segs.join(" | "),
+                        reason.as_deref().unwrap_or("unknown"),
+                    );
+                }
+            }
+        }
+        let _ = writeln!(out, "  (* = Pareto frontier over time/BRAM/URAM/DSP)");
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1158,6 +1335,25 @@ mod tests {
     }
 
     #[test]
+    fn unknown_policy_lists_the_valid_set() {
+        // same contract as the EMIT_MODES error: every accepted name is
+        // in the message, and every listed name actually parses
+        for cmd_args in [
+            vec!["simulate", "--policy", "zigzag"],
+            vec!["dse", "--p", "11", "--policy", "zigzag"],
+        ] {
+            let err = run(&cmd_args).unwrap_err().to_string();
+            assert!(err.contains("unknown --policy zigzag"), "{err}");
+            for name in ChannelPolicy::PARSE_NAMES {
+                assert!(err.contains(name), "{name} missing from: {err}");
+            }
+        }
+        for name in ChannelPolicy::PARSE_NAMES {
+            assert!(ChannelPolicy::parse(name).is_some(), "{name}");
+        }
+    }
+
+    #[test]
     fn ladder_has_eight_rows() {
         let s = run(&["ladder", "--elements", "200000"]).unwrap();
         assert_eq!(s.lines().count(), 2 + 8, "{s}");
@@ -1294,5 +1490,38 @@ mod tests {
         let mut bad = base.to_vec();
         bad.extend(["--format", "xml"]);
         assert!(run(&bad).is_err());
+    }
+
+    #[test]
+    fn compose_fuses_kernels_from_the_command_line() {
+        let out = run(&[
+            "compose", "interpolation", "gradient", "--elements", "20000",
+        ])
+        .unwrap();
+        assert!(out.contains("composed system interpolation+gradient"), "{out}");
+        assert!(out.contains("fifo-routed"), "{out}");
+        assert!(out.contains("no HBM round trip"), "{out}");
+        assert!(out.contains("analytic bracket"), "{out}");
+        // operands are required, and flags stay registry-checked
+        assert!(run(&["compose"]).is_err());
+        let err = run(&[
+            "compose", "interpolation", "gradient", "--element", "5",
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("did you mean --elements"), "{err}");
+    }
+
+    #[test]
+    fn compose_layouts_prices_the_fuse_axis() {
+        let out = run(&[
+            "compose", "interpolation", "gradient", "--elements", "10000",
+            "--layouts",
+        ])
+        .unwrap();
+        assert!(out.contains("layouts (2 fuse masks)"), "{out}");
+        assert!(out.contains("Pareto frontier"), "{out}");
+        assert!(out.contains("interpolation+gradient"), "{out}");
+        assert!(out.contains("interpolation | gradient"), "{out}");
     }
 }

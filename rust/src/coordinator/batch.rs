@@ -33,14 +33,19 @@ impl BatchPlan {
         }
     }
 
-    /// Elements in batch `b` (the last batch may be short).
-    pub fn elements_in_batch(&self, b: u64) -> u64 {
-        debug_assert!(b < self.n_batches);
-        if b + 1 == self.n_batches {
+    /// Elements in batch `b` (the last batch may be short). Returns
+    /// `None` when `b >= n_batches`: the old `debug_assert!` version
+    /// silently underflowed `n_elements - b * batch_elements` in release
+    /// builds and handed callers a wrapped, near-2^64 count.
+    pub fn elements_in_batch(&self, b: u64) -> Option<u64> {
+        if b >= self.n_batches {
+            return None;
+        }
+        Some(if b + 1 == self.n_batches {
             self.n_elements - b * self.batch_elements
         } else {
             self.batch_elements
-        }
+        })
     }
 
     /// CU that executes batch `b` (round-robin, like the Olympus host).
@@ -48,22 +53,30 @@ impl BatchPlan {
         (b % self.n_cus as u64) as usize
     }
 
-    /// Executable invocations needed for batch `b`.
-    pub fn invocations_in_batch(&self, b: u64) -> u64 {
-        ceil_div(self.elements_in_batch(b), self.exec_batch as u64)
+    /// Executable invocations needed for batch `b` (`None` out of range).
+    pub fn invocations_in_batch(&self, b: u64) -> Option<u64> {
+        Some(ceil_div(self.elements_in_batch(b)?, self.exec_batch as u64))
     }
 
-    /// Global element range [start, end) of batch `b`.
-    pub fn element_range(&self, b: u64) -> (u64, u64) {
+    /// Global element range [start, end) of batch `b` (`None` out of range).
+    pub fn element_range(&self, b: u64) -> Option<(u64, u64)> {
         let start = b * self.batch_elements;
-        (start, start + self.elements_in_batch(b))
+        Some((start, start + self.elements_in_batch(b)?))
     }
 
     /// Invariants (property-tested): batches tile the workload exactly.
+    ///
+    /// The `n_elements == 0` plan is deliberately valid: it has
+    /// `n_batches == 0`, so the loop body never runs, `covered` stays 0,
+    /// and the final coverage check passes as `0 == 0`. Drivers see an
+    /// empty batch range and do no work — the correct semantics for an
+    /// empty workload, not a vacuous accident.
     pub fn validate(&self) -> Result<(), String> {
         let mut covered = 0u64;
         for b in 0..self.n_batches {
-            let (s, e) = self.element_range(b);
+            let (s, e) = self
+                .element_range(b)
+                .expect("b < n_batches by loop bound");
             if s != covered {
                 return Err(format!("batch {b} starts at {s}, expected {covered}"));
             }
@@ -110,6 +123,13 @@ impl PingPong {
     }
 
     /// Channel the CU reads from in its current phase.
+    ///
+    /// The `% len` wrap is load-bearing for single-buffered CUs, where
+    /// one channel legitimately serves both phases. A *double-buffered*
+    /// CU with a single channel would wrap both phases onto the same
+    /// channel and silently serialize the ping/pong; that shape is
+    /// rejected at generation time by `SystemSpec::validate`, so it
+    /// never reaches this state machine.
     pub fn read_channel(&self, spec: &SystemSpec, cu: usize) -> u32 {
         let ch = &spec.channels[cu];
         ch.read[self.phase(cu) % ch.read.len()]
@@ -125,13 +145,21 @@ impl PingPong {
 /// modifies the host code to interleave the input for the multiple
 /// elements before sending it to HBM"). Element e's block goes to lane
 /// e % lanes; the HBM image is lane-major.
+///
+/// A ragged element count — any short tail batch, which
+/// [`BatchPlan::elements_in_batch`] produces for almost every realistic
+/// `n_elements` — is padded with zero elements up to the lane boundary,
+/// so the returned image holds `n.next_multiple_of(lanes)` elements.
+/// (This used to `assert_eq!(n % lanes, 0)` and abort real host
+/// marshalling on the tail batch.) Callers recover the logical count by
+/// truncating after [`deinterleave`].
 pub fn interleave(data: &[f64], block: usize, lanes: usize) -> Vec<f64> {
     assert!(block > 0 && lanes > 0);
     assert_eq!(data.len() % block, 0, "data must be whole elements");
     let n = data.len() / block;
-    assert_eq!(n % lanes, 0, "element count must be lane-aligned");
-    let per_lane = n / lanes;
-    let mut out = vec![0.0; data.len()];
+    let aligned = n.next_multiple_of(lanes);
+    let per_lane = aligned / lanes;
+    let mut out = vec![0.0; aligned * block];
     for e in 0..n {
         let lane = e % lanes;
         let slot = e / lanes;
@@ -141,7 +169,9 @@ pub fn interleave(data: &[f64], block: usize, lanes: usize) -> Vec<f64> {
     out
 }
 
-/// Inverse of `interleave`.
+/// Inverse of `interleave` on the lane-aligned HBM image. The image is
+/// lane-aligned by construction (interleave pads); the caller truncates
+/// any pad elements from the element-major result.
 pub fn deinterleave(data: &[f64], block: usize, lanes: usize) -> Vec<f64> {
     assert!(block > 0 && lanes > 0);
     assert_eq!(data.len() % block, 0);
@@ -180,12 +210,39 @@ mod tests {
         let s = spec(OlympusOpts::dataflow(7).with_cus(2));
         let plan = BatchPlan::new(&s, 2_000_000, 32);
         plan.validate().unwrap();
-        let total: u64 = (0..plan.n_batches).map(|b| plan.elements_in_batch(b)).sum();
+        let total: u64 = (0..plan.n_batches)
+            .map(|b| plan.elements_in_batch(b).unwrap())
+            .sum();
         assert_eq!(total, 2_000_000);
         assert_eq!(
             plan.iterations_per_cu,
             plan.n_batches.div_ceil(2)
         );
+    }
+
+    #[test]
+    fn out_of_range_batch_index_is_an_error_not_a_wrap() {
+        // Pre-fix, a release build computed n_elements - b*batch_elements
+        // for b >= n_batches and wrapped to a near-2^64 element count.
+        let s = spec(OlympusOpts::dataflow(7));
+        let plan = BatchPlan::new(&s, 100_000, 32);
+        assert!(plan.n_batches >= 1);
+        assert_eq!(plan.elements_in_batch(plan.n_batches), None);
+        assert_eq!(plan.elements_in_batch(plan.n_batches + 7), None);
+        assert_eq!(plan.invocations_in_batch(plan.n_batches), None);
+        assert_eq!(plan.element_range(plan.n_batches), None);
+        // in-range indices still answer
+        assert!(plan.elements_in_batch(plan.n_batches - 1).is_some());
+    }
+
+    #[test]
+    fn empty_workload_plan_is_valid_and_does_nothing() {
+        let s = spec(OlympusOpts::dataflow(7));
+        let plan = BatchPlan::new(&s, 0, 32);
+        assert_eq!(plan.n_batches, 0);
+        assert_eq!(plan.iterations_per_cu, 0);
+        plan.validate().unwrap();
+        assert_eq!(plan.elements_in_batch(0), None, "no batch 0 to ask about");
     }
 
     #[test]
@@ -252,6 +309,41 @@ mod tests {
             let back = deinterleave(&inter, block, lanes);
             assert_eq!(back, data, "lanes {lanes}");
         }
+    }
+
+    #[test]
+    fn interleave_pads_ragged_tails_and_roundtrips() {
+        // Pre-fix this panicked: 7 elements across 4 lanes is exactly the
+        // short tail batch every realistic BatchPlan produces.
+        let mut rng = Prng::new(3);
+        let block = 3;
+        let data = rng.unit_vec(block * 7);
+        let inter = interleave(&data, block, 4);
+        assert_eq!(inter.len(), 8 * block, "padded to the lane boundary");
+        let back = deinterleave(&inter, block, 4);
+        assert_eq!(&back[..data.len()], &data[..], "prefix round-trips");
+        assert!(back[data.len()..].iter().all(|&x| x == 0.0), "zero pad");
+    }
+
+    #[test]
+    fn property_ragged_interleave_roundtrips() {
+        prop::check("ragged interleave roundtrip", 48, |rng| {
+            let lanes = rng.range_usize(1, 8);
+            let block = rng.range_usize(1, 7);
+            let n = rng.range_usize(1, 40); // usually not lane-aligned
+            let data: Vec<f64> = (1..=n * block).map(|i| i as f64).collect();
+            let inter = interleave(&data, block, lanes);
+            let aligned = n.next_multiple_of(lanes);
+            prop::assert_prop(
+                inter.len() == aligned * block,
+                format!("len {} != {}", inter.len(), aligned * block),
+            )?;
+            let back = deinterleave(&inter, block, lanes);
+            prop::assert_prop(
+                back[..data.len()] == data[..],
+                format!("n {n} lanes {lanes} block {block}"),
+            )
+        });
     }
 
     #[test]

@@ -103,23 +103,28 @@ impl<'rt> Driver<'rt> {
             let cu = plan.cu_of(b);
             let phase = pp.advance(cu);
             phases_used[cu].push(phase);
-            let (start, end) = plan.element_range(b);
+            let (start, end) = plan
+                .element_range(b)
+                .ok_or_else(|| anyhow!("batch {b} out of range"))?;
             per_cu_elements[cu] += end - start;
 
             // Olympus host step: interleave the batch across lanes.
             // (The executable computes per-element results independent of
             // order; interleave/deinterleave mirror the generated host
-            // code and are validated by the round-trip.)
+            // code and are validated by the round-trip. A ragged tail
+            // batch is padded to the lane boundary by interleave itself.)
             let n_batch = (end - start) as usize;
-            let aligned = n_batch.next_multiple_of(lanes.max(1));
-            let mut d_b = vec![0.0; aligned * block];
-            let mut u_b = vec![0.0; aligned * block];
-            d_b[..n_batch * block]
-                .copy_from_slice(&w.d[start as usize * block..end as usize * block]);
-            u_b[..n_batch * block]
-                .copy_from_slice(&w.u[start as usize * block..end as usize * block]);
-            let d_il = interleave(&d_b, block, lanes);
-            let u_il = interleave(&u_b, block, lanes);
+            let d_il = interleave(
+                &w.d[start as usize * block..end as usize * block],
+                block,
+                lanes,
+            );
+            let u_il = interleave(
+                &w.u[start as usize * block..end as usize * block],
+                block,
+                lanes,
+            );
+            let aligned = d_il.len() / block;
 
             // invoke the CU in executable-batch chunks. Full chunks pass
             // slices straight out of the interleaved image (§Perf: no

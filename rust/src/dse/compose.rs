@@ -1,0 +1,271 @@
+//! The composition axis of the design space (DESIGN.md §2.10).
+//!
+//! Given a pipeline of K kernels, the designer's layout choice is *which
+//! adjacent stages fuse on-chip* (one bitstream, channels partitioned,
+//! intermediates through FIFOs) versus *which time-multiplex* (the
+//! device is reconfigured between segments and every cross-segment edge
+//! round-trips through the host). A layout is therefore a subset of the
+//! K−1 pipeline edges to fuse; contiguous fused runs form *segments*.
+//! This module enumerates all 2^(K−1) layouts, prices each one —
+//!
+//!  * a fused segment costs its composed event-timeline makespan
+//!    ([`sim::compose::simulate_composed`]);
+//!  * a singleton segment costs its standalone event-timeline makespan
+//!    ([`sim::simulate`]);
+//!  * segment times **add** (one device, run back to back) while
+//!    segment resources **max** (each segment is its own bitstream, so
+//!    the device only ever holds one segment at a time);
+//!
+//! — and extracts the Pareto frontier over (time, BRAM, URAM, DSP) with
+//! the same larger-is-better orientation as [`pareto`](super::pareto).
+//! Layouts whose fused segments do not fit (channels or area) are kept
+//! in the result with their rejection reason: an infeasibility is a
+//! data point about the space, not an error.
+
+use crate::hls;
+use crate::ir::affine::Kernel;
+use crate::olympus::{self, OlympusOpts};
+use crate::platform::{Platform, Resources};
+use crate::sim;
+
+use super::pareto_indices;
+
+/// One layout of the pipeline onto the device: which edges fuse, what
+/// the resulting segments are, and what the schedule costs.
+#[derive(Debug, Clone)]
+pub struct LayoutResult {
+    /// Bit `i` set ⇔ the edge between stages `i` and `i+1` is fused.
+    pub fuse_mask: u32,
+    /// Contiguous segments as inclusive `(first, last)` stage indices.
+    pub segments: Vec<(usize, usize)>,
+    /// End-to-end seconds (segments run back to back); `None` when some
+    /// segment was infeasible.
+    pub total_s: Option<f64>,
+    /// Element-wise max of the segment resources (the device holds one
+    /// segment's bitstream at a time). Zero when infeasible.
+    pub resources: Resources,
+    /// Why the layout was rejected, when it was.
+    pub rejected: Option<String>,
+}
+
+impl LayoutResult {
+    pub fn is_feasible(&self) -> bool {
+        self.total_s.is_some()
+    }
+}
+
+/// Every layout of one pipeline, plus the feasible Pareto frontier
+/// (indices into `layouts`) over (−time, −BRAM, −URAM, −DSP).
+#[derive(Debug, Clone)]
+pub struct LayoutExploration {
+    /// All 2^(K−1) layouts in fuse-mask order (mask 0 = fully
+    /// time-multiplexed, mask 2^(K−1)−1 = fully fused).
+    pub layouts: Vec<LayoutResult>,
+    pub frontier: Vec<usize>,
+}
+
+impl LayoutExploration {
+    /// The feasible layout with the smallest end-to-end time.
+    pub fn fastest(&self) -> Option<&LayoutResult> {
+        self.layouts
+            .iter()
+            .filter(|l| l.is_feasible())
+            .min_by(|a, b| {
+                a.total_s
+                    .unwrap()
+                    .partial_cmp(&b.total_s.unwrap())
+                    .expect("makespans are finite")
+            })
+    }
+}
+
+fn max_resources(a: Resources, b: Resources) -> Resources {
+    Resources {
+        lut: a.lut.max(b.lut),
+        ff: a.ff.max(b.ff),
+        bram: a.bram.max(b.bram),
+        uram: a.uram.max(b.uram),
+        dsp: a.dsp.max(b.dsp),
+    }
+}
+
+/// Split stage indices `0..k` into contiguous segments under a fuse mask.
+fn segments_of(k: usize, fuse_mask: u32) -> Vec<(usize, usize)> {
+    let mut segs = Vec::new();
+    let mut start = 0;
+    for i in 0..k {
+        let fused_to_next = i + 1 < k && (fuse_mask >> i) & 1 == 1;
+        if !fused_to_next {
+            segs.push((start, i));
+            start = i + 1;
+        }
+    }
+    segs
+}
+
+/// Price one segment: composed makespan for a fused run, standalone
+/// event-timeline makespan for a singleton.
+fn price_segment(
+    members: &[(&Kernel, OlympusOpts)],
+    platform: &Platform,
+    n_elements: u64,
+) -> Result<(f64, Resources), String> {
+    if members.len() == 1 {
+        let (kernel, opts) = &members[0];
+        let spec = olympus::generate(kernel, opts, platform)?;
+        let est = hls::estimate(&spec, platform);
+        let r = sim::simulate(&spec, &est, platform, n_elements);
+        Ok((r.total_time_s, est.total))
+    } else {
+        let sys = olympus::compose(members, platform)?;
+        let r = sim::compose::simulate_composed(&sys, platform, n_elements);
+        Ok((r.total_s, sys.resources))
+    }
+}
+
+/// Enumerate and price every fuse/time-multiplex layout of the
+/// pipeline. `members` are the stages in pipeline order, each with the
+/// options its system generates under.
+pub fn explore_layouts(
+    members: &[(&Kernel, OlympusOpts)],
+    platform: &Platform,
+    n_elements: u64,
+) -> LayoutExploration {
+    let k = members.len();
+    assert!(k >= 1, "a pipeline needs at least one stage");
+    assert!(k <= 16, "2^(K-1) layout enumeration caps at 16 stages");
+    let n_masks = 1u32 << (k - 1).min(31);
+    let mut layouts = Vec::with_capacity(n_masks as usize);
+    for mask in 0..n_masks {
+        let segments = segments_of(k, mask);
+        let mut total_s = 0.0;
+        let mut resources = Resources::default();
+        let mut rejected = None;
+        for &(lo, hi) in &segments {
+            match price_segment(&members[lo..=hi], platform, n_elements) {
+                Ok((t, r)) => {
+                    total_s += t;
+                    resources = max_resources(resources, r);
+                }
+                Err(e) => {
+                    rejected =
+                        Some(format!("segment {lo}..={hi}: {e}"));
+                    break;
+                }
+            }
+        }
+        layouts.push(if let Some(reason) = rejected {
+            LayoutResult {
+                fuse_mask: mask,
+                segments,
+                total_s: None,
+                resources: Resources::default(),
+                rejected: Some(reason),
+            }
+        } else {
+            LayoutResult {
+                fuse_mask: mask,
+                segments,
+                total_s: Some(total_s),
+                resources,
+                rejected: None,
+            }
+        });
+    }
+
+    // frontier over the feasible layouts, larger-is-better orientation
+    let feasible: Vec<usize> = (0..layouts.len())
+        .filter(|&i| layouts[i].is_feasible())
+        .collect();
+    let vectors: Vec<Vec<f64>> = feasible
+        .iter()
+        .map(|&i| {
+            let l = &layouts[i];
+            vec![
+                -l.total_s.unwrap(),
+                -(l.resources.bram as f64),
+                -(l.resources.uram as f64),
+                -(l.resources.dsp as f64),
+            ]
+        })
+        .collect();
+    let frontier = pareto_indices(&vectors)
+        .into_iter()
+        .map(|j| feasible[j])
+        .collect();
+    LayoutExploration { layouts, frontier }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::Flow;
+    use crate::kernels::KernelSource;
+
+    fn lowered(name: &str) -> crate::flow::Lowered {
+        Flow::from_source(KernelSource::builtin(name))
+            .parse(7)
+            .unwrap()
+            .lower()
+            .unwrap()
+    }
+
+    #[test]
+    fn segments_partition_the_pipeline() {
+        assert_eq!(segments_of(3, 0b00), vec![(0, 0), (1, 1), (2, 2)]);
+        assert_eq!(segments_of(3, 0b11), vec![(0, 2)]);
+        assert_eq!(segments_of(3, 0b01), vec![(0, 1), (2, 2)]);
+        assert_eq!(segments_of(3, 0b10), vec![(0, 0), (1, 2)]);
+        assert_eq!(segments_of(1, 0), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn layout_axis_enumerates_every_fuse_mask() {
+        let a = lowered("interpolation");
+        let b = lowered("gradient");
+        let opts = OlympusOpts::baseline();
+        let ex = explore_layouts(
+            &[(&a.kernel, opts.clone()), (&b.kernel, opts.clone())],
+            &Platform::alveo_u280(),
+            50_000,
+        );
+        assert_eq!(ex.layouts.len(), 2);
+        assert!(ex.layouts.iter().all(|l| l.is_feasible()));
+        assert!(!ex.frontier.is_empty());
+        // mask 1 fuses: one segment; mask 0 splits: two
+        assert_eq!(ex.layouts[0].segments.len(), 2);
+        assert_eq!(ex.layouts[1].segments.len(), 1);
+        // the fully time-multiplexed layout pays both standalone runs;
+        // the fused one overlaps them, so it must not be slower
+        let split = ex.layouts[0].total_s.unwrap();
+        let fused = ex.layouts[1].total_s.unwrap();
+        assert!(fused <= split, "fused {fused} vs split {split}");
+        assert!(ex.fastest().unwrap().fuse_mask == 1);
+    }
+
+    #[test]
+    fn infeasible_fusions_are_data_points_not_errors() {
+        let a = lowered("interpolation");
+        let b = lowered("gradient");
+        let c = lowered("helmholtz");
+        // 16 CUs each fits alone but 3×16 overflows the 32 channels
+        let opts = OlympusOpts::baseline().with_cus(16);
+        let ex = explore_layouts(
+            &[
+                (&a.kernel, opts.clone()),
+                (&b.kernel, opts.clone()),
+                (&c.kernel, opts.clone()),
+            ],
+            &Platform::alveo_u280(),
+            10_000,
+        );
+        assert_eq!(ex.layouts.len(), 4);
+        let fully_fused = &ex.layouts[0b11];
+        assert!(!fully_fused.is_feasible());
+        assert!(fully_fused.rejected.is_some());
+        let split = &ex.layouts[0b00];
+        assert!(split.is_feasible(), "{:?}", split.rejected);
+        // the frontier only ranks feasible layouts
+        assert!(ex.frontier.iter().all(|&i| ex.layouts[i].is_feasible()));
+    }
+}

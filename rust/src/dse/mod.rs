@@ -32,7 +32,11 @@
 //!  * [`pareto`] — feasibility filtering against the platform's resource
 //!    budget and Pareto-frontier extraction over
 //!    (GFLOPS, energy, BRAM/URAM/DSP, switch crossings);
-//!  * [`report`] — ranked text / JSON / CSV output.
+//!  * [`report`] — ranked text / JSON / CSV output;
+//!  * [`compose`] — the multi-kernel layout axis (DESIGN.md §2.10):
+//!    which adjacent pipeline stages fuse on one device (FIFO-routed,
+//!    channels partitioned) versus time-multiplex through
+//!    reconfiguration, priced per layout and Pareto-ranked.
 //!
 //! Entry points: the `hbmflow dse` CLI subcommand, the
 //! `examples/design_space.rs` thin client, and [`explore`] /
@@ -44,6 +48,7 @@
 //! configuration.
 
 pub mod checkpoint;
+pub mod compose;
 pub mod eval;
 pub mod pareto;
 pub mod report;
@@ -54,6 +59,7 @@ use crate::datatype::DataType;
 use crate::flow;
 use crate::platform::Platform;
 
+pub use compose::{explore_layouts, LayoutExploration, LayoutResult};
 pub use eval::{EvalOutcome, Evaluated};
 pub use pareto::{dominates, pareto_indices, Frontier};
 pub use search::{search, search_in, SearchConfig, Strategy, SweepStats};

@@ -449,6 +449,51 @@ impl Evaluated {
     }
 }
 
+/// Stage 3, composed form: several lowered kernels fused on one device
+/// as a FIFO-chained pipeline (DESIGN.md §2.10). The composed analog of
+/// [`Mapped`] — produced by [`compose`], evaluated by
+/// [`Composed::simulate`].
+#[derive(Debug, Clone)]
+pub struct Composed {
+    /// Per-member provenance, in pipeline order.
+    pub provenance: Vec<Provenance>,
+    /// The option set every member was generated with.
+    pub opts: OlympusOpts,
+    pub platform: Platform,
+    /// Partitioned channels, common batch, link FIFOs, pooled resources.
+    pub system: olympus::ComposedSystem,
+}
+
+/// Stage transition: place several lowered kernels on one device. The
+/// members share one `OlympusOpts` (each gets its own generated system;
+/// `olympus::compose` partitions the channels, aligns the batch, sizes
+/// the link FIFOs, and checks the pooled resource budget).
+pub fn compose(
+    stages: &[Lowered],
+    opts: &OlympusOpts,
+    platform: &Platform,
+) -> Result<Composed, FlowError> {
+    let members: Vec<(&Kernel, OlympusOpts)> = stages
+        .iter()
+        .map(|l| (&l.kernel, opts.clone()))
+        .collect();
+    let system = olympus::compose(&members, platform).map_err(FlowError::map)?;
+    Ok(Composed {
+        provenance: stages.iter().map(|l| l.provenance.clone()).collect(),
+        opts: opts.clone(),
+        platform: platform.clone(),
+        system,
+    })
+}
+
+impl Composed {
+    /// Run the composed pipeline simulation: FIFO-routed event timeline,
+    /// closed-form bracket, and the time-multiplexed baseline.
+    pub fn simulate(&self, elements: u64) -> sim::compose::ComposedSimResult {
+        sim::compose::simulate_composed(&self.system, &self.platform, elements)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -528,6 +573,31 @@ mod tests {
             .parse(11)
             .unwrap();
         assert_ne!(h7.provenance.fingerprint, h11.provenance.fingerprint);
+    }
+
+    #[test]
+    fn composed_stage_fuses_lowered_kernels() {
+        let lowered: Vec<Lowered> = ["interpolation", "gradient"]
+            .iter()
+            .map(|k| {
+                Flow::from_source(KernelSource::builtin(k))
+                    .parse(7)
+                    .unwrap()
+                    .lower()
+                    .unwrap()
+            })
+            .collect();
+        let c = compose(&lowered, &OlympusOpts::baseline(), &Platform::alveo_u280())
+            .unwrap();
+        assert_eq!(c.system.stages.len(), 2);
+        assert_eq!(c.provenance.len(), 2);
+        let r = c.simulate(10_000);
+        assert!(r.total_s > 0.0);
+        assert!(r.analytic.brackets(r.total_s), "{:?} vs {}", r.analytic, r.total_s);
+        // a compose failure reports through the map stage
+        let err = compose(&[], &OlympusOpts::baseline(), &Platform::alveo_u280())
+            .unwrap_err();
+        assert_eq!(err.stage, FlowStage::Map);
     }
 
     #[test]

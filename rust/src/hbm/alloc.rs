@@ -33,6 +33,12 @@ pub enum ChannelPolicy {
 }
 
 impl ChannelPolicy {
+    /// Every name [`ChannelPolicy::parse`] accepts — the single source
+    /// of truth the CLI's unknown-policy error lists (same contract as
+    /// `EMIT_MODES` for `--emit`).
+    pub const PARSE_NAMES: &'static [&'static str] =
+        &["local", "local-first", "striped"];
+
     /// Short name used in labels and CSV/JSON output.
     pub fn name(&self) -> &'static str {
         match self {
@@ -310,5 +316,9 @@ mod tests {
             Some(ChannelPolicy::LocalFirst)
         );
         assert_eq!(ChannelPolicy::parse("bogus"), None);
+        // PARSE_NAMES is exactly the accepted set
+        for name in ChannelPolicy::PARSE_NAMES {
+            assert!(ChannelPolicy::parse(name).is_some(), "{name}");
+        }
     }
 }

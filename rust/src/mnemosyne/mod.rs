@@ -533,6 +533,53 @@ fn instance(
     }
 }
 
+/// An inter-*kernel* stream FIFO: the on-chip link carrying one composed
+/// stage's output elements into the next stage (olympus composition,
+/// DESIGN.md §2.10). Sized here so every on-chip memory answer — intra-
+/// kernel banking, inter-group streams, and inter-kernel links — comes
+/// from mnemosyne.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkFifo {
+    /// Depth in words.
+    pub depth_words: usize,
+    /// Bytes per word (the producer's data type).
+    pub word_bytes: usize,
+}
+
+impl LinkFifo {
+    pub fn bytes(&self) -> u64 {
+        self.depth_words as u64 * self.word_bytes as u64
+    }
+
+    /// BRAM18 halves, same tile math as [`MemoryPlan::fifo_bram_halves`].
+    pub fn bram_halves(&self) -> u64 {
+        let bytes = self.bytes();
+        if bytes <= BRAM_TILE_BYTES / 2 {
+            1
+        } else {
+            2 * bytes.div_ceil(BRAM_TILE_BYTES)
+        }
+    }
+}
+
+/// Size the stream FIFO between a producer stage emitting
+/// `producer_words` per element and a consumer reading `consumer_words`
+/// per element. The natural depth double-buffers the larger footprint —
+/// the producer can emit element e+1 while the consumer drains e —
+/// and `depth` overrides it (the composed system's fifo-depth knob).
+pub fn link_fifo(
+    producer_words: usize,
+    consumer_words: usize,
+    word_bytes: usize,
+    depth: Option<usize>,
+) -> LinkFifo {
+    let natural = producer_words.max(consumer_words).max(1) * 2;
+    LinkFifo {
+        depth_words: depth.unwrap_or(natural).max(1),
+        word_bytes: word_bytes.max(1),
+    }
+}
+
 /// Build the unified memory plan for a kernel under a schedule.
 ///
 /// Flat and 1-group schedules get global storage, with lifetime sharing

@@ -1,0 +1,434 @@
+//! Multi-kernel composition: several kernels' CUs placed on one device
+//! (DESIGN.md §2.10).
+//!
+//! The paper's CFD use case is a solver *pipeline* — interpolation →
+//! gradient → Helmholtz per timestep — but a single [`SystemSpec`]
+//! hosts exactly one kernel. This module answers the system-level
+//! layout question the way CHARM does for diverse accelerators on one
+//! U280: every member keeps its own compute architecture (schedule,
+//! memory plan, lanes, CUs), while the device-level shared resources
+//! are partitioned once:
+//!
+//!  * the 32 HBM pseudo-channels are split by a **single**
+//!    [`hbm::allocate`] call over the concatenated per-kernel
+//!    [`PortDemand`] groups — master slots advance sequentially across
+//!    all members, so one policy yields a disjoint partition on one
+//!    shared [`Interconnect`](crate::hbm::Interconnect);
+//!  * BRAM/URAM/DSP budgets are checked at generation time against the
+//!    whole-device total (member CUs + one platform shell + the link
+//!    FIFOs), so an infeasible composition fails here, not in Vitis;
+//!  * producer→consumer edges stream through on-chip FIFOs sized by
+//!    [`mnemosyne::link_fifo`] instead of round-tripping HBM — only the
+//!    first stage pays PCIe-in and only the last pays PCIe-out.
+//!
+//! All stages march in lockstep over a **common batch size** (the
+//! smallest member batch, aligned to every member's lane count), which
+//! is what lets the simulator chain per-stage timelines by FIFO credit
+//! (`sim::compose`).
+
+use crate::hbm::{self, PortDemand};
+use crate::hls;
+use crate::ir::affine::Kernel;
+use crate::mnemosyne::{self, LinkFifo};
+use crate::platform::{Platform, Resources};
+
+use super::{cu_port_demand, generate, CuChannels, MemoryKind, OlympusOpts, SystemSpec};
+
+/// An on-chip producer→consumer edge between two adjacent stages.
+#[derive(Debug, Clone)]
+pub struct StageLink {
+    /// Index of the upstream stage in [`ComposedSystem::stages`].
+    pub producer: usize,
+    /// Index of the downstream stage (always `producer + 1`).
+    pub consumer: usize,
+    /// The stream FIFO carrying the producer's output elements.
+    pub fifo: LinkFifo,
+}
+
+/// Several kernels' CUs on one device, chained by on-chip FIFOs.
+#[derive(Debug, Clone)]
+pub struct ComposedSystem {
+    pub name: String,
+    /// Member systems in pipeline order. Each keeps its own compute
+    /// architecture; `channels`/`hbm_map` hold its slice of the global
+    /// channel partition and `batch_elements` the common batch size.
+    pub stages: Vec<SystemSpec>,
+    /// One link per adjacent stage pair (`stages.len() - 1` entries).
+    pub links: Vec<StageLink>,
+    /// Common elements per batch — every stage's `batch_elements`.
+    pub batch_elements: usize,
+    /// Whole-device resources: member CUs + one shell + link FIFOs
+    /// (the quantity the feasibility check compared to the platform).
+    pub resources: Resources,
+}
+
+impl ComposedSystem {
+    /// Total pseudo-channels in use across all stages.
+    pub fn total_pcs(&self) -> usize {
+        self.stages.iter().map(|s| s.total_pcs()).sum()
+    }
+
+    /// Structural invariants (pinned by `tests/compose.rs`): every
+    /// member validates on its own, the channel partition is disjoint
+    /// *across* members, links chain adjacent stages, and all stages
+    /// share the common batch.
+    pub fn validate(&self, platform: &Platform) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("composed system has no stages".into());
+        }
+        let mut seen = std::collections::HashSet::new();
+        for (i, s) in self.stages.iter().enumerate() {
+            s.validate(platform)
+                .map_err(|e| format!("stage {i} ({}): {e}", s.kernel.name))?;
+            for c in &s.channels {
+                for pc in c.all() {
+                    if !seen.insert(pc) {
+                        return Err(format!(
+                            "PC {pc} assigned to multiple composed stages"
+                        ));
+                    }
+                }
+            }
+            if s.batch_elements != self.batch_elements {
+                return Err(format!(
+                    "stage {i} batch {} != common batch {}",
+                    s.batch_elements, self.batch_elements
+                ));
+            }
+        }
+        if self.links.len() + 1 != self.stages.len() {
+            return Err(format!(
+                "{} links cannot chain {} stages",
+                self.links.len(),
+                self.stages.len()
+            ));
+        }
+        for (i, l) in self.links.iter().enumerate() {
+            if l.producer != i || l.consumer != i + 1 {
+                return Err(format!("link {i} does not chain stage {i}→{}", i + 1));
+            }
+            if l.fifo.depth_words == 0 {
+                return Err(format!("link {i} has a zero-depth FIFO"));
+            }
+        }
+        if self.batch_elements == 0 {
+            return Err("composed batch must hold at least one element".into());
+        }
+        if !self.resources.fits_in(&platform.total_resources()) {
+            return Err("composed system exceeds the device budget".into());
+        }
+        Ok(())
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// Place several kernels on one device as a pipeline, in slice order.
+///
+/// Every member is generated standalone first (schedule, memory plan,
+/// batch sizing, per-member validation), then the device-level shared
+/// state is rebuilt: one global channel allocation under the *first*
+/// member's policy, a common lockstep batch, mnemosyne-sized link
+/// FIFOs, and the whole-device resource feasibility check.
+pub fn compose(
+    members: &[(&Kernel, OlympusOpts)],
+    platform: &Platform,
+) -> Result<ComposedSystem, String> {
+    if members.is_empty() {
+        return Err("compose needs at least one kernel".into());
+    }
+    for (i, (k, o)) in members.iter().enumerate() {
+        if o.memory != MemoryKind::Hbm {
+            return Err(format!(
+                "stage {i} ({}): composition partitions the 32 HBM \
+                 pseudo-channels; DDR4 members are not composable",
+                k.name
+            ));
+        }
+    }
+
+    // ---- members, standalone ----
+    let mut stages: Vec<SystemSpec> = Vec::with_capacity(members.len());
+    for (i, (k, o)) in members.iter().enumerate() {
+        stages.push(
+            generate(k, o, platform)
+                .map_err(|e| format!("stage {i} ({}): {e}", k.name))?,
+        );
+    }
+
+    // ---- one global channel partition (paper §3.6.1, CHARM-style) ----
+    // Concatenating the per-kernel demand groups into a single allocate
+    // call is what guarantees cross-kernel disjointness: master slots
+    // advance sequentially over the whole slice, and the policy never
+    // hands out a channel twice.
+    let policy = &members[0].1.channel_policy;
+    let interconnect = hbm::Interconnect::hbm(&platform.hbm);
+    let demands: Vec<PortDemand> = members
+        .iter()
+        .flat_map(|(_, o)| {
+            let d = cu_port_demand(o);
+            (0..o.num_cus).map(move |_| d)
+        })
+        .collect();
+    let routes = hbm::allocate(policy, &demands, &interconnect).map_err(|e| {
+        format!("composed channel allocation ({}): {e}", policy.name())
+    })?;
+    let mut cursor = 0usize;
+    for spec in stages.iter_mut() {
+        let slice = &routes[cursor..cursor + spec.num_cus];
+        cursor += spec.num_cus;
+        spec.channels = slice
+            .iter()
+            .map(|cu| CuChannels {
+                read: cu.read.iter().map(|r| r.channel).collect(),
+                write: cu.write.iter().map(|r| r.channel).collect(),
+            })
+            .collect();
+        spec.hbm_map = hbm::ChannelMap {
+            interconnect,
+            cus: slice.to_vec(),
+        };
+    }
+
+    // ---- common lockstep batch ----
+    // The pipeline advances one batch through every stage per step, so
+    // all stages share one batch size: the smallest member batch,
+    // truncated to a multiple of every member's lane count.
+    let align = stages.iter().map(|s| s.lanes.max(1)).fold(1, lcm);
+    let min_batch = stages
+        .iter()
+        .map(|s| s.batch_elements)
+        .min()
+        .expect("members is non-empty");
+    let common = (min_batch / align) * align;
+    if common == 0 {
+        return Err(format!(
+            "no common batch: smallest member batch {min_batch} cannot \
+             align to {align} lanes"
+        ));
+    }
+    for spec in stages.iter_mut() {
+        spec.batch_elements = common;
+    }
+
+    // ---- producer→consumer links through on-chip FIFOs ----
+    let links: Vec<StageLink> = stages
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| StageLink {
+            producer: i,
+            consumer: i + 1,
+            fifo: mnemosyne::link_fifo(
+                w[0].kernel.output_words(),
+                w[1].kernel.input_words(),
+                w[0].dtype.bytes() as usize,
+                w[1].opts.fifo_depth,
+            ),
+        })
+        .collect();
+
+    // ---- whole-device resource feasibility ----
+    // One shell + every member's CUs + the link FIFOs. Using the HLS
+    // estimator here keeps the check consistent with what `dse` and the
+    // reports see for single-kernel systems.
+    let ests: Vec<hls::Estimate> =
+        stages.iter().map(|s| hls::estimate(s, platform)).collect();
+    let mut resources = ests[0].total;
+    for (spec, est) in stages.iter().zip(&ests).skip(1) {
+        resources = resources.add(&est.per_cu.scale(spec.num_cus as u64));
+    }
+    let fifo_halves: u64 = links.iter().map(|l| l.fifo.bram_halves()).sum();
+    resources.bram += fifo_halves.div_ceil(2);
+    let budget = platform.total_resources();
+    if !resources.fits_in(&budget) {
+        let names: Vec<&str> =
+            stages.iter().map(|s| s.kernel.name.as_str()).collect();
+        return Err(format!(
+            "composed system [{}] exceeds the device: needs LUT {} FF {} \
+             BRAM {} URAM {} DSP {} of budget LUT {} FF {} BRAM {} URAM {} \
+             DSP {}",
+            names.join("+"),
+            resources.lut,
+            resources.ff,
+            resources.bram,
+            resources.uram,
+            resources.dsp,
+            budget.lut,
+            budget.ff,
+            budget.bram,
+            budget.uram,
+            budget.dsp,
+        ));
+    }
+
+    let name = stages
+        .iter()
+        .map(|s| s.kernel.name.as_str())
+        .collect::<Vec<_>>()
+        .join("+");
+    let sys = ComposedSystem {
+        name,
+        stages,
+        links,
+        batch_elements: common,
+        resources,
+    };
+    sys.validate(platform)?;
+    Ok(sys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+    use crate::ir::{lower, rewrite, teil};
+
+    fn kernel(src: &str, name: &str) -> Kernel {
+        let prog = dsl::parse(src).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        lower::lower_kernel(&m, name).unwrap()
+    }
+
+    fn helmholtz(p: usize) -> Kernel {
+        kernel(&dsl::inverse_helmholtz_source(p), "helmholtz")
+    }
+
+    fn u280() -> Platform {
+        Platform::alveo_u280()
+    }
+
+    #[test]
+    fn composing_one_kernel_is_a_degenerate_pipeline() {
+        let k = helmholtz(7);
+        let sys =
+            compose(&[(&k, OlympusOpts::baseline())], &u280()).unwrap();
+        assert_eq!(sys.stages.len(), 1);
+        assert!(sys.links.is_empty());
+        sys.validate(&u280()).unwrap();
+    }
+
+    #[test]
+    fn members_share_one_disjoint_channel_partition() {
+        let k = helmholtz(7);
+        let sys = compose(
+            &[
+                (&k, OlympusOpts::baseline()),
+                (&k, OlympusOpts::double_buffering()),
+                (&k, OlympusOpts::baseline().with_cus(2)),
+            ],
+            &u280(),
+        )
+        .unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for s in &sys.stages {
+            for c in &s.channels {
+                for pc in c.all() {
+                    assert!(seen.insert(pc), "PC {pc} reused");
+                }
+            }
+        }
+        // 1 + 4 (db single-CU separates IO) + 2 shared channels
+        assert_eq!(sys.total_pcs(), 7);
+        sys.validate(&u280()).unwrap();
+    }
+
+    #[test]
+    fn ddr4_members_are_rejected() {
+        let k = helmholtz(7);
+        let err = compose(
+            &[
+                (&k, OlympusOpts::baseline()),
+                (&k, OlympusOpts::baseline().on_ddr4()),
+            ],
+            &u280(),
+        )
+        .unwrap_err();
+        assert!(err.contains("DDR4"), "{err}");
+    }
+
+    #[test]
+    fn stages_march_on_the_smallest_lane_aligned_batch() {
+        let k = helmholtz(11);
+        let sys = compose(
+            &[
+                (&k, OlympusOpts::bus_parallel()),  // 4 lanes
+                (&k, OlympusOpts::double_buffering()), // smaller batch
+            ],
+            &u280(),
+        )
+        .unwrap();
+        let min = sys.stages.iter().map(|s| s.batch_elements).min().unwrap();
+        assert_eq!(sys.batch_elements, min);
+        assert_eq!(sys.batch_elements % 4, 0, "aligned to the 4-lane stage");
+        for s in &sys.stages {
+            assert_eq!(s.batch_elements, sys.batch_elements);
+        }
+    }
+
+    #[test]
+    fn links_chain_adjacent_stages_with_mnemosyne_fifos() {
+        let k = helmholtz(7);
+        let sys = compose(
+            &[
+                (&k, OlympusOpts::baseline()),
+                (&k, OlympusOpts::baseline()),
+                (&k, OlympusOpts::baseline()),
+            ],
+            &u280(),
+        )
+        .unwrap();
+        assert_eq!(sys.links.len(), 2);
+        for (i, l) in sys.links.iter().enumerate() {
+            assert_eq!((l.producer, l.consumer), (i, i + 1));
+            let expect = mnemosyne::link_fifo(
+                sys.stages[i].kernel.output_words(),
+                sys.stages[i + 1].kernel.input_words(),
+                8,
+                None,
+            );
+            assert_eq!(l.fifo, expect);
+            assert!(l.fifo.bram_halves() >= 1);
+        }
+    }
+
+    #[test]
+    fn channel_over_demand_across_members_is_rejected() {
+        let k = helmholtz(7);
+        // 3 members x 16 shared channels = 48 > 32
+        let err = compose(
+            &[
+                (&k, OlympusOpts::baseline().with_cus(16)),
+                (&k, OlympusOpts::baseline().with_cus(16)),
+                (&k, OlympusOpts::baseline().with_cus(16)),
+            ],
+            &u280(),
+        )
+        .unwrap_err();
+        assert!(err.contains("composed channel allocation"), "{err}");
+    }
+
+    #[test]
+    fn resource_infeasible_compositions_fail_at_generation() {
+        // enough replicated dataflow-7 members to blow the DSP budget
+        let k = helmholtz(11);
+        let members: Vec<(&Kernel, OlympusOpts)> = (0..8)
+            .map(|_| (&k, OlympusOpts::dataflow(7).with_cus(4)))
+            .collect();
+        let err = compose(&members, &u280()).unwrap_err();
+        assert!(
+            err.contains("exceeds the device")
+                || err.contains("composed channel allocation"),
+            "{err}"
+        );
+    }
+}

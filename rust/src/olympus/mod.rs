@@ -13,7 +13,10 @@
 //! composed with lifetime sharing) — is consumed by the HLS estimator,
 //! the platform simulator, and the runtime coordinator.
 
+pub mod compose;
 pub mod config;
+
+pub use compose::{compose, ComposedSystem, StageLink};
 
 use crate::datatype::DataType;
 use crate::hbm::{self, PortDemand};
@@ -332,6 +335,20 @@ impl SystemSpec {
             if c.read.is_empty() || c.write.is_empty() {
                 return Err(format!("CU {i} lacks channels"));
             }
+            // A double-buffered CU needs distinct ping and pong channels
+            // in each direction: the coordinator's PingPong state machine
+            // wraps `phase % len`, so a single channel would serve both
+            // phases and silently serialize the double buffer. Reject the
+            // shape here instead of letting it limp through the runtime.
+            if self.double_buffering && (c.read.len() < 2 || c.write.len() < 2) {
+                return Err(format!(
+                    "CU {i} double-buffers but has {} read / {} write \
+                     channels; ping and pong would collide on one channel \
+                     (need 2 of each)",
+                    c.read.len(),
+                    c.write.len()
+                ));
+            }
             for pc in c.all() {
                 if pc >= platform.hbm.pseudo_channels {
                     return Err(format!("CU {i} uses nonexistent PC {pc}"));
@@ -367,6 +384,36 @@ impl SystemSpec {
             return Err("batch exceeds PC capacity".into());
         }
         Ok(())
+    }
+}
+
+/// Whether the buffering mode separates input and output channels
+/// (double buffering below 8 CUs on HBM, paper §3.6.1).
+pub(crate) fn separate_io(opts: &OlympusOpts) -> bool {
+    opts.double_buffering && opts.num_cus < 8 && opts.memory == MemoryKind::Hbm
+}
+
+/// Per-CU channel demand implied by the buffering mode: one shared
+/// channel flat, shared ping/pong pairs when buffers double, fully
+/// separated directions below 8 CUs. Composition concatenates one such
+/// demand group per member kernel into a single allocation.
+pub(crate) fn cu_port_demand(opts: &OlympusOpts) -> PortDemand {
+    match (opts.double_buffering, separate_io(opts)) {
+        (false, _) => PortDemand {
+            reads: 1,
+            writes: 1,
+            shared: true,
+        },
+        (true, false) => PortDemand {
+            reads: 2,
+            writes: 2,
+            shared: true,
+        },
+        (true, true) => PortDemand {
+            reads: 2,
+            writes: 2,
+            shared: false,
+        },
     }
 }
 
@@ -425,27 +472,8 @@ pub fn generate(
             if opts.double_buffering { "" } else { "out" }
         ));
     }
-    let separate_io =
-        opts.double_buffering && opts.num_cus < 8 && opts.memory == MemoryKind::Hbm;
-    // per-CU channel demand: one shared channel flat, shared ping/pong
-    // pairs when buffers double, fully separated directions below 8 CUs
-    let demand = match (opts.double_buffering, separate_io) {
-        (false, _) => PortDemand {
-            reads: 1,
-            writes: 1,
-            shared: true,
-        },
-        (true, false) => PortDemand {
-            reads: 2,
-            writes: 2,
-            shared: true,
-        },
-        (true, true) => PortDemand {
-            reads: 2,
-            writes: 2,
-            shared: false,
-        },
-    };
+    let separate_io = separate_io(opts);
+    let demand = cu_port_demand(opts);
     let interconnect = match opts.memory {
         MemoryKind::Hbm => hbm::Interconnect::hbm(&platform.hbm),
         MemoryKind::Ddr4 => hbm::Interconnect::ddr4(&platform.hbm),
@@ -628,6 +656,30 @@ mod tests {
             full.memory.total_banks()
         );
         capped.memory.validate(&capped.kernel).unwrap();
+    }
+
+    #[test]
+    fn double_buffered_single_channel_cu_is_rejected() {
+        // Pre-fix, this shape validated cleanly and the runtime's
+        // `phase % len` wrap returned the same channel for ping and pong,
+        // silently serializing the double buffer.
+        let mut s = generate(
+            &helmholtz(11),
+            &OlympusOpts::double_buffering(),
+            &u280(),
+        )
+        .unwrap();
+        s.validate(&u280()).unwrap();
+        s.channels[0].read.truncate(1);
+        s.channels[0].write.truncate(1);
+        s.hbm_map.cus[0].read.truncate(1);
+        s.hbm_map.cus[0].write.truncate(1);
+        let err = s.validate(&u280()).unwrap_err();
+        assert!(err.contains("ping and pong"), "{err}");
+        // single-buffered CUs legitimately share one channel per phase
+        let flat = generate(&helmholtz(11), &OlympusOpts::baseline(), &u280()).unwrap();
+        assert_eq!(flat.channels[0].read.len(), 1);
+        flat.validate(&u280()).unwrap();
     }
 
     #[test]

@@ -1,0 +1,423 @@
+//! Composed-pipeline simulation: chain per-stage batch timelines
+//! through FIFO credit, bound them in closed form, and price the
+//! time-multiplexed alternative (DESIGN.md §2.10).
+//!
+//! ## The composed timeline
+//!
+//! A [`ComposedSystem`](crate::olympus::ComposedSystem) marches batches
+//! of its common size through every stage in order. Only stage 0 pays
+//! the serialized PCIe input and only the last stage pays the output;
+//! inner edges are on-chip FIFOs with zero transfer time. Per batch
+//! `b`, stage `k` starts at
+//!
+//! ```text
+//! start[k][b] = max( done[k-1][b],            // upstream data ready
+//!                    cu_free[k][b mod c_k],   // a CU of the stage free
+//!                    start[k+1][b - credit] ) // FIFO space downstream
+//! ```
+//!
+//! where `credit` is how many producer batches the link FIFO can hold
+//! (≥ 1: the FIFO always buffers the batch in flight). Backpressure on
+//! the consumer's *start* times (not completions) keeps the steady-state
+//! period at the slowest stage's rate — the pipeline never deadlocks on
+//! its own credit.
+//!
+//! ## Closed-form bounds
+//!
+//! With `λ = max(t_in, t_out, max_k t_k)` and `K` stages, induction over
+//! the recurrence gives `start[k][b] ≤ (k + 1 + b)·λ` and a makespan of
+//! at most `(n + K + 1)·λ`; every resource's busy time and the first
+//! batch's full chain bound it from below. Both carry the same ±1e-9
+//! float guard as the single-kernel bounds in [`analytic`](super::analytic).
+//!
+//! ## Time-multiplexed baseline
+//!
+//! The layout alternative to fusing stages on-chip is running each
+//! kernel as its own full-device configuration, round-tripping every
+//! intermediate through the host: its cost is the *sum* of the member
+//! systems' standalone event-timeline makespans — what `dse`'s
+//! composition axis and the acceptance test compare against.
+
+use super::analytic::AnalyticBounds;
+use super::event::TimelineMode;
+use crate::hls;
+use crate::olympus::ComposedSystem;
+use crate::platform::{Platform, Resources};
+
+/// Same float-accumulation guard as the single-kernel analytic bounds.
+const EPS: f64 = 1e-9;
+
+/// One stage of a composed timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComposedStage {
+    /// Seconds one CU spends computing one common-size batch.
+    pub t_batch: f64,
+    /// CUs executing the stage's batches round-robin.
+    pub n_cus: usize,
+    /// Batches this stage may start ahead of the next stage's starts
+    /// (FIFO capacity of the outgoing link, in batches; ≥ 1). Unused on
+    /// the last stage.
+    pub credit: u64,
+}
+
+/// Inputs of the composed event timeline and its closed-form bounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComposedTimelineConfig {
+    pub n_batches: u64,
+    /// Serialized PCIe seconds to deliver one batch to stage 0.
+    pub t_in: f64,
+    /// Serialized PCIe seconds to drain one batch from the last stage.
+    pub t_out: f64,
+    pub stages: Vec<ComposedStage>,
+}
+
+/// Run the composed event timeline; returns the makespan in seconds.
+pub fn run_composed_timeline(cfg: &ComposedTimelineConfig) -> f64 {
+    assert!(!cfg.stages.is_empty());
+    if cfg.n_batches == 0 {
+        return 0.0;
+    }
+    let ks = cfg.stages.len();
+    let mut in_link_free = 0.0f64;
+    let mut out_link_free = 0.0f64;
+    let mut cu_free: Vec<Vec<f64>> = cfg
+        .stages
+        .iter()
+        .map(|s| vec![0.0; s.n_cus.max(1)])
+        .collect();
+    // start times per stage, indexed by batch (read by the upstream
+    // stage's backpressure term)
+    let mut starts: Vec<Vec<f64>> =
+        vec![Vec::with_capacity(cfg.n_batches as usize); ks];
+    for b in 0..cfg.n_batches {
+        let in_done = in_link_free + cfg.t_in;
+        in_link_free = in_done;
+        let mut upstream = in_done;
+        for (k, st) in cfg.stages.iter().enumerate() {
+            let cus = st.n_cus.max(1);
+            let cu = (b % cus as u64) as usize;
+            let mut ready = upstream.max(cu_free[k][cu]);
+            if k + 1 < ks {
+                let credit = st.credit.max(1);
+                if b >= credit {
+                    ready = ready.max(starts[k + 1][(b - credit) as usize]);
+                }
+            }
+            starts[k].push(ready);
+            let done = ready + st.t_batch;
+            cu_free[k][cu] = done;
+            upstream = done;
+        }
+        out_link_free = out_link_free.max(upstream) + cfg.t_out;
+    }
+    out_link_free
+}
+
+/// Closed-form bracket on [`run_composed_timeline`]'s makespan.
+pub fn composed_bounds(cfg: &ComposedTimelineConfig) -> AnalyticBounds {
+    assert!(!cfg.stages.is_empty());
+    if cfg.n_batches == 0 {
+        return AnalyticBounds {
+            lower_s: 0.0,
+            upper_s: 0.0,
+        };
+    }
+    let n = cfg.n_batches as f64;
+    let sum_t: f64 = cfg.stages.iter().map(|s| s.t_batch).sum();
+    let chain = cfg.t_in + sum_t + cfg.t_out;
+    // every resource must serve its load, and batch 0 walks the chain
+    let mut lower = (n * cfg.t_in).max(n * cfg.t_out).max(chain);
+    for s in &cfg.stages {
+        let rounds = cfg.n_batches.div_ceil(s.n_cus.max(1) as u64) as f64;
+        lower = lower.max(rounds * s.t_batch);
+    }
+    let lambda = cfg
+        .stages
+        .iter()
+        .map(|s| s.t_batch)
+        .fold(cfg.t_in.max(cfg.t_out), f64::max);
+    let k = cfg.stages.len() as f64;
+    let upper = (n + k + 1.0) * lambda;
+    AnalyticBounds {
+        lower_s: lower * (1.0 - EPS),
+        upper_s: upper * (1.0 + EPS),
+    }
+}
+
+/// Result of simulating a composed system: the FIFO-routed pipeline
+/// makespan, its closed-form bracket, and the time-multiplexed
+/// (HBM/host round-trip) baseline it competes with.
+#[derive(Debug, Clone)]
+pub struct ComposedSimResult {
+    pub label: String,
+    pub n_elements: u64,
+    pub n_batches: u64,
+    pub batch_elements: usize,
+    /// Common clock: the slowest member's fmax.
+    pub freq_mhz: f64,
+    pub stage_names: Vec<String>,
+    /// Per-stage seconds per common batch (at the common clock).
+    pub stage_t_batch_s: Vec<f64>,
+    /// Serialized PCIe seconds per batch, in and out.
+    pub pcie_in_s: f64,
+    pub pcie_out_s: f64,
+    /// FIFO-routed composed event-timeline makespan.
+    pub total_s: f64,
+    /// Closed-form bracket on `total_s`.
+    pub analytic: AnalyticBounds,
+    /// Sum of the members' standalone event-timeline makespans (each
+    /// stage as its own configuration, every edge through the host).
+    pub time_multiplexed_s: f64,
+    /// `time_multiplexed_s / total_s` — > 1 when fusing on-chip wins.
+    pub speedup_vs_time_multiplexed: f64,
+    /// The resource binding the steady state: a stage name or pcie-in/out.
+    pub bottleneck: String,
+    pub total_flops: u64,
+    pub gflops_system: f64,
+    /// Whole-device resources of the composed design.
+    pub resources: Resources,
+}
+
+/// Derive the composed timeline inputs from a generated system.
+pub fn composed_timeline_config(
+    sys: &ComposedSystem,
+    platform: &Platform,
+    n_elements: u64,
+) -> ComposedTimelineConfig {
+    let ests: Vec<hls::Estimate> = sys
+        .stages
+        .iter()
+        .map(|s| hls::estimate(s, platform))
+        .collect();
+    let freq_mhz = ests
+        .iter()
+        .map(|e| e.fmax_mhz)
+        .fold(f64::INFINITY, f64::min);
+    let freq_hz = freq_mhz * 1e6;
+    let e = sys.batch_elements as u64;
+    let n_batches = n_elements.div_ceil(e.max(1));
+    let batch_words = |words: usize| words as u64 * e;
+    let stages: Vec<ComposedStage> = sys
+        .stages
+        .iter()
+        .zip(&ests)
+        .enumerate()
+        .map(|(k, (spec, est))| {
+            let si = super::stages(spec, est);
+            let t_batch = super::batch_cycles(spec, &si) as f64 / freq_hz;
+            // FIFO capacity of the outgoing link in producer batches
+            let credit = match sys.links.get(k) {
+                Some(l) => (l.fifo.depth_words as u64
+                    / batch_words(spec.kernel.output_words()).max(1))
+                .max(1),
+                None => 1,
+            };
+            ComposedStage {
+                t_batch,
+                n_cus: spec.num_cus,
+                credit,
+            }
+        })
+        .collect();
+    let first = &sys.stages[0];
+    let last = sys.stages.last().expect("composed systems have stages");
+    let t_in = (first.input_bytes_per_element() * e) as f64
+        / platform.pcie_eff_bytes_per_sec;
+    let t_out = (last.output_bytes_per_element() * e) as f64
+        / platform.pcie_eff_bytes_per_sec;
+    ComposedTimelineConfig {
+        n_batches,
+        t_in,
+        t_out,
+        stages,
+    }
+}
+
+/// Simulate a composed system end to end: FIFO-routed event timeline,
+/// closed-form bracket, and the time-multiplexed baseline.
+pub fn simulate_composed(
+    sys: &ComposedSystem,
+    platform: &Platform,
+    n_elements: u64,
+) -> ComposedSimResult {
+    let cfg = composed_timeline_config(sys, platform, n_elements);
+    let total_s = run_composed_timeline(&cfg);
+    let analytic = composed_bounds(&cfg);
+
+    // the layout alternative: each member standalone, every edge a
+    // host/HBM round trip — makespans add (one device, reconfigured)
+    let mut time_multiplexed_s = 0.0;
+    for spec in &sys.stages {
+        let est = hls::estimate(spec, platform);
+        let r = super::simulate_with_timeline(
+            spec,
+            &est,
+            platform,
+            n_elements,
+            TimelineMode::Auto,
+        );
+        time_multiplexed_s += r.total_time_s;
+    }
+
+    let ests: Vec<hls::Estimate> = sys
+        .stages
+        .iter()
+        .map(|s| hls::estimate(s, platform))
+        .collect();
+    let freq_mhz = ests
+        .iter()
+        .map(|e| e.fmax_mhz)
+        .fold(f64::INFINITY, f64::min);
+    let stage_names: Vec<String> = sys
+        .stages
+        .iter()
+        .map(|s| s.kernel.name.clone())
+        .collect();
+
+    // steady-state bottleneck: the largest per-batch service time
+    let n = cfg.n_batches as f64;
+    let mut bottleneck = ("pcie-in".to_string(), n * cfg.t_in);
+    if n * cfg.t_out > bottleneck.1 {
+        bottleneck = ("pcie-out".to_string(), n * cfg.t_out);
+    }
+    for (name, st) in stage_names.iter().zip(&cfg.stages) {
+        let busy =
+            cfg.n_batches.div_ceil(st.n_cus.max(1) as u64) as f64 * st.t_batch;
+        if busy > bottleneck.1 {
+            bottleneck = (name.clone(), busy);
+        }
+    }
+
+    // every element traverses every stage
+    let flops_per_element: u64 = sys
+        .stages
+        .iter()
+        .map(|s| s.flops_per_element())
+        .sum();
+    let total_flops = n_elements * flops_per_element;
+    let gflops_system = if total_s > 0.0 {
+        total_flops as f64 / total_s / 1e9
+    } else {
+        0.0
+    };
+
+    ComposedSimResult {
+        label: sys.name.clone(),
+        n_elements,
+        n_batches: cfg.n_batches,
+        batch_elements: sys.batch_elements,
+        freq_mhz,
+        stage_names,
+        stage_t_batch_s: cfg.stages.iter().map(|s| s.t_batch).collect(),
+        pcie_in_s: cfg.t_in,
+        pcie_out_s: cfg.t_out,
+        total_s,
+        analytic,
+        time_multiplexed_s,
+        speedup_vs_time_multiplexed: if total_s > 0.0 {
+            time_multiplexed_s / total_s
+        } else {
+            0.0
+        },
+        bottleneck: bottleneck.0,
+        total_flops,
+        gflops_system,
+        resources: sys.resources,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn cfg(
+        n: u64,
+        t_in: f64,
+        t_out: f64,
+        stages: &[(f64, usize, u64)],
+    ) -> ComposedTimelineConfig {
+        ComposedTimelineConfig {
+            n_batches: n,
+            t_in,
+            t_out,
+            stages: stages
+                .iter()
+                .map(|&(t_batch, n_cus, credit)| ComposedStage {
+                    t_batch,
+                    n_cus,
+                    credit,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn single_stage_single_cu_chain_is_exact() {
+        // 1 stage, 1 CU, credit moot: fully serial chain per batch with
+        // transfer overlap — bounded by hand-checkable extremes
+        let c = cfg(10, 1.0, 0.5, &[(2.0, 1, 1)]);
+        let t = run_composed_timeline(&c);
+        // steady state paced by the 2.0 s compute: ~chain + 9 * 2.0
+        assert!(t >= 3.5 + 9.0 * 2.0 - 1e-9, "{t}");
+        assert!(t <= 3.5 + 9.0 * 2.5 + 1e-9, "{t}");
+        assert!(composed_bounds(&c).brackets(t));
+    }
+
+    #[test]
+    fn empty_workload_is_zero() {
+        let c = cfg(0, 1.0, 1.0, &[(1.0, 1, 1)]);
+        assert_eq!(run_composed_timeline(&c), 0.0);
+        let b = composed_bounds(&c);
+        assert_eq!((b.lower_s, b.upper_s), (0.0, 0.0));
+    }
+
+    #[test]
+    fn pipeline_overlaps_stages() {
+        // 3 equal stages: the pipeline must approach 1 batch per t_batch,
+        // NOT 1 batch per 3*t_batch (which serial execution would cost)
+        let c = cfg(100, 0.1, 0.1, &[(1.0, 1, 1), (1.0, 1, 1), (1.0, 1, 1)]);
+        let t = run_composed_timeline(&c);
+        assert!(t < 100.0 * 1.5, "pipeline failed to overlap: {t}");
+        assert!(t >= 100.0 * 1.0, "cannot beat the bottleneck rate: {t}");
+        assert!(composed_bounds(&c).brackets(t));
+    }
+
+    #[test]
+    fn property_bounds_bracket_the_composed_timeline() {
+        prop::check("composed bounds bracket", 128, |rng| {
+            let ks = rng.range_usize(1, 5);
+            let stages: Vec<(f64, usize, u64)> = (0..ks)
+                .map(|_| {
+                    (
+                        rng.range_f64(0.0, 2.0),
+                        rng.range_usize(1, 4),
+                        rng.range_u64(1, 4),
+                    )
+                })
+                .collect();
+            let c = cfg(
+                rng.range_u64(1, 400),
+                rng.range_f64(0.0, 2.0),
+                rng.range_f64(0.0, 2.0),
+                &stages,
+            );
+            let t = run_composed_timeline(&c);
+            let b = composed_bounds(&c);
+            prop::assert_prop(
+                b.brackets(t),
+                format!("{b:?} misses {t} on {c:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn more_credit_never_slows_the_pipeline() {
+        // a deeper FIFO can only relax the backpressure constraint
+        let tight = cfg(200, 0.2, 0.2, &[(1.0, 1, 1), (0.3, 1, 1)]);
+        let deep = cfg(200, 0.2, 0.2, &[(1.0, 1, 8), (0.3, 1, 8)]);
+        assert!(
+            run_composed_timeline(&deep) <= run_composed_timeline(&tight) + 1e-9
+        );
+    }
+}

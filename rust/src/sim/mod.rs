@@ -36,6 +36,7 @@
 //! once against the paper's Dataflow-1 row, applied uniformly).
 
 pub mod analytic;
+pub mod compose;
 pub mod event;
 pub mod metrics;
 
