@@ -1,6 +1,7 @@
-//! §Perf harness for the simulator itself: the PR-7 BENCH trajectory.
+//! §Perf harness for the simulator itself: the BENCH trajectory
+//! (started in PR 7, extended with the irregular-access grid in PR 10).
 //!
-//! Four sections, all recorded in `BENCH_7.json` at the repo root:
+//! Five sections, all recorded in `BENCH_10.json` at the repo root:
 //!
 //!  1. raw timeline schedulers — sequential vs parallel event timeline
 //!     vs the closed-form analytic bracket on a synthetic million-batch
@@ -15,11 +16,15 @@
 //!  4. the budget-aware streaming search (`--strategy stream`) on the
 //!     same warm session — sweep throughput (points/sec) and the
 //!     memory-boundedness witness (peak resident points vs candidates
-//!     considered).
+//!     considered);
+//!  5. the irregular-access grid — the gather/scatter builtins across
+//!     cache schemes, with the traffic-model contracts (bracket holds,
+//!     bypass strictly slower than the streaming-service FullBuffer)
+//!     asserted at every point.
 //!
 //! Deterministic CI mode: `HBMFLOW_BENCH_ITERS=3 cargo bench --bench
 //! perf_sim` (every `Bench` is constructed through `Bench::from_env`).
-//! Output path: `HBMFLOW_BENCH_OUT` if set, else `../BENCH_7.json`
+//! Output path: `HBMFLOW_BENCH_OUT` if set, else `../BENCH_10.json`
 //! relative to the crate root. Every `BenchResult` is round-tripped
 //! through `BenchResult::from_json(to_json())` before it is written, so
 //! a serialization that drops a field aborts the run.
@@ -30,14 +35,14 @@ use hbmflow::dse::{self, Fidelity, SearchSpace};
 use hbmflow::flow::{Flow, Session};
 use hbmflow::hls;
 use hbmflow::kernels::KernelSource;
-use hbmflow::olympus::{BusMode, OlympusOpts};
+use hbmflow::olympus::{BusMode, CacheScheme, OlympusOpts};
 use hbmflow::platform::Platform;
 use hbmflow::report;
 use hbmflow::sim::{self, analytic, event};
 use hbmflow::util::bench::{fmt_dur, section, Bench, BenchResult};
 use hbmflow::util::json::Json;
 
-const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_7.json");
+const DEFAULT_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_10.json");
 const KERNEL_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/kernels");
 
 /// Short per-bench budget so the default (time-budget) mode finishes
@@ -323,6 +328,98 @@ fn search_section() -> Json {
     ])
 }
 
+fn irregular_section() -> Json {
+    section("§Perf sim — irregular access, gather/scatter × cache scheme");
+    let platform = Platform::alveo_u280();
+    let elements = 1_000_000u64;
+    let mut points = Vec::new();
+    let mut rows = Vec::new();
+    for name in ["mesh_gather", "scatter_assembly"] {
+        let lowered = Flow::from_source(KernelSource::builtin(name))
+            .parse(0)
+            .and_then(|pa| pa.lower())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut bypass_time = None;
+        for scheme in [
+            CacheScheme::Bypass,
+            CacheScheme::Cached(128),
+            CacheScheme::FullBuffer,
+        ] {
+            // flat baseline: the memory-bound shape where the traffic
+            // model is the binding term
+            let opts = OlympusOpts::baseline().with_cache_scheme(scheme);
+            let mapped = lowered.map(&opts, &platform).unwrap_or_else(|e| {
+                panic!("{name} × {scheme:?}: {e}")
+            });
+            let est = hls::estimate(&mapped.spec, &platform);
+            let ev = sim::simulate_with_timeline(
+                &mapped.spec,
+                &est,
+                &platform,
+                elements,
+                event::TimelineMode::Sequential,
+            );
+            let an = analytic::simulate_analytic(&mapped.spec, &est, &platform, elements);
+            let b = an.analytic.expect("analytic result carries its bracket");
+            assert!(
+                b.brackets(ev.total_time_s),
+                "{name} × {scheme:?}: bracket failed ({b:?} vs {})",
+                ev.total_time_s
+            );
+            match scheme {
+                // FullBuffer is the streaming-service equivalent: the
+                // uncached gather/scatter must be strictly slower
+                CacheScheme::Bypass => bypass_time = Some(ev.total_time_s),
+                CacheScheme::FullBuffer => assert!(
+                    bypass_time.is_some_and(|t| t > ev.total_time_s),
+                    "{name}: bypass {:?} not slower than full {}",
+                    bypass_time,
+                    ev.total_time_s
+                ),
+                CacheScheme::Cached(_) => {}
+            }
+
+            let label = format!("{name} × {scheme:?}");
+            let seq = bench(format!("event {label}")).run(|| {
+                sim::simulate_with_timeline(
+                    &mapped.spec,
+                    &est,
+                    &platform,
+                    elements,
+                    event::TimelineMode::Sequential,
+                )
+            });
+            let ana = bench(format!("analytic {label}")).run(|| {
+                analytic::simulate_analytic(&mapped.spec, &est, &platform, elements)
+            });
+            rows.push(vec![
+                label.clone(),
+                format!("{:.4}", ev.total_time_s),
+                fmt_dur(seq.median),
+                fmt_dur(ana.median),
+                format!("{:.2e}", b.rel_gap()),
+            ]);
+            points.push(Json::obj(vec![
+                ("kernel", Json::str(name)),
+                ("scheme", Json::str(scheme.name().as_str())),
+                ("elements", Json::num(elements as f64)),
+                ("makespan_s", Json::num(ev.total_time_s)),
+                ("rel_gap", Json::num(b.rel_gap())),
+                ("event_seq", checked_json(&seq)),
+                ("analytic", checked_json(&ana)),
+            ]));
+        }
+    }
+    println!(
+        "{}",
+        report::table(
+            &["point", "makespan", "event med", "analytic med", "rel_gap"],
+            &rows
+        )
+    );
+    Json::Arr(points)
+}
+
 fn main() {
     let fixed_iters = std::env::var("HBMFLOW_BENCH_ITERS")
         .ok()
@@ -333,6 +430,7 @@ fn main() {
     let (points, speedups) = grid_section();
     let dse = dse_section();
     let search = search_section();
+    let irregular = irregular_section();
 
     let mut sorted = speedups.clone();
     sorted.sort_by(|a, b| a.total_cmp(b));
@@ -345,7 +443,7 @@ fn main() {
     let doc = Json::obj(vec![
         ("schema", Json::num(1.0)),
         ("bench", Json::str("perf_sim")),
-        ("pr", Json::num(7.0)),
+        ("pr", Json::num(10.0)),
         (
             "fixed_iters",
             fixed_iters.map_or(Json::Null, |k| Json::num(k as f64)),
@@ -354,6 +452,7 @@ fn main() {
         ("points", points),
         ("dse", dse),
         ("search", search),
+        ("irregular", irregular),
         (
             "summary",
             Json::obj(vec![(

@@ -8,10 +8,11 @@
 //!                  [--save-artifact out.json] [--from-artifact in.json]
 //! hbmflow emit-vitis [--kernel .. | --file prog.cfd] [--p 11] [--dtype ..]
 //!                  [--preset .. | --dataflow N] [--cus N]
-//!                  [--policy local|striped] [--partition-cap N] --out DIR
+//!                  [--policy local|striped] [--partition-cap N]
+//!                  [--cache-scheme bypass|cached:<words>|full] --out DIR
 //! hbmflow estimate [--kernel .. | --file ..] [--p ..] [--preset ..] [--cus N]
 //! hbmflow simulate [--kernel .. | --file ..] [--p ..] [--preset ..] [--cus N]
-//!                  [--elements N]            # alias: sim
+//!                  [--elements N] [--cache-scheme ..]   # alias: sim
 //! hbmflow run      [--p 7|11] [--dtype ..] [--elements N] [--artifacts DIR]
 //! hbmflow sweep    [--elements N]
 //! hbmflow ladder   [--elements N]       # the Fig. 15 ladder
@@ -43,7 +44,7 @@ use crate::datatype::DataType;
 use crate::dse;
 use crate::flow::{Artifact, Flow, Session};
 use crate::kernels::KernelSource;
-use crate::olympus::{self, ChannelPolicy, OlympusOpts};
+use crate::olympus::{self, CacheScheme, ChannelPolicy, OlympusOpts};
 use crate::platform::Platform;
 use crate::report;
 use crate::runtime::Runtime;
@@ -66,6 +67,7 @@ const SIM_FLAGS: &[&str] = &[
     "elements",
     "policy",
     "partition-cap",
+    "cache-scheme",
 ];
 
 /// Per-subcommand flag registry: every flag a command reads. Anything
@@ -96,12 +98,22 @@ const FLAG_REGISTRY: &[(&str, &[&str])] = &[
             "cus",
             "policy",
             "partition-cap",
+            "cache-scheme",
             "out",
         ],
     ),
     (
         "estimate",
-        &["kernel", "file", "p", "dtype", "preset", "cus", "partition-cap"],
+        &[
+            "kernel",
+            "file",
+            "p",
+            "dtype",
+            "preset",
+            "cus",
+            "partition-cap",
+            "cache-scheme",
+        ],
     ),
     ("simulate", SIM_FLAGS),
     ("sim", SIM_FLAGS),
@@ -125,6 +137,7 @@ const FLAG_REGISTRY: &[(&str, &[&str])] = &[
             "threads",
             "elements",
             "policy",
+            "cache-scheme",
             "exact",
             "strategy",
             "budget",
@@ -301,6 +314,21 @@ impl Args {
             None => Ok(ChannelPolicy::LocalFirst),
         }
     }
+
+    /// `--cache-scheme bypass|cached:<words>|full` (single value;
+    /// defaults to bypass — no scratchpad in front of indexed arrays).
+    /// Same unknown-name contract as `--policy`.
+    pub fn cache_scheme(&self) -> Result<CacheScheme> {
+        match self.get("cache-scheme") {
+            Some(v) => CacheScheme::parse(v).ok_or_else(|| {
+                anyhow!(
+                    "unknown --cache-scheme {v} (valid: {})",
+                    CacheScheme::PARSE_NAMES.join("|")
+                )
+            }),
+            None => Ok(CacheScheme::Bypass),
+        }
+    }
 }
 
 /// Build the kernel for a named builtin operator (thin wrapper over the
@@ -431,6 +459,11 @@ flags: --kernel --file --p --dtype --preset --cus --elements --emit
        --partition-cap N (cap the memory plan's banking factor;
          estimate/simulate — below the reduction trip the simulator
          charges bank-conflict stalls)
+       --cache-scheme bypass|cached:<words>|full (scratchpad fronting
+         indirectly accessed arrays — gather/scatter kernels; bypass
+         pays the pseudo-random HBM penalty, cached:<words> captures
+         the reuse fraction its capacity covers, full buffers the
+         whole array on chip)
 compile artifacts (the flow's staged pipeline, persisted):
        --save-artifact out.json (write the mapped-stage artifact:
          versioned JSON embedding the program + options; reloads to
@@ -439,7 +472,9 @@ compile artifacts (the flow's staged pipeline, persisted):
          artifact instead of --kernel/--file)
 dse flags: --p 7,11  --max-cus N  --ddr4  --threads N  --elements N
            --policy local,striped  --mem-plan (explore partition-factor
-           caps x sharing)  --top-k N (0 = all)  --pareto-only
+           caps x sharing)  --cache-scheme bypass,cached:128,full
+           (sweep indexed-array scratchpad schemes; dense kernels
+           collapse the axis)  --top-k N (0 = all)  --pareto-only
            --exact (full event sim for every candidate; default is the
            adaptive analytic screen — same frontier, faster)
            --format text|json|csv
@@ -548,7 +583,9 @@ fn cmd_emit_vitis(args: &Args) -> Result<String> {
         Some(name) => preset(name, dtype, cus)?,
         None => compile_opts(&lowered, dtype, groups).with_cus(cus.max(1)),
     };
-    opts = opts.with_policy(args.policy()?);
+    opts = opts
+        .with_policy(args.policy()?)
+        .with_cache_scheme(args.cache_scheme()?);
     opts.partition_cap = args.partition_cap()?;
     let mapped = lowered.map(&opts, &platform)?;
     let pkg = mapped.vitis_package();
@@ -570,7 +607,8 @@ fn cmd_estimate(args: &Args) -> Result<String> {
     let p = degree_for(&source, args, 11)?;
     let dtype = args.dtype_or(DataType::F64)?;
     let cus = args.usize_or("cus", 1)?;
-    let mut opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?;
+    let mut opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?
+        .with_cache_scheme(args.cache_scheme()?);
     opts.partition_cap = args.partition_cap()?;
     let platform = Platform::alveo_u280();
     let mapped = Flow::from_source(source)
@@ -618,7 +656,8 @@ fn cmd_simulate(args: &Args) -> Result<String> {
     let cus = args.usize_or("cus", 1)?;
     let n = args.u64_or("elements", report::paper::N_ELEMENTS)?;
     let mut opts = preset(args.get("preset").unwrap_or("dataflow7"), dtype, cus)?
-        .with_policy(args.policy()?);
+        .with_policy(args.policy()?)
+        .with_cache_scheme(args.cache_scheme()?);
     opts.partition_cap = args.partition_cap()?;
     let platform = Platform::alveo_u280();
     let mapped = Flow::from_source(source)
@@ -886,6 +925,21 @@ fn cmd_dse(args: &Args) -> Result<String> {
                     anyhow!(
                         "unknown --policy {s} (valid: {})",
                         ChannelPolicy::PARSE_NAMES.join("|")
+                    )
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(list) = args.get("cache-scheme") {
+        // the irregular-access axis: scratchpad schemes for indexed
+        // arrays (dense kernels normalize every scheme back to bypass)
+        space.cache_schemes = list
+            .split(',')
+            .map(|s| {
+                CacheScheme::parse(s.trim()).ok_or_else(|| {
+                    anyhow!(
+                        "unknown --cache-scheme {s} (valid: {})",
+                        CacheScheme::PARSE_NAMES.join("|")
                     )
                 })
             })
@@ -1350,6 +1404,26 @@ mod tests {
         }
         for name in ChannelPolicy::PARSE_NAMES {
             assert!(ChannelPolicy::parse(name).is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_cache_scheme_lists_the_valid_set() {
+        // same contract as --policy: every accepted form is in the
+        // message, and every concrete listed form actually parses
+        for cmd_args in [
+            vec!["simulate", "--cache-scheme", "zigzag"],
+            vec!["estimate", "--cache-scheme", "cached:0"],
+            vec!["dse", "--p", "11", "--cache-scheme", "zigzag"],
+        ] {
+            let err = run(&cmd_args).unwrap_err().to_string();
+            assert!(err.contains("unknown --cache-scheme"), "{err}");
+            for name in CacheScheme::PARSE_NAMES {
+                assert!(err.contains(name), "{name} missing from: {err}");
+            }
+        }
+        for name in ["bypass", "cached:128", "full"] {
+            assert!(CacheScheme::parse(name).is_some(), "{name}");
         }
     }
 

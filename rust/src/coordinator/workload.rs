@@ -238,10 +238,19 @@ impl GenericWorkload {
     pub fn element_inputs(&self, e: usize) -> HashMap<String, Tensor> {
         let mut rng =
             Prng::new(self.seed ^ 0x9e3779b97f4a7c15u64.wrapping_mul(e as u64 + 1));
+        let index_bounds = self.module.index_input_bounds();
         let mut out = HashMap::new();
         for (name, shape) in &self.module.inputs {
             let mut t = Tensor::random(shape, &mut rng);
-            if shape.len() == 2 {
+            if let Some((_, bound)) = index_bounds.iter().find(|(n, _)| n == name) {
+                // index maps carry whole numbers in [0, bound), not
+                // unit-domain reals; uniform draws naturally produce
+                // the duplicates and out-of-order rows the oracle must
+                // agree on
+                for x in t.data_mut() {
+                    *x = (rng.next_u64() % *bound as u64) as f64;
+                }
+            } else if shape.len() == 2 {
                 let cols = shape[1] as f64;
                 for x in t.data_mut() {
                     *x /= cols;
@@ -344,6 +353,51 @@ mod tests {
             assert_eq!(c.max_abs_err, 0.0, "{name}");
             assert_eq!(c.elements, 2);
         }
+    }
+
+    #[test]
+    fn generic_oracle_covers_indexed_kernels() {
+        // the irregular builtins: seeded integer index maps (duplicates
+        // and out-of-order rows included) flow through both evaluators
+        for name in ["mesh_gather", "scatter_assembly"] {
+            let w = GenericWorkload::from_source(
+                &KernelSource::builtin(name),
+                0,
+                2024,
+            )
+            .unwrap();
+            let c = w.check(2).unwrap();
+            assert_eq!(c.mse, 0.0, "{name}: MSE {:.3e}", c.mse);
+            assert_eq!(c.max_abs_err, 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn index_inputs_are_seeded_as_in_range_whole_numbers() {
+        let w = GenericWorkload::from_source(
+            &KernelSource::builtin("scatter_assembly"),
+            0,
+            9,
+        )
+        .unwrap();
+        let bounds = w.module.index_input_bounds();
+        assert_eq!(bounds.len(), 2, "{bounds:?}"); // gi and si
+        let inputs = w.element_inputs(0);
+        for (name, bound) in &bounds {
+            let t = &inputs[name];
+            assert!(
+                t.data().iter().all(|&x| {
+                    x.fract() == 0.0 && x >= 0.0 && (x as usize) < *bound
+                }),
+                "{name} not whole numbers in [0, {bound})"
+            );
+            // a 1024-draw uniform over 256 rows repeats with certainty
+            let mut sorted: Vec<u64> = t.data().iter().map(|&x| x as u64).collect();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert!(sorted.len() < t.len(), "{name}: no duplicate indices");
+        }
+        assert_eq!(inputs["gi"], w.element_inputs(0)["gi"], "deterministic");
     }
 
     #[test]

@@ -62,16 +62,16 @@ pub fn space_key(
     n_elements: u64,
     cfg: &SearchConfig,
 ) -> String {
-    let mut degrees: Vec<(usize, usize, usize)> = info
+    let mut degrees: Vec<(usize, usize, usize, bool)> = info
         .iter()
-        .map(|(&p, i)| (p, i.nests, i.max_read_degree))
+        .map(|(&p, i)| (p, i.nests, i.max_read_degree, i.has_indexed))
         .collect();
     degrees.sort_unstable();
     let text = format!(
         "kernel={} degrees={:?} dtypes={:?} memories={:?} buses={:?} \
          db={:?} dataflow={:?} sharing={:?} fifos={:?} caps={:?} \
-         policies={:?} cus={:?} info={:?} platform={} elements={} \
-         strategy={} seed={} budget={:?} batch={}",
+         caches={:?} policies={:?} cus={:?} info={:?} platform={} \
+         elements={} strategy={} seed={} budget={:?} batch={}",
         space.kernel,
         space.degrees,
         space.dtypes,
@@ -82,6 +82,7 @@ pub fn space_key(
         space.mem_sharing,
         space.fifo_depths,
         space.partition_caps,
+        space.cache_schemes,
         space.channel_policies,
         space.cu_counts,
         degrees,

@@ -286,6 +286,7 @@ pub(crate) fn degree_map(
             DegreeInfo {
                 nests: l.kernel.nests.len(),
                 max_read_degree: crate::ir::access::max_read_degree(&l.kernel),
+                has_indexed: crate::ir::access::has_indexed(&l.kernel),
             },
         );
     }

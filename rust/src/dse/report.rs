@@ -205,6 +205,7 @@ fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
             opts.fifo_depth.map(|d| Json::num(d as f64)).unwrap_or(Json::Null),
         ),
         ("policy", Json::str(opts.channel_policy.name())),
+        ("cache_scheme", Json::str(opts.cache_scheme.name())),
         ("pareto", Json::Bool(ex.is_on_frontier(i))),
     ];
     match &o.result {
@@ -264,15 +265,15 @@ fn candidate_json(ex: &Exploration, i: usize, o: &EvalOutcome) -> Json {
 pub fn csv(ex: &Exploration) -> String {
     let mut out = String::from(
         "kernel,p,dtype,cus,bus,memory,double_buffering,dataflow,mem_sharing,\
-         partition_cap,fifo_depth,policy,status,feasible,pareto,fmax_mhz,\
-         gflops_cu,gflops_system,gflops_per_w,energy_j,lut,ff,bram,uram,dsp,\
-         mem_banks,mem_shared_words,conflict_stalls,max_channel_util,\
-         switch_crossings,bottleneck,reject_reason\n",
+         partition_cap,fifo_depth,policy,cache_scheme,status,feasible,pareto,\
+         fmax_mhz,gflops_cu,gflops_system,gflops_per_w,energy_j,lut,ff,bram,\
+         uram,dsp,mem_banks,mem_shared_words,conflict_stalls,\
+         max_channel_util,switch_crossings,bottleneck,reject_reason\n",
     );
     for (i, o) in ex.outcomes.iter().enumerate() {
         let opts = &o.point.opts;
         let axes = format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
             o.point.kernel,
             o.point.p,
             opts.dtype.name(),
@@ -285,6 +286,7 @@ pub fn csv(ex: &Exploration) -> String {
             opts.partition_cap.map(|c| c.to_string()).unwrap_or_default(),
             opts.fifo_depth.map(|d| d.to_string()).unwrap_or_default(),
             opts.channel_policy.name(),
+            opts.cache_scheme.name(),
         );
         let row = match &o.result {
             Ok(e) => format!(

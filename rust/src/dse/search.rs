@@ -559,7 +559,7 @@ impl Sweep<'_> {
 
 /// Axis indices in enumeration nesting order; see
 /// [`SearchSpace::axis_lens`].
-type AxisIdx = [usize; 11];
+type AxisIdx = [usize; 12];
 
 fn build_point(
     space: &SearchSpace,
@@ -581,9 +581,10 @@ fn build_point(
         dataflow,
         sharing,
         space.partition_caps[idx[8]],
+        space.cache_schemes[idx[9]],
         fifo,
-        space.channel_policies[idx[9]].clone(),
-        space.cu_counts[idx[10]],
+        space.channel_policies[idx[10]].clone(),
+        space.cu_counts[idx[11]],
     );
     normalize(info, &mut pt);
     Some(pt)
@@ -599,6 +600,9 @@ fn normalize(info: &DegreeMap, pt: &mut DesignPoint) {
             if c >= i.max_read_degree {
                 pt.opts.partition_cap = None;
             }
+        }
+        if !i.has_indexed {
+            pt.opts.cache_scheme = crate::olympus::CacheScheme::Bypass;
         }
     }
 }
@@ -624,7 +628,7 @@ fn random_sample(
     let mut attempts = 0usize;
     while out.len() < budget && attempts < max_attempts {
         attempts += 1;
-        let mut idx = [0usize; 11];
+        let mut idx = [0usize; 12];
         for (slot, &l) in idx.iter_mut().zip(lens.iter()) {
             *slot = rng.range_usize(0, l - 1);
         }
@@ -666,7 +670,7 @@ fn lhs_sample(
     let mut out = Vec::new();
     let mut seen = HashSet::new();
     for s in 0..n {
-        let mut idx = [0usize; 11];
+        let mut idx = [0usize; 12];
         for (a, slot) in idx.iter_mut().enumerate() {
             *slot = perms[a][s] * lens[a] / n;
         }
@@ -704,9 +708,10 @@ fn mutate(
     let mut sharing = o.mem_sharing;
     let mut fifo = raw_fifo;
     let mut cap = o.partition_cap;
+    let mut cache = o.cache_scheme;
     let mut policy = o.channel_policy.clone();
     let mut cus = o.num_cus;
-    match rng.range_usize(0, 10) {
+    match rng.range_usize(0, 11) {
         0 => p = *rng.choose(&space.degrees),
         1 => dtype = *rng.choose(&space.dtypes),
         2 => memory = *rng.choose(&space.memories),
@@ -716,14 +721,16 @@ fn mutate(
         6 => sharing = *rng.choose(&space.mem_sharing),
         7 => fifo = *rng.choose(&space.fifo_depths),
         8 => cap = *rng.choose(&space.partition_caps),
-        9 => policy = rng.choose(&space.channel_policies).clone(),
+        9 => cache = *rng.choose(&space.cache_schemes),
+        10 => policy = rng.choose(&space.channel_policies).clone(),
         _ => cus = *rng.choose(&space.cu_counts),
     }
     if !coherent(dataflow, sharing, fifo) {
         return None;
     }
     let mut pt = space.point(
-        p, dtype, memory, bus, db, dataflow, sharing, cap, fifo, policy, cus,
+        p, dtype, memory, bus, db, dataflow, sharing, cap, cache, fifo, policy,
+        cus,
     );
     normalize(info, &mut pt);
     Some(pt)

@@ -17,7 +17,7 @@ use std::collections::HashMap;
 
 use crate::datatype::DataType;
 use crate::kernels::KernelSource;
-use crate::olympus::{BusMode, ChannelPolicy, MemoryKind, OlympusOpts};
+use crate::olympus::{BusMode, CacheScheme, ChannelPolicy, MemoryKind, OlympusOpts};
 
 /// Per-degree kernel facts the streaming iterator needs to normalize
 /// candidates exactly like the eager explorer does: dataflow clamps to
@@ -27,6 +27,9 @@ use crate::olympus::{BusMode, ChannelPolicy, MemoryKind, OlympusOpts};
 pub struct DegreeInfo {
     pub nests: usize,
     pub max_read_degree: usize,
+    /// Does the kernel contain a gather/scatter nest? When false, the
+    /// cache-scheme axis is inert and collapses onto `Bypass`.
+    pub has_indexed: bool,
 }
 
 /// Degree → [`DegreeInfo`], built once per sweep from the lowered
@@ -90,6 +93,11 @@ pub struct SearchSpace {
     /// Stream FIFO depth in words (`None` = naive full-array sizing).
     pub fifo_depths: Vec<Option<usize>>,
     pub memories: Vec<MemoryKind>,
+    /// Scratchpad schemes for indirectly accessed arrays
+    /// (`mnemosyne::CacheScheme`) — the irregular-access axis
+    /// (`hbmflow dse --cache-scheme`). On kernels with no gather/scatter
+    /// nests every scheme normalizes to `Bypass`.
+    pub cache_schemes: Vec<CacheScheme>,
     /// Channel-allocation policies on the segmented AXI switch
     /// (`hbm::alloc`). Default: local-first only; add `Striped` to let
     /// the frontier demonstrate the cost of switch crossings.
@@ -128,6 +136,7 @@ impl SearchSpace {
             partition_caps: vec![None],
             fifo_depths: vec![None, Some(64)],
             memories: vec![MemoryKind::Hbm],
+            cache_schemes: vec![CacheScheme::Bypass],
             channel_policies: vec![ChannelPolicy::LocalFirst],
         }
     }
@@ -152,16 +161,19 @@ impl SearchSpace {
                                             continue;
                                         }
                                         for &cap in &self.partition_caps {
-                                            for policy in &self.channel_policies {
-                                                for &cus in &self.cu_counts {
-                                                    let pt = self.point(
-                                                        p, dtype, memory, bus,
-                                                        db, dataflow, sharing,
-                                                        cap, fifo,
-                                                        policy.clone(), cus,
-                                                    );
-                                                    if seen.insert(pt.fingerprint()) {
-                                                        points.push(pt);
+                                            for &cache in &self.cache_schemes {
+                                                for policy in &self.channel_policies {
+                                                    for &cus in &self.cu_counts {
+                                                        let pt = self.point(
+                                                            p, dtype, memory,
+                                                            bus, db, dataflow,
+                                                            sharing, cap,
+                                                            cache, fifo,
+                                                            policy.clone(), cus,
+                                                        );
+                                                        if seen.insert(pt.fingerprint()) {
+                                                            points.push(pt);
+                                                        }
                                                     }
                                                 }
                                             }
@@ -188,6 +200,7 @@ impl SearchSpace {
         dataflow: Option<usize>,
         mem_sharing: bool,
         partition_cap: Option<usize>,
+        cache_scheme: CacheScheme,
         fifo: Option<usize>,
         channel_policy: ChannelPolicy,
         cus: usize,
@@ -205,6 +218,7 @@ impl SearchSpace {
             lut_mult_shift: false,
             target_freq_mhz: 450.0,
             channel_policy,
+            cache_scheme,
         }
         // applies the paper's multi-CU methodology (225 MHz target,
         // reduced FIFOs, LUT multiplier shift) when cus > 1
@@ -235,13 +249,13 @@ impl SearchSpace {
         Candidates {
             space: self,
             info,
-            idx: [0; 11],
+            idx: [0; 12],
             done,
         }
     }
 
     /// Axis lengths in enumeration nesting order (outermost first).
-    pub(crate) fn axis_lens(&self) -> [usize; 11] {
+    pub(crate) fn axis_lens(&self) -> [usize; 12] {
         [
             self.degrees.len(),
             self.dtypes.len(),
@@ -252,6 +266,7 @@ impl SearchSpace {
             self.mem_sharing.len(),
             self.fifo_depths.len(),
             self.partition_caps.len(),
+            self.cache_schemes.len(),
             self.channel_policies.len(),
             self.cu_counts.len(),
         ]
@@ -269,7 +284,7 @@ pub struct Candidates<'a> {
     info: &'a DegreeMap,
     /// Current axis indices, nesting order (degrees outermost … CUs
     /// innermost) — matches `SearchSpace::enumerate` exactly.
-    idx: [usize; 11],
+    idx: [usize; 12],
     done: bool,
 }
 
@@ -290,7 +305,7 @@ impl Candidates<'_> {
     /// combination is coherent *and* canonical for its class.
     fn current(&self) -> Option<DesignPoint> {
         let s = self.space;
-        let [ip, idt, imem, ibus, idb, idf, ish, ifi, icap, ipol, icu] = self.idx;
+        let [ip, idt, imem, ibus, idb, idf, ish, ifi, icap, icsh, ipol, icu] = self.idx;
         let p = s.degrees[ip];
         let dtype = s.dtypes[idt];
         let memory = s.memories[imem];
@@ -300,6 +315,7 @@ impl Candidates<'_> {
         let sharing = s.mem_sharing[ish];
         let fifo = s.fifo_depths[ifi];
         let cap = s.partition_caps[icap];
+        let cache = s.cache_schemes[icsh];
         let policy = &s.channel_policies[ipol];
         let cus = s.cu_counts[icu];
 
@@ -331,6 +347,12 @@ impl Candidates<'_> {
             (Some(c), Some(i)) if c >= i.max_read_degree => None,
             _ => c,
         };
+        // the cache axis is inert on kernels with no indexed nests:
+        // every scheme generates the bypass system
+        let norm_cache = |c: CacheScheme| match info {
+            Some(i) if !i.has_indexed => CacheScheme::Bypass,
+            _ => c,
+        };
         // the multi-CU methodology forces `fifo_depth = Some(64)`; the
         // raw FIFO axis value overrides it when explicitly set
         let eff = |f: Option<usize>| if cus > 1 { f.or(Some(64)) } else { f };
@@ -340,6 +362,15 @@ impl Candidates<'_> {
         if s.partition_caps[..icap]
             .iter()
             .any(|&c| norm_cap(c) == norm_cap(cap))
+        {
+            return None;
+        }
+
+        // Cache scheme normalizes independently too: first index with
+        // the same normalized scheme wins.
+        if s.cache_schemes[..icsh]
+            .iter()
+            .any(|&c| norm_cache(c) == norm_cache(cache))
         {
             return None;
         }
@@ -380,12 +411,14 @@ impl Candidates<'_> {
             dataflow,
             sharing,
             cap,
+            cache,
             fifo,
             policy.clone(),
             cus,
         );
         pt.opts.dataflow = clamp(pt.opts.dataflow);
         pt.opts.partition_cap = norm_cap(pt.opts.partition_cap);
+        pt.opts.cache_scheme = norm_cache(pt.opts.cache_scheme);
         Some(pt)
     }
 }
@@ -496,6 +529,47 @@ mod tests {
     }
 
     #[test]
+    fn cache_axis_multiplies_the_space() {
+        let mut s = SearchSpace::default_for("mesh_gather");
+        let base = s.enumerate().len();
+        s.cache_schemes = vec![
+            CacheScheme::Bypass,
+            CacheScheme::Cached(128),
+            CacheScheme::FullBuffer,
+        ];
+        assert_eq!(s.enumerate().len(), 3 * base, "independent cache axis");
+        let cached = s
+            .enumerate()
+            .into_iter()
+            .filter(|pt| pt.opts.cache_scheme == CacheScheme::Cached(128))
+            .count();
+        assert_eq!(cached, base);
+    }
+
+    #[test]
+    fn cache_axis_collapses_on_dense_kernels() {
+        // helmholtz has no indexed nests: with degree info present the
+        // stream emits every scheme as the same bypass design, once
+        let mut space = SearchSpace::default_for("helmholtz");
+        space.cache_schemes = vec![
+            CacheScheme::Bypass,
+            CacheScheme::Cached(128),
+            CacheScheme::FullBuffer,
+        ];
+        let mut info = DegreeMap::new();
+        info.insert(7, DegreeInfo { nests: 7, max_read_degree: 8, has_indexed: false });
+        info.insert(11, DegreeInfo { nests: 7, max_read_degree: 12, has_indexed: false });
+        let streamed: Vec<DesignPoint> = space.candidates(&info).collect();
+        assert!(streamed
+            .iter()
+            .all(|pt| pt.opts.cache_scheme == CacheScheme::Bypass));
+        let eager = eager_normalized(&space, &info);
+        let fps: Vec<String> =
+            streamed.iter().map(|pt| pt.fingerprint()).collect();
+        assert_eq!(fps, eager, "collapse matches the eager dedup");
+    }
+
+    #[test]
     fn policy_axis_multiplies_the_space() {
         let mut s = SearchSpace::default_for("helmholtz");
         let base = s.enumerate().len();
@@ -540,6 +614,9 @@ mod tests {
                         pt.opts.partition_cap = None;
                     }
                 }
+                if !i.has_indexed {
+                    pt.opts.cache_scheme = CacheScheme::Bypass;
+                }
             }
         }
         let mut seen = HashSet::new();
@@ -554,8 +631,8 @@ mod tests {
         space.channel_policies =
             vec![ChannelPolicy::LocalFirst, ChannelPolicy::Striped];
         let mut info = DegreeMap::new();
-        info.insert(7, DegreeInfo { nests: 7, max_read_degree: 8 });
-        info.insert(11, DegreeInfo { nests: 7, max_read_degree: 12 });
+        info.insert(7, DegreeInfo { nests: 7, max_read_degree: 8, has_indexed: false });
+        info.insert(11, DegreeInfo { nests: 7, max_read_degree: 12, has_indexed: false });
         let eager = eager_normalized(&space, &info);
         let streamed: Vec<String> =
             space.candidates(&info).map(|pt| pt.fingerprint()).collect();
@@ -582,7 +659,7 @@ mod tests {
         space.degrees = vec![4];
         space.dataflow = vec![None, Some(1), Some(2)];
         let mut info = DegreeMap::new();
-        info.insert(4, DegreeInfo { nests: 1, max_read_degree: 4 });
+        info.insert(4, DegreeInfo { nests: 1, max_read_degree: 4, has_indexed: false });
         let eager = eager_normalized(&space, &info);
         let streamed: Vec<DesignPoint> = space.candidates(&info).collect();
         let fps: Vec<String> = streamed.iter().map(|pt| pt.fingerprint()).collect();

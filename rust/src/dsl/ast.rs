@@ -34,7 +34,8 @@ pub struct IndexPair {
 }
 
 /// Expression tree. `Prod` is the tensor (outer) product `#`;
-/// `Contract` applies index-pair contraction `.[[a b]..]`.
+/// `Contract` applies index-pair contraction `.[[a b]..]`; `Gather` is
+/// the indirect row read `base[idx]` through a rank-1 index variable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Expr {
     Var(String),
@@ -44,6 +45,7 @@ pub enum Expr {
     Div(Box<Expr>, Box<Expr>),
     Prod(Box<Expr>, Box<Expr>),
     Contract(Box<Expr>, Vec<IndexPair>),
+    Gather(Box<Expr>, String),
 }
 
 impl Expr {
@@ -56,9 +58,16 @@ impl Expr {
     pub fn vars(&self) -> Vec<&str> {
         let mut out = Vec::new();
         self.visit(&mut |e| {
-            if let Expr::Var(n) = e {
-                if !out.contains(&n.as_str()) {
-                    out.push(n.as_str());
+            let name = match e {
+                Expr::Var(n) => Some(n.as_str()),
+                // the index variable is a real data dependency even
+                // though it is not an Expr::Var node
+                Expr::Gather(_, ix) => Some(ix.as_str()),
+                _ => None,
+            };
+            if let Some(n) = name {
+                if !out.contains(&n) {
+                    out.push(n);
                 }
             }
         });
@@ -77,7 +86,7 @@ impl Expr {
                 a.visit(f);
                 b.visit(f);
             }
-            Expr::Contract(a, _) => a.visit(f),
+            Expr::Contract(a, _) | Expr::Gather(a, _) => a.visit(f),
         }
     }
 }
@@ -98,15 +107,26 @@ impl fmt::Display for Expr {
                 }
                 write!(f, "]")
             }
+            // parenthesize non-variable bases so the postfix index
+            // reparses onto the same subtree
+            Expr::Gather(a, ix) => match a.as_ref() {
+                Expr::Var(n) => write!(f, "{n}[{ix}]"),
+                _ => write!(f, "({a})[{ix}]"),
+            },
         }
     }
 }
 
-/// `t = <expr>`
+/// `t = <expr>`, or the indirect-write forms `t[idx] = <expr>` /
+/// `t[idx] += <expr>` (scatter; `accumulate` marks `+=`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Stmt {
     pub target: String,
     pub expr: Expr,
+    /// Index variable of a scatter target (`t[idx] = ...`).
+    pub index: Option<String>,
+    /// `+=`: duplicate indices accumulate instead of overwriting.
+    pub accumulate: bool,
 }
 
 /// A full CFDlang program: declarations then assignments.
@@ -152,7 +172,17 @@ impl fmt::Display for Program {
             writeln!(f, "]")?;
         }
         for s in &self.stmts {
-            writeln!(f, "{} = {}", s.target, s.expr)?;
+            match &s.index {
+                Some(ix) => writeln!(
+                    f,
+                    "{}[{}] {}= {}",
+                    s.target,
+                    ix,
+                    if s.accumulate { "+" } else { "" },
+                    s.expr
+                )?,
+                None => writeln!(f, "{} = {}", s.target, s.expr)?,
+            }
         }
         Ok(())
     }

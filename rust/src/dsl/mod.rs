@@ -10,15 +10,21 @@
 //! ```text
 //! program   := decl* stmt*
 //! decl      := "var" ("input" | "output")? ident ":" "[" int+ "]"
-//! stmt      := ident "=" expr
+//! stmt      := ident ("[" ident "]")? ("=" | "+=") expr
 //! expr      := add ( "." contraction )?
 //! add       := mul ( ("+" | "-") mul )*
 //! mul       := prod ( ("*" | "/") prod )*
 //! prod      := primary ( "#" primary )*          // tensor (outer) product
-//! primary   := ident | "(" expr ")"
+//! primary   := ( ident | "(" expr ")" ) ("[" ident "]")*
 //! contraction := "[" pair+ "]"                    // e.g. [[1 6][3 7][5 8]]
 //! pair      := "[" int int "]"
 //! ```
+//!
+//! The postfix index `base[idx]` is the *gather* form (indirect row
+//! read through a rank-1 index variable), and an indexed assignment
+//! target `t[idx] = e` / `t[idx] += e` is the *scatter* form — the
+//! unstructured-mesh access modes of Karp et al. (arXiv 2108.12188);
+//! see docs/CFDLANG.md "Indexing syntax".
 //!
 //! The running example (Fig. 2, Inverse Helmholtz, p = 11):
 //!
@@ -89,6 +95,41 @@ pub fn gradient_source(nx: usize, ny: usize, nz: usize) -> String {
     )
 }
 
+/// Mesh gather-interpolation kernel (Karp et al., arXiv 2108.12188,
+/// §"gather"): read `n` element rows of a nodal field `u : [m k]`
+/// through the element-to-node map `gi`, then apply a dense `k x k`
+/// operator along the per-element axis. The contraction's axis
+/// semantics put the operator axis first (`w : [k n]`), like the
+/// gradient builtin's derivative-axis-first outputs.
+pub fn mesh_gather_source(m: usize, n: usize, k: usize) -> String {
+    format!(
+        "var input u : [{m} {k}]\n\
+         var input gi : [{n}]\n\
+         var input D : [{k} {k}]\n\
+         var output w : [{k} {n}]\n\
+         var t : [{n} {k}]\n\
+         t = u[gi]\n\
+         w = D # t . [[1 3]]\n"
+    )
+}
+
+/// Scatter-add assembly kernel (Karp et al.'s gather-scatter pair):
+/// gather `n` element rows of `u : [m k]`, scale by per-element
+/// weights, and accumulate back into the `m`-row result through the
+/// scatter map `si` — duplicate indices sum (finite-element assembly).
+pub fn scatter_assembly_source(m: usize, n: usize, k: usize) -> String {
+    format!(
+        "var input u : [{m} {k}]\n\
+         var input gi : [{n}]\n\
+         var input si : [{n}]\n\
+         var input w : [{n} {k}]\n\
+         var output r : [{m} {k}]\n\
+         var t : [{n} {k}]\n\
+         t = u[gi] * w\n\
+         r[si] += t\n"
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,9 +141,23 @@ mod tests {
             inverse_helmholtz_source(7),
             interpolation_source(11, 11),
             gradient_source(8, 7, 6),
+            mesh_gather_source(256, 1024, 8),
+            scatter_assembly_source(256, 1024, 8),
         ] {
             let prog = parse(&src).expect("builtin source must parse");
             assert!(!prog.stmts.is_empty());
+        }
+    }
+
+    #[test]
+    fn indexed_sources_roundtrip_through_display() {
+        for src in [
+            mesh_gather_source(8, 16, 4),
+            scatter_assembly_source(8, 16, 4),
+        ] {
+            let p1 = parse(&src).unwrap();
+            let p2 = parse(&p1.to_string()).unwrap();
+            assert_eq!(p1, p2);
         }
     }
 

@@ -135,11 +135,37 @@ impl Parser {
         Ok(Decl { name, kind, shape })
     }
 
+    /// stmt := ident ('[' ident ']')? ('='|'+=') expr
+    /// (`+=` only with an indexed target: scatter-add)
     fn stmt(&mut self) -> Result<Stmt, String> {
+        let (line, col) = self.here();
         let target = self.ident()?;
+        let mut index = None;
+        if self.peek() == Some(&Tok::LBracket) {
+            self.bump();
+            index = Some(self.ident()?);
+            self.expect(&Tok::RBracket)?;
+        }
+        let accumulate = if self.peek() == Some(&Tok::Plus) {
+            self.bump();
+            true
+        } else {
+            false
+        };
         self.expect(&Tok::Equals)?;
+        if accumulate && index.is_none() {
+            return Err(format!(
+                "line {line}, col {col}: '+=' requires an indexed target \
+                 ('{target}[idx] += ...')"
+            ));
+        }
         let expr = self.expr()?;
-        Ok(Stmt { target, expr })
+        Ok(Stmt {
+            target,
+            expr,
+            index,
+            accumulate,
+        })
     }
 
     /// expr := add ( '.' contraction )?
@@ -196,25 +222,34 @@ impl Parser {
         Ok(e)
     }
 
+    /// primary := ( '(' expr ')' | ident ) ('[' ident ']')*
+    /// — the postfix index is the gather form `base[idx]`.
     fn primary(&mut self) -> Result<Expr, String> {
-        match self.peek() {
+        let mut e = match self.peek() {
             Some(Tok::LParen) => {
                 self.bump();
                 let e = self.expr()?;
                 self.expect(&Tok::RParen)?;
-                Ok(e)
+                e
             }
-            Some(Tok::Ident(_)) => Ok(Expr::Var(self.ident()?)),
+            Some(Tok::Ident(_)) => Expr::Var(self.ident()?),
             other => {
                 let (line, col) = self.here();
-                Err(format!(
+                return Err(format!(
                     "line {line}, col {col}: expected expression, got {}",
                     other
                         .map(|t| t.to_string())
                         .unwrap_or_else(|| "EOF".into())
-                ))
+                ));
             }
+        };
+        while self.peek() == Some(&Tok::LBracket) {
+            self.bump();
+            let ix = self.ident()?;
+            self.expect(&Tok::RBracket)?;
+            e = Expr::Gather(Box::new(e), ix);
         }
+        Ok(e)
     }
 
     /// contraction := '[' ('[' int int ']')+ ']'
@@ -277,6 +312,23 @@ fn validate(prog: &Program, decl_lines: &[usize], stmt_lines: &[usize]) -> Resul
                 ));
             }
         }
+        if let Some(ix) = &stmt.index {
+            let ixd = prog.decl(ix).ok_or_else(|| {
+                format!("line {line}: use of undeclared index variable {ix}")
+            })?;
+            if ixd.shape.len() != 1 {
+                return Err(format!(
+                    "line {line}: index variable {ix} must be rank 1, got {:?}",
+                    ixd.shape
+                ));
+            }
+            if ixd.kind != VarKind::Input && !assigned.contains(ix) {
+                return Err(format!(
+                    "line {line}: variable {ix} used before assignment in '{} = ...'",
+                    stmt.target
+                ));
+            }
+        }
         validate_contractions(&stmt.expr, prog)
             .map_err(|e| format!("line {line}: {e}"))?;
     }
@@ -307,6 +359,9 @@ fn expr_rank(e: &Expr, prog: &Program) -> Result<usize, String> {
             let r = expr_rank(a, prog)?;
             Ok(r - 2 * pairs.len())
         }
+        // gather replaces the base's row axis with the (rank-1) index
+        // axis, so the rank is unchanged
+        Expr::Gather(a, _) => expr_rank(a, prog),
     }
 }
 
@@ -315,6 +370,24 @@ fn validate_contractions(e: &Expr, prog: &Program) -> Result<(), String> {
     e.visit(&mut |node| {
         if result.is_err() {
             return;
+        }
+        if let Expr::Gather(_, ix) = node {
+            match prog.decl(ix) {
+                None => {
+                    result =
+                        Err(format!("use of undeclared index variable {ix}"));
+                }
+                Some(d) if d.shape.len() != 1 => {
+                    result = Err(format!(
+                        "index variable {ix} must be rank 1, got {:?}",
+                        d.shape
+                    ));
+                }
+                _ => {}
+            }
+            if result.is_err() {
+                return;
+            }
         }
         if let Expr::Contract(inner, pairs) = node {
             let rank = match expr_rank(inner, prog) {

@@ -19,7 +19,7 @@ use std::path::Path;
 
 use crate::datatype::DataType;
 use crate::hls::Estimate;
-use crate::olympus::{BusMode, ChannelPolicy, MemoryKind, OlympusOpts, SystemSpec};
+use crate::olympus::{BusMode, CacheScheme, ChannelPolicy, MemoryKind, OlympusOpts, SystemSpec};
 use crate::platform::{Platform, Resources};
 use crate::sim::SimResult;
 use crate::util::json::{self, Json};
@@ -508,6 +508,7 @@ pub fn opts_to_json(o: &OlympusOpts) -> Json {
         ("lut_mult_shift", Json::Bool(o.lut_mult_shift)),
         ("target_freq_mhz", Json::Num(o.target_freq_mhz)),
         ("channel_policy", policy),
+        ("cache_scheme", Json::Str(o.cache_scheme.name())),
     ])
 }
 
@@ -543,6 +544,15 @@ pub fn opts_from_json(v: &Json) -> Result<OlympusOpts, String> {
         }
         other => return Err(format!("bad channel_policy {other}")),
     };
+    let cache_scheme = match v.get("cache_scheme") {
+        // artifacts written before the irregular-access subsystem carry
+        // no cache axis: the only scheme they could have generated
+        Json::Null => CacheScheme::Bypass,
+        Json::Str(s) => {
+            CacheScheme::parse(s).ok_or_else(|| format!("unknown cache scheme {s}"))?
+        }
+        other => return Err(format!("bad cache_scheme {other}")),
+    };
     Ok(OlympusOpts {
         double_buffering: req_bool(v, "double_buffering")?,
         bus,
@@ -559,6 +569,7 @@ pub fn opts_from_json(v: &Json) -> Result<OlympusOpts, String> {
             .as_f64()
             .ok_or("missing target_freq_mhz")?,
         channel_policy,
+        cache_scheme,
     })
 }
 
@@ -641,11 +652,25 @@ mod tests {
             OlympusOpts::mem_sharing(),
             OlympusOpts::bus_serial().on_ddr4(),
             pinned_opts(),
+            OlympusOpts::baseline().with_cache_scheme(CacheScheme::Cached(128)),
+            OlympusOpts::baseline().with_cache_scheme(CacheScheme::FullBuffer),
         ] {
             let j = opts_to_json(&o);
             let back = opts_from_json(&j).unwrap();
             assert_eq!(format!("{o:?}"), format!("{back:?}"), "{j}");
         }
+    }
+
+    #[test]
+    fn pre_cache_artifacts_decode_to_bypass() {
+        // an opts object written before the irregular-access subsystem
+        // has no cache_scheme key; decoding defaults it to Bypass
+        let mut j = opts_to_json(&OlympusOpts::baseline());
+        if let Json::Obj(fields) = &mut j {
+            fields.remove("cache_scheme");
+        }
+        let back = opts_from_json(&j).unwrap();
+        assert_eq!(back.cache_scheme, CacheScheme::Bypass);
     }
 
     #[test]

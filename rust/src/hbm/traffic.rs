@@ -26,7 +26,126 @@
 //! conservative choice for a makespan model).
 
 use super::{ChannelMap, CuRoutes};
+use crate::ir::affine::{BufId, NestKind};
+use crate::mnemosyne::CacheScheme;
 use crate::olympus::SystemSpec;
+
+/// DRAM cycles one activate/precharge pair costs when an access leaves
+/// the controller's open row. Calibrated against the Xilinx pseudo-random
+/// HBM benchmark shape: a 16-word random burst sustains
+/// `16 / (16 + 28) ≈ 36%` of streaming bandwidth — the ~3x collapse the
+/// vendor measurements show for short random bursts.
+pub const ROW_MISS_CYCLES: u64 = 28;
+
+/// Mechanistic model of the DRAM-side behavior of one indexed stream
+/// (paper §2's open-row/burst discussion, applied to gather/scatter).
+///
+/// A streaming access (`stride_entropy = 0`) pays nothing beyond the
+/// words on the wire. A pseudo-random access opens a new row on
+/// (almost) every burst; on-chip reuse divides those misses because
+/// repeated touches of a row are served without reopening it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccessPattern {
+    /// Contiguous words moved per indexed access (the row slice).
+    pub burst_words: u64,
+    /// Fraction of accesses landing outside the open row:
+    /// 0 = streaming, 1 = pseudo-random.
+    pub stride_entropy: f64,
+    /// Mean accesses per distinct row (≥ 1); reuse captured on chip
+    /// amortizes the row misses.
+    pub reuse: f64,
+}
+
+impl AccessPattern {
+    /// Sequential burst traffic — the dense-kernel baseline.
+    pub fn streaming(burst_words: u64) -> AccessPattern {
+        AccessPattern { burst_words, stride_entropy: 0.0, reuse: 1.0 }
+    }
+
+    /// Pseudo-random bursts with a given captured-reuse degree.
+    pub fn random(burst_words: u64, reuse: f64) -> AccessPattern {
+        AccessPattern { burst_words, stride_entropy: 1.0, reuse }
+    }
+
+    /// Fraction of streaming bandwidth the pattern sustains, in
+    /// `(0, 1]`: `B / (B + entropy * ROW_MISS_CYCLES / reuse)`.
+    pub fn efficiency(&self) -> f64 {
+        let b = self.burst_words.max(1) as f64;
+        let entropy = self.stride_entropy.clamp(0.0, 1.0);
+        let miss = entropy * ROW_MISS_CYCLES as f64 / self.reuse.max(1.0);
+        b / (b + miss)
+    }
+
+    /// ≥ 1.0 multiplier on the stream's stage interval.
+    pub fn slowdown(&self) -> f64 {
+        1.0 / self.efficiency()
+    }
+}
+
+/// The pattern an indexed stream presents to HBM *after* the memory
+/// plan's cache scheme filters it. `reuse` is the stream's intrinsic
+/// accesses-per-row degree; `coverage` is the fraction of the array a
+/// capacity-bounded scratchpad holds (`mnemosyne::CacheInstance`).
+pub fn schemed_pattern(
+    burst_words: u64,
+    reuse: f64,
+    scheme: CacheScheme,
+    coverage: f64,
+) -> AccessPattern {
+    match scheme {
+        // no on-chip structure: every access is a fresh row activation
+        CacheScheme::Bypass => AccessPattern::random(burst_words, 1.0),
+        // the whole array lives on chip; HBM sees one streaming pass
+        CacheScheme::FullBuffer => AccessPattern::streaming(burst_words),
+        // a direct-mapped scratchpad catches the re-touches
+        // (1 - 1/reuse of the accesses) that fall inside its coverage
+        CacheScheme::Cached(_) => {
+            let hit = (1.0 - 1.0 / reuse.max(1.0)) * coverage.clamp(0.0, 1.0);
+            AccessPattern {
+                burst_words,
+                stride_entropy: 1.0 - hit,
+                reuse: 1.0,
+            }
+        }
+    }
+}
+
+/// Worst-case (read, write) slowdown multipliers the kernel's indexed
+/// nests impose on their stages: gathers throttle the Read stream,
+/// scatters the Write stream. Kernels with no gather/scatter nests
+/// return exactly `(1.0, 1.0)` — the dense path is bit-identical.
+pub fn indexed_slowdowns(spec: &SystemSpec) -> (f64, f64) {
+    let mut read = 1.0f64;
+    let mut write = 1.0f64;
+    for n in &spec.kernel.nests {
+        match n.kind {
+            NestKind::Gather { .. } => {
+                read = read.max(indexed_buffer_slowdown(spec, n.reads[0], n.out_trips[0]));
+            }
+            NestKind::Scatter { .. } => {
+                write = write.max(indexed_buffer_slowdown(spec, n.write, n.out_trips[0]));
+            }
+            _ => {}
+        }
+    }
+    (read, write)
+}
+
+/// One indexed buffer's slowdown under the spec's cache scheme: burst =
+/// the row slice, reuse = accesses per row, coverage from the plan's
+/// cache instance (0 when the plan fronted nothing).
+fn indexed_buffer_slowdown(spec: &SystemSpec, buf: BufId, accesses: usize) -> f64 {
+    let shape = &spec.kernel.buffers[buf].shape;
+    let burst = shape[1..].iter().product::<usize>().max(1) as u64;
+    let rows = shape.first().copied().unwrap_or(1).max(1);
+    let reuse = (accesses as f64 / rows as f64).max(1.0);
+    let coverage = spec
+        .memory
+        .cache_for(buf)
+        .map(|c| c.coverage(&spec.kernel))
+        .unwrap_or(0.0);
+    schemed_pattern(burst, reuse, spec.opts.cache_scheme, coverage).slowdown()
+}
 
 /// Additive/multiplicative corrections to the Read/Write stage
 /// intervals of one element, derived per channel from the routing.
@@ -97,6 +216,12 @@ pub fn stage_penalty(spec: &SystemSpec) -> StagePenalty {
         p.read_slowdown = p.read_slowdown.max(slow(&cu.read));
         p.write_slowdown = p.write_slowdown.max(slow(&cu.write));
     }
+    // irregular-access throttle: gather streams price their row-miss
+    // behavior into the Read stage, scatters into Write (dense kernels
+    // multiply by exactly 1.0)
+    let (gather, scatter) = indexed_slowdowns(spec);
+    p.read_slowdown *= gather;
+    p.write_slowdown *= scatter;
     p.fill_cycles = map.fill_latency_cycles();
     p
 }
@@ -236,6 +361,79 @@ mod tests {
         assert!(p.read_turnaround > 0);
         assert_eq!(p.read_contention, 0, "no stage overlap to contend");
         assert_eq!(p.write_contention, 0);
+    }
+
+    fn mesh_spec(scheme: CacheScheme) -> SystemSpec {
+        let prog = dsl::parse(&dsl::mesh_gather_source(64, 256, 8)).unwrap();
+        let m = rewrite::optimize(teil::from_ast(&prog).unwrap());
+        let k = lower::lower_kernel(&m, "mesh_gather").unwrap();
+        generate(
+            &k,
+            &OlympusOpts::baseline().with_cache_scheme(scheme),
+            &Platform::alveo_u280(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn random_sixteen_word_burst_matches_the_xilinx_calibration() {
+        let eff = AccessPattern::random(16, 1.0).efficiency();
+        assert!((eff - 16.0 / 44.0).abs() < 1e-12, "{eff}");
+    }
+
+    #[test]
+    fn streaming_patterns_pay_nothing() {
+        for b in [1, 8, 64, 4096] {
+            assert_eq!(AccessPattern::streaming(b).efficiency(), 1.0);
+            assert_eq!(AccessPattern::streaming(b).slowdown(), 1.0);
+        }
+    }
+
+    #[test]
+    fn efficiency_is_bounded_and_monotone() {
+        let mut last = 0.0;
+        for reuse in [1.0, 2.0, 4.0, 16.0, 256.0] {
+            let eff = AccessPattern::random(8, reuse).efficiency();
+            assert!(eff > 0.0 && eff <= 1.0);
+            assert!(eff >= last, "reuse {reuse}: {eff} < {last}");
+            last = eff;
+        }
+        let mut last = 0.0;
+        for burst in [1, 2, 8, 64, 1024] {
+            let eff = AccessPattern::random(burst, 1.0).efficiency();
+            assert!(eff >= last, "burst {burst}: {eff} < {last}");
+            last = eff;
+        }
+    }
+
+    #[test]
+    fn dense_kernels_carry_no_indexed_slowdown() {
+        let s = spec(OlympusOpts::dataflow(7));
+        assert_eq!(indexed_slowdowns(&s), (1.0, 1.0));
+    }
+
+    #[test]
+    fn cache_schemes_order_the_gather_slowdown() {
+        // u : [64 8] read through a 256-entry map: burst 8, reuse 4
+        let bypass = indexed_slowdowns(&mesh_spec(CacheScheme::Bypass)).0;
+        let cached = indexed_slowdowns(&mesh_spec(CacheScheme::Cached(128))).0;
+        let full = indexed_slowdowns(&mesh_spec(CacheScheme::FullBuffer)).0;
+        assert_eq!(bypass, (8.0 + 28.0) / 8.0, "every access reopens a row");
+        assert_eq!(full, 1.0, "on-chip copy streams");
+        assert!(full < cached && cached < bypass, "{full} {cached} {bypass}");
+        // and the penalty lands on the Read stage of the stage model
+        let p = stage_penalty(&mesh_spec(CacheScheme::Bypass));
+        assert!(p.read_slowdown >= bypass);
+    }
+
+    #[test]
+    fn cached_slowdown_improves_with_capacity() {
+        let mut last = f64::MAX;
+        for words in [16, 64, 128, 256, 512] {
+            let s = indexed_slowdowns(&mesh_spec(CacheScheme::Cached(words))).0;
+            assert!(s <= last, "cache {words}: {s} > {last}");
+            last = s;
+        }
     }
 
     #[test]

@@ -87,7 +87,14 @@ pub fn count_ops(spec: &SystemSpec) -> (u32, u32) {
                     gm = gm.max(n.multipliers());
                     ga = ga.max(n.adders());
                 }
-                NestKind::Permute { .. } => {}
+                // a scatter-add carries the assembly accumulator; plain
+                // gathers/scatters/permutes move data without arithmetic
+                NestKind::Scatter { add: true, .. } => {
+                    ga = ga.max(n.adders());
+                }
+                NestKind::Permute { .. }
+                | NestKind::Gather { .. }
+                | NestKind::Scatter { add: false, .. } => {}
             }
         }
         mults += gm;

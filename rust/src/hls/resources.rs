@@ -129,6 +129,14 @@ fn lane_memory(spec: &SystemSpec) -> (u64, u64, u64) {
         uram += u;
         lutram += l;
     }
+    // reuse-aware scratchpads fronting indexed buffers (empty under
+    // the bypass scheme and on dense kernels)
+    for c in &spec.memory.caches {
+        let (b, u, l) = c.footprint();
+        bram_halves += b;
+        uram += u;
+        lutram += l;
+    }
     bram_halves += spec.memory.fifo_bram_halves();
     (bram_halves, uram, lutram)
 }

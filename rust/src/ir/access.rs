@@ -26,6 +26,11 @@ pub fn nest_read_degree(k: &Kernel, nest: usize, buf: BufId) -> usize {
         // the same cycle
         NestKind::Contraction { .. } => n.red_trip,
         NestKind::Elementwise(_) | NestKind::Permute { .. } => 1,
+        // one index word and one data row-word per cycle; the *pattern*
+        // of the data access is irregular, but the per-cycle word
+        // demand is still 1 (the penalty is priced by `hbm::traffic`,
+        // not by banking)
+        NestKind::Gather { .. } | NestKind::Scatter { .. } => 1,
     }
 }
 
@@ -73,6 +78,49 @@ pub fn max_read_degree(k: &Kernel) -> usize {
         .max()
         .unwrap_or(1)
         .max(1)
+}
+
+/// Does the kernel contain any indirect (gather/scatter) nest? Drives
+/// the irregular-access machinery: when false, cache schemes collapse
+/// to the bypass default and the traffic model never fires.
+pub fn has_indexed(k: &Kernel) -> bool {
+    k.nests
+        .iter()
+        .any(|n| n.kind.index_buffer().is_some())
+}
+
+/// Buffers read *through an index* (the gathered data operand of each
+/// gather nest) — the candidates for a reuse-aware scratchpad. Index
+/// buffers themselves stream in order and are not included. Deduplicated,
+/// in first-appearance order.
+pub fn indexed_read_buffers(k: &Kernel) -> Vec<BufId> {
+    let mut out = Vec::new();
+    for n in &k.nests {
+        if let NestKind::Gather { .. } = n.kind {
+            if let Some(&data) = n.reads.first() {
+                if !out.contains(&data) {
+                    out.push(data);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// All buffers touched *through an index* in either direction: gather
+/// data operands plus scatter targets — the set `mnemosyne` plans a
+/// scratchpad for under a caching scheme. Deduplicated, first-appearance
+/// order.
+pub fn indexed_cache_buffers(k: &Kernel) -> Vec<BufId> {
+    let mut out = indexed_read_buffers(k);
+    for n in &k.nests {
+        if let NestKind::Scatter { .. } = n.kind {
+            if !out.contains(&n.write) {
+                out.push(n.write);
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]

@@ -56,6 +56,41 @@ pub enum NestKind {
     Elementwise(EwOp),
     /// Pure data movement with axis permutation (zero flops).
     Permute { from: usize, to: usize },
+    /// Indirect read: `w[i, j..] = data[idx[i], j..]` where `idx` is the
+    /// index buffer. The data operand is the first entry of `reads`,
+    /// the index buffer the second. Unstructured-mesh gather (Karp et
+    /// al., arXiv 2108.12188); the data access is pseudo-random.
+    Gather { index: BufId },
+    /// Indirect write: `w[idx[i], j..] (+)= data[i, j..]`. With
+    /// `add: true` the write accumulates (scatter-add assembly),
+    /// otherwise it overwrites. `out_trips` covers the *data* shape —
+    /// the written buffer may be larger (rows not hit keep zero) or
+    /// hit more than once (duplicates accumulate in ascending data
+    /// order).
+    Scatter { index: BufId, add: bool },
+}
+
+impl NestKind {
+    /// Buffers this nest addresses non-sequentially. The on-chip plan
+    /// must provision true dual-port random access for these; streaming
+    /// FIFOs are enough for the rest. Shared by `sim`,
+    /// `mnemosyne::plan`, and the irregular-access subsystem so the
+    /// three can never disagree on what counts as random access.
+    pub fn is_random_access(&self) -> bool {
+        match self {
+            NestKind::Contraction { .. } | NestKind::Permute { .. } => true,
+            NestKind::Gather { .. } | NestKind::Scatter { .. } => true,
+            NestKind::Elementwise(_) => false,
+        }
+    }
+
+    /// The index buffer when this nest reads or writes through one.
+    pub fn index_buffer(&self) -> Option<BufId> {
+        match *self {
+            NestKind::Gather { index } | NestKind::Scatter { index, .. } => Some(index),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -87,7 +122,16 @@ impl LoopNest {
             // mul + add per reduction step per output element
             NestKind::Contraction { .. } => 2 * self.iterations() * self.red_trip as u64,
             NestKind::Elementwise(_) => self.iterations(),
-            NestKind::Permute { .. } => 0,
+            NestKind::Permute { .. } | NestKind::Gather { .. } => 0,
+            // one accumulate per scattered word; a plain overwrite moves
+            // data without arithmetic
+            NestKind::Scatter { add, .. } => {
+                if add {
+                    self.iterations()
+                } else {
+                    0
+                }
+            }
         }
     }
 
@@ -105,6 +149,7 @@ impl LoopNest {
         match self.kind {
             NestKind::Contraction { .. } => self.red_trip as u32,
             NestKind::Elementwise(EwOp::Add) | NestKind::Elementwise(EwOp::Sub) => 1,
+            NestKind::Scatter { add: true, .. } => 1,
             _ => 0,
         }
     }
@@ -187,8 +232,24 @@ impl Kernel {
             if n.out_trips.is_empty() || n.red_trip == 0 {
                 return Err(format!("nest {i} has degenerate trip counts"));
             }
+            if let Some(idx) = n.kind.index_buffer() {
+                if idx >= nb {
+                    return Err(format!("nest {i} indexes out-of-range buffer"));
+                }
+                if !n.reads.contains(&idx) {
+                    return Err(format!(
+                        "nest {i} does not read its index buffer {}",
+                        self.buffers[idx].name
+                    ));
+                }
+            }
+            // a scatter iterates over its *data* shape: the written
+            // buffer may be larger (untouched rows) or hit repeatedly
+            // (duplicate indices), so the dense word-count identity
+            // does not apply
             let expect = self.buffers[n.write].words() as u64;
-            if n.iterations() != expect {
+            let scatter = matches!(n.kind, NestKind::Scatter { .. });
+            if !scatter && n.iterations() != expect {
                 return Err(format!(
                     "nest {i} iterations {} != output words {expect}",
                     n.iterations()

@@ -79,6 +79,18 @@ pub fn interpret(
             NestKind::Permute { from, to } => {
                 operand(&bufs, n, 0)?.move_axis(*from, *to)
             }
+            NestKind::Gather { .. } => {
+                let x = operand(&bufs, n, 0)?;
+                let idx = operand(&bufs, n, 1)?;
+                x.gather_rows(idx)
+            }
+            NestKind::Scatter { add, .. } => {
+                let x = operand(&bufs, n, 0)?;
+                let idx = operand(&bufs, n, 1)?;
+                // same ascending-data-order accumulation as teil::eval,
+                // so oracle agreement stays exact even with duplicates
+                x.scatter_rows(idx, k.buffers[n.write].shape[0], *add)
+            }
         };
         if out.shape() != k.buffers[n.write].shape.as_slice() {
             return Err(format!(

@@ -113,6 +113,9 @@ fn subtree_contains(m: &Module, root: ValId, needle: ValId) -> bool {
         Op::ModeApply { m: mm, x, .. } => {
             subtree_contains(m, *mm, needle) || subtree_contains(m, *x, needle)
         }
+        Op::Gather { x, idx } | Op::Scatter { x, idx, .. } => {
+            subtree_contains(m, *x, needle) || subtree_contains(m, *idx, needle)
+        }
     }
 }
 
@@ -188,6 +191,40 @@ fn build_nest(
             },
             stmt,
         }),
+        // operand order for both indirect forms is [data, index] —
+        // `ir::interp` and `codegen::c_emit` rely on it
+        Op::Gather { x, idx } => {
+            let xb = get(x)?;
+            let ib = get(idx)?;
+            Ok(LoopNest {
+                name: format!("gather_{v}"),
+                out_trips: val.shape.clone(),
+                red_trip: 1,
+                reads: vec![xb, ib],
+                write: out,
+                kind: NestKind::Gather { index: ib },
+                stmt,
+            })
+        }
+        Op::Scatter { x, idx, add, .. } => {
+            let xb = get(x)?;
+            let ib = get(idx)?;
+            Ok(LoopNest {
+                name: format!("scatter_{v}"),
+                // iterates over the *data* shape; the written buffer may
+                // be larger (validate exempts scatter from the dense
+                // word-count identity)
+                out_trips: m.shape(*x).to_vec(),
+                red_trip: 1,
+                reads: vec![xb, ib],
+                write: out,
+                kind: NestKind::Scatter {
+                    index: ib,
+                    add: *add,
+                },
+                stmt,
+            })
+        }
         other => Err(format!("cannot lower {other:?}")),
     }
 }

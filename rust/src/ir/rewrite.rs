@@ -98,6 +98,19 @@ fn emit(
                 from: *from,
                 to: *to,
             },
+            // indirection passes through untouched: the contraction
+            // matcher only fires on Red(Diag(..)) trees, and a gather /
+            // scatter is opaque to factorization
+            Op::Gather { x, idx } => Op::Gather {
+                x: emit(m, *x, out, memo),
+                idx: emit(m, *idx, out, memo),
+            },
+            Op::Scatter { x, idx, rows, add } => Op::Scatter {
+                x: emit(m, *x, out, memo),
+                idx: emit(m, *idx, out, memo),
+                rows: *rows,
+                add: *add,
+            },
         };
         let is_arg = matches!(op, Op::Arg { .. });
         let id = out.push(op).expect("re-emit of verified op");

@@ -97,6 +97,41 @@ pub fn infer(m: &Module, op: &Op) -> Result<Vec<usize>, String> {
             out.insert(*to, ax);
             Ok(out)
         }
+        Op::Gather { x, idx } => {
+            let xs = m.shape(*x);
+            let is = m.shape(*idx);
+            if xs.is_empty() {
+                return Err("gather base must have a row axis".into());
+            }
+            if is.len() != 1 {
+                return Err(format!("gather index must be rank 1, got {is:?}"));
+            }
+            let mut out = vec![is[0]];
+            out.extend_from_slice(&xs[1..]);
+            Ok(out)
+        }
+        Op::Scatter { x, idx, rows, .. } => {
+            let xs = m.shape(*x);
+            let is = m.shape(*idx);
+            if xs.is_empty() {
+                return Err("scatter data must have a row axis".into());
+            }
+            if is.len() != 1 {
+                return Err(format!("scatter index must be rank 1, got {is:?}"));
+            }
+            if is[0] != xs[0] {
+                return Err(format!(
+                    "scatter index length {} != data rows {}",
+                    is[0], xs[0]
+                ));
+            }
+            if *rows == 0 {
+                return Err("scatter target must have at least one row".into());
+            }
+            let mut out = vec![*rows];
+            out.extend_from_slice(&xs[1..]);
+            Ok(out)
+        }
     }
 }
 

@@ -43,6 +43,19 @@ pub enum Op {
     /// Move axis `from` to position `to` (introduced by rewriting to
     /// restore contraction axis order; zero flops — address remapping).
     MoveAxis { x: ValId, from: usize, to: usize },
+    /// Indirect row read through a rank-1 index tensor:
+    /// `out[i, ..] = x[idx[i], ..]` (unstructured-mesh gather).
+    Gather { x: ValId, idx: ValId },
+    /// Indirect row write into a fresh `rows`-row zero tensor:
+    /// `out[idx[i], ..] (+)= x[i, ..]`, rows applied in ascending data
+    /// order so duplicate indices are deterministic (scatter-add
+    /// assembly when `add`; last-writer-wins otherwise).
+    Scatter {
+        x: ValId,
+        idx: ValId,
+        rows: usize,
+        add: bool,
+    },
 }
 
 /// A value: its defining op and inferred shape.
@@ -102,6 +115,31 @@ impl Module {
             .map(|(_, v)| op_flops(self, v))
             .sum()
     }
+
+    /// Input names used as index tensors by gather/scatter values, with
+    /// the exclusive row bound their entries must stay below. Workload
+    /// generators seed these with whole numbers in `[0, bound)` instead
+    /// of unit-domain reals (duplicates and arbitrary order allowed —
+    /// that is the point of the irregular-access kernels).
+    pub fn index_input_bounds(&self) -> Vec<(String, usize)> {
+        let mut out: Vec<(String, usize)> = Vec::new();
+        for v in &self.values {
+            let (idx, rows) = match v.op {
+                Op::Gather { x, idx } => (idx, self.shape(x)[0]),
+                Op::Scatter { idx, rows, .. } => (idx, rows),
+                _ => continue,
+            };
+            if let Op::Arg { name } = &self.values[idx].op {
+                match out.iter_mut().find(|(n, _)| n == name) {
+                    // one map may index several arrays (gather/scatter
+                    // pairs); its values must be valid for all of them
+                    Some((_, b)) => *b = (*b).min(rows),
+                    None => out.push((name.clone(), rows)),
+                }
+            }
+        }
+        out
+    }
 }
 
 fn mark_used(m: &Module, v: ValId, used: &mut [bool]) {
@@ -126,6 +164,10 @@ fn mark_used(m: &Module, v: ValId, used: &mut [bool]) {
             mark_used(m, *mm, used);
             mark_used(m, *x, used);
         }
+        Op::Gather { x, idx } | Op::Scatter { x, idx, .. } => {
+            mark_used(m, *x, used);
+            mark_used(m, *idx, used);
+        }
     }
 }
 
@@ -144,6 +186,12 @@ fn op_flops(m: &Module, v: &Value) -> u64 {
         Op::ModeApply { m: mat, .. } => {
             let k = m.shape(*mat)[1] as u64;
             2 * n * k
+        }
+        // address remapping only; scatter-add pays one accumulate per
+        // *data* word (the output may be larger and mostly untouched)
+        Op::Gather { .. } | Op::Scatter { add: false, .. } => 0,
+        Op::Scatter { x, add: true, .. } => {
+            m.shape(*x).iter().product::<usize>() as u64
         }
     }
 }
@@ -174,6 +222,12 @@ impl fmt::Display for Module {
                 Op::MoveAxis { x, from, to } => {
                     write!(f, "teil.move_axis {from}->{to} %{x}")?
                 }
+                Op::Gather { x, idx } => write!(f, "teil.gather %{x}[%{idx}]")?,
+                Op::Scatter { x, idx, rows, add } => write!(
+                    f,
+                    "teil.scatter{} {rows} %{x}[%{idx}]",
+                    if *add { "_add" } else { "" }
+                )?,
             }
             writeln!(f, " : tensor<{:?}>", v.shape)?;
         }
@@ -208,8 +262,25 @@ pub fn from_ast(prog: &Program) -> Result<Module, String> {
     }
 
     for stmt in &prog.stmts {
-        let v = build_expr(&mut m, &stmt.expr, &env)?;
+        let mut v = build_expr(&mut m, &stmt.expr, &env)?;
         let decl = prog.decl(&stmt.target).expect("validated");
+        if let Some(ix) = &stmt.index {
+            let idx = *env
+                .get(ix)
+                .ok_or_else(|| format!("unbound index variable {ix}"))?;
+            if decl.shape.is_empty() {
+                return Err(format!(
+                    "scatter target {} must have a row axis",
+                    stmt.target
+                ));
+            }
+            v = m.push(Op::Scatter {
+                x: v,
+                idx,
+                rows: decl.shape[0],
+                add: stmt.accumulate,
+            })?;
+        }
         if m.shape(v) != decl.shape.as_slice() {
             return Err(format!(
                 "shape mismatch assigning {}: declared {:?}, inferred {:?}",
@@ -288,6 +359,13 @@ fn build_expr(
             }
             Ok(cur)
         }
+        Expr::Gather(base, ix) => {
+            let x = build_expr(m, base, env)?;
+            let idx = *env
+                .get(ix)
+                .ok_or_else(|| format!("unbound index variable {ix}"))?;
+            m.push(Op::Gather { x, idx })
+        }
     }
 }
 
@@ -340,6 +418,14 @@ pub fn eval(
             Op::MoveAxis { x, from, to } => {
                 vals[*x].as_ref().unwrap().move_axis(*from, *to)
             }
+            Op::Gather { x, idx } => vals[*x]
+                .as_ref()
+                .unwrap()
+                .gather_rows(vals[*idx].as_ref().unwrap()),
+            Op::Scatter { x, idx, rows, add } => vals[*x]
+                .as_ref()
+                .unwrap()
+                .scatter_rows(vals[*idx].as_ref().unwrap(), *rows, *add),
         };
         if t.shape() != v.shape.as_slice() {
             return Err(format!(

@@ -20,8 +20,22 @@ use crate::dsl::{self, Program};
 use crate::ir::affine::Kernel;
 use crate::ir::{lower, rewrite, teil};
 
-/// Names accepted by [`KernelSource::Builtin`] (the published trio).
-pub const BUILTIN_NAMES: &[&str] = &["helmholtz", "interpolation", "gradient"];
+/// Names accepted by [`KernelSource::Builtin`]: the published trio plus
+/// the unstructured-mesh pair (gather interpolation and scatter-add
+/// assembly, Karp et al. arXiv 2108.12188).
+pub const BUILTIN_NAMES: &[&str] = &[
+    "helmholtz",
+    "interpolation",
+    "gradient",
+    "mesh_gather",
+    "scatter_assembly",
+];
+
+/// Fixed mesh extents for the unstructured builtins: `m` nodal rows
+/// gathered `n` times (reuse degree n/m = 4) with `k` values per node.
+pub const MESH_NODES: usize = 256;
+pub const MESH_GATHERS: usize = 1024;
+pub const MESH_VALUES: usize = 8;
 
 /// Where a kernel's CFDlang source comes from.
 ///
@@ -101,6 +115,14 @@ impl KernelSource {
                 "helmholtz" => Ok(dsl::inverse_helmholtz_source(p)),
                 "interpolation" => Ok(dsl::interpolation_source(p, p)),
                 "gradient" => Ok(dsl::gradient_source(8, 7, 6)),
+                "mesh_gather" => {
+                    Ok(dsl::mesh_gather_source(MESH_NODES, MESH_GATHERS, MESH_VALUES))
+                }
+                "scatter_assembly" => Ok(dsl::scatter_assembly_source(
+                    MESH_NODES,
+                    MESH_GATHERS,
+                    MESH_VALUES,
+                )),
                 other => Err(format!(
                     "unknown kernel {other} (builtins: {}; use --file for a \
                      .cfd program)",
@@ -205,6 +227,24 @@ mod tests {
             assert!(!k.nests.is_empty(), "{name}");
             assert_eq!(k.name, *name);
         }
+    }
+
+    #[test]
+    fn mesh_builtins_lower_to_indexed_nests() {
+        use crate::ir::affine::NestKind;
+        let g = KernelSource::builtin("mesh_gather").build(0).unwrap();
+        assert!(g
+            .nests
+            .iter()
+            .any(|n| matches!(n.kind, NestKind::Gather { .. })));
+        assert!(crate::ir::access::has_indexed(&g));
+        let s = KernelSource::builtin("scatter_assembly").build(0).unwrap();
+        assert!(s
+            .nests
+            .iter()
+            .any(|n| matches!(n.kind, NestKind::Scatter { add: true, .. })));
+        // both are fixed-extent: the degree argument is ignored
+        assert!(!KernelSource::builtin("mesh_gather").parameterized());
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //!    frontier trade BRAM/URAM against throughput.
 
 use crate::ir::access;
-use crate::ir::affine::{BufId, BufKind, Kernel};
+use crate::ir::affine::{BufId, BufKind, Kernel, NestKind};
 use crate::ir::liveness::{self, Liveness};
 use crate::ir::schedule::Schedule;
 
@@ -274,6 +274,103 @@ impl ArrayInstance {
     }
 }
 
+/// On-chip storage policy for *indirectly accessed* arrays (a gather
+/// nest's data operand, a scatter nest's target) — the reuse-aware
+/// scratchpad axis of the irregular-access subsystem (DESIGN.md §2.11).
+///
+/// Indexed accesses cannot stream: each one lands on a data-dependent
+/// row, so serving them straight from HBM pays the pseudo-random
+/// penalty `hbm::traffic::AccessPattern` prices. The scheme decides how
+/// much on-chip storage to spend to absorb that traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CacheScheme {
+    /// No on-chip structure: every indexed access is pseudo-random HBM
+    /// traffic (free, slow).
+    Bypass,
+    /// Direct-mapped scratchpad of the given capacity in words: captures
+    /// the reuse fraction of the covered footprint (cheap, faster).
+    Cached(usize),
+    /// The whole indexed array resident on chip: indexed accesses are
+    /// local and free of HBM penalties (expensive, fastest).
+    FullBuffer,
+}
+
+impl CacheScheme {
+    /// Every form [`CacheScheme::parse`] accepts — the single source of
+    /// truth the CLI's unknown `--cache-scheme` error lists (same
+    /// contract as `ChannelPolicy::PARSE_NAMES` for `--policy`).
+    pub const PARSE_NAMES: &'static [&'static str] =
+        &["bypass", "cached:<words>", "full"];
+
+    /// Short name used in labels and CSV/JSON output; round-trips
+    /// through [`CacheScheme::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            CacheScheme::Bypass => "bypass".into(),
+            CacheScheme::Cached(w) => format!("cached:{w}"),
+            CacheScheme::FullBuffer => "full".into(),
+        }
+    }
+
+    /// Inverse of [`CacheScheme::name`] (CLI flags, flow artifacts).
+    pub fn parse(s: &str) -> Option<CacheScheme> {
+        match s {
+            "bypass" => Some(CacheScheme::Bypass),
+            "full" => Some(CacheScheme::FullBuffer),
+            _ => s
+                .strip_prefix("cached:")?
+                .parse::<usize>()
+                .ok()
+                .filter(|&w| w > 0)
+                .map(CacheScheme::Cached),
+        }
+    }
+}
+
+impl Default for CacheScheme {
+    fn default() -> Self {
+        CacheScheme::Bypass
+    }
+}
+
+/// One reuse-aware scratchpad instance: on-chip storage absorbing the
+/// indexed accesses of one buffer. Unlike an [`ArrayInstance`], a cache
+/// may be *smaller* than the buffer it fronts (the whole point of
+/// [`CacheScheme::Cached`]), which is why caches live beside the arrays
+/// rather than among them — the array invariants (words == max resident
+/// words, factor == planned target) do not apply here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheInstance {
+    /// The indirectly accessed buffer this cache fronts.
+    pub buf: BufId,
+    /// Capacity in words (== the buffer's words under `FullBuffer`).
+    pub words: usize,
+    /// Capacity in bytes at the design's data type.
+    pub bytes: u64,
+    /// Physical RAM primitive, by the same size bounds as the arrays.
+    pub ram: RamKind,
+}
+
+impl CacheInstance {
+    /// Fraction of the fronted buffer resident on chip (≤ 1).
+    pub fn coverage(&self, k: &Kernel) -> f64 {
+        let total = k.buffers[self.buf].words().max(1) as f64;
+        (self.words as f64 / total).min(1.0)
+    }
+
+    /// Storage cost: (bram18 halves, uram blocks, lutram LUTs) — same
+    /// primitive mapping as [`ArrayInstance::footprint`], single bank
+    /// (indexed demand is one word per cycle; `ir::access`).
+    pub fn footprint(&self) -> (u64, u64, u64) {
+        match self.ram {
+            RamKind::Uram => (0, self.bytes.div_ceil(32 * 1024).max(1), 0),
+            RamKind::Lutram => (0, 0, self.bytes / 4 + 32),
+            RamKind::Bram18 => (1, 0, 0),
+            RamKind::Bram36 => (2 * self.bytes.div_ceil(BRAM_TILE_BYTES), 0, 0),
+        }
+    }
+}
+
 /// Options the designer (or the DSE memory axis) feeds the planner.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PlanOpts {
@@ -284,6 +381,9 @@ pub struct PlanOpts {
     pub partition_cap: Option<usize>,
     /// Inter-group stream FIFO depth in words (None = full array size).
     pub fifo_depth: Option<usize>,
+    /// Scratchpad policy for indirectly accessed arrays (inert on
+    /// kernels without gather/scatter nests).
+    pub cache: CacheScheme,
 }
 
 /// The unified on-chip memory plan of one generated system (per lane).
@@ -299,6 +399,13 @@ pub struct MemoryPlan {
     pub partition_cap: Option<usize>,
     /// The lifetime-sharing coloring, when applied.
     pub sharing: Option<SharingPlan>,
+    /// Reuse-aware scratchpads fronting indirectly accessed buffers
+    /// (empty under [`CacheScheme::Bypass`] or when the kernel has no
+    /// gather/scatter nests).
+    pub caches: Vec<CacheInstance>,
+    /// The scheme the caches were built under (recorded for validation
+    /// and for the traffic model's per-scheme miss pricing).
+    pub cache_scheme: CacheScheme,
 }
 
 /// Summary numbers the DSE reports surface.
@@ -333,6 +440,16 @@ impl MemoryPlan {
     /// Total banks across all array instances.
     pub fn total_banks(&self) -> usize {
         self.arrays.iter().map(|a| a.factor).sum()
+    }
+
+    /// On-chip words spent on indexed-access scratchpads per lane.
+    pub fn cache_words(&self) -> usize {
+        self.caches.iter().map(|c| c.words).sum()
+    }
+
+    /// The scratchpad fronting `buf`, if the scheme planned one.
+    pub fn cache_for(&self, buf: BufId) -> Option<&CacheInstance> {
+        self.caches.iter().find(|c| c.buf == buf)
     }
 
     /// BRAM18 halves consumed by the inter-group stream FIFOs (FIFOs
@@ -474,6 +591,40 @@ impl MemoryPlan {
         }
         if self.shared_words() > self.unshared_words(k) {
             return Err("sharing increased the footprint".into());
+        }
+        // scratchpads: exactly the indexed buffers under a caching
+        // scheme, sized by the scheme, never oversized
+        let indexed = access::indexed_cache_buffers(k);
+        match self.cache_scheme {
+            CacheScheme::Bypass => {
+                if !self.caches.is_empty() {
+                    return Err("bypass scheme planned caches".into());
+                }
+            }
+            scheme => {
+                let fronted: Vec<BufId> = self.caches.iter().map(|c| c.buf).collect();
+                if fronted != indexed {
+                    return Err(format!(
+                        "caches front buffers {fronted:?}, kernel indexes {indexed:?}"
+                    ));
+                }
+                for (i, c) in self.caches.iter().enumerate() {
+                    let total = k.buffers[c.buf].words();
+                    let want = match scheme {
+                        CacheScheme::Cached(w) => w.min(total).max(1),
+                        _ => total.max(1),
+                    };
+                    if c.words != want {
+                        return Err(format!(
+                            "cache {i}: {} words != planned {want}",
+                            c.words
+                        ));
+                    }
+                    if c.bytes != c.words as u64 * self.word_bytes as u64 {
+                        return Err(format!("cache {i}: byte size inconsistent"));
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -622,7 +773,17 @@ pub fn plan(
             let local: Vec<usize> = g.nests().map(|ni| k.nests[ni].write).collect();
             let mut buffered: Vec<usize> = Vec::new();
             for ni in g.nests() {
-                for &r in &k.nests[ni].reads {
+                let n = &k.nests[ni];
+                for (slot, &r) in n.reads.iter().enumerate() {
+                    // a gather's data operand is the cache scheme's
+                    // job, not a private group copy: under
+                    // bypass/cached it stays off chip (HBM pays, per
+                    // `hbm::traffic`), under full buffering the
+                    // scratchpad below holds it — `sim`'s fill model
+                    // makes the same call
+                    if slot == 0 && matches!(n.kind, NestKind::Gather { .. }) {
+                        continue;
+                    }
                     if !local.contains(&r) && !buffered.contains(&r) {
                         buffered.push(r);
                     }
@@ -704,12 +865,40 @@ pub fn plan(
         }
     }
 
+    // Reuse-aware scratchpads for the indirectly accessed buffers
+    // (gather data operands and scatter targets): sized by the scheme,
+    // mapped to a RAM primitive by the same bounds as the arrays, and
+    // priced by `hls::resources`. The miss traffic the residual
+    // coverage leaves behind is charged by `hbm::traffic`.
+    let caches = match opts.cache {
+        CacheScheme::Bypass => Vec::new(),
+        scheme => access::indexed_cache_buffers(k)
+            .into_iter()
+            .map(|b| {
+                let total = k.buffers[b].words();
+                let words = match scheme {
+                    CacheScheme::Cached(w) => w.min(total).max(1),
+                    _ => total.max(1),
+                };
+                let bytes = words as u64 * word_bytes as u64;
+                CacheInstance {
+                    buf: b,
+                    words,
+                    bytes,
+                    ram: ram_for(bytes, 1),
+                }
+            })
+            .collect(),
+    };
+
     MemoryPlan {
         arrays,
         fifos,
         word_bytes,
         partition_cap: cap,
         sharing,
+        caches,
+        cache_scheme: opts.cache,
     }
 }
 
@@ -737,6 +926,7 @@ mod tests {
                 sharing,
                 partition_cap: cap,
                 fifo_depth: None,
+                cache: CacheScheme::Bypass,
             },
         )
     }
@@ -883,6 +1073,7 @@ mod tests {
                 sharing: false,
                 partition_cap: None,
                 fifo_depth: None,
+                cache: CacheScheme::Bypass,
             },
         );
         mp.validate(&k).unwrap();
@@ -913,6 +1104,7 @@ mod tests {
                 sharing: true,
                 partition_cap: None,
                 fifo_depth: None,
+                cache: CacheScheme::Bypass,
             },
         );
         mp.validate(&k).unwrap();
@@ -928,6 +1120,7 @@ mod tests {
                 sharing: false,
                 partition_cap: None,
                 fifo_depth: None,
+                cache: CacheScheme::Bypass,
             },
         );
         assert_eq!(mp.arrays, without.arrays);
@@ -946,6 +1139,7 @@ mod tests {
                 sharing: false,
                 partition_cap: None,
                 fifo_depth: Some(64),
+                cache: CacheScheme::Bypass,
             },
         );
         assert!(mp.fifos.iter().all(|&d| d == 64));

@@ -24,6 +24,7 @@ pub use crate::hbm::ChannelPolicy;
 use crate::ir::affine::Kernel;
 use crate::ir::schedule::{self, Schedule};
 use crate::mnemosyne::{self, MemoryPlan};
+pub use crate::mnemosyne::CacheScheme;
 use crate::platform::Platform;
 
 /// AXI bus configuration of a CU's data ports (paper §4.2 "Bus Opt").
@@ -119,6 +120,10 @@ pub struct OlympusOpts {
     /// How CU ports are bound to pseudo-channels on the segmented AXI
     /// switch (paper §3.6.1; `hbm::alloc`).
     pub channel_policy: ChannelPolicy,
+    /// Scratchpad policy for indirectly accessed (gather/scatter)
+    /// arrays — the irregular-access DSE axis (`mnemosyne::CacheScheme`;
+    /// inert on kernels without indexed nests).
+    pub cache_scheme: CacheScheme,
 }
 
 impl OlympusOpts {
@@ -137,6 +142,7 @@ impl OlympusOpts {
             lut_mult_shift: false,
             target_freq_mhz: 450.0,
             channel_policy: ChannelPolicy::LocalFirst,
+            cache_scheme: CacheScheme::Bypass,
         }
     }
 
@@ -215,11 +221,21 @@ impl OlympusOpts {
         self
     }
 
+    pub fn with_cache_scheme(mut self, s: CacheScheme) -> Self {
+        self.cache_scheme = s;
+        self
+    }
+
     /// Short label used in reports (matches paper row names).
     pub fn label(&self) -> String {
         let mut base = self.base_label();
         if let Some(c) = self.partition_cap {
             base.push_str(&format!(" cap{c}"));
+        }
+        match self.cache_scheme {
+            CacheScheme::Bypass => {}
+            CacheScheme::Cached(w) => base.push_str(&format!(" cache{w}")),
+            CacheScheme::FullBuffer => base.push_str(" cacheFull"),
         }
         base
     }
@@ -453,6 +469,7 @@ pub fn generate(
             sharing: opts.mem_sharing,
             partition_cap: opts.partition_cap,
             fifo_depth: opts.fifo_depth,
+            cache: opts.cache_scheme,
         },
     );
 

@@ -43,6 +43,7 @@ pub mod metrics;
 use crate::hbm;
 use crate::hls::Estimate;
 use crate::ir::affine::NestKind;
+use crate::mnemosyne::CacheScheme;
 use crate::olympus::SystemSpec;
 use crate::platform::{power::PowerModel, Platform};
 
@@ -140,14 +141,27 @@ pub fn stages(spec: &SystemSpec, est: &Estimate) -> StageIntervals {
             let mut seen: Vec<usize> = Vec::new();
             for ni in g.nests() {
                 let n = &k.nests[ni];
-                let random_access = matches!(
-                    n.kind,
-                    NestKind::Contraction { .. } | NestKind::Permute { .. }
-                );
-                if !random_access {
+                if !n.kind.is_random_access() {
                     continue;
                 }
-                for &r in &n.reads {
+                // indexed nests keep their irregular operand off chip
+                // unless the plan fully buffers it: a gather's data
+                // array pre-fills only under `FullBuffer` (the index
+                // stream is in order), and scatter targets never
+                // pre-fill — both directions pay their row-miss price
+                // in `hbm::traffic` instead
+                let fills: &[usize] = match n.kind {
+                    NestKind::Scatter { .. } => &[],
+                    NestKind::Gather { .. } => {
+                        if spec.opts.cache_scheme == CacheScheme::FullBuffer {
+                            &n.reads[..1]
+                        } else {
+                            &[]
+                        }
+                    }
+                    _ => &n.reads[..],
+                };
+                for &r in fills {
                     if !local.contains(&r) && !seen.contains(&r) {
                         seen.push(r);
                         fill += k.buffers[r].words() as u64;

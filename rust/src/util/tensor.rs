@@ -260,6 +260,53 @@ impl Tensor {
         out
     }
 
+    /// Indirect row read: `out[i, ..] = self[idx[i], ..]` for a rank-1
+    /// index tensor. Index entries are f64 (the flow is
+    /// single-datatype); they must round to in-range row numbers.
+    /// Matches `teil.gather`.
+    pub fn gather_rows(&self, idx: &Tensor) -> Tensor {
+        assert_eq!(idx.rank(), 1, "gather index must be rank-1");
+        assert!(self.rank() >= 1, "gather base must have a row axis");
+        let rows = self.shape[0];
+        let inner: usize = self.shape[1..].iter().product();
+        let mut out_shape = vec![idx.len()];
+        out_shape.extend_from_slice(&self.shape[1..]);
+        let mut out = Tensor::zeros(&out_shape);
+        for (i, &v) in idx.data.iter().enumerate() {
+            let r = round_index(v, rows);
+            out.data[i * inner..(i + 1) * inner]
+                .copy_from_slice(&self.data[r * inner..(r + 1) * inner]);
+        }
+        out
+    }
+
+    /// Indirect row write: `out[idx[i], ..] (+)= self[i, ..]` into a
+    /// fresh zero tensor with `rows` rows. Rows are written in
+    /// ascending data order, so duplicate indices accumulate (or, with
+    /// `add == false`, last-writer-wins) deterministically — the same
+    /// order every evaluator must use. Matches `teil.scatter`.
+    pub fn scatter_rows(&self, idx: &Tensor, rows: usize, add: bool) -> Tensor {
+        assert_eq!(idx.rank(), 1, "scatter index must be rank-1");
+        assert!(self.rank() >= 1, "scatter data must have a row axis");
+        assert_eq!(idx.len(), self.shape[0], "index length != data rows");
+        let inner: usize = self.shape[1..].iter().product();
+        let mut out_shape = vec![rows];
+        out_shape.extend_from_slice(&self.shape[1..]);
+        let mut out = Tensor::zeros(&out_shape);
+        for (i, &v) in idx.data.iter().enumerate() {
+            let r = round_index(v, rows);
+            for k in 0..inner {
+                let d = self.data[i * inner + k];
+                if add {
+                    out.data[r * inner + k] += d;
+                } else {
+                    out.data[r * inner + k] = d;
+                }
+            }
+        }
+        out
+    }
+
     /// Mean squared error against another tensor.
     pub fn mse(&self, other: &Tensor) -> f64 {
         assert_eq!(self.shape, other.shape);
@@ -286,6 +333,16 @@ impl fmt::Display for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)
     }
+}
+
+/// Round an f64 index entry to an in-range row number.
+fn round_index(v: f64, rows: usize) -> usize {
+    let r = v.round();
+    assert!(
+        r >= 0.0 && (r as usize) < rows,
+        "index {v} out of range 0..{rows}"
+    );
+    r as usize
 }
 
 /// Odometer increment; returns false on wrap-around (iteration done).
@@ -386,6 +443,33 @@ mod tests {
         assert_eq!(out.shape(), &[3, 2, 3]);
         assert_eq!(out.get(&[1, 0, 2]), u.get(&[1, 0, 2]));
         assert_eq!(out.get(&[1, 1, 2]), u.get(&[1, 1, 2]));
+    }
+
+    #[test]
+    fn gather_rows_reads_through_the_index() {
+        let base = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let idx = Tensor::from_vec(&[4], vec![2.0, 0.0, 2.0, 1.0]);
+        let g = base.gather_rows(&idx);
+        assert_eq!(g.shape(), &[4, 2]);
+        assert_eq!(g.data(), &[5., 6., 1., 2., 5., 6., 3., 4.]);
+    }
+
+    #[test]
+    fn scatter_rows_accumulates_duplicates_in_data_order() {
+        let data = Tensor::from_vec(&[3], vec![1.0, 10.0, 100.0]);
+        let idx = Tensor::from_vec(&[3], vec![1.0, 1.0, 0.0]);
+        let add = data.scatter_rows(&idx, 2, true);
+        assert_eq!(add.data(), &[100.0, 11.0]);
+        let wr = data.scatter_rows(&idx, 2, false);
+        assert_eq!(wr.data(), &[100.0, 10.0], "last writer wins");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn gather_rejects_out_of_range_indices() {
+        let base = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let idx = Tensor::from_vec(&[1], vec![5.0]);
+        base.gather_rows(&idx);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use hbmflow::dsl;
 use hbmflow::hls;
 use hbmflow::ir::affine::{Buffer, BufKind, EwOp, Kernel, LoopNest, NestKind};
 use hbmflow::ir::{lower, rewrite, schedule, teil};
-use hbmflow::mnemosyne::{self, PlanOpts};
+use hbmflow::mnemosyne::{self, CacheScheme, PlanOpts};
 use hbmflow::olympus::{generate, OlympusOpts};
 use hbmflow::platform::Platform;
 use hbmflow::util::prng::Prng;
@@ -145,6 +145,7 @@ fn random_plan(
             None
         },
         fifo_depth: if rng.bool() { Some(64) } else { None },
+        cache: CacheScheme::Bypass,
     };
     let word_bytes = if rng.bool() { 8 } else { 4 };
     let mp = mnemosyne::plan(k, &s, dataflow, word_bytes, &opts);
@@ -192,6 +193,7 @@ fn prop_plans_are_deterministic() {
             sharing: rng.bool(),
             partition_cap: if rng.bool() { Some(2) } else { None },
             fifo_depth: None,
+            cache: CacheScheme::Bypass,
         };
         let a = mnemosyne::plan(&k, &s, groups > 1, 8, &opts);
         let b = mnemosyne::plan(&k, &s, groups > 1, 8, &opts);

@@ -1,6 +1,7 @@
 //! Golden-file pin of the Vitis emission back-end: every shipped
-//! kernel — the three builtins plus the six `examples/kernels/*.cfd`
-//! programs — at two pinned system points, five files each,
+//! kernel — the three dense builtins plus the seven
+//! `examples/kernels/*.cfd` programs (including the indexed
+//! `gather_interp`) — at two pinned system points, five files each,
 //! byte-compared against `tests/golden/vitis/`.
 //!
 //! Bless workflow: a missing golden file is written on first run (so
@@ -102,8 +103,8 @@ fn vitis_packages_match_the_golden_tree() {
             }
         }
     }
-    // 9 kernels x 2 points x 5 files — the full pinned closure
-    assert_eq!(checked, 9 * 2 * 5, "golden closure shrank");
+    // 10 kernels x 2 points x 5 files — the full pinned closure
+    assert_eq!(checked, 10 * 2 * 5, "golden closure shrank");
     if blessed > 0 {
         eprintln!("blessed {blessed}/{checked} golden files under {}", root.display());
     }
